@@ -1,0 +1,8 @@
+"""Pytest path shim: make `python/` importable whether the suite is run
+as `pytest python/tests/` from the repo root or `pytest tests/` from
+inside `python/` (the Makefile does the latter)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,106 @@
+//! §6.2 + Table 3 explorer: the paper's percent-of-peak arithmetic,
+//! recomputed and audited, plus an interactive-ish sweep of where each
+//! kernel wins on each device.
+//!
+//! Run: `cargo run --release --example roofline_explorer [-- --device h200]`
+
+use lowrank_gemm::cli::parse_args;
+use lowrank_gemm::gpu_sim::{DeviceProfile, Precision, Roofline};
+use lowrank_gemm::kernels::{AutoKernelSelector, SelectorInputs};
+use lowrank_gemm::trace::sqrt2_sweep;
+
+fn section62(d: &DeviceProfile) {
+    println!("== §6.2 arithmetic on {} ==", d.name);
+    let measured = 378.0e12; // the paper's anchor measurement
+    println!(
+        "  compute peak (paper-quoted fp8): {:.0} TFLOPS",
+        d.peak_fp8 / 1e12
+    );
+    println!(
+        "  378 TFLOPS = {:.1}% of compute peak (paper: 28.6%)",
+        100.0 * measured / d.peak_fp8
+    );
+    let stated = d.paper_stated_bw_ceiling_flops(Precision::Fp8);
+    println!(
+        "  paper's 'bandwidth ceiling' as stated: {:.0} TFLOPS -> 378 is {:.1}% (paper: 56.7%)",
+        stated / 1e12,
+        100.0 * measured / stated
+    );
+    let literal = d.bandwidth_limited_gemm_flops(Precision::Fp8);
+    println!(
+        "  AUDIT: the formula as printed gives {:.3} TFLOPS (667 GFLOPS — 1000x unit slip);",
+        literal / 1e12
+    );
+    for n in [1024usize, 4096, 20480] {
+        let phys = d.physical_bw_limited_gemm_flops(n, Precision::Fp8);
+        println!(
+            "  physical BW bound @N={n}: {:.0} TFLOPS ({})",
+            phys / 1e12,
+            if phys > d.peak_fp8 { "compute-bound" } else { "bandwidth-bound" }
+        );
+    }
+    println!();
+}
+
+fn winner_map(d: &DeviceProfile) {
+    println!("== kernel winner map on {} (cold, tol 5%, r = N/40) ==", d.name);
+    let selector = AutoKernelSelector::new(d.clone());
+    let rl = Roofline::new(d.clone());
+    println!(
+        "{:>7} {:>22} {:>12} {:>14} {:>12}",
+        "N", "winner", "time", "TFLOPS", "pred err"
+    );
+    for n in sqrt2_sweep(1024, 46_336) {
+        let inp = SelectorInputs {
+            m: n,
+            k: n,
+            n,
+            error_tolerance: 0.05,
+            rank: (n / 40).max(16),
+            factors_cached: false,
+            factored_output_ok: false,
+        };
+        let c = selector.select(&inp);
+        let tflops = Roofline::achieved_flops(2.0 * (n as f64).powi(3), c.cost.time_s) / 1e12;
+        println!(
+            "{:>7} {:>22} {:>9.2} ms {:>11.0} {:>12.2e}",
+            n,
+            c.kind.paper_name(),
+            c.cost.time_s * 1e3,
+            tflops,
+            c.predicted_error
+        );
+        // Memory gate: stop when three dense f32 matrices outgrow HBM.
+        if 3 * n * n * 4 > d.memory_bytes as usize {
+            println!("        (dense f32 working set exceeds {} memory here)", d.name);
+            break;
+        }
+    }
+    let _ = rl;
+    println!();
+}
+
+fn table3_row(d: &DeviceProfile, anchor_tflops: f64, anchor_bw: f64) {
+    println!(
+        "  {:<9} {:>6.1} TB/s  projected {:>6.0} TFLOPS  ({}x bandwidth scaling)",
+        d.name,
+        d.bandwidth_bps / 1e12,
+        anchor_tflops * d.bandwidth_bps / anchor_bw,
+        (d.bandwidth_bps / anchor_bw) as i64
+    );
+}
+
+fn main() {
+    let args = parse_args(std::env::args().skip(1)).expect("args");
+    let device = args.get("device").unwrap_or("rtx4090");
+    let d = DeviceProfile::by_name(device).expect("known device");
+
+    section62(&d);
+    winner_map(&d);
+
+    println!("== Table 3 extrapolation (paper §6.3 rule: scale 378 TFLOPS by BW) ==");
+    let anchor = DeviceProfile::rtx4090();
+    for dev in [DeviceProfile::rtx4090(), DeviceProfile::h200(), DeviceProfile::b200()] {
+        table3_row(&dev, 378.0, anchor.bandwidth_bps);
+    }
+}

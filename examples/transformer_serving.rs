@@ -1,0 +1,133 @@
+//! **End-to-end validation driver** (EXPERIMENTS.md §E2E).
+//!
+//! Boots the full three-layer stack — GemmService (L3) over AOT-compiled
+//! XLA artifacts lowered from the Pallas kernels (L1/L2) — and serves a
+//! realistic transformer-inference GEMM trace against offline-factorized
+//! weights:
+//!
+//!   * per-layer shapes: QKV projection, attention output, MLP up/down,
+//!   * weights preloaded into the factor cache (offline decomposition),
+//!   * activations replayed as batched async requests,
+//!   * reports throughput, latency p50/p99, per-backend counts, and
+//!     end-to-end numerical error vs the exact product.
+//!
+//! Run: `make artifacts && cargo run --release --example transformer_serving`
+
+use std::time::Instant;
+
+use lowrank_gemm::coordinator::{BackendKind, GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::fp8::StorageFormat;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::lowrank::RankStrategy;
+use lowrank_gemm::trace::transformer_model_trace;
+
+fn main() {
+    // Model configuration: a 4-layer toy transformer whose GEMM shapes sit
+    // on the AOT lattice (d_model = 128) so the XLA path is exercised.
+    let d_model = 128;
+    let d_ff = 256;
+    let layers = 4;
+    let batch_tokens = 128;
+    let steps = 24; // inference steps to replay
+    let rank = 16;
+
+    let mut cfg = ServiceConfig::default();
+    cfg.workers = 2;
+    cfg.max_batch = 4;
+    cfg.router.rank_strategy = RankStrategy::Fixed(rank);
+    cfg.router.storage = StorageFormat::F32; // isolate truncation error
+    cfg.artifacts_dir = if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts".into())
+    } else {
+        eprintln!("note: artifacts/ missing — running CPU-substrate only (run `make artifacts`)");
+        None
+    };
+    let svc = GemmService::start(cfg).expect("service start");
+
+    // ---- Offline phase: factorize every weight once. --------------------
+    let trace = transformer_model_trace(batch_tokens, d_model, d_ff, layers);
+    let mut rng = Pcg64::seeded(2024);
+    let mut weights = Vec::new();
+    let t0 = Instant::now();
+    for shape in &trace {
+        let id = shape.weight_id.expect("trace weights have ids");
+        let w = Matrix::low_rank_noisy(shape.k, shape.n, rank / 2, 1e-5, &mut rng);
+        svc.preload_factor(id, &w).expect("preload");
+        weights.push((id, w));
+    }
+    println!(
+        "offline: factorized {} weights in {:.1} ms (cache: {} entries, {} KiB)",
+        weights.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        svc.stats().cache.entries,
+        svc.stats().cache.resident_bytes / 1024,
+    );
+
+    // ---- Serving phase: replay the trace asynchronously. ----------------
+    let t1 = Instant::now();
+    let mut inflight = Vec::new();
+    for step in 0..steps {
+        for (i, shape) in trace.iter().enumerate() {
+            let (id, w) = &weights[i];
+            let x = Matrix::gaussian(shape.m, shape.k, &mut rng);
+            let exact = x.matmul(w);
+            let mut req = GemmRequest::new(x, w.clone()).with_ids(None, Some(*id));
+            // Mixed traffic: half auto-routed (at this toy scale the cost
+            // model correctly picks dense — launch-overhead dominated),
+            // half pinned to the low-rank path to exercise the cached
+            // factored×dense serving pipeline end to end.
+            if step % 2 == 1 {
+                req = req.with_kernel(lowrank_gemm::kernels::KernelKind::LowRankAuto);
+            }
+            inflight.push((step, i, exact, svc.submit(req).expect("submit")));
+        }
+    }
+
+    let mut total = 0usize;
+    let mut xla_hits = 0usize;
+    let mut worst_err = 0f32;
+    let mut sum_err = 0f64;
+    for (_step, _i, exact, rx) in inflight {
+        let resp = rx.recv().expect("response").expect("gemm ok");
+        if resp.backend == BackendKind::Xla {
+            xla_hits += 1;
+        }
+        let err = resp.c.rel_frobenius_distance(&exact);
+        worst_err = worst_err.max(err);
+        sum_err += err as f64;
+        total += 1;
+    }
+    let wall = t1.elapsed().as_secs_f64();
+
+    // ---- Report. ---------------------------------------------------------
+    let stats = svc.stats();
+    println!("\nserved {total} GEMMs in {wall:.3} s  ->  {:.0} req/s", total as f64 / wall);
+    println!(
+        "backends: {} via XLA artifacts, {} via CPU substrate",
+        xla_hits,
+        total - xla_hits
+    );
+    println!(
+        "error: mean {:.3e}, worst {:.3e} (tolerance was {:.2})",
+        sum_err / total as f64,
+        worst_err,
+        0.05
+    );
+    println!(
+        "cache: {} hits / {} misses, {} rejected by backpressure",
+        stats.cache.hits, stats.cache.misses, stats.rejected
+    );
+    for (name, s) in svc.metrics().histogram_summaries() {
+        println!(
+            "  {name:<14} p50 {:>8.0}  p99 {:>8.0}  mean {:>8.0}  (n={})",
+            s.p50, s.p99, s.mean, s.count
+        );
+    }
+    for (name, v) in svc.metrics().counters() {
+        println!("  {name:<24} {v}");
+    }
+
+    assert_eq!(total, steps * trace.len());
+    assert!(worst_err < 0.05, "error out of band: {worst_err}");
+    println!("\ntransformer_serving: OK");
+}

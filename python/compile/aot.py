@@ -1,0 +1,252 @@
+"""AOT lowering: L2 graphs -> HLO text artifacts + manifest.json.
+
+Emits HLO **text**, not `.serialize()`: jax >= 0.5 writes HloModuleProto
+with 64-bit instruction ids which the Rust side's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; the Rust binary is self-contained
+afterwards. Usage:
+
+    python -m compile.aot --out ../artifacts/model.hlo.txt [--quick]
+
+`--quick` lowers only the sentinel e2e graph (used by fast CI loops);
+the full lattice is what the serving runtime expects.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Oversampling used for every rsvd sketch (matches RsvdOptions::default
+# on the Rust side — keep in sync or cold-path shapes won't line up).
+OVERSAMPLE = 8
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, whatever the arity).
+
+    `as_hlo_text(True)` = print_large_constants: the default printer
+    elides big literals as `constant({...})`, which xla_extension 0.5.1's
+    text parser silently reads back as **zeros** — any graph with an
+    embedded table (one-hot rotation schedules, iota-free masks) would
+    quietly produce garbage on the Rust side. Discovered via the probe
+    harness; see DESIGN.md §AOT-gotchas.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def _tuple1(fn):
+    """Wrap a single-output graph so every artifact returns a tuple."""
+
+    @functools.wraps(fn)
+    def wrapped(*args):
+        return (fn(*args),)
+
+    return wrapped
+
+
+def build_lattice(quick: bool = False):
+    """The artifact lattice: (name, op, fn, input_specs, output_shapes, meta).
+
+    Shapes are static in HLO, so the runtime serves this lattice
+    directly and falls back to the Rust linalg substrate for any other
+    shape (DESIGN.md §8) — mirroring the paper's 'automatic fallback'.
+    """
+    entries = []
+
+    def add(name, op, fn, in_specs, out_shapes, n, rank=0):
+        entries.append(
+            {
+                "name": name,
+                "op": op,
+                "fn": fn,
+                "in_specs": in_specs,
+                "out_shapes": out_shapes,
+                "n": n,
+                "rank": rank,
+            }
+        )
+
+    # Sentinel / end-to-end graph: cold-path lowrank GEMM at N=128, r=16.
+    n, r = 128, 16
+    l = r + OVERSAMPLE
+    add(
+        "lowrank_e2e_n128_r16",
+        "lowrank_e2e",
+        _tuple1(
+            functools.partial(
+                lambda a, b, oa, ob, rank: model.lowrank_gemm_e2e(a, b, oa, ob, rank=rank),
+                rank=r,
+            )
+        ),
+        [spec(n, n), spec(n, n), spec(n, l), spec(n, l)],
+        [(n, n)],
+        n,
+        r,
+    )
+    if quick:
+        return entries
+
+    sizes = [64, 128, 256]
+    ranks = [8, 16, 32]
+
+    for n in sizes:
+        add(
+            f"dense_f32_n{n}",
+            "dense_f32",
+            _tuple1(model.dense_gemm_f32),
+            [spec(n, n), spec(n, n)],
+            [(n, n)],
+            n,
+        )
+        add(
+            f"dense_f16_n{n}",
+            "dense_f16",
+            _tuple1(model.dense_gemm_f16),
+            [spec(n, n), spec(n, n)],
+            [(n, n)],
+            n,
+        )
+        add(
+            f"dense_fp8_n{n}",
+            "dense_fp8",
+            _tuple1(model.dense_gemm_fp8),
+            [spec(n, n), spec(n, n)],
+            [(n, n)],
+            n,
+        )
+        for r in ranks:
+            if r * 2 > n:
+                continue
+            add(
+                f"lowrank_apply_n{n}_r{r}",
+                "lowrank_apply",
+                _tuple1(model.lowrank_apply),
+                [spec(n, r), spec(r, r), spec(r, n)],
+                [(n, n)],
+                n,
+                r,
+            )
+            add(
+                f"lowrank_apply_fp8_n{n}_r{r}",
+                "lowrank_apply_fp8",
+                _tuple1(model.lowrank_apply_fp8),
+                [spec(n, r), spec(r, r), spec(r, n)],
+                [(n, n)],
+                n,
+                r,
+            )
+
+    # Cold factorization graphs + warm factor-chain with both factor sets.
+    for n in [128, 256]:
+        for r in [8, 16]:
+            l = r + OVERSAMPLE
+            add(
+                f"rsvd_n{n}_r{r}",
+                "rsvd",
+                functools.partial(
+                    lambda a, om, rank: model.rsvd_factorize(a, om, rank=rank), rank=r
+                ),
+                [spec(n, n), spec(n, l)],
+                [(n, r), (r,), (r, n)],
+                n,
+                r,
+            )
+        r = 16
+        for fp8 in [False, True]:
+            suffix = "_fp8" if fp8 else ""
+            add(
+                f"lowrank_gemm{suffix}_n{n}_r{r}",
+                f"lowrank_gemm{suffix}",
+                _tuple1(
+                    functools.partial(
+                        lambda ua, sa, va, ub, sb, vb, fp8: model.lowrank_gemm(
+                            ua, sa, va, ub, sb, vb, fp8=fp8
+                        ),
+                        fp8=fp8,
+                    )
+                ),
+                [spec(n, r), spec(r), spec(r, n), spec(n, r), spec(r), spec(r, n)],
+                [(n, n)],
+                n,
+                r,
+            )
+
+    return entries
+
+
+def lower_all(out_dir: str, sentinel: str, quick: bool = False, verbose: bool = True):
+    """Lower the lattice, write artifacts + manifest, return the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = build_lattice(quick=quick)
+    manifest = {"version": 1, "oversample": OVERSAMPLE, "entries": []}
+
+    for e in entries:
+        t0 = time.time()
+        lowered = jax.jit(e["fn"]).lower(*e["in_specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{e['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": e["name"],
+                "op": e["op"],
+                "file": fname,
+                "n": e["n"],
+                "rank": e["rank"],
+                "inputs": [list(s.shape) for s in e["in_specs"]],
+                "outputs": [list(s) for s in e["out_shapes"]],
+            }
+        )
+        if verbose:
+            print(
+                f"  lowered {e['name']:>28s}  {len(text) / 1024:8.1f} KiB  "
+                f"({time.time() - t0:.2f}s)"
+            )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # The Makefile sentinel: a copy of the e2e graph.
+    e2e = os.path.join(out_dir, "lowrank_e2e_n128_r16.hlo.txt")
+    with open(e2e) as src, open(sentinel, "w") as dst:
+        dst.write(src.read())
+    if verbose:
+        print(f"wrote {len(manifest['entries'])} artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description="AOT-lower the Low-Rank GEMM artifact lattice")
+    p.add_argument("--out", default="../artifacts/model.hlo.txt", help="sentinel HLO path")
+    p.add_argument("--quick", action="store_true", help="sentinel graph only")
+    args = p.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    lower_all(out_dir, os.path.abspath(args.out), quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

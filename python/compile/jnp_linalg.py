@@ -1,0 +1,227 @@
+"""Custom-call-free linear algebra for the AOT path.
+
+`jnp.linalg.qr` / `svd` / `eigh` lower to LAPACK **custom calls**
+(`lapack_sgeqrf`, `lapack_sgesdd`, ...) whose targets are registered by
+jaxlib's Python runtime — the standalone `xla_extension` the Rust PJRT
+client links against does not know them, so any artifact containing one
+would fail to compile at load time. Every routine here is therefore
+built from plain jnp/lax primitives only (dot/while/select/...), which
+round-trip through HLO text and run anywhere.
+
+The shapes these routines see are *sketch-sized* (l = rank +
+oversampling, l << n), so O(l^3)-with-a-bad-constant is perfectly fine;
+the bandwidth-heavy work stays in the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def mgs_qr(y):
+    """Thin QR of y (m x l) by two-pass modified Gram-Schmidt.
+
+    Two MGS passes give orthogonality to ~machine precision ("twice is
+    enough", Giraud et al.) — equivalent quality to Householder for the
+    range-finder's purpose. Fully jittable: fori_loop over the l
+    columns, no custom calls.
+
+    Returns (q, r) with q: m x l orthonormal, r: l x l upper-triangular.
+    Zero (or numerically dead) columns yield zero q-columns rather than
+    NaN: the corresponding singular values come out ~0 downstream and
+    are truncated away.
+    """
+    m, l = y.shape
+    eps = jnp.asarray(1e-30, y.dtype)
+
+    def one_pass(y_in):
+        def body(j, state):
+            q, r = state
+            v = y_in[:, j] - q @ r[:, j]
+
+            # Re-orthogonalize v against already-built columns (MGS step).
+            proj = q.T @ v
+            mask = (jnp.arange(l) < j).astype(y_in.dtype)
+            proj = proj * mask
+            v = v - q @ proj
+            r = r.at[:, j].add(proj)
+
+            nrm = jnp.sqrt(jnp.sum(v * v))
+            qcol = jnp.where(nrm > eps, v / jnp.maximum(nrm, eps), jnp.zeros_like(v))
+            q = q.at[:, j].set(qcol)
+            r = r.at[j, j].set(nrm)
+            return q, r
+
+        q0 = jnp.zeros_like(y_in)
+        r0 = jnp.zeros((l, l), y_in.dtype)
+        return lax.fori_loop(0, l, body, (q0, r0))
+
+    q1, r1 = one_pass(y)
+    # Second pass on q1 to polish orthogonality; combine the triangular
+    # factors (y = q2 (r2 r1)).
+    q2, r2 = one_pass(q1)
+    return q2, r2 @ r1
+
+
+def _round_robin_pairings(l_pad: int):
+    """Static tournament schedule: (l_pad - 1) rounds of l_pad/2 disjoint
+    pairs covering every (p, q) pair exactly once. `l_pad` must be even
+    (callers pad odd sizes with a phantom index that pairs harmlessly
+    with itself-never — it just sits in rotations with zero off-diagonal).
+    """
+    import numpy as np
+
+    assert l_pad % 2 == 0
+    others = list(range(1, l_pad))
+    rounds = []
+    for _ in range(l_pad - 1):
+        idx = [0] + others
+        pairs = [(idx[i], idx[l_pad - 1 - i]) for i in range(l_pad // 2)]
+        rounds.append([(min(p, q), max(p, q)) for p, q in pairs])
+        others = others[-1:] + others[:-1]
+    return np.asarray(rounds, dtype=np.int32)  # (l_pad-1, l_pad/2, 2)
+
+
+def jacobi_eigh(a, sweeps: int = 12):
+    """Symmetric eigendecomposition by **parallel round-robin Jacobi**.
+
+    `a` is l x l symmetric (the Gram matrix of the projected panel).
+    Each round applies l/2 disjoint rotations at once as one sparse
+    rotation matrix G (built by scatter) and two l x l matmuls —
+    A <- G^T A G, V <- V G. The loop body is a handful of ops, so the
+    lowered HLO stays small and XLA compile time stays sane (the naive
+    pairwise unroll produced multi-MiB graphs that took minutes to
+    compile). A fixed sweep count keeps the graph static; 12 sweeps is
+    far past convergence for l <= 128.
+
+    Returns (eigenvalues desc, eigenvectors as columns). Plain jnp/lax
+    ops only — no LAPACK custom calls.
+    """
+    l = a.shape[0]
+    if a.shape != (l, l):
+        raise ValueError(f"jacobi_eigh expects square input, got {a.shape}")
+    if l == 1:
+        return a[0], jnp.ones((1, 1), a.dtype)
+
+    # Pad odd sizes with one inert dimension (zero row/col: its
+    # off-diagonals are zero so every rotation involving it is identity).
+    l_pad = l + (l % 2)
+    if l_pad != l:
+        a = jnp.pad(a, ((0, 1), (0, 1)))
+
+    # AOT portability: everything below is matmul + elementwise only.
+    # Diag-style ("pointwise 2-D") gathers like `a[p, p]` and scatters
+    # like `g.at[p, q].set(s)` MISCOMPILE on the xla_extension 0.5.1
+    # runtime the Rust client links (verified by the probe harness —
+    # DESIGN.md §AOT-gotchas); single-axis takes and dots round-trip
+    # fine. So each round's pair selection is expressed through constant
+    # one-hot matrices Ph/Qh (l × l/2, Ph[p_i, i] = 1): row extraction is
+    # `Phᵀ A`, diagonal reads are masked row-sums, and the rotation
+    # matrix G is assembled as a sum of rank-(l/2) one-hot products.
+    import numpy as np
+
+    table = _round_robin_pairings(l_pad)  # numpy (rounds, l/2, 2)
+    half = l_pad // 2
+    onehots = []
+    for ri in range(table.shape[0]):
+        ph = np.zeros((l_pad, half), dtype=np.float32)
+        qh = np.zeros((l_pad, half), dtype=np.float32)
+        ph[table[ri, :, 0], np.arange(half)] = 1.0
+        qh[table[ri, :, 1], np.arange(half)] = 1.0
+        onehots.append((jnp.asarray(ph), jnp.asarray(qh)))
+
+    def one_round(ph, qh, state):
+        a_cur, v_cur = state
+        pa = ph.T @ a_cur  # rows of A at the p indices
+        qa = qh.T @ a_cur
+        app = jnp.sum(pa * ph.T, axis=1)  # A[p, p]
+        aqq = jnp.sum(qa * qh.T, axis=1)  # A[q, q]
+        apq = jnp.sum(pa * qh.T, axis=1)  # A[p, q]
+
+        # Classic Jacobi angle per pair; inert when already diagonal.
+        active = jnp.abs(apq) > 1e-30
+        tau = (aqq - app) / (2.0 * jnp.where(active, apq, 1.0))
+        t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        t = jnp.where(active, t, 0.0)
+        c = 1.0 / jnp.sqrt(1.0 + t * t)
+        s = t * c
+
+        # G = Σ_i c_i(e_p e_pᵀ + e_q e_qᵀ) + s_i(e_p e_qᵀ − e_q e_pᵀ);
+        # round-robin pairs cover every index, so no identity residual.
+        g = (
+            ph @ (c[:, None] * ph.T)
+            + qh @ (c[:, None] * qh.T)
+            + ph @ (s[:, None] * qh.T)
+            - qh @ (s[:, None] * ph.T)
+        )
+
+        a_new = g.T @ a_cur @ g
+        # Re-symmetrize to stop round-off drift across many rounds.
+        a_new = 0.5 * (a_new + a_new.T)
+        v_new = v_cur @ g
+        return a_new, v_new
+
+    def sweep(_, state):
+        for ph, qh in onehots:
+            state = one_round(ph, qh, state)
+        return state
+
+    a_final, v_final = lax.fori_loop(
+        0, sweeps, sweep, (a, jnp.eye(l_pad, dtype=a.dtype))
+    )
+    eye = jnp.eye(l_pad, dtype=a.dtype)
+    w = jnp.sum(a_final * eye, axis=1)[:l]  # diag without gather
+    v_final = v_final[:l, :l]
+    order = jnp.argsort(-w)
+    return w[order], v_final[:, order]
+
+
+def svd_small_rows(b, sweeps: int = 12):
+    """SVD of a short-fat panel b (l x n, l small) via the l x l Gram
+    matrix: b b^T = U diag(s^2) U^T, V^T = diag(1/s) U^T b.
+
+    Squares the condition number — acceptable because the caller only
+    keeps the leading `rank < l` triplets, and the trailing (inaccurate)
+    directions are exactly the ones truncated. Returns (u, s, vt) with
+    s descending and numerically-zero singular values mapped to zero
+    rows of vt (not NaN).
+    """
+    l = b.shape[0]
+    gram = b @ b.T
+    w, u = jacobi_eigh(gram, sweeps=sweeps)
+    w = jnp.maximum(w, 0.0)
+    s = jnp.sqrt(w)
+    safe = jnp.where(s > 1e-20, s, 1.0)
+    vt = (u.T @ b) / safe[:, None]
+    vt = jnp.where((s > 1e-20)[:, None], vt, 0.0)
+    return u, s, vt
+
+
+@functools.partial(jax.named_call, name="rsvd_jnp")
+def rsvd_custom(a, omega, power_iters: int = 2, sweeps: int = 12, matmul=jnp.matmul):
+    """Halko randomized SVD with an externally-supplied sketch matrix.
+
+    `omega` (k x l) is passed in (not generated here) so the AOT graph
+    is deterministic given its inputs and the Rust side controls the
+    seed. `matmul` is injectable so the heavy products route through the
+    Pallas kernel when lowering artifacts, or plain jnp in tests.
+
+    Returns (u: m x l, s: l, vt: l x n) — caller truncates to rank.
+    """
+    # Sketch + LU-free subspace (power) iterations with re-orthonorm.
+    y = matmul(a, omega)
+    for _ in range(power_iters):
+        q, _ = mgs_qr(y)
+        z = matmul(a.T, q)
+        q, _ = mgs_qr(z)
+        y = matmul(a, q)
+    q, _ = mgs_qr(y)
+
+    b = matmul(q.T, a)  # l x n projected panel
+    u_small, s, vt = svd_small_rows(b, sweeps=sweeps)
+    u = q @ u_small
+    return u, s, vt

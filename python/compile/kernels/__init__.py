@@ -1,0 +1,46 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+All kernels run with `interpret=True` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); see each module's docstring for the
+TPU-structural reasoning (BlockSpec schedules, VMEM residency, MXU
+accumulation) that replaces the paper's CUDA threadblock design.
+"""
+
+from .common import (
+    DEFAULT_BLOCK,
+    E4M3_MAX,
+    VMEM_BUDGET,
+    cdiv,
+    dequantize_e4m3,
+    e4m3_scale_for,
+    gemm_block_shapes,
+    gemm_vmem_bytes,
+    mxu_utilization_estimate,
+    pick_block,
+    quantize_e4m3,
+    round_up,
+)
+from .fp8_gemm import fp8_gemm_pallas
+from .lowrank import lowrank_apply_fp8_pallas, lowrank_apply_pallas
+from .matmul import matmul_pallas
+from .range_finder import range_sketch_pallas
+
+__all__ = [
+    "DEFAULT_BLOCK",
+    "E4M3_MAX",
+    "VMEM_BUDGET",
+    "cdiv",
+    "dequantize_e4m3",
+    "e4m3_scale_for",
+    "fp8_gemm_pallas",
+    "gemm_block_shapes",
+    "gemm_vmem_bytes",
+    "lowrank_apply_fp8_pallas",
+    "lowrank_apply_pallas",
+    "matmul_pallas",
+    "mxu_utilization_estimate",
+    "pick_block",
+    "quantize_e4m3",
+    "range_sketch_pallas",
+    "round_up",
+]

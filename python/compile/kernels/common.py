@@ -1,0 +1,140 @@
+"""Shared helpers for the Pallas kernel layer (L1).
+
+Everything here is build-time-only Python: these functions run inside
+`jax.jit`-traced graphs that are lowered once by `compile/aot.py` and
+then executed from Rust through PJRT. Nothing in this package is
+imported on the request path.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+kernels are CUDA/TensorCore kernels. On a TPU-shaped machine the same
+insight is expressed as
+
+  - threadblock tiles      -> `pl.BlockSpec` grids over (m/bm, n/bn, k/bk)
+  - shared-memory staging  -> VMEM residency of each block
+  - WMMA fp16*fp16+fp32    -> MXU `jnp.dot(..., preferred_element_type=f32)`
+  - hardware FP8 storage   -> `float8_e4m3fn` casts (bit-exact E4M3)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+# Default square tile edge. 128 is the MXU-native lane width; a
+# (128, 128) f32 block is 64 KiB, so a 3-operand matmul tile set is well
+# inside the ~16 MiB VMEM budget even with double buffering.
+DEFAULT_BLOCK = 128
+
+# E4M3 (OCP FP8, no infinities) saturation bound.
+E4M3_MAX = 448.0
+
+# VMEM budget used by the block-shape planner (bytes). Slightly under
+# the physical 16 MiB to leave room for Mosaic's own scratch.
+VMEM_BUDGET = 14 * 1024 * 1024
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def round_up(x: int, mult: int) -> int:
+    """Round `x` up to a multiple of `mult`."""
+    return cdiv(x, mult) * mult
+
+
+def pick_block(dim: int, preferred: int = DEFAULT_BLOCK) -> int:
+    """Choose a block edge for a dimension of size `dim`.
+
+    Small dims use the whole dim (one grid step); large dims use the
+    preferred MXU-aligned edge. Always a power-of-two-ish divisor-free
+    choice — the L2 wrappers pad to a multiple of the block, so the
+    block never has to divide `dim` exactly.
+    """
+    if dim <= 0:
+        raise ValueError(f"dimension must be positive, got {dim}")
+    return min(preferred, max(8, 1 << (dim - 1).bit_length()) if dim < preferred else preferred)
+
+
+def gemm_block_shapes(m: int, k: int, n: int, block: int = DEFAULT_BLOCK):
+    """(bm, bk, bn) for a tiled GEMM over an (m, k) x (k, n) problem."""
+    return pick_block(m, block), pick_block(k, block), pick_block(n, block)
+
+
+def gemm_vmem_bytes(bm: int, bk: int, bn: int, in_bytes: int = 4, acc_bytes: int = 4) -> int:
+    """Resident VMEM bytes for one grid step of the tiled matmul.
+
+    One A block, one B block, one accumulator/output block. This is what
+    DESIGN.md §9 reports as the kernel's VMEM footprint estimate.
+    """
+    return bm * bk * in_bytes + bk * bn * in_bytes + bm * bn * acc_bytes
+
+
+def mxu_utilization_estimate(bm: int, bk: int, bn: int, lane: int = 128) -> float:
+    """Fraction of MXU lanes kept busy by a (bm, bk, bn) tile.
+
+    The MXU is a 128x128 systolic array; tiles smaller than the lane
+    width in any contracted/output dim leave lanes idle. This is the
+    structural estimate recorded in DESIGN.md (interpret=True gives no
+    real hardware timing).
+    """
+    eff = (min(bm, lane) / lane) * (min(bk, lane) / lane) * (min(bn, lane) / lane)
+    return float(eff)
+
+
+def saturate_e4m3(x):
+    """Clamp to the E4M3 representable range so the cast saturates
+    instead of producing NaN (OCP behaviour: no inf encoding)."""
+    return jnp.clip(x, -E4M3_MAX, E4M3_MAX)
+
+
+def quantize_e4m3(x, scale):
+    """f32 -> scaled, saturating E4M3. Returns the fp8 payload.
+
+    `scale` maps the tensor's dynamic range onto [-448, 448]; the
+    matching `dequantize_e4m3` divides it back out. Bit-exact: goes
+    through the real `float8_e4m3fn` dtype.
+    """
+    return saturate_e4m3(x * scale).astype(jnp.float8_e4m3fn)
+
+
+def dequantize_e4m3(q, scale, dtype=jnp.float32):
+    """Scaled E4M3 -> `dtype` (compute precision)."""
+    return q.astype(dtype) / scale
+
+
+def e4m3_scale_for(x):
+    """Per-tensor scale: map max|x| to the E4M3 saturation bound.
+
+    Mirrors `rust/src/fp8/quantize.rs`: amax-based per-tensor scaling
+    (the paper's 'scaling compensation' for FP8's narrow range).
+    """
+    amax = jnp.max(jnp.abs(x))
+    # Guard zero tensors; scale 1.0 keeps them exactly zero.
+    return jnp.where(amax > 0, E4M3_MAX / amax, 1.0)
+
+
+def pad2d(x, rows: int, cols: int):
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def flops_gemm(m: int, k: int, n: int) -> float:
+    """Model FLOPs of a dense (m,k)x(k,n) GEMM."""
+    return 2.0 * m * k * n
+
+
+def log2_spaced(lo: int, hi: int) -> list[int]:
+    """The paper's sqrt(2)-geometric size sweep (§4.3)."""
+    sizes = []
+    x = float(lo)
+    while x <= hi * 1.0001:
+        n = int(round(x / 64.0) * 64)  # keep MXU-friendly multiples
+        if not sizes or n != sizes[-1]:
+            sizes.append(n)
+        x *= math.sqrt(2.0)
+    return sizes

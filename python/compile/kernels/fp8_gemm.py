@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: FP8-storage GEMM (quantize -> fp8 tiles -> f32 acc).
+
+This is the paper's §3.3 pipeline made explicit:
+
+  1. per-tensor amax scaling maps each operand onto the E4M3 range,
+  2. operands are stored/streamed as `float8_e4m3fn` (1 byte/elem — the
+     bandwidth win the paper's §6.2 roofline argument relies on),
+  3. inside the kernel each VMEM tile is up-cast to the compute
+     precision (bf16 by default, the MXU analogue of the paper's "FP16
+     compute"), multiplied on the MXU,
+  4. partial sums accumulate in f32 ("FP32 accumulation").
+
+The dequantize-inside-the-kernel placement matters: the HBM traffic is
+fp8 bytes, only the VMEM-resident tile is ever widened.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (
+    DEFAULT_BLOCK,
+    cdiv,
+    e4m3_scale_for,
+    gemm_block_shapes,
+    pad2d,
+    quantize_e4m3,
+    round_up,
+)
+
+
+def _fp8_gemm_kernel(x_ref, y_ref, inv_ref, o_ref, *, compute_dtype):
+    """o[i,j] (+)= dequant(x_fp8[i,k]) @ dequant(y_fp8[k,j]).
+
+    `inv_ref` carries the two dequantization scales (1/sa, 1/sb) as a
+    (1, 2) f32 block broadcast to every grid step; folding the product
+    of both scales into the f32 accumulator once per step is cheaper
+    than scaling each operand tile.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_tile = x_ref[...].astype(compute_dtype)
+    y_tile = y_ref[...].astype(compute_dtype)
+    acc = jnp.dot(x_tile, y_tile, preferred_element_type=jnp.float32)
+    o_ref[...] += acc * (inv_ref[0, 0] * inv_ref[0, 1])
+
+
+@functools.partial(jax.named_call, name="fp8_gemm_pallas")
+def fp8_gemm_pallas(
+    a,
+    b,
+    *,
+    block: int = DEFAULT_BLOCK,
+    compute_dtype=jnp.bfloat16,
+    out_dtype=jnp.float32,
+):
+    """C ~= A @ B with FP8 (E4M3) storage and f32 accumulation.
+
+    Inputs are f32; quantization happens here (per-tensor amax scaling)
+    so the lowered HLO contains the full storage pipeline the Rust
+    roofline model charges bytes for.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"fp8_gemm_pallas expects 2-D operands, got {a.shape} @ {b.shape}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner-dim mismatch: {a.shape} @ {b.shape}")
+
+    sa = e4m3_scale_for(a)
+    sb = e4m3_scale_for(b)
+    aq = quantize_e4m3(a, sa)
+    bq = quantize_e4m3(b, sb)
+
+    bm, bk, bn = gemm_block_shapes(m, k, n, block)
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    aq = pad2d(aq, mp, kp)
+    bq = pad2d(bq, kp, np_)
+    inv = jnp.stack([1.0 / sa, 1.0 / sb]).reshape(1, 2).astype(jnp.float32)
+
+    nk = cdiv(kp, bk)
+    grid = (cdiv(mp, bm), cdiv(np_, bn), nk)
+
+    out = pl.pallas_call(
+        functools.partial(_fp8_gemm_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 2), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(aq, bq, inv)
+
+    return out[:m, :n].astype(out_dtype)

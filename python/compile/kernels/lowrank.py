@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: low-rank factor-chain application (paper Eq. 1).
+
+Given A ~= U_A diag(s_A) V_A^T and B ~= U_B diag(s_B) V_B^T, the L2
+graph merges everything rank-sized into one small core
+
+    core = diag(s_A) . (V_A^T U_B) . diag(s_B)        (r_a x r_b)
+
+and this kernel evaluates the only large-output step,
+
+    C = U_A @ core @ V_B^T                            (m x n)
+
+on a (m/bm, n/bn) grid. The core is tiny (r^2 floats) and its BlockSpec
+index map is constant, so it stays **VMEM-resident across the whole
+grid** — the TPU analogue of the paper's "compact factorized
+representations move fewer bytes": HBM traffic per output tile is one
+(bm x r) U-panel + one (r x bn) V-panel instead of full (bm x k)/(k x bn)
+panels.
+
+The fp8 variant streams U/V^T as `float8_e4m3fn` (1 byte/elem) and
+up-casts tiles in VMEM, mirroring fp8_gemm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (
+    DEFAULT_BLOCK,
+    cdiv,
+    e4m3_scale_for,
+    pad2d,
+    pick_block,
+    quantize_e4m3,
+    round_up,
+)
+
+
+def _lowrank_apply_kernel(u_ref, core_ref, vt_ref, o_ref, *, compute_dtype):
+    """o[i,j] = u[i,:] @ core @ vt[:,j] — rank-sized intermediate only."""
+    u_tile = u_ref[...].astype(compute_dtype)
+    vt_tile = vt_ref[...].astype(compute_dtype)
+    core = core_ref[...].astype(compute_dtype)
+    # (r_a x bn) intermediate: rank-sized, stays in VMEM/registers.
+    t = jnp.dot(core, vt_tile, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(
+        u_tile, t.astype(compute_dtype), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _lowrank_apply_fp8_kernel(u_ref, core_ref, vt_ref, inv_ref, o_ref, *, compute_dtype):
+    """fp8-storage variant: dequantize the U/V^T tiles in VMEM."""
+    u_tile = u_ref[...].astype(compute_dtype)
+    vt_tile = vt_ref[...].astype(compute_dtype)
+    core = core_ref[...].astype(compute_dtype)
+    t = jnp.dot(core, vt_tile, preferred_element_type=jnp.float32)
+    acc = jnp.dot(u_tile, t.astype(compute_dtype), preferred_element_type=jnp.float32)
+    o_ref[...] = (acc * (inv_ref[0, 0] * inv_ref[0, 1])).astype(o_ref.dtype)
+
+
+def _apply_grid(m, n, ra, rb, block):
+    bm = pick_block(m, block)
+    bn = pick_block(n, block)
+    mp, np_ = round_up(m, bm), round_up(n, bn)
+    return bm, bn, mp, np_, (cdiv(mp, bm), cdiv(np_, bn))
+
+
+@functools.partial(jax.named_call, name="lowrank_apply_pallas")
+def lowrank_apply_pallas(u, core, vt, *, block: int = DEFAULT_BLOCK, out_dtype=jnp.float32):
+    """C = U @ core @ V^T with the core VMEM-resident across the grid."""
+    m, ra = u.shape
+    ra2, rb = core.shape
+    rb2, n = vt.shape
+    if ra != ra2 or rb != rb2:
+        raise ValueError(f"factor-chain shape mismatch: {u.shape} @ {core.shape} @ {vt.shape}")
+
+    bm, bn, mp, np_, grid = _apply_grid(m, n, ra, rb, block)
+    u_p = pad2d(u.astype(jnp.float32), mp, ra)
+    vt_p = pad2d(vt.astype(jnp.float32), rb, np_)
+
+    out = pl.pallas_call(
+        functools.partial(_lowrank_apply_kernel, compute_dtype=jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, ra), lambda i, j: (i, 0)),
+            pl.BlockSpec((ra, rb), lambda i, j: (0, 0)),  # resident core
+            pl.BlockSpec((rb, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(u_p, core.astype(jnp.float32), vt_p)
+
+    return out[:m, :n].astype(out_dtype)
+
+
+@functools.partial(jax.named_call, name="lowrank_apply_fp8_pallas")
+def lowrank_apply_fp8_pallas(
+    u,
+    core,
+    vt,
+    *,
+    block: int = DEFAULT_BLOCK,
+    compute_dtype=jnp.bfloat16,
+    out_dtype=jnp.float32,
+):
+    """fp8-storage factor-chain: U/V^T streamed as E4M3, f32 accumulate.
+
+    The core stays f32 — it is r^2 scalars ("keep the spectrum exact",
+    same discipline as the Rust LowRankFactor keeping s in f32).
+    """
+    m, ra = u.shape
+    ra2, rb = core.shape
+    rb2, n = vt.shape
+    if ra != ra2 or rb != rb2:
+        raise ValueError(f"factor-chain shape mismatch: {u.shape} @ {core.shape} @ {vt.shape}")
+
+    su = e4m3_scale_for(u)
+    sv = e4m3_scale_for(vt)
+    uq = quantize_e4m3(u, su)
+    vq = quantize_e4m3(vt, sv)
+    inv = jnp.stack([1.0 / su, 1.0 / sv]).reshape(1, 2).astype(jnp.float32)
+
+    bm, bn, mp, np_, grid = _apply_grid(m, n, ra, rb, block)
+    u_p = pad2d(uq, mp, ra)
+    vt_p = pad2d(vq, rb, np_)
+
+    out = pl.pallas_call(
+        functools.partial(_lowrank_apply_fp8_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, ra), lambda i, j: (i, 0)),
+            pl.BlockSpec((ra, rb), lambda i, j: (0, 0)),
+            pl.BlockSpec((rb, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(u_p, core.astype(jnp.float32), vt_p, inv)
+
+    return out[:m, :n].astype(out_dtype)

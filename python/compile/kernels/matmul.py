@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: tiled dense matmul with f32 accumulation.
+
+The workhorse of every dense baseline ("PyTorch FP32" / "TorchCompile
+FP16" rows of Table 1) and of the factor-chain reconstruction step. The
+HBM<->VMEM schedule is expressed with a (m/bm, n/bn, k/bk) grid —
+k innermost so the output block stays resident in VMEM while the
+reduction streams A- and B-panels past it (the BlockSpec analogue of
+the paper's threadblock tiling through shared memory).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical, real-TPU perf is estimated
+structurally (see common.gemm_vmem_bytes / mxu_utilization_estimate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_BLOCK, cdiv, gemm_block_shapes, pad2d, round_up
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """One grid step: o[i,j] (+)= x[i,k] @ y[k,j], f32 accumulation.
+
+    The output BlockSpec ignores the k grid axis, so the same VMEM block
+    is revisited across the k loop — zero it on the first step, keep
+    accumulating afterwards.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.named_call, name="matmul_pallas")
+def matmul_pallas(
+    a,
+    b,
+    *,
+    block: int = DEFAULT_BLOCK,
+    out_dtype=jnp.float32,
+):
+    """C = A @ B via the tiled Pallas kernel.
+
+    Shapes need not be multiples of the block: operands are zero-padded
+    up to the grid and the result is sliced back. Accumulation is f32
+    regardless of input dtype (the paper's FP32-accumulation discipline,
+    §3.3.1).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {a.shape} @ {b.shape}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner-dim mismatch: {a.shape} @ {b.shape}")
+
+    bm, bk, bn = gemm_block_shapes(m, k, n, block)
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    a_p = pad2d(a.astype(jnp.float32), mp, kp)
+    b_p = pad2d(b.astype(jnp.float32), kp, np_)
+
+    nk = cdiv(kp, bk)
+    grid = (cdiv(mp, bm), cdiv(np_, bn), nk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+
+    return out[:m, :n].astype(out_dtype)

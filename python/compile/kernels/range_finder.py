@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: randomized range-finder sketch (Halko step 1).
+
+The bandwidth-dominant step of randomized SVD is the sketch
+
+    Y = A @ Omega          (m x l, l = rank + oversampling)
+
+— a single streaming pass over A against a skinny random matrix. This
+kernel tiles A over a (m/bm, k/bk) grid with the k axis innermost; the
+skinny Omega panel (bk x l) and the Y accumulator block (bm x l) are
+VMEM-resident, so A is read from HBM exactly once (the property that
+makes rSVD viable at the paper's scales).
+
+The orthonormalization (QR) and the small-SVD that follow are
+rank-sized and live at L2 (`model.rsvd_factorize`) as plain jnp ops —
+they are O(r^2)-shaped and not worth a custom kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import DEFAULT_BLOCK, cdiv, pad2d, pick_block, round_up
+
+
+def _sketch_kernel(a_ref, om_ref, y_ref):
+    """y[i] (+)= a[i,k] @ omega[k] with f32 accumulation."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jnp.dot(
+        a_ref[...], om_ref[...], preferred_element_type=jnp.float32
+    ).astype(y_ref.dtype)
+
+
+@functools.partial(jax.named_call, name="range_sketch_pallas")
+def range_sketch_pallas(a, omega, *, block: int = DEFAULT_BLOCK):
+    """Y = A @ Omega, A streamed once, Omega panels VMEM-resident."""
+    m, k = a.shape
+    k2, l = omega.shape
+    if k != k2:
+        raise ValueError(f"sketch inner-dim mismatch: {a.shape} @ {omega.shape}")
+
+    bm = pick_block(m, block)
+    bk = pick_block(k, block)
+    mp, kp = round_up(m, bm), round_up(k, bk)
+    a_p = pad2d(a.astype(jnp.float32), mp, kp)
+    om_p = pad2d(omega.astype(jnp.float32), kp, l)
+
+    grid = (cdiv(mp, bm), cdiv(kp, bk))
+    out = pl.pallas_call(
+        _sketch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((bk, l), lambda i, kk: (kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, l), lambda i, kk: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, l), jnp.float32),
+        interpret=True,
+    )(a_p, om_p)
+
+    return out[:m, :]

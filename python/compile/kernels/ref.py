@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every L1 kernel (the pytest correctness bar).
+
+Each `ref_*` computes the same mathematical result as its Pallas
+counterpart using nothing but jax.numpy — no tiling, no BlockSpecs — so
+any disagreement beyond float tolerance is a kernel bug, not a
+modelling choice. The FP8 reference reuses the *same* quantization
+helpers as the kernel on purpose: the oracle checks the tiled matmul
+structure, while quantization itself is validated bit-level in
+`tests/test_fp8_numerics.py` against an independent Python
+implementation of E4M3 rounding.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import dequantize_e4m3, e4m3_scale_for, quantize_e4m3
+
+
+def ref_matmul(a, b):
+    """Exact f32 GEMM."""
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+
+def ref_fp8_gemm(a, b, compute_dtype=jnp.bfloat16):
+    """Quantize both operands to scaled E4M3, multiply in compute_dtype,
+    accumulate f32 — the exact pipeline fp8_gemm_pallas implements."""
+    sa = e4m3_scale_for(a)
+    sb = e4m3_scale_for(b)
+    ad = dequantize_e4m3(quantize_e4m3(a, sa), sa, compute_dtype)
+    bd = dequantize_e4m3(quantize_e4m3(b, sb), sb, compute_dtype)
+    return jnp.matmul(ad, bd, preferred_element_type=jnp.float32).astype(jnp.float32)
+
+
+def ref_lowrank_core(s_a, vt_a, u_b, s_b):
+    """core = diag(s_a) (V_A^T U_B) diag(s_b) — rank-sized, f32."""
+    t = jnp.matmul(vt_a.astype(jnp.float32), u_b.astype(jnp.float32))
+    return s_a[:, None] * t * s_b[None, :]
+
+
+def ref_lowrank_apply(u, core, vt):
+    """C = U @ core @ V^T, evaluated inside-out (rank-sized middle)."""
+    t = jnp.matmul(core.astype(jnp.float32), vt.astype(jnp.float32))
+    return jnp.matmul(u.astype(jnp.float32), t)
+
+
+def ref_lowrank_apply_fp8(u, core, vt, compute_dtype=jnp.bfloat16):
+    """fp8-storage variant of ref_lowrank_apply (U/V^T through E4M3)."""
+    su = e4m3_scale_for(u)
+    sv = e4m3_scale_for(vt)
+    ud = dequantize_e4m3(quantize_e4m3(u, su), su, compute_dtype)
+    vd = dequantize_e4m3(quantize_e4m3(vt, sv), sv, compute_dtype)
+    t = jnp.matmul(core.astype(compute_dtype), vd, preferred_element_type=jnp.float32)
+    return jnp.matmul(ud, t.astype(compute_dtype), preferred_element_type=jnp.float32).astype(
+        jnp.float32
+    )
+
+
+def ref_range_sketch(a, omega):
+    """Y = A @ Omega in f32."""
+    return jnp.matmul(a.astype(jnp.float32), omega.astype(jnp.float32))
+
+
+def ref_rsvd(a, rank: int, seed: int = 0, oversample: int = 8, power_iters: int = 2):
+    """Plain-jnp Halko randomized SVD (truncated to `rank`).
+
+    The oracle for model.rsvd_factorize: sketch, (optional) power
+    iterations for spectral sharpening, thin-QR, small exact SVD on the
+    projected panel.
+    """
+    import jax
+
+    m, k = a.shape
+    l = min(rank + oversample, min(m, k))
+    omega = jax.random.normal(jax.random.PRNGKey(seed), (k, l), dtype=jnp.float32)
+    y = a @ omega
+    for _ in range(power_iters):
+        y = a @ (a.T @ y)
+    q, _ = jnp.linalg.qr(y)
+    bsmall = q.T @ a
+    u_s, s, vt = jnp.linalg.svd(bsmall, full_matrices=False)
+    u = q @ u_s
+    return u[:, :rank], s[:rank], vt[:rank, :]

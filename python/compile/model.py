@@ -1,0 +1,126 @@
+"""L2: the paper's compute graphs, built on the L1 Pallas kernels.
+
+Each public function here is a pure, jittable graph with static shapes;
+`compile/aot.py` lowers a lattice of them to HLO text once, and the
+Rust runtime (`rust/src/runtime/`) loads + executes the artifacts on
+the request path. Python never runs at serving time.
+
+Graphs (paper §3 / §4.4 method list):
+
+  dense_gemm_f32      exact GEMM              -> "PyTorch FP32" analogue
+  dense_gemm_f16      f16-storage GEMM        -> "TorchCompile FP16"
+  dense_gemm_fp8      E4M3-storage GEMM       -> "cuBLAS Optimized FP8"
+  rsvd_factorize      Halko factorization     -> offline decomposition
+  lowrank_core        rank-sized core merge   -> Eq. (1) inner product
+  lowrank_apply[.fp8] factor-chain apply      -> "LowRank FP8/Auto"
+  lowrank_gemm        core + apply in one     -> full Eq. (1)
+  lowrank_gemm_e2e    factorize + chain       -> cold-path (cache miss)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .jnp_linalg import rsvd_custom
+from .kernels import (
+    fp8_gemm_pallas,
+    lowrank_apply_fp8_pallas,
+    lowrank_apply_pallas,
+    matmul_pallas,
+    range_sketch_pallas,
+)
+
+
+def dense_gemm_f32(a, b):
+    """Exact f32 GEMM through the tiled Pallas kernel."""
+    return matmul_pallas(a, b)
+
+
+def dense_gemm_f16(a, b):
+    """f16-storage GEMM: operands round-trip through IEEE binary16
+    before the f32-accumulating kernel (the 'TorchCompile FP16' row —
+    half-width storage, full-precision accumulate)."""
+    a16 = a.astype(jnp.float16).astype(jnp.float32)
+    b16 = b.astype(jnp.float16).astype(jnp.float32)
+    return matmul_pallas(a16, b16)
+
+
+def dense_gemm_fp8(a, b):
+    """E4M3-storage GEMM with bf16 compute / f32 accumulation."""
+    return fp8_gemm_pallas(a, b)
+
+
+def lowrank_core(s_a, vt_a, u_b, s_b):
+    """core = diag(s_a) (V_A^T U_B) diag(s_b) — the k-contraction of
+    Eq. (1), the only place the inner dimension k is touched.
+
+    V_A^T (r x k) @ U_B (k x r) routes through the Pallas matmul: it is
+    the rank-sized-output, k-streaming product."""
+    t = matmul_pallas(vt_a, u_b)
+    return s_a[:, None] * t * s_b[None, :]
+
+
+def lowrank_apply(u_a, core, vt_b):
+    """C = U_A @ core @ V_B^T (f32 factors)."""
+    return lowrank_apply_pallas(u_a, core, vt_b)
+
+
+def lowrank_apply_fp8(u_a, core, vt_b):
+    """C = U_A @ core @ V_B^T with E4M3-stored U/V^T."""
+    return lowrank_apply_fp8_pallas(u_a, core, vt_b)
+
+
+def lowrank_gemm(u_a, s_a, vt_a, u_b, s_b, vt_b, *, fp8: bool = False):
+    """Full Eq. (1): merge the core, then the factor-chain apply."""
+    core = lowrank_core(s_a, vt_a, u_b, s_b)
+    if fp8:
+        return lowrank_apply_fp8_pallas(u_a, core, vt_b)
+    return lowrank_apply_pallas(u_a, core, vt_b)
+
+
+def rsvd_factorize(a, omega, *, rank: int, power_iters: int = 2):
+    """Rank-r randomized SVD of `a` with caller-supplied sketch `omega`.
+
+    The m x k streaming products go through the Pallas sketch/matmul
+    kernels; the l-sized orthonormalization and small SVD use the
+    custom-call-free routines in jnp_linalg (LAPACK custom calls cannot
+    execute in the Rust PJRT client — see jnp_linalg docstring).
+    """
+    u, s, vt = rsvd_custom(
+        a,
+        omega,
+        power_iters=power_iters,
+        matmul=lambda x, y: (
+            range_sketch_pallas(x, y) if y.shape[1] <= 256 else matmul_pallas(x, y)
+        ),
+    )
+    return u[:, :rank], s[:rank], vt[:rank, :]
+
+
+def lowrank_gemm_e2e(a, b, omega_a, omega_b, *, rank: int, fp8: bool = False):
+    """Cold path: factorize both operands, then the factor chain.
+
+    This is what a cache miss costs in the serving system; the warm
+    path skips straight to `lowrank_gemm` with cached factors.
+    """
+    u_a, s_a, vt_a = rsvd_factorize(a, omega_a, rank=rank)
+    u_b, s_b, vt_b = rsvd_factorize(b, omega_b, rank=rank)
+    return lowrank_gemm(u_a, s_a, vt_a, u_b, s_b, vt_b, fp8=fp8)
+
+
+# ---------------------------------------------------------------------------
+# Jit wrappers with static configuration, used by aot.py and the tests.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "power_iters"))
+def rsvd_factorize_jit(a, omega, rank: int, power_iters: int = 2):
+    return rsvd_factorize(a, omega, rank=rank, power_iters=power_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("fp8",))
+def lowrank_gemm_jit(u_a, s_a, vt_a, u_b, s_b, vt_b, fp8: bool = False):
+    return lowrank_gemm(u_a, s_a, vt_a, u_b, s_b, vt_b, fp8=fp8)

@@ -1,0 +1,88 @@
+"""AOT lowering tests: lattice construction, manifest shape, HLO sanity.
+
+Full-lattice lowering is exercised by `make artifacts`; here we lower the
+quick (sentinel) lattice into a tmpdir and validate the contract the Rust
+manifest parser and runtime rely on.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    sentinel = str(out / "model.hlo.txt")
+    manifest = aot.lower_all(str(out), sentinel, quick=True, verbose=False)
+    return out, sentinel, manifest
+
+
+def test_quick_lattice_contains_sentinel_graph(quick_artifacts):
+    out, sentinel, manifest = quick_artifacts
+    assert os.path.exists(sentinel)
+    names = [e["name"] for e in manifest["entries"]]
+    assert "lowrank_e2e_n128_r16" in names
+
+
+def test_manifest_json_roundtrips(quick_artifacts):
+    out, _, manifest = quick_artifacts
+    on_disk = json.loads((out / "manifest.json").read_text())
+    assert on_disk == manifest
+    assert on_disk["version"] == 1
+    assert on_disk["oversample"] == aot.OVERSAMPLE
+
+
+def test_manifest_entry_contract(quick_artifacts):
+    out, _, manifest = quick_artifacts
+    e = manifest["entries"][0]
+    # The exact fields the Rust parser requires.
+    for field in ["name", "op", "file", "n", "rank", "inputs", "outputs"]:
+        assert field in e, field
+    assert (out / e["file"]).exists()
+    # e2e graph: a, b, omega_a, omega_b -> c.
+    n, r = e["n"], e["rank"]
+    assert e["inputs"] == [[n, n], [n, n], [n, r + 8], [n, r + 8]]
+    assert e["outputs"] == [[n, n]]
+
+
+def test_hlo_text_is_parseable_hlo(quick_artifacts):
+    out, sentinel, _ = quick_artifacts
+    text = open(sentinel).read()
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+    # Tuple return (return_tuple=True): root is a tuple op.
+    assert "tuple(" in text
+    # No LAPACK custom-calls may leak into artifacts (the Rust client
+    # cannot execute them) — the whole point of jnp_linalg.
+    assert "lapack" not in text.lower()
+    assert "custom-call" not in text.lower()
+
+
+def test_full_lattice_covers_all_ops():
+    entries = aot.build_lattice(quick=False)
+    ops = {e["op"] for e in entries}
+    assert {
+        "dense_f32",
+        "dense_f16",
+        "dense_fp8",
+        "lowrank_apply",
+        "lowrank_apply_fp8",
+        "rsvd",
+        "lowrank_gemm",
+        "lowrank_gemm_fp8",
+        "lowrank_e2e",
+    } <= ops
+    # No rank exceeding n/2 on the lattice (aot.py's own constraint).
+    for e in entries:
+        if e["rank"]:
+            assert e["rank"] * 2 <= e["n"], e["name"]
+
+
+def test_lattice_names_are_unique():
+    entries = aot.build_lattice(quick=False)
+    names = [e["name"] for e in entries]
+    assert len(names) == len(set(names))

@@ -1,0 +1,110 @@
+"""Bit-level validation of the E4M3 path against an independent model.
+
+The kernels quantize through jax's `float8_e4m3fn` dtype; here we model
+OCP E4M3 (1-4-3, no inf, max 448, round-to-nearest-even) from first
+principles in Python and require exact agreement. This is the oracle the
+Rust `fp8::codec` is also written against, so the two substrates share a
+single numerical definition.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.common import (
+    E4M3_MAX,
+    dequantize_e4m3,
+    e4m3_scale_for,
+    quantize_e4m3,
+    saturate_e4m3,
+)
+
+
+def e4m3_reference(x: float) -> float:
+    """Independent E4M3FN round-trip: round to 3-bit mantissa, RNE,
+    clamp to ±448, denormals at 2^-9 granularity, bias 7."""
+    if math.isnan(x):
+        return math.nan
+    if x == 0.0:
+        return math.copysign(0.0, x)
+    sign = math.copysign(1.0, x)
+    a = abs(x)
+    if a > E4M3_MAX:
+        return sign * E4M3_MAX  # our kernels saturate before casting
+    # Smallest normal is 2^-6; denormal lsb is 2^-9.
+    if a < 2.0**-6:
+        q = round(a / 2.0**-9)  # python round = RNE
+        return sign * q * 2.0**-9
+    e = math.floor(math.log2(a))
+    # Guard boundary: log2 may land on e+1's edge after rounding below.
+    lsb = 2.0**e / 8.0
+    q = round(a / lsb)
+    if q == 16:  # rounded up into the next binade
+        e += 1
+        lsb = 2.0**e / 8.0
+        q = round(a / lsb)
+    v = q * lsb
+    return sign * min(v, E4M3_MAX)
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.floats(
+        min_value=-600.0, max_value=600.0, allow_nan=False, allow_infinity=False
+    )
+)
+def test_e4m3_cast_matches_reference_model(x):
+    got = float(jnp.float32(saturate_e4m3(jnp.float32(x)).astype(jnp.float8_e4m3fn)))
+    want = e4m3_reference(x)
+    assert got == want or (math.isnan(got) and math.isnan(want)), f"{x}: {got} != {want}"
+
+
+def test_e4m3_exact_values_survive():
+    # Every value with ≤3 mantissa bits in range must round-trip exactly.
+    exact = [0.0, 1.0, -1.0, 0.5, 1.5, 2.0, 3.5, 448.0, -448.0, 0.015625]
+    for x in exact:
+        rt = float(jnp.float32(jnp.float32(x).astype(jnp.float8_e4m3fn)))
+        assert rt == x, f"{x} -> {rt}"
+
+
+def test_e4m3_max_is_448():
+    # 448 = 0x7E; values just above saturate via our clamp.
+    assert float(jnp.float32(saturate_e4m3(jnp.float32(1e6)).astype(jnp.float8_e4m3fn))) == 448.0
+
+
+def test_e4m3_rne_tie_breaks():
+    # Between 1.0 (q=8) and 1.125 (q=9) the tie 1.0625 rounds to even (8).
+    assert float(jnp.float32(jnp.float32(1.0625).astype(jnp.float8_e4m3fn))) == 1.0
+    # Between 1.125 (q=9) and 1.25 (q=10) the tie 1.1875 rounds to 1.25.
+    assert float(jnp.float32(jnp.float32(1.1875).astype(jnp.float8_e4m3fn))) == 1.25
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    scale_exp=st.integers(-20, 20),
+)
+def test_quantize_dequantize_bounded_error(seed, scale_exp):
+    # With amax scaling, each element is bounded by the larger of the
+    # 3-bit mantissa half-ulp (|x|·2⁻⁴, normal range) and the denormal
+    # granularity (amax·2⁻¹⁰·(2⁹/448)·safety — elements far below amax
+    # land in E4M3's denormal band where the error is absolute).
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((32, 32)) * 2.0**scale_exp, jnp.float32)
+    s = e4m3_scale_for(x)
+    rt = dequantize_e4m3(quantize_e4m3(x, s), s)
+    amax = float(jnp.max(jnp.abs(x)))
+    tol = jnp.maximum(jnp.abs(x) * 2.0**-4, amax * (2.0**-10 / 448.0) * 2.0**9)
+    assert bool(jnp.all(jnp.abs(rt - x) <= tol + 1e-30)), float(
+        jnp.max(jnp.abs(rt - x) / tol)
+    )
+
+
+def test_zero_tensor_scale_is_identity():
+    z = jnp.zeros((8, 8), jnp.float32)
+    s = e4m3_scale_for(z)
+    assert float(s) == 1.0
+    rt = dequantize_e4m3(quantize_e4m3(z, s), s)
+    assert float(jnp.max(jnp.abs(rt))) == 0.0

@@ -1,0 +1,138 @@
+"""Custom-call-free linear algebra vs jnp.linalg (LAPACK) references.
+
+These routines exist because LAPACK custom calls cannot execute in the
+Rust PJRT client; they must nonetheless match LAPACK quality on the
+sketch-sized problems they serve.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.jnp_linalg import jacobi_eigh, mgs_qr, rsvd_custom, svd_small_rows
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mgs_qr
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(4, 120),
+    l=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mgs_qr_orthonormal_and_reconstructs(m, l, seed):
+    if l > m:
+        l = m
+    rng = np.random.default_rng(seed)
+    y = rand(rng, m, l)
+    q, r = mgs_qr(y)
+    np.testing.assert_allclose(q.T @ q, jnp.eye(l), atol=5e-5)
+    np.testing.assert_allclose(q @ r, y, atol=5e-5 * float(jnp.max(jnp.abs(y))) * m)
+
+
+def test_mgs_qr_r_is_upper_triangular():
+    rng = np.random.default_rng(1)
+    _, r = mgs_qr(rand(rng, 40, 8))
+    assert float(jnp.max(jnp.abs(jnp.tril(r, -1)))) < 1e-5
+
+
+def test_mgs_qr_rank_deficient_input():
+    # Duplicate columns: dead directions must yield zero q columns, not NaN.
+    rng = np.random.default_rng(2)
+    col = rand(rng, 30, 1)
+    y = jnp.concatenate([col, col, rand(rng, 30, 2)], axis=1)
+    q, r = mgs_qr(y)
+    assert bool(jnp.all(jnp.isfinite(q)))
+    np.testing.assert_allclose(q @ r, y, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# jacobi_eigh
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(l=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_jacobi_eigh_matches_lapack(l, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, l, l)
+    a = x @ x.T + jnp.eye(l)  # SPD, well-separated enough
+    w_got, v_got = jacobi_eigh(a)
+    w_ref = jnp.linalg.eigvalsh(a)[::-1]  # descending
+    np.testing.assert_allclose(w_got, w_ref, rtol=1e-3, atol=1e-3)
+    # Eigenvector quality: A v ≈ w v.
+    resid = jnp.linalg.norm(a @ v_got - v_got * w_got[None, :])
+    assert float(resid) < 1e-2 * float(jnp.linalg.norm(a)), float(resid)
+
+
+def test_jacobi_eigh_diagonal_is_fixed_point():
+    a = jnp.diag(jnp.asarray([5.0, 3.0, 1.0], jnp.float32))
+    w, v = jacobi_eigh(a)
+    np.testing.assert_allclose(w, jnp.asarray([5.0, 3.0, 1.0]), atol=1e-6)
+    np.testing.assert_allclose(jnp.abs(v), jnp.eye(3), atol=1e-6)
+
+
+def test_jacobi_eigh_rejects_nonsquare():
+    with pytest.raises(ValueError):
+        jacobi_eigh(jnp.zeros((3, 4)))
+
+
+# ---------------------------------------------------------------------------
+# svd_small_rows / rsvd_custom
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.integers(2, 20),
+    n=st.integers(24, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_svd_small_rows_matches_lapack_spectrum(l, n, seed):
+    rng = np.random.default_rng(seed)
+    b = rand(rng, l, n)
+    u, s, vt = svd_small_rows(b)
+    s_ref = jnp.linalg.svd(b, compute_uv=False)
+    np.testing.assert_allclose(s, s_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose((u * s[None, :]) @ vt, b, atol=2e-3 * n)
+
+
+def test_rsvd_custom_recovers_low_rank_exactly():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(
+        rng.standard_normal((90, 12)) @ rng.standard_normal((12, 75)), jnp.float32
+    )
+    omega = rand(rng, 75, 20)
+    u, s, vt = rsvd_custom(a, omega)
+    rec = (u * s[None, :]) @ vt
+    rel = float(jnp.linalg.norm(rec - a) / jnp.linalg.norm(a))
+    assert rel < 1e-4, rel
+    # Trailing (l - true rank) singular values collapse to ~0.
+    assert float(s[12]) < 1e-3 * float(s[0])
+
+
+def test_rsvd_custom_truncation_error_tracks_eckart_young():
+    # On a known decaying spectrum, the rank-r sketch error must sit near
+    # the optimal tail energy.
+    rng = np.random.default_rng(8)
+    l_edge = 60
+    sv = jnp.asarray([0.8**j for j in range(l_edge)], jnp.float32)
+    q1, _ = mgs_qr(rand(rng, l_edge, l_edge))
+    q2, _ = mgs_qr(rand(rng, l_edge, l_edge))
+    a = (q1 * sv[None, :]) @ q2.T
+    r = 12
+    omega = rand(rng, l_edge, r + 8)
+    u, s, vt = rsvd_custom(a, omega)
+    rec = (u[:, :r] * s[None, :r]) @ vt[:r, :]
+    err = float(jnp.linalg.norm(rec - a))
+    opt = float(jnp.sqrt(jnp.sum(sv[r:] ** 2)))
+    assert err < 3.0 * opt + 1e-5, (err, opt)

@@ -1,0 +1,200 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (divisible and ragged vs the block size) and
+value scales; every kernel must agree with its `ref.py` oracle to float
+tolerance. Failures here are tiling/BlockSpec bugs by construction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fp8_gemm_pallas,
+    lowrank_apply_fp8_pallas,
+    lowrank_apply_pallas,
+    matmul_pallas,
+    range_sketch_pallas,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=70)
+SMALL_BLOCK = 32  # keep interpret-mode grids small but multi-step
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul_pallas
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_on_arbitrary_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = matmul_pallas(a, b, block=SMALL_BLOCK)
+    np.testing.assert_allclose(got, ref.ref_matmul(a, b), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (32, 32, 32), (64, 32, 96), (33, 65, 31)])
+def test_matmul_block_boundary_shapes(shape):
+    m, k, n = shape
+    rng = np.random.default_rng(0)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = matmul_pallas(a, b, block=SMALL_BLOCK)
+    np.testing.assert_allclose(got, ref.ref_matmul(a, b), rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_large_scale_values():
+    # f32 accumulation must survive big magnitudes without overflow.
+    # Summation *order* differs between the tiled kernel and one flat
+    # jnp.dot, so elements that suffer catastrophic cancellation can
+    # disagree at rtol 1e-5 while both are individually correct — bound
+    # the error relative to the problem scale (‖a‖·‖b‖·ulp-ish) instead.
+    rng = np.random.default_rng(1)
+    a, b = rand(rng, 48, 48, scale=1e4), rand(rng, 48, 48, scale=1e4)
+    got = matmul_pallas(a, b, block=SMALL_BLOCK)
+    want = ref.ref_matmul(a, b)
+    scale = float(jnp.max(jnp.abs(a))) * float(jnp.max(jnp.abs(b))) * 48
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6 * scale)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((4, 5))
+    b = jnp.zeros((6, 4))
+    with pytest.raises(ValueError):
+        matmul_pallas(a, b)
+    with pytest.raises(ValueError):
+        matmul_pallas(jnp.zeros((4,)), jnp.zeros((4, 4)))
+
+
+def test_matmul_dtype_override():
+    rng = np.random.default_rng(2)
+    a, b = rand(rng, 16, 16), rand(rng, 16, 16)
+    out = matmul_pallas(a, b, out_dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# fp8_gemm_pallas
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_fp8_gemm_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = fp8_gemm_pallas(a, b, block=SMALL_BLOCK)
+    want = ref.ref_fp8_gemm(a, b)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_fp8_gemm_error_band_vs_exact():
+    # §5.4: percent-level relative error vs exact, not garbage.
+    rng = np.random.default_rng(3)
+    a, b = rand(rng, 64, 64), rand(rng, 64, 64)
+    got = fp8_gemm_pallas(a, b, block=SMALL_BLOCK)
+    exact = ref.ref_matmul(a, b)
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    assert 1e-4 < rel < 0.15, rel
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(min_value=1e-3, max_value=1e3), seed=st.integers(0, 2**31 - 1))
+def test_fp8_gemm_scaling_compensation(scale, seed):
+    # Per-tensor amax scaling must make the error scale-invariant.
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, 32, 32), rand(rng, 32, 32)
+    base = fp8_gemm_pallas(a, b, block=SMALL_BLOCK)
+    scaled = fp8_gemm_pallas(a * scale, b, block=SMALL_BLOCK)
+    np.testing.assert_allclose(scaled, base * scale, rtol=2e-2, atol=2e-2 * scale)
+
+
+def test_fp8_gemm_zero_inputs():
+    z = jnp.zeros((16, 16), jnp.float32)
+    out = fp8_gemm_pallas(z, z, block=SMALL_BLOCK)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# lowrank_apply_pallas (+fp8)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=DIMS,
+    n=DIMS,
+    ra=st.integers(1, 24),
+    rb=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lowrank_apply_matches_ref(m, n, ra, rb, seed):
+    rng = np.random.default_rng(seed)
+    u, core, vt = rand(rng, m, ra), rand(rng, ra, rb), rand(rng, rb, n)
+    got = lowrank_apply_pallas(u, core, vt, block=SMALL_BLOCK)
+    np.testing.assert_allclose(got, ref.ref_lowrank_apply(u, core, vt), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=DIMS, n=DIMS, r=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_lowrank_apply_fp8_matches_ref(m, n, r, seed):
+    # The kernel folds the dequant scales into the f32 accumulator once
+    # per tile; the oracle divides per element in the compute dtype. Both
+    # are valid fp8 pipelines with slightly different rounding, so the
+    # comparison is norm-relative (single tiny-magnitude elements may
+    # disagree at percent level while the product is equally accurate).
+    rng = np.random.default_rng(seed)
+    u, core, vt = rand(rng, m, r), rand(rng, r, r), rand(rng, r, n)
+    got = lowrank_apply_fp8_pallas(u, core, vt, block=SMALL_BLOCK)
+    want = ref.ref_lowrank_apply_fp8(u, core, vt)
+    denom = float(jnp.linalg.norm(want)) + 1e-6
+    rel = float(jnp.linalg.norm(got - want)) / denom
+    assert rel < 3e-2, rel
+    # And both stay within the fp8 band of the exact factor chain.
+    exact = ref.ref_lowrank_apply(u, core, vt)
+    rel_exact = float(jnp.linalg.norm(got - exact)) / (float(jnp.linalg.norm(exact)) + 1e-6)
+    assert rel_exact < 0.12, rel_exact
+
+
+def test_lowrank_apply_shape_validation():
+    with pytest.raises(ValueError):
+        lowrank_apply_pallas(jnp.zeros((8, 4)), jnp.zeros((5, 5)), jnp.zeros((5, 8)))
+
+
+def test_lowrank_chain_equals_full_product():
+    # U (core) Vᵀ must equal the dense product of the reconstruction.
+    rng = np.random.default_rng(4)
+    u, core, vt = rand(rng, 40, 6), rand(rng, 6, 6), rand(rng, 6, 36)
+    got = lowrank_apply_pallas(u, core, vt, block=SMALL_BLOCK)
+    dense = (u @ core) @ vt
+    np.testing.assert_allclose(got, dense, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# range_sketch_pallas
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, k=DIMS, l=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_range_sketch_matches_ref(m, k, l, seed):
+    rng = np.random.default_rng(seed)
+    a, om = rand(rng, m, k), rand(rng, k, l)
+    got = range_sketch_pallas(a, om, block=SMALL_BLOCK)
+    np.testing.assert_allclose(got, ref.ref_range_sketch(a, om), rtol=1e-5, atol=1e-4)
+
+
+def test_range_sketch_shape_validation():
+    with pytest.raises(ValueError):
+        range_sketch_pallas(jnp.zeros((8, 4)), jnp.zeros((5, 3)))

@@ -1,0 +1,132 @@
+"""L2 graph tests: the model functions the artifacts are lowered from."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+def lowrank_matrix(rng, m, n, r):
+    return jnp.asarray(
+        rng.standard_normal((m, r)) @ rng.standard_normal((r, n)), jnp.float32
+    )
+
+
+def test_dense_gemm_f32_exact():
+    rng = np.random.default_rng(0)
+    a, b = rand(rng, 96, 96), rand(rng, 96, 96)
+    np.testing.assert_allclose(
+        model.dense_gemm_f32(a, b), ref.ref_matmul(a, b), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_dense_gemm_f16_storage_rounding():
+    rng = np.random.default_rng(1)
+    a, b = rand(rng, 64, 64), rand(rng, 64, 64)
+    got = model.dense_gemm_f16(a, b)
+    exact = ref.ref_matmul(a, b)
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    # f16 storage: small but visible error, far below fp8's.
+    assert 1e-6 < rel < 5e-3, rel
+
+
+def test_dense_gemm_fp8_band():
+    rng = np.random.default_rng(2)
+    a, b = rand(rng, 64, 64), rand(rng, 64, 64)
+    got = model.dense_gemm_fp8(a, b)
+    exact = ref.ref_matmul(a, b)
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    assert 1e-3 < rel < 0.15, rel
+
+
+def test_lowrank_core_matches_ref():
+    rng = np.random.default_rng(3)
+    s_a = jnp.abs(rand(rng, 6)) + 0.1
+    s_b = jnp.abs(rand(rng, 5)) + 0.1
+    vt_a, u_b = rand(rng, 6, 80), rand(rng, 80, 5)
+    np.testing.assert_allclose(
+        model.lowrank_core(s_a, vt_a, u_b, s_b),
+        ref.ref_lowrank_core(s_a, vt_a, u_b, s_b),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("fp8", [False, True])
+def test_lowrank_gemm_full_chain(fp8):
+    # Factor two genuinely low-rank matrices exactly, run Eq. (1), compare
+    # against the dense product.
+    rng = np.random.default_rng(4)
+    n, r = 72, 6
+    a = lowrank_matrix(rng, n, n, r)
+    b = lowrank_matrix(rng, n, n, r)
+    oa, ob = rand(rng, n, r + 8), rand(rng, n, r + 8)
+    u_a, s_a, vt_a = model.rsvd_factorize(a, oa, rank=r)
+    u_b, s_b, vt_b = model.rsvd_factorize(b, ob, rank=r)
+    got = model.lowrank_gemm(u_a, s_a, vt_a, u_b, s_b, vt_b, fp8=fp8)
+    exact = a @ b
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    tol = 0.08 if fp8 else 1e-3
+    assert rel < tol, rel
+
+
+def test_rsvd_factorize_shapes_and_ordering():
+    rng = np.random.default_rng(5)
+    n, r = 64, 8
+    a = rand(rng, n, n)
+    u, s, vt = model.rsvd_factorize(a, rand(rng, n, r + 8), rank=r)
+    assert u.shape == (n, r) and s.shape == (r,) and vt.shape == (r, n)
+    assert bool(jnp.all(jnp.diff(s) <= 1e-5)), "singular values must descend"
+    assert bool(jnp.all(s >= 0))
+
+
+def test_lowrank_gemm_e2e_cold_path():
+    rng = np.random.default_rng(6)
+    n, r = 64, 8
+    a = lowrank_matrix(rng, n, n, r)
+    b = lowrank_matrix(rng, n, n, r)
+    oa, ob = rand(rng, n, r + 8), rand(rng, n, r + 8)
+    got = model.lowrank_gemm_e2e(a, b, oa, ob, rank=r)
+    exact = a @ b
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    assert rel < 1e-3, rel
+
+
+def test_jit_wrappers_lower_and_agree():
+    rng = np.random.default_rng(7)
+    n, r = 48, 6
+    a = lowrank_matrix(rng, n, n, r)
+    om = rand(rng, n, r + 8)
+    u1, s1, v1 = model.rsvd_factorize(a, om, rank=r)
+    u2, s2, v2 = model.rsvd_factorize_jit(a, om, rank=r)
+    np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-5)
+    rec1 = (u1 * s1[None, :]) @ v1
+    rec2 = (u2 * s2[None, :]) @ v2
+    np.testing.assert_allclose(rec1, rec2, rtol=1e-4, atol=1e-4)
+
+
+def test_error_grows_as_rank_shrinks():
+    # §5.4 qualitative claim, at L2: truncation error is monotone in rank.
+    rng = np.random.default_rng(8)
+    n = 64
+    sv = jnp.asarray([0.75**j for j in range(n)], jnp.float32)
+    q1, _ = jnp.linalg.qr(rand(rng, n, n))
+    q2, _ = jnp.linalg.qr(rand(rng, n, n))
+    a = (q1 * sv[None, :]) @ q2.T
+    b = (q2 * sv[None, :]) @ q1.T
+    exact = a @ b
+    prev = 0.0
+    for r in [32, 16, 8, 4]:
+        oa, ob = rand(rng, n, r + 8), rand(rng, n, r + 8)
+        got = model.lowrank_gemm_e2e(a, b, oa, ob, rank=r)
+        rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+        assert rel + 1e-5 >= prev, (r, rel, prev)
+        prev = rel
+    assert prev > 1e-3  # rank-4 truncation must be visible

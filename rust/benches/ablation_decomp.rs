@@ -1,0 +1,127 @@
+//! Ablation A1: decomposition method (exact SVD vs randomized SVD vs
+//! Lanczos) — cost and quality across sizes and spectra (paper §3.1's
+//! "SVD, randomized SVD" method choice, which the auto selector makes).
+
+use lowrank_gemm::bench_harness::{bench, config_from_env, Table};
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::lowrank::{factorize, DecompMethod, LowRankConfig, RankStrategy};
+use lowrank_gemm::trace::{matrix_with_spectrum, SpectrumKind};
+
+const METHODS: [DecompMethod; 3] = [
+    DecompMethod::ExactSvd,
+    DecompMethod::RandomizedSvd,
+    DecompMethod::Lanczos,
+];
+
+fn cost_scaling() {
+    let cfg = config_from_env();
+    let mut rng = Pcg64::seeded(11);
+    let mut table = Table::new(
+        "Decomposition cost scaling [ms] (rank = N/16)",
+        &["N", "exact svd", "rsvd", "lanczos", "rsvd speedup"],
+    );
+    for n in [64usize, 128, 192, 256, 384] {
+        let r = (n / 16).max(2);
+        let a = Matrix::low_rank_noisy(n, n, r, 1e-3, &mut rng);
+        let mut times = Vec::new();
+        for method in METHODS {
+            let lr_cfg = LowRankConfig {
+                rank: RankStrategy::Fixed(r),
+                method,
+                ..Default::default()
+            };
+            let m = bench(&cfg, || {
+                factorize(&a, &lr_cfg).unwrap();
+            });
+            times.push(m.mean_s);
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{:8.2}", times[0] * 1e3),
+            format!("{:8.2}", times[1] * 1e3),
+            format!("{:8.2}", times[2] * 1e3),
+            format!("{:5.1}x", times[0] / times[1]),
+        ]);
+    }
+    table.print();
+    println!("(paper §3.1: randomized methods dominate exact SVD as N grows.)\n");
+}
+
+fn quality_by_spectrum() {
+    let mut rng = Pcg64::seeded(12);
+    let n = 256;
+    let r = 24;
+    for kind in [
+        SpectrumKind::ExponentialDecay,
+        SpectrumKind::PowerLaw,
+        SpectrumKind::Flat,
+    ] {
+        let a = matrix_with_spectrum(n, kind, &mut rng);
+        let mut table = Table::new(
+            &format!("Quality on {} spectrum (N={n}, r={r})", kind.name()),
+            &["method", "rel err", "vs exact-svd"],
+        );
+        let mut exact_err = None;
+        for method in METHODS {
+            let lr_cfg = LowRankConfig {
+                rank: RankStrategy::Fixed(r),
+                method,
+                storage: lowrank_gemm::fp8::StorageFormat::F32,
+                ..Default::default()
+            };
+            let err = factorize(&a, &lr_cfg).unwrap().measured_error(&a);
+            let base = *exact_err.get_or_insert(err);
+            table.row(&[
+                method.name().to_string(),
+                format!("{err:.3e}"),
+                format!("{:5.2}x", err / base),
+            ]);
+        }
+        table.print();
+        println!();
+    }
+}
+
+fn oversampling_and_power_iters() {
+    // rSVD tuning ablation: oversampling p and power iterations q trade
+    // factorization time against tail-energy capture (Halko et al.).
+    let cfg = config_from_env();
+    let mut rng = Pcg64::seeded(13);
+    let n = 256;
+    let r = 16;
+    let a = matrix_with_spectrum(n, SpectrumKind::PowerLaw, &mut rng);
+    let mut table = Table::new(
+        "rSVD tuning (N=256, r=16, power-law spectrum)",
+        &["oversample", "power iters", "rel err", "ms"],
+    );
+    for &(p, q) in &[(0usize, 0usize), (8, 0), (8, 1), (8, 2), (16, 2), (32, 3)] {
+        let lr_cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(r),
+            method: DecompMethod::RandomizedSvd,
+            storage: lowrank_gemm::fp8::StorageFormat::F32,
+            rsvd: lowrank_gemm::linalg::RsvdOptions {
+                oversample: p,
+                power_iters: q,
+                seed: 42,
+            },
+        };
+        let err = factorize(&a, &lr_cfg).unwrap().measured_error(&a);
+        let m = bench(&cfg, || {
+            factorize(&a, &lr_cfg).unwrap();
+        });
+        table.row(&[
+            p.to_string(),
+            q.to_string(),
+            format!("{err:.3e}"),
+            format!("{:7.2}", m.mean_s * 1e3),
+        ]);
+    }
+    table.print();
+    println!("(q=2, p=8 is the shipped default — the knee of this curve.)");
+}
+
+fn main() {
+    cost_scaling();
+    quality_by_spectrum();
+    oversampling_and_power_iters();
+}

@@ -1,0 +1,190 @@
+//! Hot-path microbenchmarks — the §Perf instrument.
+//!
+//! Each block measures one layer-3 hot path in isolation so the
+//! optimization loop (EXPERIMENTS.md §Perf) can attribute wins/regressions:
+//! GEMM kernels, factor chain, codecs, cache, router, batcher, service.
+
+use lowrank_gemm::bench_harness::{bench, config_from_env, Table};
+use lowrank_gemm::coordinator::{Batcher, BucketKey, GemmRequest, GemmService, Router, RouterConfig, ServiceConfig};
+use lowrank_gemm::fp8::{dequantize, quantize, StorageFormat};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{gemm_blocked, gemm_flops, gemm_naive, Matrix, Pcg64};
+use lowrank_gemm::lowrank::{factorize, lowrank_matmul, FactorCache, LowRankConfig, RankStrategy};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn gemm_kernels() {
+    let cfg = config_from_env();
+    let mut rng = Pcg64::seeded(31);
+    let mut table = Table::new(
+        "GEMM kernels [GFLOPS]",
+        &["N", "naive", "blocked", "blocked/naive"],
+    );
+    for n in [64usize, 128, 256, 512] {
+        let a = Matrix::gaussian(n, n, &mut rng);
+        let b = Matrix::gaussian(n, n, &mut rng);
+        let flops = gemm_flops(n, n, n);
+        let mn = bench(&cfg, || {
+            gemm_naive(&a, &b).unwrap();
+        });
+        let mb = bench(&cfg, || {
+            gemm_blocked(&a, &b).unwrap();
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:7.2}", mn.throughput(flops) / 1e9),
+            format!("{:7.2}", mb.throughput(flops) / 1e9),
+            format!("{:5.2}x", mn.mean_s / mb.mean_s),
+        ]);
+    }
+    table.print();
+    println!();
+}
+
+fn factor_chain() {
+    let cfg = config_from_env();
+    let mut rng = Pcg64::seeded(32);
+    let mut table = Table::new(
+        "Warm factor-chain [ms] (r = N/16) vs dense",
+        &["N", "chain", "dense", "speedup"],
+    );
+    for n in [128usize, 256, 512, 768] {
+        let r = n / 16;
+        let a = Matrix::low_rank_noisy(n, n, r, 1e-4, &mut rng);
+        let b = Matrix::low_rank_noisy(n, n, r, 1e-4, &mut rng);
+        let lr_cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(r),
+            ..Default::default()
+        };
+        let fa = factorize(&a, &lr_cfg).unwrap();
+        let fb = factorize(&b, &lr_cfg).unwrap();
+        let mc = bench(&cfg, || {
+            lowrank_matmul(&fa, &fb);
+        });
+        let md = bench(&cfg, || {
+            gemm_blocked(&a, &b).unwrap();
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:8.2}", mc.mean_s * 1e3),
+            format!("{:8.2}", md.mean_s * 1e3),
+            format!("{:5.2}x", md.mean_s / mc.mean_s),
+        ]);
+    }
+    table.print();
+    println!();
+}
+
+fn codecs() {
+    let cfg = config_from_env();
+    let mut rng = Pcg64::seeded(33);
+    let n = 512;
+    let a = Matrix::gaussian(n, n, &mut rng);
+    let mut table = Table::new(
+        "Quantize + dequantize round-trip [M elems/s] (512x512)",
+        &["format", "quantize", "dequantize"],
+    );
+    for fmt in [
+        StorageFormat::F16,
+        StorageFormat::Bf16,
+        StorageFormat::Fp8(lowrank_gemm::fp8::Fp8Format::E4M3),
+        StorageFormat::Fp8(lowrank_gemm::fp8::Fp8Format::E5M2),
+    ] {
+        let q = quantize(&a, fmt);
+        let mq = bench(&cfg, || {
+            quantize(&a, fmt);
+        });
+        let md = bench(&cfg, || {
+            dequantize(&q);
+        });
+        let elems = (n * n) as f64;
+        table.row(&[
+            fmt.name().to_string(),
+            format!("{:8.1}", mq.throughput(elems) / 1e6),
+            format!("{:8.1}", md.throughput(elems) / 1e6),
+        ]);
+    }
+    table.print();
+    println!();
+}
+
+fn cache_and_router() {
+    let cfg = config_from_env();
+    let mut rng = Pcg64::seeded(34);
+    let cache = Arc::new(FactorCache::new(256 << 20));
+    let lr_cfg = LowRankConfig {
+        rank: RankStrategy::Fixed(8),
+        ..Default::default()
+    };
+    for i in 0..32u64 {
+        let m = Matrix::low_rank(96, 96, 8, &mut rng);
+        cache.put(i, factorize(&m, &lr_cfg).unwrap());
+    }
+    let mhit = bench(&cfg, || {
+        for i in 0..32u64 {
+            std::hint::black_box(cache.get(i));
+        }
+    });
+    println!(
+        "factor cache: {:.2} M gets/s (hit, incl. clone)",
+        32.0 / mhit.mean_s / 1e6
+    );
+
+    let router = Router::new(RouterConfig::default(), cache.clone());
+    let a = Matrix::zeros(1024, 1024);
+    let b = Matrix::zeros(1024, 1024);
+    let req = GemmRequest::new(a, b);
+    let mr = bench(&cfg, || {
+        for _ in 0..100 {
+            std::hint::black_box(router.route(&req));
+        }
+    });
+    println!("router: {:.2} M route()/s", 100.0 / mr.mean_s / 1e6);
+
+    let mut batcher: Batcher<u32> = Batcher::new(8, Duration::from_micros(100));
+    let key = BucketKey::of(KernelKind::DenseF32, 256, 256, 256);
+    let mb = bench(&cfg, || {
+        let now = Instant::now();
+        for i in 0..1000 {
+            std::hint::black_box(batcher.push(key, i, now));
+        }
+        batcher.flush_all();
+    });
+    println!("batcher: {:.2} M push()/s\n", 1000.0 / mb.mean_s / 1e6);
+}
+
+fn service_request_path() {
+    let cfg = config_from_env();
+    let mut svc_cfg = ServiceConfig::default();
+    svc_cfg.workers = 2;
+    let svc = GemmService::start(svc_cfg).unwrap();
+    let mut rng = Pcg64::seeded(35);
+    let n = 96;
+    let a = Matrix::gaussian(n, n, &mut rng);
+    let b = Matrix::gaussian(n, n, &mut rng);
+
+    // Throughput under async pipelining (16 in flight).
+    let m = bench(&cfg, || {
+        let rxs: Vec<_> = (0..16)
+            .map(|_| svc.submit(GemmRequest::new(a.clone(), b.clone())).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    });
+    println!(
+        "service @N={n}: {:.0} req/s pipelined (batching on), queue+exec p50 via metrics:",
+        16.0 / m.mean_s
+    );
+    for (name, s) in svc.metrics().histogram_summaries() {
+        println!("  {name}: p50 {:.0} p99 {:.0} (n={})", s.p50, s.p99, s.count);
+    }
+}
+
+fn main() {
+    gemm_kernels();
+    factor_chain();
+    codecs();
+    cache_and_router();
+    service_request_path();
+}

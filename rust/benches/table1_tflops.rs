@@ -1,0 +1,150 @@
+//! Table 1 reproduction: peak TFLOPS per method at N ∈ {1024, 4096, 16384,
+//! 20480} on the RTX 4090 roofline model, plus a real-CPU cross-check of
+//! the same pipelines at substrate scale.
+//!
+//! Run: `cargo bench --bench table1_tflops` (LRG_BENCH_QUICK=1 for CI).
+//!
+//! The simulated block regenerates the paper's table from first
+//! principles (bytes, flops, launches — see gpu_sim::roofline); the
+//! measured block runs the *actual* kernels on this machine at sizes the
+//! 1-core host can complete, proving the same ordering/crossover shape
+//! with real numerics. EXPERIMENTS.md §T1 compares both against the paper.
+
+use lowrank_gemm::bench_harness::{bench, config_from_env, Table};
+use lowrank_gemm::coordinator::{Backend, GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::gpu_sim::{DeviceProfile, Roofline};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{gemm_flops, Matrix, Pcg64};
+use lowrank_gemm::lowrank::{FactorCache, LowRankConfig, RankStrategy};
+use std::sync::Arc;
+
+/// Paper Table 1, verbatim, for side-by-side printing.
+const PAPER: [(&str, [f64; 4]); 5] = [
+    ("PyTorch FP32", [38.0, 45.0, 52.0, 49.0]),
+    ("TorchCompile FP16", [21.0, 93.0, 135.0, 139.0]),
+    ("cuBLAS Optimized FP8", [18.0, 88.0, 132.0, 137.0]),
+    ("LowRank FP8", [0.5, 18.0, 172.0, 209.0]),
+    ("LowRank Auto", [0.5, 21.0, 278.0, 378.0]),
+];
+
+const SIZES: [usize; 4] = [1024, 4096, 16384, 20480];
+
+fn paper_rank(n: usize) -> usize {
+    // The paper's operating point: r = 512 at N = 20480 (§5.5), i.e. N/40.
+    (n / 40).max(16)
+}
+
+fn simulated_table() {
+    let rl = Roofline::new(DeviceProfile::rtx4090());
+    let mut table = Table::new(
+        "Table 1 — peak TFLOPS on RTX 4090 (simulated | paper)",
+        &["Method", "N=1024", "N=4096", "N=16384", "N=20480"],
+    );
+    for (name, paper_row) in PAPER {
+        let mut cells = vec![name.to_string()];
+        for (i, &n) in SIZES.iter().enumerate() {
+            let r = paper_rank(n);
+            let sim = match name {
+                "PyTorch FP32" => rl.pytorch_f32(n),
+                "TorchCompile FP16" => rl.torchcompile_f16(n),
+                "cuBLAS Optimized FP8" => rl.cublas_fp8(n),
+                "LowRank FP8" => rl.lowrank_fp8(n, r),
+                "LowRank Auto" => rl.lowrank_auto(n, r),
+                _ => unreachable!(),
+            };
+            cells.push(format!("{:7.1} | {:6.1}", sim.tflops, paper_row[i]));
+        }
+        table.row(&cells);
+    }
+    table.print();
+
+    // The paper's headline ratios, recomputed from the simulated rows.
+    let auto = rl.lowrank_auto(20480, paper_rank(20480)).tflops;
+    let f32t = rl.pytorch_f32(20480).tflops;
+    let fp8t = rl.cublas_fp8(20480).tflops;
+    println!(
+        "headline: LowRankAuto/PyTorchF32 = {:.1}x (paper 7.7x), /cuBLAS-FP8 = {:.1}x (paper 2.8x)\n",
+        auto / f32t,
+        auto / fp8t
+    );
+}
+
+fn measured_table() {
+    // Real execution on this host: same five pipelines, substrate scale.
+    // Weights are preloaded (offline decomposition) for the warm low-rank
+    // rows; LowRank FP8 runs cold to mirror the paper's harness.
+    let cfg = config_from_env();
+    let sizes = [128usize, 256, 384, 512];
+    let mut rng = Pcg64::seeded(42);
+
+    let mut table = Table::new(
+        "Table 1 cross-check — measured GFLOPS on this host (CPU substrate)",
+        &["Method", "N=128", "N=256", "N=384", "N=512"],
+    );
+
+    for kind in KernelKind::ALL {
+        let mut cells = vec![kind.paper_name().to_string()];
+        for &n in &sizes {
+            let r = (n / 16).max(4);
+            let cache = Arc::new(FactorCache::new(512 << 20));
+            let lr_cfg = LowRankConfig {
+                rank: RankStrategy::Fixed(r),
+                ..Default::default()
+            };
+            let backend = Backend::new(None, cache, lr_cfg);
+            let a = Matrix::low_rank_noisy(n, n, r, 1e-4, &mut rng);
+            let b = Matrix::low_rank_noisy(n, n, r, 1e-4, &mut rng);
+
+            // Warm rows cache factors under stable ids; LowRankFp8 stays
+            // anonymous = factorizes inside the timed region (paper's
+            // cold Table-1 regime).
+            let ids = if kind == KernelKind::LowRankAuto {
+                (Some(1u64), Some(2u64))
+            } else {
+                (None, None)
+            };
+            if kind == KernelKind::LowRankAuto {
+                // Prime the cache (offline decomposition).
+                backend.execute(kind, &a, &b, ids.0, ids.1).unwrap();
+            }
+            let m = bench(&cfg, || {
+                backend.execute(kind, &a, &b, ids.0, ids.1).unwrap();
+            });
+            cells.push(format!("{:8.2}", m.throughput(gemm_flops(n, n, n)) / 1e9));
+        }
+        table.row(&cells);
+    }
+    table.print();
+    println!("(LowRank rows use r = N/16; Auto = warm factors, FP8 = cold.)\n");
+}
+
+fn service_overhead_probe() {
+    // End-to-end service throughput at one size, to quantify scheduler
+    // overhead vs the raw backend (the coordinator must not be the
+    // bottleneck — §Perf gate for L3).
+    let cfg = config_from_env();
+    let svc = GemmService::start(ServiceConfig::default()).unwrap();
+    let mut rng = Pcg64::seeded(43);
+    let n = 128;
+    let a = Matrix::gaussian(n, n, &mut rng);
+    let b = Matrix::gaussian(n, n, &mut rng);
+
+    let inline = bench(&cfg, || {
+        svc.execute_inline(&GemmRequest::new(a.clone(), b.clone())).unwrap();
+    });
+    let queued = bench(&cfg, || {
+        svc.gemm_blocking(GemmRequest::new(a.clone(), b.clone())).unwrap();
+    });
+    println!(
+        "service overhead @N={n}: inline {:.3} ms, queued {:.3} ms (+{:.0}%)\n",
+        inline.mean_s * 1e3,
+        queued.mean_s * 1e3,
+        (queued.mean_s / inline.mean_s - 1.0) * 100.0
+    );
+}
+
+fn main() {
+    simulated_table();
+    measured_table();
+    service_overhead_probe();
+}

@@ -1,0 +1,142 @@
+//! Table 2 reproduction: GPU memory + TFLOPS at maximum scale (N=20480),
+//! and the §5.3/§5.5 memory-accounting walkthrough, audited.
+//!
+//! Memory comes from two independent places that must agree:
+//! the roofline pipelines' `peak_memory_bytes` (model) and a
+//! `MemoryTracker` replay of each pipeline's allocations (the simulated
+//! device allocator the serving system uses for admission control).
+
+use lowrank_gemm::bench_harness::Table;
+use lowrank_gemm::fp8::StorageFormat;
+use lowrank_gemm::gpu_sim::{DeviceProfile, MemoryTracker, Roofline};
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::lowrank::{factorize, LowRankConfig, RankStrategy};
+
+const N: usize = 20480;
+const R: usize = 512; // paper §5.5 worked example
+
+/// Paper Table 2, verbatim.
+const PAPER: [(&str, f64, f64, f64); 5] = [
+    // (method, memory GB, memory %, TFLOPS)
+    ("PyTorch FP32", 15.0, 60.0, 49.0),
+    ("TorchCompile FP16", 7.5, 30.0, 139.0),
+    ("cuBLAS Optimized FP8", 7.5, 30.0, 137.0),
+    ("LowRank FP8", 3.75, 15.0, 209.0),
+    ("LowRank Auto", 3.75, 15.0, 378.0),
+];
+
+fn replay_memory(method: &str, tracker: &mut MemoryTracker) {
+    let nn = (N * N) as u64;
+    let nr = (N * R) as u64;
+    match method {
+        // Dense: A, B, C at storage width (+ workspace factor folded into
+        // the pipelines' overhead_factor; tracker carries raw tensors).
+        "PyTorch FP32" => {
+            for (name, b) in [("A", nn * 4), ("B", nn * 4), ("C", nn * 4)] {
+                // Paper charges ~5 GB/matrix incl. temporaries (§5.5);
+                // raw is 1.68 GB — we track raw + a workspace block.
+                tracker.alloc(name, b).unwrap();
+            }
+            tracker.alloc("workspace", 3 * nn * 4 * 2 / 3).unwrap();
+        }
+        "TorchCompile FP16" | "cuBLAS Optimized FP8" => {
+            let w = if method.contains("FP16") { 2 } else { 2 /* fp8 stored, f16 staged */ };
+            for (name, b) in [("A", nn * w), ("B", nn * w), ("C", nn * w)] {
+                tracker.alloc(name, b).unwrap();
+            }
+            tracker.alloc("workspace", nn * w).unwrap();
+        }
+        "LowRank FP8" | "LowRank Auto" => {
+            // Factored operands: U, s, Vᵀ per matrix at 1 B/elem + dense C
+            // only for the materializing variant.
+            for m in ["A", "B"] {
+                tracker.alloc(&format!("{m}.U"), nr).unwrap();
+                tracker.alloc(&format!("{m}.s"), (R * 4) as u64).unwrap();
+                tracker.alloc(&format!("{m}.Vt"), nr).unwrap();
+            }
+            if method == "LowRank FP8" {
+                tracker.alloc("C", nn).unwrap();
+            } else {
+                tracker.alloc("C.U", nr).unwrap();
+                tracker.alloc("C.Vt", nr).unwrap();
+            }
+            tracker.alloc("decomp workspace", 8 * nr).unwrap();
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let device = DeviceProfile::rtx4090();
+    let rl = Roofline::new(device.clone());
+
+    let mut table = Table::new(
+        "Table 2 — memory + TFLOPS at N=20480 (model | paper)",
+        &["Method", "Mem (model)", "Mem (paper)", "Mem %", "TFLOPS (model|paper)"],
+    );
+
+    for (method, p_gb, p_pct, p_tf) in PAPER {
+        let sim = match method {
+            "PyTorch FP32" => rl.pytorch_f32(N),
+            "TorchCompile FP16" => rl.torchcompile_f16(N),
+            "cuBLAS Optimized FP8" => rl.cublas_fp8(N),
+            "LowRank FP8" => rl.lowrank_fp8(N, R),
+            "LowRank Auto" => rl.lowrank_auto(N, R),
+            _ => unreachable!(),
+        };
+        let mut tracker = MemoryTracker::new(device.memory_bytes);
+        replay_memory(method, &mut tracker);
+        let gb = tracker.peak() as f64 / 1e9;
+        table.row(&[
+            method.to_string(),
+            format!("{:5.2} GB", gb),
+            format!("{p_gb:5.2} GB"),
+            format!("{:4.1}% | {p_pct:4.1}%", 100.0 * tracker.peak_fraction()),
+            format!("{:6.1} | {p_tf:6.1}", sim.tflops),
+        ]);
+        // The two accounting paths must agree on the order of magnitude.
+        let model_gb = sim.peak_memory_bytes / 1e9;
+        assert!(
+            (model_gb / gb).max(gb / model_gb) < 6.0,
+            "{method}: model {model_gb:.2} GB vs tracker {gb:.2} GB diverge"
+        );
+    }
+    table.print();
+
+    // §5.5 worked example, audited with the real factor implementation.
+    println!("\n§5.5 audit (factorized storage at N=20480, r=512, FP8):");
+    let elems = N * R + R + R * N;
+    println!(
+        "  factor elements = {elems} ({:.2} M; paper says ~20.99 M)",
+        elems as f64 / 1e6
+    );
+    let mut rng = Pcg64::seeded(7);
+    // Same arithmetic at measurable scale via the real LowRankFactor.
+    let small_n = 1024;
+    let small_r = small_n / 40;
+    let a = Matrix::low_rank_noisy(small_n, small_n, small_r, 1e-4, &mut rng);
+    let f = factorize(
+        &a,
+        &LowRankConfig {
+            rank: RankStrategy::Fixed(small_r),
+            storage: StorageFormat::Fp8(lowrank_gemm::fp8::Fp8Format::E4M3),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    println!(
+        "  measured at N={small_n}, r={small_r}: factored {} KiB vs dense-fp8 {} KiB -> {:.1}% saving",
+        f.storage_bytes() / 1024,
+        f.dense_bytes() / 1024,
+        100.0 * f.memory_saving()
+    );
+    println!(
+        "  paper's headline: 75% vs FP32 dense ({} KiB) -> {:.1}% saving",
+        small_n * small_n * 4 / 1024,
+        100.0 * (1.0 - f.storage_bytes() as f64 / (small_n * small_n * 4) as f64)
+    );
+    println!(
+        "  effective capacity expansion: {:.2}x (paper: 3.25x-4x)",
+        (small_n * small_n * 4) as f64 / f.storage_bytes() as f64
+    );
+}

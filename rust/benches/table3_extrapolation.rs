@@ -1,0 +1,93 @@
+//! Table 3 reproduction: bandwidth-driven extrapolation to H200 / B200,
+//! plus the §6.2 percent-of-peak arithmetic — with the audit notes the
+//! paper needed (its "667 TFLOPS" bandwidth ceiling is a 1000x unit slip;
+//! see DeviceProfile::bandwidth_limited_gemm_flops).
+
+use lowrank_gemm::bench_harness::Table;
+use lowrank_gemm::gpu_sim::{DeviceProfile, Precision, Roofline};
+
+/// Paper Table 3, verbatim.
+const PAPER: [(&str, f64, f64, f64, &str); 3] = [
+    // (GPU, BW TB/s, fp8 peak PFLOPS, est TFLOPS, max N)
+    ("RTX 4090", 1.0, 1.3, 378.0, "20,480"),
+    ("H200", 4.8, 4.0, 1814.0, ">35,000"),
+    ("B200", 8.0, 20.0, 3024.0, ">50,000"),
+];
+
+const MEASURED_4090_TFLOPS: f64 = 378.0; // the paper's anchor value
+
+/// Largest square N whose three factorized matrices (plus dense-C
+/// workspace at 1 B/elem) fit device memory at rank N/40 — the capacity
+/// column of Table 3.
+fn max_n_by_capacity(d: &DeviceProfile) -> usize {
+    let mut n = 1024usize;
+    loop {
+        let r = (n / 40).max(16);
+        let factored = 3 * (2 * n * r + r) as u64; // three matrices, fp8
+        let workspace = (n * n) as u64; // one dense staging buffer
+        if factored + workspace > d.memory_bytes {
+            return n - 1024;
+        }
+        n += 1024;
+    }
+}
+
+fn main() {
+    let mut table = Table::new(
+        "Table 3 — projected LowRank GEMM throughput (model | paper)",
+        &["GPU", "BW", "FP8 peak", "Est. TFLOPS (model|paper)", "Max N (model|paper)"],
+    );
+
+    let anchor_bw = DeviceProfile::rtx4090().bandwidth_bps;
+    for (name, bw_tb, fp8_pflops, paper_tflops, paper_maxn) in PAPER {
+        let d = match name {
+            "RTX 4090" => DeviceProfile::rtx4090(),
+            "H200" => DeviceProfile::h200(),
+            "B200" => DeviceProfile::b200(),
+            _ => unreachable!(),
+        };
+        // The paper's extrapolation rule: scale the measured 378 TFLOPS by
+        // the bandwidth ratio (§6.3).
+        let projected = MEASURED_4090_TFLOPS * d.bandwidth_bps / anchor_bw;
+        let max_n = max_n_by_capacity(&d);
+        table.row(&[
+            name.to_string(),
+            format!("{bw_tb:.1} TB/s"),
+            format!("{fp8_pflops:.1} PF"),
+            format!("{projected:7.0} | {paper_tflops:7.0}"),
+            format!("{max_n} | {paper_maxn}"),
+        ]);
+    }
+    table.print();
+
+    // §6.2 arithmetic, reproduced and audited.
+    let d = DeviceProfile::rtx4090();
+    println!("\n§6.2 percent-of-peak arithmetic (RTX 4090):");
+    println!(
+        "  step 1-3: 378 / 1321 TFLOPS = {:.1}% of FP8 compute peak (paper: 28.6%)",
+        100.0 * MEASURED_4090_TFLOPS / (d.peak_fp8 / 1e12)
+    );
+    let stated = d.paper_stated_bw_ceiling_flops(Precision::Fp8) / 1e12;
+    println!(
+        "  step 4-5 (as stated): 378 / {stated:.0} TFLOPS = {:.1}% of 'bandwidth ceiling' (paper: 56.7%)",
+        100.0 * MEASURED_4090_TFLOPS / stated
+    );
+    let literal = d.bandwidth_limited_gemm_flops(Precision::Fp8) / 1e12;
+    println!(
+        "  AUDIT: the paper's formula literally evaluates to {literal:.3} TFLOPS (= 667 GFLOPS),"
+    );
+    println!(
+        "  a 1000x unit slip; the physical BW bound at N=20480 is {:.0} TFLOPS (2N/3 x BW),",
+        d.physical_bw_limited_gemm_flops(20480, Precision::Fp8) / 1e12
+    );
+    println!("  i.e. ABOVE the compute peak: large dense GEMM on this card is compute-bound.");
+
+    // Sanity: the roofline model's own large-N behaviour for the auto
+    // pipeline, for comparison with the extrapolation rule.
+    let rl = Roofline::new(DeviceProfile::h200());
+    let sim = rl.lowrank_auto(35_000, 35_000 / 40);
+    println!(
+        "\n  model cross-check: simulated LowRankAuto on H200 @N=35000: {:.0} TFLOPS (paper's rule: 1814)",
+        sim.tflops
+    );
+}

@@ -1,0 +1,218 @@
+//! Benchmark harness — criterion substitute for the offline environment.
+//!
+//! Implements the paper's §4.3 methodology directly: configurable warmup
+//! iterations, measurement iterations, and summary statistics. Also ships
+//! the table/series printers every `rust/benches/*.rs` target uses, so all
+//! reproduced tables render in a consistent, diffable format that
+//! EXPERIMENTS.md can embed verbatim.
+
+use std::time::Instant;
+
+/// Measurement settings (paper §4.3: 5 warmup + 5 measured).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Untimed warmup iterations.
+    pub warmup_iters: usize,
+    /// Timed iterations.
+    pub measure_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 5,
+            measure_iters: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for CI-ish runs.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup_iters: 1,
+            measure_iters: 3,
+        }
+    }
+}
+
+/// Summary statistics over the measured iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Mean seconds per iteration.
+    pub mean_s: f64,
+    /// Minimum (best) seconds.
+    pub min_s: f64,
+    /// Maximum (worst) seconds.
+    pub max_s: f64,
+    /// Sample standard deviation.
+    pub stddev_s: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Throughput in "units/s" given units of work per iteration.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        if self.mean_s <= 0.0 {
+            0.0
+        } else {
+            units_per_iter / self.mean_s
+        }
+    }
+}
+
+/// Run `f` under the config and summarize.
+pub fn bench(cfg: &BenchConfig, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.measure_iters);
+    for _ in 0..cfg.measure_iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Summarize raw samples.
+pub fn summarize(samples: &[f64]) -> Measurement {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples
+        .iter()
+        .map(|s| (s - mean) * (s - mean))
+        .sum::<f64>()
+        / (n - 1.0).max(1.0);
+    Measurement {
+        mean_s: mean,
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().copied().fold(0.0, f64::max),
+        stddev_s: var.sqrt(),
+        iters: samples.len(),
+    }
+}
+
+/// Fixed-width table printer: renders rows like the paper's Tables 1/2/3.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to a string (also returned so benches can tee into files).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    /// Render and print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Environment-variable escape hatch so `cargo bench` can be run quick
+/// (`LRG_BENCH_QUICK=1`) or full (default mirrors the paper's 5+5).
+pub fn config_from_env() -> BenchConfig {
+    if std::env::var("LRG_BENCH_QUICK").is_ok() {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut runs = 0;
+        let cfg = BenchConfig {
+            warmup_iters: 2,
+            measure_iters: 3,
+        };
+        let m = bench(&cfg, || {
+            runs += 1;
+        });
+        assert_eq!(runs, 5);
+        assert_eq!(m.iters, 3);
+        assert!(m.min_s <= m.mean_s && m.mean_s <= m.max_s);
+    }
+
+    #[test]
+    fn summarize_stats() {
+        let m = summarize(&[1.0, 2.0, 3.0]);
+        assert!((m.mean_s - 2.0).abs() < 1e-12);
+        assert_eq!(m.min_s, 1.0);
+        assert_eq!(m.max_s, 3.0);
+        assert!((m.stddev_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput() {
+        let m = summarize(&[0.5]);
+        assert!((m.throughput(10.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "TFLOPS"]);
+        t.row(&["PyTorch FP32".into(), "49".into()]);
+        t.row(&["LowRank Auto".into(), "378".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| PyTorch FP32 |"));
+        assert!(s.contains("| 378"));
+    }
+
+    #[test]
+    #[should_panic(expected = "table arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

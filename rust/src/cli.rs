@@ -1,0 +1,149 @@
+//! Dependency-free CLI argument parsing (no clap on the offline set).
+//!
+//! Grammar: `lowrank-gemm <subcommand> [--key value] [--flag] [positional…]`.
+//! Values may also be attached as `--key=value`. Unknown keys are an error
+//! (catching typos beats silently ignoring them).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct CliArgs {
+    /// First non-flag token (the subcommand).
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+/// Keys that take a value (everything else after `--` is a flag).
+const VALUE_KEYS: &[&str] = &[
+    "config", "device", "artifacts", "n", "rank", "size", "sizes", "kernel", "strategy",
+    "method", "storage", "tolerance", "requests", "workers", "batch", "window-us", "seed",
+    "out", "iters", "warmup",
+];
+
+/// Parse an argv (excluding the program name).
+pub fn parse_args<I: IntoIterator<Item = String>>(argv: I) -> Result<CliArgs> {
+    let mut out = CliArgs::default();
+    let mut it = argv.into_iter().peekable();
+
+    while let Some(tok) = it.next() {
+        if let Some(rest) = tok.strip_prefix("--") {
+            if rest.is_empty() {
+                // `--` terminator: everything after is positional.
+                out.positional.extend(it);
+                break;
+            }
+            if let Some((k, v)) = rest.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+                continue;
+            }
+            if VALUE_KEYS.contains(&rest) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| Error::Config(format!("--{rest} expects a value")))?;
+                out.options.insert(rest.to_string(), v);
+            } else {
+                out.flags.push(rest.to_string());
+            }
+        } else if out.command.is_none() {
+            out.command = Some(tok);
+        } else {
+            out.positional.push(tok);
+        }
+    }
+    Ok(out)
+}
+
+impl CliArgs {
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: cannot parse `{v}`"))),
+        }
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    /// Comma-separated list of usize (e.g. `--sizes 256,512,1024`).
+    pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| Error::Config(format!("--{key}: bad entry `{s}`")))
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> CliArgs {
+        parse_args(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --config conf.toml --workers 4 --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("config"), Some("conf.toml"));
+        assert_eq!(a.get_parse::<usize>("workers", 1).unwrap(), 4);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("bench --n=2048 --kernel=lowrank_auto");
+        assert_eq!(a.get("n"), Some("2048"));
+        assert_eq!(a.get("kernel"), Some("lowrank_auto"));
+    }
+
+    #[test]
+    fn positional_after_doubledash() {
+        let a = parse("run --n 8 -- --not-a-flag pos2");
+        assert_eq!(a.positional, vec!["--not-a-flag", "pos2"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse_args(["bench".into(), "--n".into()]).is_err());
+    }
+
+    #[test]
+    fn size_list() {
+        let a = parse("bench --sizes 128,256,512");
+        assert_eq!(a.get_usize_list("sizes").unwrap(), Some(vec![128, 256, 512]));
+        assert!(parse("bench --sizes 1,x").get_usize_list("sizes").is_err());
+    }
+
+    #[test]
+    fn typed_default_when_absent() {
+        let a = parse("bench");
+        assert_eq!(a.get_parse::<f32>("tolerance", 0.05).unwrap(), 0.05);
+    }
+}

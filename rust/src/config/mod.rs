@@ -1,0 +1,12 @@
+//! Configuration system.
+//!
+//! A TOML-subset parser (no serde offline) plus the typed service
+//! configuration. Supported TOML features: `[section]` headers, `key =
+//! value` with string/int/float/bool values, comments, and blank lines —
+//! exactly what the shipped `lowrank-gemm.toml` files need.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{AppConfig, ServiceSettings};
+pub use toml::{parse_toml, TomlValue};

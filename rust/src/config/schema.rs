@@ -1,0 +1,267 @@
+//! Typed application configuration backed by the TOML-subset parser.
+
+use crate::config::toml::{parse_toml, TomlDoc};
+use crate::error::{Error, Result};
+use crate::fp8::StorageFormat;
+use crate::lowrank::factor::DecompMethod;
+use crate::lowrank::rank::RankStrategy;
+
+/// `[service]` section: the coordinator's knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceSettings {
+    /// Worker threads executing GEMMs.
+    pub workers: usize,
+    /// Max queued requests before backpressure rejects (paper-free knob;
+    /// any serving system needs it).
+    pub queue_depth: usize,
+    /// Max requests fused into one batch by the dynamic batcher.
+    pub max_batch: usize,
+    /// Batching window in microseconds.
+    pub batch_window_us: u64,
+    /// Default relative-error tolerance when a request doesn't set one.
+    pub default_tolerance: f32,
+    /// Factor-cache budget in bytes.
+    pub factor_cache_bytes: usize,
+}
+
+impl Default for ServiceSettings {
+    fn default() -> Self {
+        ServiceSettings {
+            workers: 2,
+            queue_depth: 1024,
+            max_batch: 8,
+            batch_window_us: 200,
+            default_tolerance: 0.05,
+            factor_cache_bytes: 256 << 20,
+        }
+    }
+}
+
+/// Whole-app configuration.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    /// Device profile name for the cost model ("rtx4090", "h200", …).
+    pub device: String,
+    /// Directory containing AOT artifacts + manifest.
+    pub artifacts_dir: String,
+    /// Prefer XLA-compiled artifacts over the native CPU substrate when a
+    /// matching artifact exists.
+    pub use_xla: bool,
+    /// Low-rank defaults.
+    pub rank_strategy: RankStrategy,
+    /// Decomposition method.
+    pub decomp: DecompMethod,
+    /// Factor storage precision.
+    pub storage: StorageFormat,
+    /// `[service]` knobs.
+    pub service: ServiceSettings,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            device: "rtx4090".into(),
+            artifacts_dir: "artifacts".into(),
+            use_xla: true,
+            rank_strategy: RankStrategy::EnergyFraction(0.99),
+            decomp: DecompMethod::RandomizedSvd,
+            storage: StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
+            service: ServiceSettings::default(),
+        }
+    }
+}
+
+impl AppConfig {
+    /// Parse from TOML text; unset keys keep defaults.
+    pub fn from_toml(text: &str) -> Result<AppConfig> {
+        let doc = parse_toml(text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<AppConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<AppConfig> {
+        let mut cfg = AppConfig::default();
+        if let Some(top) = doc.get("") {
+            if let Some(v) = top.get("device") {
+                cfg.device = req_str(v, "device")?;
+            }
+            if let Some(v) = top.get("artifacts_dir") {
+                cfg.artifacts_dir = req_str(v, "artifacts_dir")?;
+            }
+            if let Some(v) = top.get("use_xla") {
+                cfg.use_xla = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("use_xla must be bool".into()))?;
+            }
+        }
+        if let Some(lr) = doc.get("lowrank") {
+            if let Some(v) = lr.get("decomp") {
+                let s = req_str(v, "lowrank.decomp")?;
+                cfg.decomp = DecompMethod::parse(&s)
+                    .ok_or_else(|| Error::Config(format!("unknown decomp `{s}`")))?;
+            }
+            if let Some(v) = lr.get("storage") {
+                let s = req_str(v, "lowrank.storage")?;
+                cfg.storage = StorageFormat::parse(&s)
+                    .ok_or_else(|| Error::Config(format!("unknown storage `{s}`")))?;
+            }
+            cfg.rank_strategy = parse_rank_strategy(lr)?;
+        }
+        if let Some(svc) = doc.get("service") {
+            let s = &mut cfg.service;
+            if let Some(v) = svc.get("workers") {
+                s.workers = req_usize(v, "service.workers")?;
+            }
+            if let Some(v) = svc.get("queue_depth") {
+                s.queue_depth = req_usize(v, "service.queue_depth")?;
+            }
+            if let Some(v) = svc.get("max_batch") {
+                s.max_batch = req_usize(v, "service.max_batch")?;
+            }
+            if let Some(v) = svc.get("batch_window_us") {
+                s.batch_window_us = req_usize(v, "service.batch_window_us")? as u64;
+            }
+            if let Some(v) = svc.get("default_tolerance") {
+                s.default_tolerance = v
+                    .as_float()
+                    .ok_or_else(|| Error::Config("default_tolerance must be float".into()))?
+                    as f32;
+            }
+            if let Some(v) = svc.get("factor_cache_mb") {
+                s.factor_cache_bytes = req_usize(v, "service.factor_cache_mb")? << 20;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn parse_rank_strategy(
+    section: &std::collections::BTreeMap<String, crate::config::toml::TomlValue>,
+) -> Result<RankStrategy> {
+    let name = match section.get("rank_strategy") {
+        Some(v) => req_str(v, "lowrank.rank_strategy")?,
+        None => return Ok(AppConfig::default().rank_strategy),
+    };
+    Ok(match name.as_str() {
+        "fixed" => RankStrategy::Fixed(match section.get("rank") {
+            Some(v) => req_usize(v, "lowrank.rank")?,
+            None => 64,
+        }),
+        "fixed_fraction" => RankStrategy::FixedFraction(get_f32(section, "alpha", 0.025)?),
+        "energy" => RankStrategy::EnergyFraction(get_f32(section, "tau", 0.99)?),
+        "error_bound" => RankStrategy::ErrorBound(get_f32(section, "epsilon", 0.02)?),
+        "hardware_aware" => RankStrategy::HardwareAware {
+            memory_fraction: get_f32(section, "memory_fraction", 0.15)?,
+            granule: match section.get("granule") {
+                Some(v) => req_usize(v, "lowrank.granule")?,
+                None => 16,
+            },
+        },
+        other => return Err(Error::Config(format!("unknown rank_strategy `{other}`"))),
+    })
+}
+
+fn get_f32(
+    section: &std::collections::BTreeMap<String, crate::config::toml::TomlValue>,
+    key: &str,
+    default: f32,
+) -> Result<f32> {
+    match section.get(key) {
+        Some(v) => Ok(v
+            .as_float()
+            .ok_or_else(|| Error::Config(format!("{key} must be a number")))?
+            as f32),
+        None => Ok(default),
+    }
+}
+
+fn req_str(v: &crate::config::toml::TomlValue, key: &str) -> Result<String> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| Error::Config(format!("{key} must be a string")))
+}
+
+fn req_usize(v: &crate::config::toml::TomlValue, key: &str) -> Result<usize> {
+    let i = v
+        .as_int()
+        .ok_or_else(|| Error::Config(format!("{key} must be an integer")))?;
+    if i < 0 {
+        return Err(Error::Config(format!("{key} must be non-negative")));
+    }
+    Ok(i as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.device, "rtx4090");
+        assert_eq!(cfg.service.workers, 2);
+    }
+
+    #[test]
+    fn full_document() {
+        let cfg = AppConfig::from_toml(
+            r#"
+device = "h200"
+artifacts_dir = "art"
+use_xla = false
+
+[lowrank]
+decomp = "lanczos"
+storage = "fp8_e5m2"
+rank_strategy = "energy"
+tau = 0.999
+
+[service]
+workers = 8
+queue_depth = 64
+max_batch = 4
+batch_window_us = 500
+default_tolerance = 0.01
+factor_cache_mb = 128
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.device, "h200");
+        assert!(!cfg.use_xla);
+        assert_eq!(cfg.decomp, DecompMethod::Lanczos);
+        assert_eq!(cfg.storage.name(), "fp8_e5m2");
+        assert_eq!(cfg.rank_strategy, RankStrategy::EnergyFraction(0.999));
+        assert_eq!(cfg.service.workers, 8);
+        assert_eq!(cfg.service.factor_cache_bytes, 128 << 20);
+    }
+
+    #[test]
+    fn rank_strategy_variants() {
+        let fixed = AppConfig::from_toml("[lowrank]\nrank_strategy = \"fixed\"\nrank = 32").unwrap();
+        assert_eq!(fixed.rank_strategy, RankStrategy::Fixed(32));
+        let hw = AppConfig::from_toml(
+            "[lowrank]\nrank_strategy = \"hardware_aware\"\nmemory_fraction = 0.2\ngranule = 8",
+        )
+        .unwrap();
+        assert_eq!(
+            hw.rank_strategy,
+            RankStrategy::HardwareAware {
+                memory_fraction: 0.2,
+                granule: 8
+            }
+        );
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(AppConfig::from_toml("use_xla = 3").is_err());
+        assert!(AppConfig::from_toml("[lowrank]\ndecomp = \"qr\"").is_err());
+        assert!(AppConfig::from_toml("[lowrank]\nrank_strategy = \"nope\"").is_err());
+        assert!(AppConfig::from_toml("[service]\nworkers = -1").is_err());
+    }
+}

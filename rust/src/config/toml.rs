@@ -1,0 +1,215 @@
+//! Minimal TOML-subset parser.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML scalar.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// As string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As integer (accepts exact floats too).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            TomlValue::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// As float (accepts ints).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key → value`; top-level keys use section "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(input: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| {
+                Error::Config(format!("line {}: unterminated section header", lineno + 1))
+            })?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| {
+            Error::Config(format!("line {}: expected `key = value`", lineno + 1))
+        })?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| Error::Config(format!("line {}: {}", lineno + 1, e)))?;
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+        }
+        doc.get_mut(&section).unwrap().insert(key, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(unescape(inner)));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = parse_toml(
+            r#"
+# top comment
+name = "lowrank"   # trailing comment
+threads = 4
+
+[service]
+queue_depth = 1_024
+tolerance = 0.05
+enabled = true
+label = "a # not comment"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"], TomlValue::Str("lowrank".into()));
+        assert_eq!(doc[""]["threads"], TomlValue::Int(4));
+        assert_eq!(doc["service"]["queue_depth"], TomlValue::Int(1024));
+        assert_eq!(doc["service"]["tolerance"], TomlValue::Float(0.05));
+        assert_eq!(doc["service"]["enabled"], TomlValue::Bool(true));
+        assert_eq!(
+            doc["service"]["label"],
+            TomlValue::Str("a # not comment".into())
+        );
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(TomlValue::Int(3).as_float(), Some(3.0));
+        assert_eq!(TomlValue::Float(3.0).as_int(), Some(3));
+        assert_eq!(TomlValue::Float(3.5).as_int(), None);
+        assert_eq!(TomlValue::Bool(true).as_bool(), Some(true));
+        assert_eq!(TomlValue::Str("x".into()).as_str(), Some("x"));
+    }
+
+    #[test]
+    fn error_on_bad_lines() {
+        assert!(parse_toml("[unterminated").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("= 3").is_err());
+        assert!(parse_toml("x = ").is_err());
+        assert!(parse_toml("x = \"open").is_err());
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = parse_toml(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc[""]["s"], TomlValue::Str("a\nb\t\"c\"".into()));
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = parse_toml("a = -5\nb = 1e-3\nc = -2.5").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Int(-5));
+        assert_eq!(doc[""]["b"], TomlValue::Float(1e-3));
+        assert_eq!(doc[""]["c"], TomlValue::Float(-2.5));
+    }
+}

@@ -1,0 +1,284 @@
+//! Kernel execution backends.
+//!
+//! Every routed request ends up here: [`Backend::execute`] runs the chosen
+//! kernel either on an AOT-compiled **XLA artifact** (when the request's
+//! shape sits on the lattice `compile/aot.py` lowered — the Pallas-kernel
+//! path) or on the **native CPU substrate** (`linalg` + `fp8` + `lowrank`)
+//! for everything off-lattice. This mirrors the paper's "automatic
+//! fallback" and keeps one code path for arbitrary shapes.
+//!
+//! The numerics of the two substrates agree to float tolerance — that is
+//! asserted by `rust/tests/runtime_roundtrip.rs`, which is exactly the
+//! "Pallas kernel vs reference" check done once more from the Rust side.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::fp8::{quantized_matmul, StorageFormat};
+use crate::kernels::KernelKind;
+use crate::linalg::{gemm_blocked, Matrix};
+use crate::lowrank::cache::MatrixId;
+use crate::lowrank::factor::{LowRankConfig, LowRankFactor};
+use crate::lowrank::{factorize, lowrank_matmul, FactorCache};
+use crate::coordinator::request::BackendKind;
+use crate::runtime::XlaHandle;
+use crate::runtime::Manifest;
+
+/// Execution outcome details for one kernel run.
+#[derive(Clone, Debug)]
+pub struct ExecOutcome {
+    /// The product.
+    pub c: Matrix,
+    /// Which substrate ran.
+    pub backend: BackendKind,
+    /// Rank actually used (0 = dense).
+    pub rank: usize,
+}
+
+/// The executor over both substrates.
+pub struct Backend {
+    /// XLA executor handle + manifest (None = CPU-only mode).
+    xla: Option<(XlaHandle, Arc<Manifest>)>,
+    /// Factor cache shared with the router.
+    cache: Arc<FactorCache>,
+    /// Factorization configuration for on-the-fly (cold) decomposition.
+    lr_cfg: LowRankConfig,
+}
+
+impl Backend {
+    /// Build a backend. `xla` is optional: benches that sweep large
+    /// off-lattice shapes run CPU-only.
+    pub fn new(
+        xla: Option<(XlaHandle, Arc<Manifest>)>,
+        cache: Arc<FactorCache>,
+        lr_cfg: LowRankConfig,
+    ) -> Self {
+        Backend { xla, cache, lr_cfg }
+    }
+
+    /// Execute `kind` on (a, b). `a_id`/`b_id` enable factor caching.
+    pub fn execute(
+        &self,
+        kind: KernelKind,
+        a: &Matrix,
+        b: &Matrix,
+        a_id: Option<MatrixId>,
+        b_id: Option<MatrixId>,
+    ) -> Result<ExecOutcome> {
+        if a.cols() != b.rows() {
+            return Err(Error::ShapeMismatch {
+                op: "gemm",
+                lhs: a.shape(),
+                rhs: b.shape(),
+            });
+        }
+        match kind {
+            KernelKind::DenseF32 => self.dense(a, b, "dense_f32", StorageFormat::F32),
+            KernelKind::DenseF16 => self.dense(a, b, "dense_f16", StorageFormat::F16),
+            KernelKind::DenseFp8 => self.dense(
+                a,
+                b,
+                "dense_fp8",
+                StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
+            ),
+            KernelKind::LowRankFp8 | KernelKind::LowRankAuto => {
+                self.lowrank(kind, a, b, a_id, b_id)
+            }
+        }
+    }
+
+    /// Square-lattice artifact lookup: (op, n) hit iff both operands are
+    /// n×n and the manifest has the op at exactly n.
+    fn artifact_for(&self, op: &str, a: &Matrix, b: &Matrix, rank: usize) -> Option<String> {
+        let (xla, manifest) = self.xla.as_ref()?;
+        let _ = xla;
+        let n = a.rows();
+        if a.shape() != (n, n) || b.shape() != (n, n) {
+            return None;
+        }
+        manifest.lookup(op, n, rank).map(|e| e.name.clone())
+    }
+
+    fn dense(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        op: &str,
+        storage: StorageFormat,
+    ) -> Result<ExecOutcome> {
+        if let Some(name) = self.artifact_for(op, a, b, 0) {
+            let (xla, _) = self.xla.as_ref().expect("artifact_for implies xla");
+            let mut outs = xla.run(&name, vec![a.clone(), b.clone()])?;
+            return Ok(ExecOutcome {
+                c: outs.remove(0),
+                backend: BackendKind::Xla,
+                rank: 0,
+            });
+        }
+        // CPU substrate: exact f32 path uses the blocked GEMM; reduced
+        // precisions round-trip storage through the software codecs
+        // (f32 accumulation inside, same as the kernels).
+        let c = match storage {
+            StorageFormat::F32 => gemm_blocked(a, b)?,
+            other => quantized_matmul(a, b, other),
+        };
+        Ok(ExecOutcome {
+            c,
+            backend: BackendKind::CpuSubstrate,
+            rank: 0,
+        })
+    }
+
+    /// Fetch a factor from the cache or factorize now (charging the cold
+    /// path — this is the miss cost the router's cost model anticipated).
+    fn factor_of(&self, m: &Matrix, id: Option<MatrixId>) -> Result<LowRankFactor> {
+        match id {
+            Some(id) => self
+                .cache
+                .get_or_insert_with(id, || factorize(m, &self.lr_cfg)),
+            None => factorize(m, &self.lr_cfg),
+        }
+    }
+
+    fn lowrank(
+        &self,
+        kind: KernelKind,
+        a: &Matrix,
+        b: &Matrix,
+        a_id: Option<MatrixId>,
+        b_id: Option<MatrixId>,
+    ) -> Result<ExecOutcome> {
+        // Mixed factored×dense serving paths: when exactly one operand is
+        // an identified (weight) matrix, keep the other dense — never pay
+        // rSVD on an activation (paper §6.5: offline decomposition is for
+        // stable matrices; on-the-fly factorization of transient operands
+        // is the cost the router's cold path charges).
+        match (a_id, b_id) {
+            (Some(_), None) => {
+                let fa = self.factor_of(a, a_id)?;
+                let rank = fa.rank();
+                let c = crate::lowrank::lowrank_matmul_dense_rhs(&fa, b);
+                return Ok(ExecOutcome {
+                    c,
+                    backend: BackendKind::CpuSubstrate,
+                    rank,
+                });
+            }
+            (None, Some(_)) => {
+                let fb = self.factor_of(b, b_id)?;
+                let rank = fb.rank();
+                let c = crate::lowrank::lowrank_matmul_dense_lhs(a, &fb);
+                return Ok(ExecOutcome {
+                    c,
+                    backend: BackendKind::CpuSubstrate,
+                    rank,
+                });
+            }
+            _ => {}
+        }
+
+        let fa = self.factor_of(a, a_id)?;
+        let fb = self.factor_of(b, b_id)?;
+        let rank = fa.rank().max(fb.rank());
+
+        // XLA path needs equal ranks on the lattice (artifacts are lowered
+        // at fixed r); the CPU factor-chain handles mixed ranks natively.
+        let op = match kind {
+            KernelKind::LowRankFp8 => "lowrank_apply_fp8",
+            _ => "lowrank_apply",
+        };
+        if fa.rank() == fb.rank() {
+            if let Some(name) = self.artifact_for(op, a, b, fa.rank()) {
+                let (xla, _) = self.xla.as_ref().expect("artifact_for implies xla");
+                // Merge the rank-sized core on the CPU (r² work), ship the
+                // three factor operands to the artifact.
+                let u_a = fa.u_dense();
+                let vt_b = fb.vt_dense();
+                let core = fa.core_with(&fb)?;
+                let mut outs = xla.run(&name, vec![u_a, core, vt_b])?;
+                return Ok(ExecOutcome {
+                    c: outs.remove(0),
+                    backend: BackendKind::Xla,
+                    rank,
+                });
+            }
+        }
+
+        let c = lowrank_matmul(&fa, &fb);
+        Ok(ExecOutcome {
+            c,
+            backend: BackendKind::CpuSubstrate,
+            rank,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+
+    fn cpu_backend() -> Backend {
+        Backend::new(
+            None,
+            Arc::new(FactorCache::new(64 << 20)),
+            LowRankConfig::default(),
+        )
+    }
+
+    #[test]
+    fn dense_f32_matches_reference() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Matrix::gaussian(33, 47, &mut rng);
+        let b = Matrix::gaussian(47, 29, &mut rng);
+        let out = cpu_backend()
+            .execute(KernelKind::DenseF32, &a, &b, None, None)
+            .unwrap();
+        assert_eq!(out.backend, BackendKind::CpuSubstrate);
+        let exact = a.matmul(&b);
+        assert!(out.c.rel_frobenius_distance(&exact) < 1e-6);
+    }
+
+    #[test]
+    fn fp8_dense_error_band() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Matrix::gaussian(64, 64, &mut rng);
+        let b = Matrix::gaussian(64, 64, &mut rng);
+        let out = cpu_backend()
+            .execute(KernelKind::DenseFp8, &a, &b, None, None)
+            .unwrap();
+        let exact = a.matmul(&b);
+        let err = out.c.rel_frobenius_distance(&exact);
+        // §5.4: fp8 quantization error is percent-level, not exact.
+        assert!(err > 1e-5 && err < 0.2, "err = {err}");
+    }
+
+    #[test]
+    fn lowrank_on_lowrank_matrix_is_accurate() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Matrix::low_rank_noisy(96, 96, 6, 1e-5, &mut rng);
+        let b = Matrix::low_rank_noisy(96, 96, 6, 1e-5, &mut rng);
+        let be = cpu_backend();
+        let out = be
+            .execute(KernelKind::LowRankAuto, &a, &b, Some(11), Some(12))
+            .unwrap();
+        assert!(out.rank >= 1);
+        let exact = a.matmul(&b);
+        let err = out.c.rel_frobenius_distance(&exact);
+        assert!(err < 0.05, "err = {err}");
+        // Second call hits the cache.
+        let _ = be
+            .execute(KernelKind::LowRankAuto, &a, &b, Some(11), Some(12))
+            .unwrap();
+        assert!(be.cache.stats().hits >= 2);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(6, 4);
+        assert!(cpu_backend()
+            .execute(KernelKind::DenseF32, &a, &b, None, None)
+            .is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Size-bucketed dynamic batcher.
+//!
+//! The serving-loop heart of the coordinator: requests accumulate in
+//! per-bucket pens and flush to the worker pool when either the batch is
+//! full (`max_batch`) or the oldest member has waited out the batching
+//! window (`batch_window`). Buckets are keyed by (kernel kind, log2 size
+//! class) so one flush hands a worker a set of *similarly shaped, same
+//! kernel* requests — the GEMM analogue of vLLM's continuous batching
+//! buckets. On GPU hardware a batch would fuse into one batched GEMM; on
+//! the CPU substrate batching still amortizes routing and scheduling, and
+//! it preserves the paper-shaped architecture.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::kernels::KernelKind;
+
+/// Batch key: kernel kind + log2 size class of max(m, k, n).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BucketKey {
+    /// Kernel this bucket collects.
+    pub kind: KernelKind,
+    /// floor(log2(max dim)) — shapes within 2x batch together.
+    pub size_class: u32,
+}
+
+impl BucketKey {
+    /// Classify a routed request.
+    pub fn of(kind: KernelKind, m: usize, k: usize, n: usize) -> Self {
+        let dim = m.max(k).max(n).max(1);
+        BucketKey {
+            kind,
+            size_class: usize::BITS - 1 - dim.leading_zeros(),
+        }
+    }
+}
+
+/// A pen of pending items of type `T` plus its deadline bookkeeping.
+struct Pen<T> {
+    items: Vec<T>,
+    oldest: Instant,
+}
+
+/// Generic size/time-triggered batcher. `T` is whatever the service pends
+/// (kept generic so unit tests do not need full requests).
+pub struct Batcher<T> {
+    pens: HashMap<BucketKey, Pen<T>>,
+    max_batch: usize,
+    window: Duration,
+}
+
+impl<T> Batcher<T> {
+    /// `max_batch` requests or `window` of age, whichever first.
+    pub fn new(max_batch: usize, window: Duration) -> Self {
+        Batcher {
+            pens: HashMap::new(),
+            max_batch: max_batch.max(1),
+            window,
+        }
+    }
+
+    /// Add an item; returns a full batch if this push filled the pen.
+    pub fn push(&mut self, key: BucketKey, item: T, now: Instant) -> Option<(BucketKey, Vec<T>)> {
+        let pen = self.pens.entry(key).or_insert_with(|| Pen {
+            items: Vec::new(),
+            oldest: now,
+        });
+        if pen.items.is_empty() {
+            pen.oldest = now;
+        }
+        pen.items.push(item);
+        if pen.items.len() >= self.max_batch {
+            let items = std::mem::take(&mut pen.items);
+            return Some((key, items));
+        }
+        None
+    }
+
+    /// Flush every pen whose oldest member has exceeded the window.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<(BucketKey, Vec<T>)> {
+        let mut out = Vec::new();
+        for (key, pen) in self.pens.iter_mut() {
+            if !pen.items.is_empty() && now.duration_since(pen.oldest) >= self.window {
+                out.push((*key, std::mem::take(&mut pen.items)));
+            }
+        }
+        out
+    }
+
+    /// Flush everything (shutdown / drain).
+    pub fn flush_all(&mut self) -> Vec<(BucketKey, Vec<T>)> {
+        self.pens
+            .iter_mut()
+            .filter(|(_, p)| !p.items.is_empty())
+            .map(|(k, p)| (*k, std::mem::take(&mut p.items)))
+            .collect()
+    }
+
+    /// Next deadline among non-empty pens (for the service's poll sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pens
+            .values()
+            .filter(|p| !p.items.is_empty())
+            .map(|p| p.oldest + self.window)
+            .min()
+    }
+
+    /// Total queued items across pens.
+    pub fn pending(&self) -> usize {
+        self.pens.values().map(|p| p.items.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: usize) -> BucketKey {
+        BucketKey::of(KernelKind::DenseF32, n, n, n)
+    }
+
+    #[test]
+    fn size_classes_group_within_2x() {
+        assert_eq!(key(1024), key(1500));
+        assert_ne!(key(1024), key(2048));
+        assert_ne!(
+            BucketKey::of(KernelKind::DenseF32, 1024, 1024, 1024),
+            BucketKey::of(KernelKind::DenseFp8, 1024, 1024, 1024)
+        );
+    }
+
+    #[test]
+    fn fills_trigger_at_max_batch() {
+        let mut b: Batcher<u32> = Batcher::new(3, Duration::from_millis(100));
+        let t = Instant::now();
+        assert!(b.push(key(64), 1, t).is_none());
+        assert!(b.push(key(64), 2, t).is_none());
+        let (k, items) = b.push(key(64), 3, t).expect("full batch");
+        assert_eq!(k, key(64));
+        assert_eq!(items, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn window_expiry_flushes() {
+        let mut b: Batcher<u32> = Batcher::new(10, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push(key(64), 1, t0);
+        b.push(key(128), 2, t0);
+        assert!(b.flush_expired(t0).is_empty());
+        let later = t0 + Duration::from_millis(6);
+        let mut flushed = b.flush_expired(later);
+        flushed.sort_by_key(|(k, _)| k.size_class);
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn oldest_resets_after_flush() {
+        let mut b: Batcher<u32> = Batcher::new(10, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push(key(64), 1, t0);
+        let t1 = t0 + Duration::from_millis(6);
+        assert_eq!(b.flush_expired(t1).len(), 1);
+        // New item after flush starts a fresh window.
+        b.push(key(64), 2, t1);
+        assert!(b.flush_expired(t1 + Duration::from_millis(4)).is_empty());
+        assert_eq!(b.flush_expired(t1 + Duration::from_millis(5)).len(), 1);
+    }
+
+    #[test]
+    fn next_deadline_is_min_over_pens() {
+        let mut b: Batcher<u32> = Batcher::new(10, Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert!(b.next_deadline().is_none());
+        b.push(key(64), 1, t0);
+        b.push(key(256), 2, t0 + Duration::from_millis(3));
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b: Batcher<u32> = Batcher::new(10, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(key(64), 1, t0);
+        b.push(key(512), 2, t0);
+        assert_eq!(b.flush_all().len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The serving coordinator — the paper's system contribution, L3.
+//!
+//! A GEMM request router + dynamic batcher in the vLLM-router shape:
+//!
+//! - [`request`]: the public request/response types,
+//! - [`router`]: AutoKernelSelector-driven routing (kernel, rank, cache),
+//! - [`batcher`]: size-bucketed dynamic batching with a flush window,
+//! - [`backend`]: kernel execution over XLA artifacts or CPU substrate,
+//! - [`service`]: [`GemmService`] — queue, dispatcher, worker pool,
+//!   backpressure, metrics, offline-decomposition API.
+
+pub mod backend;
+pub mod batcher;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use backend::{Backend, ExecOutcome};
+pub use batcher::{Batcher, BucketKey};
+pub use request::{BackendKind, GemmRequest, GemmResponse};
+pub use router::{RoutePlan, Router, RouterConfig};
+pub use service::{GemmService, ServiceConfig, ServiceStats};

@@ -1,0 +1,144 @@
+//! Request/response types for the GEMM serving API.
+
+use crate::kernels::KernelKind;
+use crate::linalg::Matrix;
+use crate::lowrank::cache::MatrixId;
+
+/// A single GEMM request: `C = A · B` plus routing hints.
+///
+/// `a_id`/`b_id` are stable matrix identities (e.g. a weight tensor id in
+/// a model). They unlock the paper's *offline decomposition* path: factors
+/// for identified matrices live in the [`crate::lowrank::FactorCache`]
+/// across requests, so the low-rank path skips factorization entirely.
+/// Anonymous operands (activations) are factorized on the fly — and the
+/// cost model charges them for it, which is why small anonymous GEMMs
+/// route to dense kernels.
+#[derive(Clone, Debug)]
+pub struct GemmRequest {
+    /// Left operand (m × k).
+    pub a: Matrix,
+    /// Right operand (k × n).
+    pub b: Matrix,
+    /// Stable identity of A for factor caching (None = anonymous).
+    pub a_id: Option<MatrixId>,
+    /// Stable identity of B for factor caching (None = anonymous).
+    pub b_id: Option<MatrixId>,
+    /// Relative-error tolerance; None uses the service default.
+    pub error_tolerance: Option<f32>,
+    /// Force a specific kernel, bypassing the AutoKernelSelector.
+    pub kernel: Option<KernelKind>,
+    /// Will the caller accept a factored (non-materialized) result?
+    /// (The "LowRank Auto" fastest path in the paper's Table 1.)
+    pub factored_output_ok: bool,
+}
+
+impl GemmRequest {
+    /// A plain anonymous request with service-default routing.
+    pub fn new(a: Matrix, b: Matrix) -> Self {
+        GemmRequest {
+            a,
+            b,
+            a_id: None,
+            b_id: None,
+            error_tolerance: None,
+            kernel: None,
+            factored_output_ok: false,
+        }
+    }
+
+    /// Attach stable operand identities (weights).
+    pub fn with_ids(mut self, a_id: Option<MatrixId>, b_id: Option<MatrixId>) -> Self {
+        self.a_id = a_id;
+        self.b_id = b_id;
+        self
+    }
+
+    /// Set the error tolerance.
+    pub fn with_tolerance(mut self, tol: f32) -> Self {
+        self.error_tolerance = Some(tol);
+        self
+    }
+
+    /// Force a kernel.
+    pub fn with_kernel(mut self, kind: KernelKind) -> Self {
+        self.kernel = Some(kind);
+        self
+    }
+
+    /// GEMM shape (m, k, n).
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.a.rows(), self.a.cols(), self.b.cols())
+    }
+
+    /// Shapes compose?
+    pub fn shape_ok(&self) -> bool {
+        self.a.cols() == self.b.rows()
+    }
+}
+
+/// Which execution substrate actually ran the kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT-compiled XLA artifact via the PJRT CPU client.
+    Xla,
+    /// Native Rust linalg/lowrank substrate.
+    CpuSubstrate,
+}
+
+impl BackendKind {
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla",
+            BackendKind::CpuSubstrate => "cpu",
+        }
+    }
+}
+
+/// The completed GEMM.
+#[derive(Clone, Debug)]
+pub struct GemmResponse {
+    /// Monotonic request id assigned by the service.
+    pub id: u64,
+    /// The (materialized) product.
+    pub c: Matrix,
+    /// Kernel that produced it.
+    pub kernel: KernelKind,
+    /// Execution substrate.
+    pub backend: BackendKind,
+    /// Rank used by the low-rank path (0 for dense kernels).
+    pub rank: usize,
+    /// Selector's predicted relative error.
+    pub predicted_rel_error: f32,
+    /// Time spent queued + batched, microseconds.
+    pub queue_us: u64,
+    /// Kernel execution time, microseconds.
+    pub exec_us: u64,
+    /// How many requests shared this batch.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn builder_roundtrip() {
+        let r = GemmRequest::new(Matrix::zeros(4, 6), Matrix::zeros(6, 8))
+            .with_ids(Some(7), None)
+            .with_tolerance(0.02)
+            .with_kernel(KernelKind::DenseF32);
+        assert_eq!(r.shape(), (4, 6, 8));
+        assert!(r.shape_ok());
+        assert_eq!(r.a_id, Some(7));
+        assert_eq!(r.error_tolerance, Some(0.02));
+        assert_eq!(r.kernel, Some(KernelKind::DenseF32));
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let r = GemmRequest::new(Matrix::zeros(4, 5), Matrix::zeros(6, 8));
+        assert!(!r.shape_ok());
+    }
+}

@@ -1,0 +1,237 @@
+//! Request routing: from a [`GemmRequest`] to an executable plan.
+//!
+//! The router is the serving-side face of the paper's Listing-1
+//! `AutoKernelSelector`: for each request it
+//!
+//! 1. estimates the rank the low-rank path would use (strategy-driven),
+//! 2. consults the factor cache (offline decomposition — cached weights
+//!    make the low-rank path dramatically cheaper),
+//! 3. asks the selector for the cheapest kernel within tolerance,
+//! 4. decides the execution substrate (XLA artifact if the shape sits on
+//!    the AOT lattice, native CPU substrate otherwise — the paper's
+//!    "automatic fallback").
+
+use std::sync::Arc;
+
+use crate::gpu_sim::profile::DeviceProfile;
+use crate::kernels::{AutoKernelSelector, KernelChoice, SelectorInputs};
+use crate::lowrank::cache::FactorCache;
+use crate::lowrank::factor::{DecompMethod, LowRankConfig};
+use crate::lowrank::rank::{select_rank, RankStrategy};
+use crate::coordinator::request::GemmRequest;
+
+/// Everything a worker needs to execute one request.
+#[derive(Clone, Debug)]
+pub struct RoutePlan {
+    /// Kernel the selector picked (or the request forced).
+    pub choice: KernelChoice,
+    /// Rank for the low-rank path (estimate used for routing; the actual
+    /// factorization may refine it when an adaptive strategy is active).
+    pub rank: usize,
+    /// Were both operands' factors already cached at routing time?
+    pub factors_cached: bool,
+    /// The effective error tolerance applied.
+    pub tolerance: f32,
+}
+
+/// Routing configuration (a distilled view of [`crate::config::AppConfig`]).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Device profile the cost model optimizes for.
+    pub device: DeviceProfile,
+    /// Rank strategy for the low-rank path.
+    pub rank_strategy: RankStrategy,
+    /// Decomposition method for on-the-fly factorization.
+    pub decomp: DecompMethod,
+    /// Storage precision for factors.
+    pub storage: crate::fp8::StorageFormat,
+    /// Tolerance when the request doesn't carry one.
+    pub default_tolerance: f32,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            device: DeviceProfile::rtx4090(),
+            rank_strategy: RankStrategy::EnergyFraction(0.99),
+            decomp: DecompMethod::RandomizedSvd,
+            storage: crate::fp8::StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
+            default_tolerance: 0.05,
+        }
+    }
+}
+
+/// The router.
+pub struct Router {
+    selector: AutoKernelSelector,
+    cfg: RouterConfig,
+    cache: Arc<FactorCache>,
+}
+
+impl Router {
+    /// Build a router over a shared factor cache.
+    pub fn new(cfg: RouterConfig, cache: Arc<FactorCache>) -> Self {
+        Router {
+            selector: AutoKernelSelector::new(cfg.device.clone()),
+            cfg,
+            cache,
+        }
+    }
+
+    /// The routing-time rank estimate for an (m, k, n) GEMM.
+    ///
+    /// Spectrum-dependent strategies (energy / error-bound) cannot know
+    /// the true rank before factorization; for *routing* they estimate
+    /// with the paper's empirical r ≈ n/16 working point (§5.5 uses
+    /// r = 512 at N = 20480 ≈ n/40; n/16 is deliberately conservative so
+    /// the cost model does not under-charge the low-rank path).
+    pub fn rank_estimate(&self, m: usize, k: usize, n: usize) -> usize {
+        let edge = m.min(k).min(n);
+        match self.cfg.rank_strategy {
+            RankStrategy::Fixed(_)
+            | RankStrategy::FixedFraction(_)
+            | RankStrategy::HardwareAware { .. } => {
+                select_rank(&self.cfg.rank_strategy, m.min(k), k.min(n), &[], &self.cfg.device)
+            }
+            RankStrategy::EnergyFraction(_) | RankStrategy::ErrorBound(_) => {
+                (edge / 16).clamp(1, edge.max(1))
+            }
+        }
+    }
+
+    /// The low-rank configuration workers use for on-the-fly factorization.
+    pub fn lowrank_config(&self) -> LowRankConfig {
+        LowRankConfig {
+            rank: self.cfg.rank_strategy,
+            method: self.cfg.decomp,
+            storage: self.cfg.storage,
+            rsvd: Default::default(),
+        }
+    }
+
+    /// Shared factor cache.
+    pub fn cache(&self) -> &Arc<FactorCache> {
+        &self.cache
+    }
+
+    /// Route one request.
+    pub fn route(&self, req: &GemmRequest) -> RoutePlan {
+        let (m, k, n) = req.shape();
+        let rank = self.rank_estimate(m, k, n);
+        let tolerance = req.error_tolerance.unwrap_or(self.cfg.default_tolerance);
+
+        // "Cached" means: no factorization will be charged at execution
+        // time. Identified operands must be resident; anonymous operands
+        // paired with an identified one stay dense (the mixed
+        // factored×dense serving path) and cost nothing to decompose.
+        let factors_cached = match (req.a_id, req.b_id) {
+            (Some(a), Some(b)) => self.cache.contains(a) && self.cache.contains(b),
+            (Some(a), None) => self.cache.contains(a),
+            (None, Some(b)) => self.cache.contains(b),
+            (None, None) => false,
+        };
+
+        let inp = SelectorInputs {
+            m,
+            k,
+            n,
+            error_tolerance: tolerance,
+            rank,
+            factors_cached,
+            factored_output_ok: req.factored_output_ok,
+        };
+
+        let choice = match req.kernel {
+            Some(kind) => KernelChoice {
+                kind,
+                cost: crate::kernels::kernel_cost(&self.cfg.device, kind, &inp),
+                predicted_error: self.selector.predicted_error(kind, &inp),
+            },
+            None => self.selector.select(&inp),
+        };
+
+        RoutePlan {
+            choice,
+            rank,
+            factors_cached,
+            tolerance,
+        }
+    }
+
+    /// Expose the selector (benchmarks want `ranked()`).
+    pub fn selector(&self) -> &AutoKernelSelector {
+        &self.selector
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelKind;
+    use crate::linalg::{Matrix, Pcg64};
+
+    fn router() -> Router {
+        Router::new(RouterConfig::default(), Arc::new(FactorCache::new(64 << 20)))
+    }
+
+    fn req(n: usize) -> GemmRequest {
+        let mut rng = Pcg64::seeded(1);
+        GemmRequest::new(
+            Matrix::gaussian(n, n, &mut rng),
+            Matrix::gaussian(n, n, &mut rng),
+        )
+    }
+
+    #[test]
+    fn small_anonymous_requests_go_dense() {
+        let r = router();
+        let plan = r.route(&req(256));
+        assert!(!plan.choice.kind.is_lowrank(), "got {:?}", plan.choice.kind);
+    }
+
+    #[test]
+    fn kernel_override_is_respected() {
+        let r = router();
+        let plan = r.route(&req(64).with_kernel(KernelKind::LowRankFp8));
+        assert_eq!(plan.choice.kind, KernelKind::LowRankFp8);
+    }
+
+    #[test]
+    fn tight_tolerance_forces_accurate_kernel() {
+        let r = router();
+        let plan = r.route(&req(128).with_tolerance(1e-5));
+        assert_eq!(plan.choice.kind, KernelKind::DenseF32);
+    }
+
+    #[test]
+    fn cached_factors_flip_the_choice_at_scale() {
+        // With both factors cached, the low-rank path skips factorization
+        // and wins at sizes where the cold path would not.
+        let r = router();
+        let mut rng = Pcg64::seeded(2);
+        let n = 4096;
+        // Fake "cached" state by inserting factors under the ids.
+        let a = Matrix::low_rank(64, 64, 8, &mut rng);
+        let cfg = r.lowrank_config();
+        let fa = crate::lowrank::factorize(&a, &cfg).unwrap();
+        r.cache().put(1, fa.clone());
+        r.cache().put(2, fa);
+
+        let mut request = req(64).with_ids(Some(1), Some(2));
+        request.a = Matrix::zeros(n, n);
+        request.b = Matrix::zeros(n, n);
+        let plan = r.route(&request);
+        assert!(plan.factors_cached);
+        // At n=4096 with cached factors + 5% tolerance the cost model
+        // must prefer a low-rank kernel (crossover analysis, Fig. 1).
+        assert!(plan.choice.kind.is_lowrank(), "got {:?}", plan.choice.kind);
+    }
+
+    #[test]
+    fn rank_estimate_spectrum_free_strategies() {
+        let mut cfg = RouterConfig::default();
+        cfg.rank_strategy = RankStrategy::Fixed(12);
+        let r = Router::new(cfg, Arc::new(FactorCache::new(1 << 20)));
+        assert_eq!(r.rank_estimate(256, 256, 256), 12);
+    }
+}

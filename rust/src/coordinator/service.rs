@@ -1,0 +1,536 @@
+//! `GemmService` — the serving loop tying everything together.
+//!
+//! Architecture (the vLLM-router shape, DESIGN.md §4):
+//!
+//! ```text
+//!   submit() ──bounded──▶ dispatcher thread ──▶ size-bucketed batcher
+//!      ▲                      │ route()               │ full / expired
+//!      │ backpressure         ▼                       ▼
+//!   callers            Router+FactorCache      worker pool (exec::ThreadPool)
+//!                                                    │ Backend::execute
+//!                                                    ▼
+//!                                     XLA artifacts (PJRT thread)  /  CPU substrate
+//! ```
+//!
+//! Callers get a `Receiver` per request (async completion without tokio);
+//! `gemm_blocking` is the convenience wrapper. Backpressure is a hard
+//! bound on in-flight requests: beyond `queue_depth`, `submit` fails fast
+//! with `Error::Service` rather than buffering unboundedly.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::schema::AppConfig;
+use crate::coordinator::backend::Backend;
+use crate::coordinator::batcher::{Batcher, BucketKey};
+use crate::coordinator::request::{GemmRequest, GemmResponse};
+use crate::coordinator::router::{Router, RouterConfig, RoutePlan};
+use crate::error::{Error, Result};
+use crate::exec::ThreadPool;
+use crate::linalg::Matrix;
+use crate::lowrank::cache::{CacheStats, MatrixId};
+use crate::lowrank::{factorize, FactorCache};
+use crate::metrics::MetricsRegistry;
+use crate::runtime::{Manifest, XlaExecutor};
+
+/// Service configuration (distilled from [`AppConfig`]).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Routing configuration (device model, rank strategy, ...).
+    pub router: RouterConfig,
+    /// Worker threads.
+    pub workers: usize,
+    /// Max in-flight requests before `submit` rejects.
+    pub queue_depth: usize,
+    /// Dynamic batcher: max requests per batch.
+    pub max_batch: usize,
+    /// Dynamic batcher: flush window.
+    pub batch_window: Duration,
+    /// Factor-cache byte budget.
+    pub factor_cache_bytes: usize,
+    /// AOT artifact directory; `None` runs CPU-substrate-only.
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            router: RouterConfig::default(),
+            workers: 2,
+            queue_depth: 1024,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            factor_cache_bytes: 256 << 20,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Build from a parsed [`AppConfig`] (file/CLI configuration).
+    pub fn from_app(app: &AppConfig) -> Result<ServiceConfig> {
+        let device = crate::gpu_sim::DeviceProfile::by_name(&app.device)
+            .ok_or_else(|| Error::Config(format!("unknown device '{}'", app.device)))?;
+        Ok(ServiceConfig {
+            router: RouterConfig {
+                device,
+                rank_strategy: app.rank_strategy,
+                decomp: app.decomp,
+                storage: app.storage,
+                default_tolerance: app.service.default_tolerance,
+            },
+            workers: app.service.workers,
+            queue_depth: app.service.queue_depth,
+            max_batch: app.service.max_batch,
+            batch_window: Duration::from_micros(app.service.batch_window_us),
+            factor_cache_bytes: app.service.factor_cache_bytes,
+            artifacts_dir: if app.use_xla {
+                Some(app.artifacts_dir.clone())
+            } else {
+                None
+            },
+        })
+    }
+}
+
+struct Pending {
+    id: u64,
+    req: GemmRequest,
+    plan: RoutePlan,
+    respond: Sender<Result<GemmResponse>>,
+    enqueued: Instant,
+}
+
+/// Point-in-time service statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    /// Requests accepted.
+    pub submitted: u64,
+    /// Requests completed (ok or error).
+    pub completed: u64,
+    /// Requests rejected by backpressure.
+    pub rejected: u64,
+    /// Factor-cache counters.
+    pub cache: CacheStats,
+}
+
+/// The serving coordinator. See module docs for the dataflow.
+pub struct GemmService {
+    tx: Option<Sender<Pending>>,
+    dispatcher: Option<JoinHandle<()>>,
+    router: Arc<Router>,
+    cache: Arc<FactorCache>,
+    backend: Arc<Backend>,
+    metrics: Arc<MetricsRegistry>,
+    inflight: Arc<AtomicUsize>,
+    queue_depth: usize,
+    next_id: AtomicU64,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: Arc<AtomicU64>,
+    lr_cfg: crate::lowrank::LowRankConfig,
+    /// Keeps the PJRT thread alive for the service lifetime.
+    _xla: Option<XlaExecutor>,
+}
+
+impl GemmService {
+    /// Start the service: spawns the dispatcher, worker pool and (if
+    /// configured) the XLA executor thread, then warms the artifact most
+    /// likely to serve first traffic.
+    pub fn start(cfg: ServiceConfig) -> Result<GemmService> {
+        let cache = Arc::new(FactorCache::new(cfg.factor_cache_bytes));
+        let router = Arc::new(Router::new(cfg.router.clone(), cache.clone()));
+        let metrics = Arc::new(MetricsRegistry::new());
+
+        let xla = match &cfg.artifacts_dir {
+            Some(dir) => Some(XlaExecutor::start(dir)?),
+            None => None,
+        };
+        let xla_pair = xla.as_ref().map(|x| {
+            (
+                x.handle(),
+                Arc::new(Manifest::load(cfg.artifacts_dir.as_ref().unwrap()).expect(
+                    "manifest already parsed once in XlaExecutor::start",
+                )),
+            )
+        });
+
+        let backend = Arc::new(Backend::new(
+            xla_pair,
+            cache.clone(),
+            router.lowrank_config(),
+        ));
+
+        let pool = ThreadPool::new(cfg.workers.max(1));
+        let (tx, rx) = channel::<Pending>();
+        let completed = Arc::new(AtomicU64::new(0));
+        let inflight = Arc::new(AtomicUsize::new(0));
+
+        let dispatcher = {
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            let completed = completed.clone();
+            let inflight = inflight.clone();
+            let max_batch = cfg.max_batch;
+            let window = cfg.batch_window;
+            std::thread::Builder::new()
+                .name("gemm-dispatcher".into())
+                .spawn(move || {
+                    Self::dispatch_loop(
+                        rx, pool, backend, metrics, completed, inflight, max_batch, window,
+                    )
+                })
+                .map_err(|e| Error::Service(format!("spawning dispatcher: {e}")))?
+        };
+
+        Ok(GemmService {
+            tx: Some(tx),
+            dispatcher: Some(dispatcher),
+            lr_cfg: router.lowrank_config(),
+            router,
+            cache,
+            backend,
+            metrics,
+            inflight,
+            queue_depth: cfg.queue_depth,
+            next_id: AtomicU64::new(1),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed,
+            _xla: xla,
+        })
+    }
+
+    /// Start with defaults + CPU substrate only (tests, small tools).
+    pub fn start_cpu_only() -> Result<GemmService> {
+        Self::start(ServiceConfig::default())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_loop(
+        rx: Receiver<Pending>,
+        pool: ThreadPool,
+        backend: Arc<Backend>,
+        metrics: Arc<MetricsRegistry>,
+        completed: Arc<AtomicU64>,
+        inflight: Arc<AtomicUsize>,
+        max_batch: usize,
+        window: Duration,
+    ) {
+        let mut batcher: Batcher<Pending> = Batcher::new(max_batch, window);
+
+        let dispatch = |batch: Vec<Pending>| {
+            let backend = backend.clone();
+            let metrics = metrics.clone();
+            let completed = completed.clone();
+            let inflight = inflight.clone();
+            pool.execute(move || {
+                let batch_size = batch.len();
+                for p in batch {
+                    let started = Instant::now();
+                    let queue_us = started.duration_since(p.enqueued).as_micros() as u64;
+                    let result = backend
+                        .execute(p.plan.choice.kind, &p.req.a, &p.req.b, p.req.a_id, p.req.b_id)
+                        .map(|out| {
+                            let exec_us = started.elapsed().as_micros() as u64;
+                            metrics.observe("gemm.exec_us", exec_us as f64);
+                            metrics.observe("gemm.queue_us", queue_us as f64);
+                            metrics.count(
+                                &format!("gemm.kernel.{}", p.plan.choice.kind.id()),
+                                1,
+                            );
+                            metrics.count(&format!("gemm.backend.{}", out.backend.name()), 1);
+                            GemmResponse {
+                                id: p.id,
+                                c: out.c,
+                                kernel: p.plan.choice.kind,
+                                backend: out.backend,
+                                rank: out.rank,
+                                predicted_rel_error: p.plan.choice.predicted_error,
+                                queue_us,
+                                exec_us,
+                                batch_size,
+                            }
+                        });
+                    if result.is_err() {
+                        metrics.count("gemm.errors", 1);
+                    }
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                    // Receiver may be gone (caller timed out): fine.
+                    let _ = p.respond.send(result);
+                }
+            });
+        };
+
+        loop {
+            // Sleep until the next batch deadline (or a modest poll tick
+            // when idle), waking early for new arrivals.
+            let timeout = batcher
+                .next_deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(50));
+
+            match rx.recv_timeout(timeout) {
+                Ok(p) => {
+                    let (m, k, n) = p.req.shape();
+                    let key = BucketKey::of(p.plan.choice.kind, m, k, n);
+                    if let Some((_, batch)) = batcher.push(key, p, Instant::now()) {
+                        dispatch(batch);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            for (_, batch) in batcher.flush_expired(Instant::now()) {
+                dispatch(batch);
+            }
+        }
+        // Drain on shutdown so every caller gets a response.
+        for (_, batch) in batcher.flush_all() {
+            dispatch(batch);
+        }
+        pool.wait_idle();
+    }
+
+    /// Submit a request; returns the completion channel.
+    ///
+    /// Fails fast on shape mismatch and on backpressure (in-flight ≥
+    /// queue depth) — the caller decides whether to retry, shed or block.
+    pub fn submit(&self, req: GemmRequest) -> Result<Receiver<Result<GemmResponse>>> {
+        if !req.shape_ok() {
+            return Err(Error::ShapeMismatch {
+                op: "submit",
+                lhs: req.a.shape(),
+                rhs: req.b.shape(),
+            });
+        }
+        let inflight = self.inflight.load(Ordering::Relaxed);
+        if inflight >= self.queue_depth {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            self.metrics.count("gemm.rejected", 1);
+            return Err(Error::Service(format!(
+                "queue full ({inflight} in flight ≥ depth {})",
+                self.queue_depth
+            )));
+        }
+
+        let plan = self.router.route(&req);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (respond, result_rx) = channel();
+        let pending = Pending {
+            id,
+            req,
+            plan,
+            respond,
+            enqueued: Instant::now(),
+        };
+
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.count("gemm.submitted", 1);
+        self.tx
+            .as_ref()
+            .expect("tx lives until drop")
+            .send(pending)
+            .map_err(|_| Error::Service("dispatcher is gone".into()))?;
+        Ok(result_rx)
+    }
+
+    /// Submit and wait for the result.
+    pub fn gemm_blocking(&self, req: GemmRequest) -> Result<GemmResponse> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| Error::Service("worker dropped the response".into()))?
+    }
+
+    /// Offline decomposition (paper §6.5): factorize `m` now under the
+    /// service's low-rank config and pin it in the cache under `id`.
+    pub fn preload_factor(&self, id: MatrixId, m: &Matrix) -> Result<()> {
+        let f = factorize(m, &self.lr_cfg)?;
+        self.cache.put(id, f);
+        Ok(())
+    }
+
+    /// Direct (un-batched, caller-thread) execution — used by benches to
+    /// measure kernels without scheduler noise.
+    pub fn execute_inline(&self, req: &GemmRequest) -> Result<GemmResponse> {
+        let plan = self.router.route(req);
+        let started = Instant::now();
+        let out = self
+            .backend
+            .execute(plan.choice.kind, &req.a, &req.b, req.a_id, req.b_id)?;
+        Ok(GemmResponse {
+            id: 0,
+            c: out.c,
+            kernel: plan.choice.kind,
+            backend: out.backend,
+            rank: out.rank,
+            predicted_rel_error: plan.choice.predicted_error,
+            queue_us: 0,
+            exec_us: started.elapsed().as_micros() as u64,
+            batch_size: 1,
+        })
+    }
+
+    /// Routing decision for a request without executing it.
+    pub fn plan(&self, req: &GemmRequest) -> RoutePlan {
+        self.router.route(req)
+    }
+
+    /// Stats snapshot.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            cache: self.cache.stats(),
+        }
+    }
+
+    /// The metrics registry (latency histograms, kernel counters).
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// The shared factor cache.
+    pub fn cache(&self) -> &Arc<FactorCache> {
+        &self.cache
+    }
+
+    /// Block until every accepted request has completed.
+    pub fn drain(&self) {
+        while self.inflight.load(Ordering::Relaxed) > 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+impl Drop for GemmService {
+    fn drop(&mut self) {
+        // Closing the channel stops the dispatcher after it drains.
+        self.tx.take();
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelKind;
+    use crate::linalg::Pcg64;
+
+    fn svc() -> GemmService {
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 2;
+        cfg.max_batch = 4;
+        cfg.batch_window = Duration::from_micros(100);
+        GemmService::start(cfg).unwrap()
+    }
+
+    fn rand_req(n: usize, seed: u64) -> GemmRequest {
+        let mut rng = Pcg64::seeded(seed);
+        GemmRequest::new(
+            Matrix::gaussian(n, n, &mut rng),
+            Matrix::gaussian(n, n, &mut rng),
+        )
+    }
+
+    #[test]
+    fn blocking_gemm_is_correct() {
+        let s = svc();
+        let req = rand_req(48, 9);
+        let exact = req.a.matmul(&req.b);
+        let resp = s.gemm_blocking(req).unwrap();
+        assert!(resp.c.rel_frobenius_distance(&exact) < 0.05);
+        assert_eq!(s.stats().completed, 1);
+    }
+
+    #[test]
+    fn many_async_submissions_complete() {
+        let s = svc();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| s.submit(rand_req(32, 100 + i)).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.c.shape(), (32, 32));
+            assert!(resp.batch_size >= 1);
+        }
+        assert_eq!(s.stats().completed, 16);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_at_submit() {
+        let s = svc();
+        let req = GemmRequest::new(Matrix::zeros(4, 5), Matrix::zeros(7, 4));
+        assert!(s.submit(req).is_err());
+    }
+
+    #[test]
+    fn preloaded_factors_hit_cache() {
+        let s = svc();
+        let mut rng = Pcg64::seeded(77);
+        let w = Matrix::low_rank_noisy(64, 64, 5, 1e-5, &mut rng);
+        s.preload_factor(42, &w).unwrap();
+        assert!(s.cache().contains(42));
+
+        let x = Matrix::gaussian(64, 64, &mut rng);
+        let req = GemmRequest::new(w.clone(), x)
+            .with_ids(Some(42), None)
+            .with_kernel(KernelKind::LowRankAuto);
+        let resp = s.gemm_blocking(req).unwrap();
+        assert!(resp.rank >= 1);
+        assert!(s.stats().cache.hits >= 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.queue_depth = 2;
+        cfg.max_batch = 64;
+        cfg.batch_window = Duration::from_millis(200); // hold batches
+        let s = GemmService::start(cfg).unwrap();
+
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            match s.submit(rand_req(16, 200 + i)) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected >= 1, "expected backpressure rejections");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+    }
+
+    #[test]
+    fn execute_inline_matches_blocking() {
+        let s = svc();
+        let req = rand_req(40, 55);
+        let exact = req.a.matmul(&req.b);
+        let r1 = s.execute_inline(&req).unwrap();
+        assert!(r1.c.rel_frobenius_distance(&exact) < 0.05);
+    }
+
+    #[test]
+    fn drain_waits_for_completion() {
+        let s = svc();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| s.submit(rand_req(24, 300 + i)).unwrap())
+            .collect();
+        s.drain();
+        assert_eq!(s.stats().completed, 6);
+        for rx in rxs {
+            assert!(rx.try_recv().is_ok());
+        }
+    }
+}

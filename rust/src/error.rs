@@ -1,0 +1,111 @@
+//! Crate-wide error type.
+//!
+//! Kept dependency-free (no `thiserror` on the offline vendor set beyond the
+//! xla closure) and deliberately small: most numerical routines are
+//! infallible by construction; errors come from shape mismatches, artifact
+//! loading, configuration parsing and service lifecycle.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways the system can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// Incompatible matrix shapes for an operation.
+    ShapeMismatch {
+        op: &'static str,
+        lhs: (usize, usize),
+        rhs: (usize, usize),
+    },
+    /// A rank request that cannot be satisfied (zero, or above min(m, n)).
+    InvalidRank { requested: usize, max: usize },
+    /// Numerical routine failed to converge.
+    NoConvergence { what: &'static str, iters: usize },
+    /// Artifact (HLO) loading / manifest problems.
+    Artifact(String),
+    /// XLA / PJRT runtime failure.
+    Xla(String),
+    /// Configuration file / CLI parse errors.
+    Config(String),
+    /// Service lifecycle errors (shutdown, queue overflow, …).
+    Service(String),
+    /// Anything I/O.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ShapeMismatch { op, lhs, rhs } => write!(
+                f,
+                "shape mismatch in {op}: lhs {}x{} vs rhs {}x{}",
+                lhs.0, lhs.1, rhs.0, rhs.1
+            ),
+            Error::InvalidRank { requested, max } => {
+                write!(f, "invalid rank {requested} (valid: 1..={max})")
+            }
+            Error::NoConvergence { what, iters } => {
+                write!(f, "{what} failed to converge after {iters} iterations")
+            }
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Service(m) => write!(f, "service error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        // The `xla` crate surfaces errors through anyhow-compatible types.
+        Error::Xla(format!("{e:#}"))
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_shape_mismatch() {
+        let e = Error::ShapeMismatch {
+            op: "matmul",
+            lhs: (2, 3),
+            rhs: (4, 5),
+        };
+        let s = e.to_string();
+        assert!(s.contains("matmul"));
+        assert!(s.contains("2x3"));
+        assert!(s.contains("4x5"));
+    }
+
+    #[test]
+    fn display_invalid_rank() {
+        let e = Error::InvalidRank { requested: 99, max: 8 };
+        assert!(e.to_string().contains("99"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,11 @@
+//! Execution substrate: a small thread pool.
+//!
+//! The offline vendor set has no tokio, so the coordinator's worker pool is
+//! built on `std::thread` + `std::sync::mpsc`. The pool is deliberately
+//! simple — FIFO queue, fixed worker count, graceful shutdown — because on
+//! the 1-core evaluation host concurrency buys overlap of queueing and
+//! compute, not parallel speedup.
+
+pub mod threadpool;
+
+pub use threadpool::ThreadPool;

@@ -1,0 +1,156 @@
+//! Fixed-size FIFO thread pool with graceful shutdown.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming a shared FIFO queue.
+pub struct ThreadPool {
+    sender: mpsc::Sender<Message>,
+    workers: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicU64>,
+    completed: Arc<AtomicU64>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (clamped to ≥ 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicU64::new(0));
+        let completed = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let completed = Arc::clone(&completed);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("lrg-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Message::Run(job)) => {
+                                job();
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Ok(Message::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            sender: tx,
+            workers,
+            queued,
+            completed,
+        }
+    }
+
+    /// Enqueue a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.sender
+            .send(Message::Run(Box::new(job)))
+            .expect("pool alive");
+    }
+
+    /// Jobs submitted so far.
+    pub fn submitted(&self) -> u64 {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Jobs fully executed so far.
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Block until every submitted job has completed (test/bench helper;
+    /// spin+yield is fine at our scale).
+    pub fn wait_idle(&self) {
+        while self.completed() < self.submitted() {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.sender.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.completed(), 100);
+    }
+
+    #[test]
+    fn results_via_channel() {
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10u64 {
+            let tx = tx.clone();
+            pool.execute(move || {
+                tx.send(i * i).unwrap();
+            });
+        }
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn zero_size_clamped() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let (tx, rx) = mpsc::channel();
+        pool.execute(move || tx.send(42).unwrap());
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+}

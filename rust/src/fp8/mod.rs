@@ -1,0 +1,22 @@
+//! Software floating-point codecs: FP8 (E4M3 / E5M2), FP16, BF16.
+//!
+//! The evaluation machine has no FP8 hardware, so the paper's "FP8 storage,
+//! FP16 compute, FP32 accumulate" pipeline is emulated **bit-exactly**:
+//! encode/decode round-trips go through the real bit layouts with
+//! round-to-nearest-even, saturation and NaN handling matching the
+//! OCP FP8 specification (and IEEE 754 binary16 / bfloat16 for the 16-bit
+//! types). Throughput effects of the narrower types are modeled separately
+//! in [`crate::gpu_sim`] from byte counts; *numerical* effects come from
+//! here and are therefore real, not simulated.
+
+pub mod codec;
+pub mod quantize;
+
+pub use codec::{
+    bf16_decode, bf16_encode, e4m3_decode, e4m3_encode, e5m2_decode, e5m2_encode, f16_decode,
+    f16_encode, Fp8Format,
+};
+pub use quantize::{
+    dequantize, quant_stats, quantize, quantized_matmul, QuantStats, QuantizedTensor,
+    StorageFormat,
+};

@@ -1,0 +1,309 @@
+//! Per-tensor scaled quantization — the paper's "scaling compensation".
+//!
+//! FP8's dynamic range is tiny (E4M3: ±448 with 3 mantissa bits), so
+//! tensors are stored as `bytes = encode(x / scale)` with
+//! `scale = max|x| / (margin · max_finite)`. Dequantization multiplies the
+//! scale back. This is exactly the per-tensor "delayed scaling" scheme of
+//! NVIDIA's Transformer Engine, minus the history heuristics (our tensors
+//! are static at quantization time).
+
+use crate::fp8::codec::{f16_decode, f16_encode, Fp8Format};
+use crate::linalg::matrix::Matrix;
+
+/// Storage precision of a quantized tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StorageFormat {
+    /// 8-bit float (either layout).
+    Fp8(Fp8Format),
+    /// IEEE binary16.
+    F16,
+    /// bfloat16.
+    Bf16,
+    /// Plain f32 (identity codec; lets the pipeline be precision-generic).
+    F32,
+}
+
+impl StorageFormat {
+    /// Bytes per element — the number the roofline model charges for traffic.
+    pub fn bytes_per_element(self) -> usize {
+        match self {
+            StorageFormat::Fp8(_) => 1,
+            StorageFormat::F16 | StorageFormat::Bf16 => 2,
+            StorageFormat::F32 => 4,
+        }
+    }
+
+    /// Short human name used by reports/configs.
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageFormat::Fp8(Fp8Format::E4M3) => "fp8_e4m3",
+            StorageFormat::Fp8(Fp8Format::E5M2) => "fp8_e5m2",
+            StorageFormat::F16 => "f16",
+            StorageFormat::Bf16 => "bf16",
+            StorageFormat::F32 => "f32",
+        }
+    }
+
+    /// Parse the name back (config files).
+    pub fn parse(s: &str) -> Option<StorageFormat> {
+        Some(match s {
+            "fp8_e4m3" | "fp8" => StorageFormat::Fp8(Fp8Format::E4M3),
+            "fp8_e5m2" => StorageFormat::Fp8(Fp8Format::E5M2),
+            "f16" | "fp16" => StorageFormat::F16,
+            "bf16" => StorageFormat::Bf16,
+            "f32" | "fp32" => StorageFormat::F32,
+            _ => return None,
+        })
+    }
+}
+
+/// A tensor stored in reduced precision with a per-tensor scale.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    /// Storage layout.
+    pub format: StorageFormat,
+    /// Shape (rows, cols).
+    pub shape: (usize, usize),
+    /// Dequantization scale: `x ≈ decode(byte) * scale`.
+    pub scale: f32,
+    /// Packed payload (1 or 2 bytes per element, little-endian for 16-bit).
+    pub bytes: Vec<u8>,
+}
+
+/// Headroom left below the format max to absorb accumulation growth.
+const SCALE_MARGIN: f32 = 1.0;
+
+/// Quantize a matrix to the requested storage format.
+pub fn quantize(m: &Matrix, format: StorageFormat) -> QuantizedTensor {
+    let amax = m.max_abs();
+    let (scale, inv_scale) = match format {
+        StorageFormat::Fp8(f) => {
+            let target = f.max_finite() * SCALE_MARGIN;
+            if amax > 0.0 {
+                (amax / target, target / amax)
+            } else {
+                (1.0, 1.0)
+            }
+        }
+        // 16/32-bit types have enough range; store unscaled.
+        _ => (1.0, 1.0),
+    };
+
+    let n = m.rows() * m.cols();
+    let bytes = match format {
+        StorageFormat::Fp8(f) => {
+            let mut out = Vec::with_capacity(n);
+            for &v in m.data() {
+                out.push(f.encode(v * inv_scale));
+            }
+            out
+        }
+        StorageFormat::F16 => {
+            let mut out = Vec::with_capacity(2 * n);
+            for &v in m.data() {
+                out.extend_from_slice(&f16_encode(v).to_le_bytes());
+            }
+            out
+        }
+        StorageFormat::Bf16 => {
+            let mut out = Vec::with_capacity(2 * n);
+            for &v in m.data() {
+                out.extend_from_slice(&crate::fp8::codec::bf16_encode(v).to_le_bytes());
+            }
+            out
+        }
+        StorageFormat::F32 => {
+            let mut out = Vec::with_capacity(4 * n);
+            for &v in m.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+    };
+
+    QuantizedTensor {
+        format,
+        shape: m.shape(),
+        scale,
+        bytes,
+    }
+}
+
+/// Dequantize back to a dense f32 matrix.
+pub fn dequantize(q: &QuantizedTensor) -> Matrix {
+    let (rows, cols) = q.shape;
+    let n = rows * cols;
+    let mut data = Vec::with_capacity(n);
+    match q.format {
+        StorageFormat::Fp8(f) => {
+            for &b in &q.bytes {
+                data.push(f.decode(b) * q.scale);
+            }
+        }
+        StorageFormat::F16 => {
+            for ch in q.bytes.chunks_exact(2) {
+                data.push(f16_decode(u16::from_le_bytes([ch[0], ch[1]])) * q.scale);
+            }
+        }
+        StorageFormat::Bf16 => {
+            for ch in q.bytes.chunks_exact(2) {
+                data.push(
+                    crate::fp8::codec::bf16_decode(u16::from_le_bytes([ch[0], ch[1]])) * q.scale,
+                );
+            }
+        }
+        StorageFormat::F32 => {
+            for ch in q.bytes.chunks_exact(4) {
+                data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]) * q.scale);
+            }
+        }
+    }
+    Matrix::from_vec(rows, cols, data).expect("quantized payload length")
+}
+
+/// Quantization error statistics (feeds the §5.4 error analysis).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuantStats {
+    /// Mean relative elementwise error over non-tiny entries.
+    pub mean_rel_err: f32,
+    /// Max relative elementwise error over non-tiny entries.
+    pub max_rel_err: f32,
+    /// Relative Frobenius error of the whole tensor.
+    pub frob_rel_err: f32,
+}
+
+/// Measure round-trip error of quantizing `m` to `format`.
+pub fn quant_stats(m: &Matrix, format: StorageFormat) -> QuantStats {
+    let q = quantize(m, format);
+    let d = dequantize(&q);
+    let thresh = 1e-3 * m.max_abs().max(f32::MIN_POSITIVE);
+    let mut n = 0usize;
+    let mut sum = 0.0f64;
+    let mut max = 0.0f32;
+    for (&a, &b) in m.data().iter().zip(d.data()) {
+        if a.abs() > thresh {
+            let rel = ((b - a) / a).abs();
+            sum += rel as f64;
+            max = max.max(rel);
+            n += 1;
+        }
+    }
+    QuantStats {
+        mean_rel_err: if n > 0 { (sum / n as f64) as f32 } else { 0.0 },
+        max_rel_err: max,
+        frob_rel_err: d.rel_frobenius_distance(m),
+    }
+}
+
+/// "FP8 storage, FP32 accumulate" GEMM: both operands round-trip through
+/// the codec (with per-tensor scaling) and the product is computed in f32 —
+/// the numerical pipeline of the paper's §3.3.1, minus the hardware.
+pub fn quantized_matmul(a: &Matrix, b: &Matrix, format: StorageFormat) -> Matrix {
+    let qa = dequantize(&quantize(a, format));
+    let qb = dequantize(&quantize(b, format));
+    qa.matmul(&qb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn mat(seed: u64) -> Matrix {
+        Matrix::gaussian(24, 18, &mut Pcg64::seeded(seed))
+    }
+
+    #[test]
+    fn f32_roundtrip_is_exact() {
+        let m = mat(1);
+        let q = quantize(&m, StorageFormat::F32);
+        assert_eq!(dequantize(&q), m);
+    }
+
+    #[test]
+    fn fp8_roundtrip_bounded_error() {
+        let m = mat(2);
+        let s = quant_stats(&m, StorageFormat::Fp8(Fp8Format::E4M3));
+        // 3-bit mantissa + scaling: mean rel err well under 4%, max under ~7%.
+        assert!(s.mean_rel_err < 0.04, "mean {}", s.mean_rel_err);
+        assert!(s.max_rel_err < 0.08, "max {}", s.max_rel_err);
+        assert!(s.frob_rel_err < 0.04, "frob {}", s.frob_rel_err);
+    }
+
+    #[test]
+    fn f16_much_tighter_than_fp8() {
+        let m = mat(3);
+        let s8 = quant_stats(&m, StorageFormat::Fp8(Fp8Format::E4M3));
+        let s16 = quant_stats(&m, StorageFormat::F16);
+        assert!(s16.frob_rel_err < s8.frob_rel_err / 4.0);
+    }
+
+    #[test]
+    fn scaling_handles_large_magnitudes() {
+        // Without scaling these would all saturate at 448.
+        let mut m = mat(4);
+        m.scale_in_place(1e6);
+        let s = quant_stats(&m, StorageFormat::Fp8(Fp8Format::E4M3));
+        assert!(s.frob_rel_err < 0.04, "frob {}", s.frob_rel_err);
+    }
+
+    #[test]
+    fn scaling_handles_tiny_magnitudes() {
+        let mut m = mat(5);
+        m.scale_in_place(1e-6);
+        let s = quant_stats(&m, StorageFormat::Fp8(Fp8Format::E4M3));
+        assert!(s.frob_rel_err < 0.04, "frob {}", s.frob_rel_err);
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let m = Matrix::zeros(4, 4);
+        let q = quantize(&m, StorageFormat::Fp8(Fp8Format::E4M3));
+        let d = dequantize(&q);
+        assert_eq!(d, m);
+    }
+
+    #[test]
+    fn bytes_per_element_accounting() {
+        let m = mat(6);
+        let n = m.rows() * m.cols();
+        assert_eq!(quantize(&m, StorageFormat::Fp8(Fp8Format::E4M3)).bytes.len(), n);
+        assert_eq!(quantize(&m, StorageFormat::F16).bytes.len(), 2 * n);
+        assert_eq!(quantize(&m, StorageFormat::F32).bytes.len(), 4 * n);
+    }
+
+    #[test]
+    fn quantized_matmul_error_scales_with_format() {
+        let mut rng = Pcg64::seeded(7);
+        let a = Matrix::gaussian(20, 20, &mut rng);
+        let b = Matrix::gaussian(20, 20, &mut rng);
+        let exact = a.matmul(&b);
+        let e8 = quantized_matmul(&a, &b, StorageFormat::Fp8(Fp8Format::E4M3))
+            .rel_frobenius_distance(&exact);
+        let e16 = quantized_matmul(&a, &b, StorageFormat::F16).rel_frobenius_distance(&exact);
+        assert!(e8 < 0.08, "fp8 err {e8}");
+        assert!(e16 < e8);
+    }
+
+    #[test]
+    fn format_name_parse_roundtrip() {
+        for f in [
+            StorageFormat::Fp8(Fp8Format::E4M3),
+            StorageFormat::Fp8(Fp8Format::E5M2),
+            StorageFormat::F16,
+            StorageFormat::Bf16,
+            StorageFormat::F32,
+        ] {
+            assert_eq!(StorageFormat::parse(f.name()), Some(f));
+        }
+        assert_eq!(StorageFormat::parse("int4"), None);
+    }
+
+    #[test]
+    fn e5m2_storage_works_too() {
+        let m = mat(8);
+        let s = quant_stats(&m, StorageFormat::Fp8(Fp8Format::E5M2));
+        // 2-bit mantissa: coarser than E4M3 but bounded.
+        assert!(s.frob_rel_err < 0.09, "frob {}", s.frob_rel_err);
+    }
+}

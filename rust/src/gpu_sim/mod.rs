@@ -1,0 +1,18 @@
+//! Roofline GPU simulator — the reproduction's stand-in for the paper's
+//! RTX 4090 testbed (and the H200/B200 extrapolation targets of Table 3).
+//!
+//! The paper's §6.2 performance argument is entirely a roofline argument:
+//! time-per-op = max(FLOPs / peak, bytes / bandwidth) + launch overhead.
+//! This module implements that model *explicitly*, parameterized by the
+//! spec-sheet constants the paper itself quotes, so every Table-1/2/3 and
+//! Figure-1 number can be regenerated — and audited — from first
+//! principles. Numerics always run on the real CPU substrate; only *time*
+//! is simulated.
+
+pub mod memory;
+pub mod profile;
+pub mod roofline;
+
+pub use memory::MemoryTracker;
+pub use profile::{DeviceProfile, Precision};
+pub use roofline::{OpCost, Roofline, SimResult};

@@ -1,0 +1,228 @@
+//! Device profiles: the spec-sheet constants the roofline model consumes.
+//!
+//! Numbers mirror the paper's §4.1 / §6.2 / §6.3 exactly where the paper
+//! states them (RTX 4090: 1 TB/s, 1.321 PFLOP/s FP8, 25.2 GB(*); H200:
+//! 4.8 TB/s, 4 PFLOP/s, 141 GB; B200: 8 TB/s, 20 PFLOP/s, 192 GB), so the
+//! reproduction's Table 3 is generated from the same inputs.
+//!
+//! (*) the 4090 actually has 24 GB; 25.2 GB is what the paper prints — we
+//! keep the paper's value and note the discrepancy in EXPERIMENTS.md.
+
+/// Compute precision for peak-FLOPS lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 32-bit CUDA-core / scalar path.
+    F32,
+    /// 16-bit TensorCore/MXU path.
+    F16,
+    /// 8-bit TensorCore path.
+    Fp8,
+}
+
+impl Precision {
+    /// Storage bytes per element at this precision.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 => 2,
+            Precision::Fp8 => 1,
+        }
+    }
+}
+
+/// A device the roofline model can simulate.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    /// Human name used in reports.
+    pub name: &'static str,
+    /// HBM/GDDR capacity in bytes.
+    pub memory_bytes: u64,
+    /// Sustained memory bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Peak FLOP/s at F32.
+    pub peak_f32: f64,
+    /// Peak FLOP/s at F16 (TensorCore).
+    pub peak_f16: f64,
+    /// Peak FLOP/s at FP8 (TensorCore).
+    pub peak_fp8: f64,
+    /// Fixed per-kernel launch + sync overhead, seconds.
+    pub launch_overhead_s: f64,
+    /// Fraction of nominal bandwidth achievable by a tuned kernel
+    /// (the paper's §6.2 grants 60–80% to cuBLAS-class kernels; we use
+    /// the midpoint and sweep it in the ablation bench).
+    pub bandwidth_efficiency: f64,
+    /// Fraction of peak FLOPs achievable by a tuned dense kernel.
+    pub compute_efficiency: f64,
+}
+
+impl DeviceProfile {
+    /// Peak FLOP/s for a precision.
+    pub fn peak_flops(&self, p: Precision) -> f64 {
+        match p {
+            Precision::F32 => self.peak_f32,
+            Precision::F16 => self.peak_f16,
+            Precision::Fp8 => self.peak_fp8,
+        }
+    }
+
+    /// NVIDIA RTX 4090 per the paper (§4.1, §6.2).
+    ///
+    /// Calibration note (EXPERIMENTS.md §Model-Calibration): `peak_f16` is
+    /// the *dense* (non-sparsity) TensorCore rate — the paper's measured
+    /// 139 TFLOPS at N=20480 is 84% of it, which is the efficiency band
+    /// cuBLAS-class kernels actually reach. `peak_fp8` is the paper's own
+    /// §6.2 quoted 1.321 PFLOPS (the 2:4-sparsity marketing number); it is
+    /// used only to reproduce the paper's §6.2 percent-of-peak arithmetic,
+    /// never as a pipeline compute rate: the paper's "FP8" kernels compute
+    /// in FP16 ("FP8 storage, FP16 compute", §3.3.2), and the simulator
+    /// does the same.
+    pub fn rtx4090() -> Self {
+        DeviceProfile {
+            name: "rtx4090",
+            memory_bytes: 25_200_000_000, // paper's stated 25.2 GB
+            bandwidth_bps: 1.0e12,        // §6.2: "approximately 1 TB/s"
+            peak_f32: 60.0e12,            // non-TC FP32 with FMA issue limits
+            peak_f16: 165.2e12,           // FP16 TensorCore, dense
+            peak_fp8: 1.321e15,           // §6.2 step 1 (paper-quoted, sparse)
+            launch_overhead_s: 12e-6,     // CUDA launch + sync, typical
+            bandwidth_efficiency: 0.70,
+            compute_efficiency: 0.85,
+        }
+    }
+
+    /// NVIDIA H200 per the paper's Table 3 inputs.
+    pub fn h200() -> Self {
+        DeviceProfile {
+            name: "h200",
+            memory_bytes: 141_000_000_000,
+            bandwidth_bps: 4.8e12,
+            peak_f32: 67.0e12,
+            peak_f16: 989.0e12,
+            peak_fp8: 4.0e15,
+            launch_overhead_s: 10e-6,
+            bandwidth_efficiency: 0.70,
+            compute_efficiency: 0.65,
+        }
+    }
+
+    /// NVIDIA B200 per the paper's Table 3 inputs.
+    pub fn b200() -> Self {
+        DeviceProfile {
+            name: "b200",
+            memory_bytes: 192_000_000_000,
+            bandwidth_bps: 8.0e12,
+            peak_f32: 80.0e12,
+            peak_f16: 2.25e15,
+            peak_fp8: 20.0e15,
+            launch_overhead_s: 10e-6,
+            bandwidth_efficiency: 0.70,
+            compute_efficiency: 0.65,
+        }
+    }
+
+    /// The actual evaluation host (1-core CPU) — used to sanity-check the
+    /// simulator against real measured times in the integration tests.
+    /// Peak numbers are measured, not spec-sheet: see EXPERIMENTS.md §Perf.
+    pub fn cpu_host() -> Self {
+        DeviceProfile {
+            name: "cpu_host",
+            memory_bytes: 8_000_000_000,
+            bandwidth_bps: 8.0e9,
+            peak_f32: 8.0e9,
+            peak_f16: 8.0e9, // no wide SIMD f16: same scalar path
+            peak_fp8: 8.0e9,
+            launch_overhead_s: 0.0,
+            bandwidth_efficiency: 0.8,
+            compute_efficiency: 0.6,
+        }
+    }
+
+    /// Look a profile up by name (CLI / config).
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        Some(match name {
+            "rtx4090" | "4090" => DeviceProfile::rtx4090(),
+            "h200" => DeviceProfile::h200(),
+            "b200" => DeviceProfile::b200(),
+            "cpu" | "cpu_host" => DeviceProfile::cpu_host(),
+            _ => return None,
+        })
+    }
+
+    /// The paper's §6.2 "bandwidth-limited GEMM ceiling" formula, taken
+    /// literally: `BW [bytes/s] / bytes-per-element × 2/3 [FLOP/element]`.
+    ///
+    /// **Audit note** (EXPERIMENTS.md §P1): for the RTX 4090 at FP8 this
+    /// evaluates to 6.67e11 FLOP/s = 667 *G*FLOPS, which the paper then
+    /// labels "667 TFLOPS" — a 1000× unit slip. The physically correct
+    /// bandwidth bound for an N×N GEMM moving 3N² bytes for 2N³ FLOPs is
+    /// `(2N/3)·BW`, which at N = 20480 exceeds the compute peak (large
+    /// dense GEMM is compute-bound, not bandwidth-bound). We reproduce
+    /// the paper's formula here and its *stated* ceiling via
+    /// [`DeviceProfile::paper_stated_bw_ceiling_flops`], and document the
+    /// discrepancy where §6.2 is regenerated.
+    pub fn bandwidth_limited_gemm_flops(&self, p: Precision) -> f64 {
+        self.bandwidth_bps / p.bytes() as f64 * (2.0 / 3.0)
+    }
+
+    /// The §6.2 ceiling as the paper *states* it ("667 TFLOPS" on the
+    /// 4090): the literal formula times the paper's implicit 1000× unit
+    /// slip. Kept separate so Table-3 / §6.2 reproductions can print the
+    /// paper's numbers while the audit note above stays honest.
+    pub fn paper_stated_bw_ceiling_flops(&self, p: Precision) -> f64 {
+        self.bandwidth_limited_gemm_flops(p) * 1e3
+    }
+
+    /// The physically correct bandwidth-limited FLOP/s for an N×N GEMM
+    /// (3N² bytes moved, 2N³ FLOPs): `(2N/3) · BW / bytes-per-element`.
+    pub fn physical_bw_limited_gemm_flops(&self, n: usize, p: Precision) -> f64 {
+        (2.0 * n as f64 / 3.0) * self.bandwidth_bps / p.bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants_wired_through() {
+        let d = DeviceProfile::rtx4090();
+        assert_eq!(d.bandwidth_bps, 1.0e12);
+        assert_eq!(d.peak_fp8, 1.321e15);
+        // §6.2 step 4's formula, literally: 6.67e11 FLOP/s (667 GFLOPS —
+        // the paper calls this "667 TFLOPS"; see the audit note on
+        // `bandwidth_limited_gemm_flops`).
+        let literal = d.bandwidth_limited_gemm_flops(Precision::Fp8);
+        assert!((literal - 666.7e9).abs() / 666.7e9 < 0.001, "{literal:e}");
+        // The paper's *stated* ceiling, reproduced for §6.2/Table-3 output.
+        let stated = d.paper_stated_bw_ceiling_flops(Precision::Fp8);
+        assert!((stated - 666.7e12).abs() / 666.7e12 < 0.001, "{stated:e}");
+        // And the physical bound at N=20480 sits above the compute peak:
+        // large dense GEMM on this card is compute-bound.
+        assert!(d.physical_bw_limited_gemm_flops(20480, Precision::Fp8) > d.peak_fp8);
+    }
+
+    #[test]
+    fn table3_inputs() {
+        let h = DeviceProfile::h200();
+        let b = DeviceProfile::b200();
+        assert_eq!(h.bandwidth_bps, 4.8e12);
+        assert_eq!(b.bandwidth_bps, 8.0e12);
+        assert_eq!(h.peak_fp8, 4.0e15);
+        assert_eq!(b.peak_fp8, 20.0e15);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(DeviceProfile::by_name("rtx4090").is_some());
+        assert!(DeviceProfile::by_name("h200").is_some());
+        assert!(DeviceProfile::by_name("b200").is_some());
+        assert!(DeviceProfile::by_name("tpuv4").is_none());
+    }
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::F32.bytes(), 4);
+        assert_eq!(Precision::F16.bytes(), 2);
+        assert_eq!(Precision::Fp8.bytes(), 1);
+    }
+}

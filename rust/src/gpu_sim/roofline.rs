@@ -1,0 +1,370 @@
+//! The roofline timing model and the paper's GEMM pipelines expressed in it.
+//!
+//! Every simulated operation is reduced to `(flops, bytes_moved, launches)`
+//! and timed as
+//!
+//! ```text
+//! t = launches · t_launch
+//!   + max( flops / (peak·compute_eff), bytes / (BW·bw_eff) )
+//! ```
+//!
+//! which is exactly the §6.2 model with the efficiency factors the paper
+//! concedes ("SOTA libraries achieve 60–80% of bandwidth peak"). The five
+//! comparison methods of §4.4 are each expressed as a pipeline of such ops.
+
+use crate::gpu_sim::profile::{DeviceProfile, Precision};
+
+/// Cost of one device operation in model units.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpCost {
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Bytes moved through device memory.
+    pub bytes: f64,
+    /// Kernel launches.
+    pub launches: f64,
+}
+
+impl OpCost {
+    /// Sum two costs (sequential composition).
+    pub fn then(self, other: OpCost) -> OpCost {
+        OpCost {
+            flops: self.flops + other.flops,
+            bytes: self.bytes + other.bytes,
+            launches: self.launches + other.launches,
+        }
+    }
+}
+
+/// Roofline evaluator bound to a device.
+#[derive(Clone, Debug)]
+pub struct Roofline {
+    /// Device constants.
+    pub device: DeviceProfile,
+}
+
+impl Roofline {
+    /// Bind the model to a device profile.
+    pub fn new(device: DeviceProfile) -> Self {
+        Roofline { device }
+    }
+
+    /// Simulated wall time of an op at a compute precision.
+    pub fn time(&self, cost: &OpCost, p: Precision) -> f64 {
+        let d = &self.device;
+        let compute = cost.flops / (d.peak_flops(p) * d.compute_efficiency);
+        let memory = cost.bytes / (d.bandwidth_bps * d.bandwidth_efficiency);
+        cost.launches * d.launch_overhead_s + compute.max(memory)
+    }
+
+    /// Achieved FLOP/s for a *useful-work* flop count over a simulated time.
+    pub fn achieved_flops(useful_flops: f64, time_s: f64) -> f64 {
+        if time_s <= 0.0 {
+            0.0
+        } else {
+            useful_flops / time_s
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // The §4.4 comparison pipelines. All operate on square N×N GEMM and
+    // report (time, effective TFLOPS of the dense-equivalent 2N³ work,
+    // peak resident bytes). `r` is the retained rank for low-rank methods.
+    // ------------------------------------------------------------------
+
+    /// Dense GEMM at a storage precision: read A, B; write C; one kernel.
+    pub fn dense_gemm_cost(&self, n: usize, p: Precision) -> OpCost {
+        let nn = n as f64 * n as f64;
+        OpCost {
+            flops: 2.0 * nn * n as f64,
+            bytes: 3.0 * nn * p.bytes() as f64,
+            launches: 1.0,
+        }
+    }
+
+    /// Method 1 — "PyTorch FP32": dense GEMM, FP32 storage + compute, plus
+    /// the framework's extra launch/dispatch overhead.
+    pub fn pytorch_f32(&self, n: usize) -> SimResult {
+        let cost = self.dense_gemm_cost(n, Precision::F32).then(OpCost {
+            launches: 2.0, // dispatcher + allocator traffic
+            ..Default::default()
+        });
+        self.finish(n, cost, Precision::F32, 3.0 * sq(n) * 4.0, 5.0)
+    }
+
+    /// Method 3 — "TorchCompile FP16": dense GEMM on TensorCores, F16
+    /// storage, fused single kernel.
+    pub fn torchcompile_f16(&self, n: usize) -> SimResult {
+        let cost = self.dense_gemm_cost(n, Precision::F16);
+        self.finish(n, cost, Precision::F16, 3.0 * sq(n) * 2.0, 2.5)
+    }
+
+    /// Method 2 — "cuBLAS Optimized FP8": dense GEMM with FP8 *storage*
+    /// (1-byte traffic) but **FP16 compute** — §4.4 calls it a "custom FP8
+    /// simulation with TensorCore acceleration"; the 4090 exposes no FP8
+    /// matmul through torch, so the paper's kernel (like ours) upcasts to
+    /// f16 in registers. That is why Table 1 reports it a hair *below*
+    /// TorchCompile FP16 (137 vs 139): same math rate, plus quant passes.
+    pub fn cublas_fp8(&self, n: usize) -> SimResult {
+        let quant = OpCost {
+            flops: 2.0 * sq(n),
+            bytes: 2.0 * sq(n) * (4.0 + 1.0), // read f32, write fp8, both matrices
+            launches: 2.0,
+        };
+        let cost = quant.then(self.dense_gemm_cost(n, Precision::Fp8));
+        self.finish(n, cost, Precision::F16, 3.0 * sq(n) * 2.0, 2.5)
+    }
+
+    /// Extra launches charged per factorization for the decomposition
+    /// *pipeline* (projection, panel QR, small SVD, transposes, python
+    /// dispatch). Calibrated from the paper's own Table 1: LowRank at
+    /// N=1024 achieves 0.5 TFLOPS → 2·N³/0.5e12 ≈ 4.3 ms per GEMM, i.e.
+    /// ≈ 2.1 ms of fixed overhead per operand factorization; at 12 µs per
+    /// launch that is ~180 launches. This single constant reproduces both
+    /// the paper's terrible small-N low-rank numbers and its N≈10⁴
+    /// crossover (EXPERIMENTS.md §Model-Calibration).
+    pub const SVD_PIPELINE_LAUNCHES: f64 = 180.0;
+
+    /// Low-rank factor-chain GEMM cost at rank r with factors already
+    /// resident (offline decomposition — the serving steady state).
+    pub fn lowrank_apply_cost(&self, n: usize, r: usize, p: Precision) -> OpCost {
+        let (nf, rf) = (n as f64, r as f64);
+        // T1 = VAᵀ·UB (r×r over k=n), T2 scalings, T3 = T2·VBᵀ (r×n),
+        // C = UA·T3 (n×n over r). Bytes: read 4 factors (2·2·n·r), write C.
+        OpCost {
+            flops: 2.0 * rf * nf * rf + 2.0 * rf * rf + 2.0 * rf * rf * nf + 2.0 * nf * rf * nf,
+            bytes: 4.0 * nf * rf * p.bytes() as f64 + sq(n) * p.bytes() as f64,
+            launches: 4.0,
+        }
+    }
+
+    /// Cost of factorizing one N×N matrix at rank r via randomized SVD
+    /// with q = 2 power iterations (2q+1 = 5 passes over A), plus the
+    /// small QR/SVD tail and the pipeline-launch overhead above. Charged
+    /// on cache misses and in the paper's (cold) Table-1 runs.
+    pub fn rsvd_cost(&self, n: usize, r: usize, p: Precision) -> OpCost {
+        let (nf, rf) = (n as f64, r as f64);
+        let l = rf + 8.0;
+        OpCost {
+            // 5 sketch/power passes + QR + B = Qᵀ·A + small SVD ~ O(n l²).
+            flops: 5.0 * (2.0 * sq(n) * l) + 8.0 * nf * l * l,
+            // Five streaming passes over A plus factor I/O.
+            bytes: 5.0 * sq(n) * p.bytes() as f64 + 4.0 * nf * l * p.bytes() as f64,
+            launches: Self::SVD_PIPELINE_LAUNCHES,
+        }
+    }
+
+    /// Method 4 — "LowRank FP8" as Table 1 measures it: factorization on
+    /// the request (the paper's harness re-decomposes inside the timed
+    /// region — its N=1024 row reads 0.5 TFLOPS, which is pure
+    /// decomposition overhead). SVD-class kernels run in F32; the chain
+    /// applies in F16 with fp8-width traffic.
+    pub fn lowrank_fp8(&self, n: usize, r: usize) -> SimResult {
+        let fact = self.rsvd_cost(n, r, Precision::F32);
+        let fact_time = 2.0 * self.time(&fact, Precision::F32);
+        let chain = self.lowrank_apply_cost(n, r, Precision::Fp8);
+        let chain_time = self.time(&chain, Precision::F16);
+        let resident = (2.0 * (2.0 * n as f64 * r as f64) + 2.0 * sq(n)) * 1.0;
+        self.finish_timed(n, fact_time + chain_time, fact.then(fact).then(chain), resident, 3.75 / 3.0)
+    }
+
+    /// Method 4, warm: factors cached (the serving steady state).
+    pub fn lowrank_fp8_warm(&self, n: usize, r: usize) -> SimResult {
+        let chain = self.lowrank_apply_cost(n, r, Precision::Fp8);
+        let t = self.time(&chain, Precision::F16);
+        let resident = (2.0 * (2.0 * n as f64 * r as f64) + sq(n)) * 1.0;
+        self.finish_timed(n, t, chain, resident, 3.75 / 3.0)
+    }
+
+    /// Backwards-compatible alias for the cold path.
+    pub fn lowrank_fp8_cold(&self, n: usize, r: usize) -> SimResult {
+        self.lowrank_fp8(n, r)
+    }
+
+    /// Method 5 — "LowRank Auto": the auto-selector's fast path. Two
+    /// structural advantages over LowRank FP8 (both from the paper's §3.3
+    /// description of the auto kernel): the sketch/power passes run on
+    /// TensorCores in f16 instead of f32, and the result stays factored
+    /// when the consumer accepts it (no dense C materialization), so the
+    /// bytes drop to factor traffic — the paper's "memory bandwidth
+    /// optimization rather than computational shortcuts".
+    pub fn lowrank_auto(&self, n: usize, r: usize) -> SimResult {
+        let (nf, rf) = (n as f64, r as f64);
+        let fact = self.rsvd_cost(n, r, Precision::Fp8); // fp8-width traffic
+        let fact_time = 2.0 * self.time(&fact, Precision::F16); // f16 math
+        let chain = OpCost {
+            flops: 2.0 * rf * nf * rf + 2.0 * rf * rf + 2.0 * rf * rf * nf + 2.0 * nf * rf * rf,
+            // Factored output: read 4 factors, write 2 (no dense C).
+            bytes: 6.0 * nf * rf * 1.0,
+            launches: 4.0,
+        };
+        let chain_time = self.time(&chain, Precision::F16);
+        let resident = 3.0 * (2.0 * nf * rf);
+        self.finish_timed(
+            n,
+            fact_time + chain_time,
+            fact.then(fact).then(chain),
+            resident,
+            3.75 / 3.0,
+        )
+    }
+
+    /// Method 5, warm: cached factors + factored output (steady state).
+    pub fn lowrank_auto_warm(&self, n: usize, r: usize) -> SimResult {
+        let (nf, rf) = (n as f64, r as f64);
+        let chain = OpCost {
+            flops: 2.0 * rf * nf * rf + 2.0 * rf * rf + 2.0 * rf * rf * nf + 2.0 * nf * rf * rf,
+            bytes: 6.0 * nf * rf * 1.0,
+            launches: 4.0,
+        };
+        let t = self.time(&chain, Precision::F16);
+        let resident = 3.0 * (2.0 * nf * rf);
+        self.finish_timed(n, t, chain, resident, 3.75 / 3.0)
+    }
+
+    fn finish(
+        &self,
+        n: usize,
+        cost: OpCost,
+        p: Precision,
+        resident_bytes: f64,
+        overhead_factor: f64,
+    ) -> SimResult {
+        let time = self.time(&cost, p);
+        self.finish_timed(n, time, cost, resident_bytes, overhead_factor)
+    }
+
+    /// Like [`Roofline::finish`] for pipelines whose stages run at
+    /// different compute precisions (time already summed per stage).
+    fn finish_timed(
+        &self,
+        n: usize,
+        time: f64,
+        cost: OpCost,
+        resident_bytes: f64,
+        overhead_factor: f64,
+    ) -> SimResult {
+        let useful = 2.0 * sq(n) * n as f64; // dense-equivalent work
+        SimResult {
+            time_s: time,
+            tflops: Roofline::achieved_flops(useful, time) / 1e12,
+            // The paper's Table 2 charges workspace at ~overhead_factor×
+            // the raw matrix bytes (its own §5.5 "temporary buffers" note).
+            peak_memory_bytes: resident_bytes * overhead_factor,
+            model_cost: cost,
+        }
+    }
+}
+
+/// Simulated outcome of one method at one size.
+#[derive(Clone, Copy, Debug)]
+pub struct SimResult {
+    /// Simulated wall time (seconds).
+    pub time_s: f64,
+    /// Achieved dense-equivalent TFLOPS (the paper's reporting convention).
+    pub tflops: f64,
+    /// Peak resident bytes (Table 2).
+    pub peak_memory_bytes: f64,
+    /// The raw cost that produced the time.
+    pub model_cost: OpCost,
+}
+
+fn sq(n: usize) -> f64 {
+    n as f64 * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rl() -> Roofline {
+        Roofline::new(DeviceProfile::rtx4090())
+    }
+
+    #[test]
+    fn compute_vs_memory_bound_switch() {
+        let r = rl();
+        // Tiny op: launch-dominated. Huge op at low intensity: memory-bound.
+        let small = OpCost { flops: 1e3, bytes: 1e3, launches: 1.0 };
+        let t_small = r.time(&small, Precision::F32);
+        assert!((t_small - r.device.launch_overhead_s).abs() < 1e-6);
+
+        let streaming = OpCost { flops: 1e9, bytes: 1e12, launches: 0.0 };
+        let t = r.time(&streaming, Precision::F32);
+        let mem_t = 1e12 / (r.device.bandwidth_bps * r.device.bandwidth_efficiency);
+        assert!((t - mem_t).abs() / mem_t < 1e-9);
+    }
+
+    #[test]
+    fn dense_f32_matches_paper_order_of_magnitude() {
+        // Paper Table 1: PyTorch FP32 ≈ 38-52 TFLOPS across sizes.
+        let r = rl();
+        for n in [4096usize, 16384] {
+            let s = r.pytorch_f32(n);
+            assert!(s.tflops > 20.0 && s.tflops < 90.0, "n={n}: {}", s.tflops);
+        }
+    }
+
+    #[test]
+    fn f16_beats_f32_at_scale() {
+        let r = rl();
+        let f32r = r.pytorch_f32(8192);
+        let f16r = r.torchcompile_f16(8192);
+        assert!(f16r.tflops > 1.5 * f32r.tflops);
+    }
+
+    #[test]
+    fn lowrank_auto_wins_at_large_n() {
+        // The paper's crossover: LowRank Auto fastest for N ≥ 10240.
+        let r = rl();
+        let n = 20480;
+        let rank = 512;
+        let auto = r.lowrank_auto(n, rank);
+        let f16 = r.torchcompile_f16(n);
+        let fp8 = r.cublas_fp8(n);
+        assert!(auto.time_s < f16.time_s, "auto {} vs f16 {}", auto.time_s, f16.time_s);
+        assert!(auto.time_s < fp8.time_s);
+        // And achieves hundreds of dense-equivalent TFLOPS.
+        assert!(auto.tflops > 200.0, "auto tflops {}", auto.tflops);
+    }
+
+    #[test]
+    fn dense_wins_at_small_n() {
+        // Paper: PyTorch FP32 / compiled F16 dominate for N ≤ 4096 because
+        // of launch overhead + factorization costs.
+        let r = rl();
+        let n = 1024;
+        let cold = r.lowrank_fp8_cold(n, 64);
+        let dense = r.pytorch_f32(n);
+        assert!(dense.time_s < cold.time_s, "dense {} cold {}", dense.time_s, cold.time_s);
+    }
+
+    #[test]
+    fn memory_ordering_matches_table2() {
+        let r = rl();
+        let n = 20480;
+        let m_f32 = r.pytorch_f32(n).peak_memory_bytes;
+        let m_f16 = r.torchcompile_f16(n).peak_memory_bytes;
+        let m_lr = r.lowrank_fp8(n, 512).peak_memory_bytes;
+        assert!(m_f16 < m_f32);
+        assert!(m_lr < m_f16);
+        // Table 2 ratio: FP32 15 GB vs LowRank 3.75 GB → 4x.
+        let ratio = m_f32 / m_lr;
+        assert!(ratio > 3.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn cost_composition() {
+        let a = OpCost { flops: 1.0, bytes: 2.0, launches: 3.0 };
+        let b = OpCost { flops: 10.0, bytes: 20.0, launches: 30.0 };
+        let c = a.then(b);
+        assert_eq!(c.flops, 11.0);
+        assert_eq!(c.bytes, 22.0);
+        assert_eq!(c.launches, 33.0);
+    }
+
+    #[test]
+    fn achieved_flops_guards_zero_time() {
+        assert_eq!(Roofline::achieved_flops(1e9, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Kernel registry, cost model and the paper's `AutoKernelSelector`.
+//!
+//! The selector is the "intelligent kernel selection" of §3.3.2/Listing 1:
+//! given a GEMM request (shapes, error tolerance, precision preference,
+//! whether factors are already cached) it scores every applicable kernel
+//! with the analytic cost model and picks the cheapest one that satisfies
+//! the accuracy constraint.
+
+pub mod cost;
+pub mod selector;
+
+pub use cost::{kernel_cost, CostEstimate};
+pub use selector::{AutoKernelSelector, KernelChoice, KernelKind, SelectorInputs};

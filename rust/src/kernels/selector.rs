@@ -1,0 +1,326 @@
+//! The AutoKernelSelector (paper Listing 1 / §3.3.2).
+
+use crate::fp8::{Fp8Format, StorageFormat};
+use crate::gpu_sim::profile::{DeviceProfile, Precision};
+use crate::kernels::cost::{kernel_cost, CostEstimate};
+use crate::lowrank::errors::predicted_rel_error;
+
+/// The kernels the router can dispatch to — the paper's §4.4 method list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Dense GEMM, f32 storage + compute ("PyTorch FP32").
+    DenseF32,
+    /// Dense GEMM, f16 storage, f32 accumulate ("TorchCompile FP16").
+    DenseF16,
+    /// Dense GEMM, fp8 storage, f16 compute / f32 accumulate ("cuBLAS FP8").
+    DenseFp8,
+    /// Factor-chain GEMM with FP8-stored factors ("LowRank FP8").
+    LowRankFp8,
+    /// Factor-chain GEMM, factored output accepted ("LowRank Auto" fastest
+    /// path).
+    LowRankAuto,
+}
+
+impl KernelKind {
+    /// All kernels, in the paper's Table-1 row order.
+    pub const ALL: [KernelKind; 5] = [
+        KernelKind::DenseF32,
+        KernelKind::DenseF16,
+        KernelKind::DenseFp8,
+        KernelKind::LowRankFp8,
+        KernelKind::LowRankAuto,
+    ];
+
+    /// Paper's display name.
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            KernelKind::DenseF32 => "PyTorch FP32",
+            KernelKind::DenseF16 => "TorchCompile FP16",
+            KernelKind::DenseFp8 => "cuBLAS Optimized FP8",
+            KernelKind::LowRankFp8 => "LowRank FP8",
+            KernelKind::LowRankAuto => "LowRank Auto",
+        }
+    }
+
+    /// Short id for configs/CLI.
+    pub fn id(self) -> &'static str {
+        match self {
+            KernelKind::DenseF32 => "dense_f32",
+            KernelKind::DenseF16 => "dense_f16",
+            KernelKind::DenseFp8 => "dense_fp8",
+            KernelKind::LowRankFp8 => "lowrank_fp8",
+            KernelKind::LowRankAuto => "lowrank_auto",
+        }
+    }
+
+    /// Parse a short id.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "dense_f32" => KernelKind::DenseF32,
+            "dense_f16" => KernelKind::DenseF16,
+            "dense_fp8" => KernelKind::DenseFp8,
+            "lowrank_fp8" => KernelKind::LowRankFp8,
+            "lowrank_auto" | "auto" => KernelKind::LowRankAuto,
+            _ => return None,
+        })
+    }
+
+    /// Is this a factor-chain kernel?
+    pub fn is_lowrank(self) -> bool {
+        matches!(self, KernelKind::LowRankFp8 | KernelKind::LowRankAuto)
+    }
+
+    /// Storage precision the kernel uses for its operands.
+    pub fn storage(self) -> StorageFormat {
+        match self {
+            KernelKind::DenseF32 => StorageFormat::F32,
+            KernelKind::DenseF16 => StorageFormat::F16,
+            KernelKind::DenseFp8 | KernelKind::LowRankFp8 | KernelKind::LowRankAuto => {
+                StorageFormat::Fp8(Fp8Format::E4M3)
+            }
+        }
+    }
+
+    /// Compute (math) precision for the roofline model. FP8 kernels do
+    /// their arithmetic in f16 — "FP8 storage, FP16 compute, FP32
+    /// accumulate" (§3.3); storage width comes from [`KernelKind::storage`].
+    pub fn compute_precision(self) -> Precision {
+        match self {
+            KernelKind::DenseF32 => Precision::F32,
+            _ => Precision::F16,
+        }
+    }
+
+    /// Deprecated alias for [`KernelKind::compute_precision`].
+    pub fn precision(self) -> Precision {
+        self.compute_precision()
+    }
+}
+
+/// Everything the selector needs to know about one request.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorInputs {
+    /// GEMM shape (m, k, n).
+    pub m: usize,
+    /// Inner dimension.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Relative-error tolerance the caller accepts (1.0 = anything).
+    pub error_tolerance: f32,
+    /// Rank the low-rank path would use (from the rank strategy).
+    pub rank: usize,
+    /// Are both operands' factors already cached (offline decomposition)?
+    pub factors_cached: bool,
+    /// Will the consumer accept a factored (non-materialized) result?
+    pub factored_output_ok: bool,
+}
+
+/// The selector's verdict for one request.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelChoice {
+    /// Which kernel to run.
+    pub kind: KernelKind,
+    /// Predicted cost on the device.
+    pub cost: CostEstimate,
+    /// Predicted relative error of the chosen kernel.
+    pub predicted_error: f32,
+}
+
+/// Hardware-aware kernel selection (paper Listing 1's `AutoKernelSelector`).
+#[derive(Clone, Debug)]
+pub struct AutoKernelSelector {
+    /// Device the selector optimizes for.
+    pub device: DeviceProfile,
+}
+
+impl AutoKernelSelector {
+    /// Bind to a device.
+    pub fn new(device: DeviceProfile) -> Self {
+        AutoKernelSelector { device }
+    }
+
+    /// Predicted relative error of a kernel on this request. Dense kernels
+    /// pay only quantization error; low-rank kernels pay the §5.4.4
+    /// heuristic truncation error plus storage quantization.
+    pub fn predicted_error(&self, kind: KernelKind, inp: &SelectorInputs) -> f32 {
+        let quant = match kind {
+            KernelKind::DenseF32 => 1e-6,
+            KernelKind::DenseF16 => 5e-4,
+            KernelKind::DenseFp8 => 2e-2,
+            KernelKind::LowRankFp8 | KernelKind::LowRankAuto => 2e-2,
+        };
+        if kind.is_lowrank() {
+            let n = inp.k.max(inp.m).max(inp.n);
+            (quant * quant + {
+                let e = predicted_rel_error(n, inp.rank.max(1));
+                e * e
+            })
+            .sqrt()
+        } else {
+            quant
+        }
+    }
+
+    /// Score all applicable kernels, cheapest-first.
+    pub fn ranked(&self, inp: &SelectorInputs) -> Vec<KernelChoice> {
+        let mut out: Vec<KernelChoice> = KernelKind::ALL
+            .iter()
+            .filter(|k| {
+                // LowRankAuto's factored-output trick needs caller opt-in.
+                **k != KernelKind::LowRankAuto || inp.factored_output_ok
+            })
+            .map(|&kind| KernelChoice {
+                kind,
+                cost: kernel_cost(&self.device, kind, inp),
+                predicted_error: self.predicted_error(kind, inp),
+            })
+            .collect();
+        out.sort_by(|a, b| a.cost.time_s.partial_cmp(&b.cost.time_s).unwrap());
+        out
+    }
+
+    /// Pick the fastest kernel whose predicted error fits the tolerance;
+    /// fall back to the most accurate one if nothing fits.
+    pub fn select(&self, inp: &SelectorInputs) -> KernelChoice {
+        let ranked = self.ranked(inp);
+        ranked
+            .iter()
+            .find(|c| c.predicted_error <= inp.error_tolerance)
+            .copied()
+            .unwrap_or_else(|| {
+                *ranked
+                    .iter()
+                    .min_by(|a, b| {
+                        a.predicted_error
+                            .partial_cmp(&b.predicted_error)
+                            .unwrap()
+                    })
+                    .expect("at least one kernel")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(n: usize, rank: usize) -> SelectorInputs {
+        SelectorInputs {
+            m: n,
+            k: n,
+            n,
+            error_tolerance: 0.05,
+            rank,
+            factors_cached: true,
+            factored_output_ok: true,
+        }
+    }
+
+    fn sel() -> AutoKernelSelector {
+        AutoKernelSelector::new(DeviceProfile::rtx4090())
+    }
+
+    #[test]
+    fn small_matrices_pick_dense() {
+        // Paper §5.1: dense wins for N ≤ 4096.
+        let s = sel();
+        let choice = s.select(&inputs(1024, 64));
+        assert!(!choice.kind.is_lowrank(), "chose {:?}", choice.kind);
+    }
+
+    #[test]
+    fn large_matrices_pick_lowrank() {
+        // Paper §5.1: LowRank Auto fastest for N ≥ 10240 (r = N/40).
+        let s = sel();
+        let choice = s.select(&inputs(20480, 512));
+        assert_eq!(choice.kind, KernelKind::LowRankAuto);
+    }
+
+    #[test]
+    fn tight_tolerance_forces_exact() {
+        let s = sel();
+        let mut inp = inputs(20480, 512);
+        inp.error_tolerance = 1e-5;
+        let choice = s.select(&inp);
+        assert_eq!(choice.kind, KernelKind::DenseF32);
+    }
+
+    #[test]
+    fn factored_output_gate_respected() {
+        let s = sel();
+        let mut inp = inputs(20480, 512);
+        inp.factored_output_ok = false;
+        let ranked = s.ranked(&inp);
+        assert!(ranked.iter().all(|c| c.kind != KernelKind::LowRankAuto));
+    }
+
+    #[test]
+    fn cold_factors_penalize_lowrank() {
+        let s = sel();
+        let mut inp = inputs(8192, 256);
+        inp.factors_cached = false;
+        let cold = s
+            .ranked(&inp)
+            .into_iter()
+            .find(|c| c.kind == KernelKind::LowRankFp8)
+            .unwrap();
+        inp.factors_cached = true;
+        let warm = s
+            .ranked(&inp)
+            .into_iter()
+            .find(|c| c.kind == KernelKind::LowRankFp8)
+            .unwrap();
+        assert!(cold.cost.time_s > warm.cost.time_s * 1.5);
+    }
+
+    #[test]
+    fn crossover_in_paper_band() {
+        // Find the N where LowRankAuto first beats all dense kernels
+        // (rank = N/40 as in the paper's r=512 @ N=20480 operating point).
+        // Cold factors + materialized output: the paper's Table-1 regime
+        // (its harness re-decomposes inside the timed region — the 0.5
+        // TFLOPS row at N=1024 is decomposition overhead).
+        let s = sel();
+        let mut crossover = None;
+        for exp in 0..14 {
+            let n = (1024.0 * (2.0f64).powf(exp as f64 / 2.0)).round() as usize;
+            let mut inp = inputs(n, (n / 40).max(16));
+            inp.factors_cached = false;
+            let c = s.select(&inp);
+            if c.kind.is_lowrank() {
+                crossover = Some(n);
+                break;
+            }
+        }
+        let x = crossover.expect("lowrank should win eventually");
+        // Paper says ~10240; accept a generous band around it.
+        assert!((4096..=20480).contains(&x), "crossover at {x}");
+    }
+
+    #[test]
+    fn ranked_is_sorted() {
+        let s = sel();
+        let ranked = s.ranked(&inputs(4096, 128));
+        for w in ranked.windows(2) {
+            assert!(w[0].cost.time_s <= w[1].cost.time_s);
+        }
+    }
+
+    #[test]
+    fn id_parse_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(k.id()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("magic"), None);
+    }
+
+    #[test]
+    fn impossible_tolerance_falls_back_to_most_accurate() {
+        let s = sel();
+        let mut inp = inputs(2048, 64);
+        inp.error_tolerance = 0.0;
+        let c = s.select(&inp);
+        assert_eq!(c.kind, KernelKind::DenseF32);
+    }
+}

@@ -1,0 +1,388 @@
+//! Dense GEMM kernels — the CPU substrate's "cuBLAS".
+//!
+//! Three implementations with identical semantics (`C = A · B`):
+//!
+//! - [`gemm_naive`] — textbook triple loop in ikj order; the correctness
+//!   oracle and the deliberately-slow baseline for the benchmark suite.
+//! - [`gemm_blocked`] — cache-blocked with a register-tiled 4×4 micro-kernel
+//!   and a packed B panel; the hot path used by everything else.
+//! - [`gemm_strided`] — operates on sub-blocks without copies; used by the
+//!   batcher when slicing fused batches.
+//!
+//! The micro-kernel mirrors, at CPU scale, the structure the paper's CUDA
+//! kernels have on the GPU: an outer HBM→shared (here L2→L1) tiling plus an
+//! inner register-resident accumulator tile — see DESIGN.md §3 for the
+//! TPU/Pallas mapping of the same idea.
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+
+/// Selectable dense algorithm (benchmarks sweep this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmAlgo {
+    /// Textbook ikj triple loop.
+    Naive,
+    /// Cache-blocked + 4×4 register micro-kernel (default).
+    Blocked,
+}
+
+/// Cache-block sizes: MC×KC panel of A (L2), KC×NC panel of B (L1-ish).
+/// Tuned on the 1-core eval machine; see EXPERIMENTS.md §Perf.
+const MC: usize = 128;
+const KC: usize = 256;
+const NC: usize = 256;
+
+/// `C = A · B`, naive ikj order (row-major friendly, no blocking).
+pub fn gemm_naive(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    check(a, b)?;
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    let bd = b.data();
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (t, &av) in arow.iter().enumerate().take(k) {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[t * n..(t + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// `C = A · B` with cache blocking and a register-tiled micro-kernel.
+pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    check(a, b)?;
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    // Small problems: blocking/packing overhead dominates; use the naive
+    // loop. Cutover measured in §Perf iteration 4 (naive wins at 64³,
+    // blocked wins from ~96³ up).
+    if m * n * k <= 80 * 80 * 80 {
+        return gemm_naive(a, b);
+    }
+    let mut bpack = vec![0.0f32; KC * NC];
+    for pc in (0..k).step_by(KC) {
+        let kc = KC.min(k - pc);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            pack_b(b, pc, jc, kc, nc, &mut bpack);
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                macro_kernel(a, &bpack, &mut c, ic, jc, pc, mc, nc, kc, n);
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// Pack `B[pc..pc+kc, jc..jc+nc]` row-major into a contiguous panel.
+#[inline]
+fn pack_b(b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, out: &mut [f32]) {
+    let n = b.cols();
+    let bd = b.data();
+    for t in 0..kc {
+        let src = &bd[(pc + t) * n + jc..(pc + t) * n + jc + nc];
+        out[t * nc..t * nc + nc].copy_from_slice(src);
+    }
+}
+
+/// Multiply one MC×KC block of A with the packed KC×NC panel of B.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn macro_kernel(
+    a: &Matrix,
+    bpack: &[f32],
+    c: &mut Matrix,
+    ic: usize,
+    jc: usize,
+    pc: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+    n: usize,
+) {
+    let ad = a.data();
+    let ka = a.cols();
+    let cd = c.data_mut();
+    let mut i = 0;
+    // 4-row register tile.
+    while i + 4 <= mc {
+        let r0 = ic + i;
+        micro_4xn(
+            &ad[(r0) * ka + pc..],
+            &ad[(r0 + 1) * ka + pc..],
+            &ad[(r0 + 2) * ka + pc..],
+            &ad[(r0 + 3) * ka + pc..],
+            bpack,
+            kc,
+            nc,
+            &mut SplitRows::new(cd, r0, n, jc),
+        );
+        i += 4;
+    }
+    // Remainder rows.
+    while i < mc {
+        let r = ic + i;
+        let arow = &ad[r * ka + pc..r * ka + pc + kc];
+        let crow = &mut cd[r * n + jc..r * n + jc + nc];
+        for (t, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bpack[t * nc..t * nc + nc];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Helper giving simultaneous mutable access to 4 consecutive C rows.
+struct SplitRows<'a> {
+    r0: &'a mut [f32],
+    r1: &'a mut [f32],
+    r2: &'a mut [f32],
+    r3: &'a mut [f32],
+}
+
+impl<'a> SplitRows<'a> {
+    fn new(cd: &'a mut [f32], r0: usize, n: usize, jc: usize) -> Self {
+        let (a, rest) = cd[r0 * n..].split_at_mut(n);
+        let (b, rest) = rest.split_at_mut(n);
+        let (c, rest) = rest.split_at_mut(n);
+        let (d, _) = rest.split_at_mut(n);
+        SplitRows {
+            r0: &mut a[jc..],
+            r1: &mut b[jc..],
+            r2: &mut c[jc..],
+            r3: &mut d[jc..],
+        }
+    }
+}
+
+/// Register-tile width of the inner micro-kernel (4×8 f32 accumulators =
+/// 4 AVX ymm registers of payload — fits x86-64's register file with room
+/// for the A broadcasts and B row).
+const NR: usize = 16;
+
+/// 4×nc micro-kernel: 4 A rows against the packed B panel.
+///
+/// §Perf iteration 1 (EXPERIMENTS.md): the original version accumulated
+/// straight into the C rows each k-step — ~9 L1 accesses per 8 flops —
+/// plateauing at ~15 GFLOPS. This version walks `nc` in NR-wide column
+/// strips and keeps a full 4×NR accumulator tile in registers across the
+/// entire kc loop, touching C exactly once per strip: arithmetic-bound
+/// instead of L1-bound.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_4xn(
+    a0: &[f32],
+    a1: &[f32],
+    a2: &[f32],
+    a3: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    nc: usize,
+    c: &mut SplitRows,
+) {
+    // Exact pre-slices let LLVM hoist every bounds check out of the kc
+    // loop (§Perf iteration 3).
+    let (a0, a1, a2, a3) = (&a0[..kc], &a1[..kc], &a2[..kc], &a3[..kc]);
+    let mut j0 = 0;
+    // Full NR-wide strips: register accumulation over all of kc.
+    while j0 + NR <= nc {
+        let mut acc = [[0.0f32; NR]; 4];
+        let mut boff = j0;
+        for t in 0..kc {
+            let (v0, v1, v2, v3) = (a0[t], a1[t], a2[t], a3[t]);
+            let brow: &[f32; NR] = bpack[boff..boff + NR].try_into().expect("NR strip");
+            for jj in 0..NR {
+                let b = brow[jj];
+                acc[0][jj] += v0 * b;
+                acc[1][jj] += v1 * b;
+                acc[2][jj] += v2 * b;
+                acc[3][jj] += v3 * b;
+            }
+            boff += nc;
+        }
+        for jj in 0..NR {
+            c.r0[j0 + jj] += acc[0][jj];
+            c.r1[j0 + jj] += acc[1][jj];
+            c.r2[j0 + jj] += acc[2][jj];
+            c.r3[j0 + jj] += acc[3][jj];
+        }
+        j0 += NR;
+    }
+    // Remainder columns (< NR): scalar accumulators per column.
+    while j0 < nc {
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for t in 0..kc {
+            let b = bpack[t * nc + j0];
+            s0 += a0[t] * b;
+            s1 += a1[t] * b;
+            s2 += a2[t] * b;
+            s3 += a3[t] * b;
+        }
+        c.r0[j0] += s0;
+        c.r1[j0] += s1;
+        c.r2[j0] += s2;
+        c.r3[j0] += s3;
+        j0 += 1;
+    }
+}
+
+/// GEMM over sub-blocks: `C[c_off] += A[a_off] · B[b_off]` with explicit
+/// strides, no intermediate copies. Used when slicing fused batches.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_strided(
+    a: &[f32],
+    a_row_stride: usize,
+    b: &[f32],
+    b_row_stride: usize,
+    c: &mut [f32],
+    c_row_stride: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    for i in 0..m {
+        let arow = &a[i * a_row_stride..i * a_row_stride + k];
+        let crow = &mut c[i * c_row_stride..i * c_row_stride + n];
+        for (t, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[t * b_row_stride..t * b_row_stride + n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Dispatch by algorithm enum (benchmark sweeps).
+pub fn gemm(a: &Matrix, b: &Matrix, algo: GemmAlgo) -> Result<Matrix> {
+    match algo {
+        GemmAlgo::Naive => gemm_naive(a, b),
+        GemmAlgo::Blocked => gemm_blocked(a, b),
+    }
+}
+
+fn check(a: &Matrix, b: &Matrix) -> Result<()> {
+    if a.cols() != b.rows() {
+        return Err(Error::ShapeMismatch {
+            op: "gemm",
+            lhs: a.shape(),
+            rhs: b.shape(),
+        });
+    }
+    Ok(())
+}
+
+/// FLOP count of a dense `m×k · k×n` GEMM (2 ops per MAC) — shared by the
+/// cost model, the roofline simulator and the benchmark reporters.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn tiny_known_product() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = gemm_naive(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn blocked_matches_naive_square() {
+        let mut rng = Pcg64::seeded(5);
+        for n in [1usize, 3, 8, 31, 64, 97, 130] {
+            let a = Matrix::gaussian(n, n, &mut rng);
+            let b = Matrix::gaussian(n, n, &mut rng);
+            let c1 = gemm_naive(&a, &b).unwrap();
+            let c2 = gemm_blocked(&a, &b).unwrap();
+            assert!(
+                c1.rel_frobenius_distance(&c2) < 1e-5,
+                "mismatch at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_rectangular() {
+        let mut rng = Pcg64::seeded(6);
+        for (m, k, n) in [(5, 70, 9), (70, 5, 260), (33, 300, 65), (260, 270, 4)] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            let c1 = gemm_naive(&a, &b).unwrap();
+            let c2 = gemm_blocked(&a, &b).unwrap();
+            assert!(
+                c1.rel_frobenius_distance(&c2) < 1e-5,
+                "mismatch at ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Pcg64::seeded(7);
+        let a = Matrix::gaussian(40, 40, &mut rng);
+        let i = Matrix::eye(40);
+        let c = gemm_blocked(&a, &i).unwrap();
+        assert!(c.rel_frobenius_distance(&a) < 1e-6);
+    }
+
+    #[test]
+    fn associativity_within_tolerance() {
+        let mut rng = Pcg64::seeded(8);
+        let a = Matrix::gaussian(20, 30, &mut rng);
+        let b = Matrix::gaussian(30, 25, &mut rng);
+        let c = Matrix::gaussian(25, 10, &mut rng);
+        let left = a.matmul(&b).matmul(&c);
+        let right = a.matmul(&b.matmul(&c));
+        assert!(left.rel_frobenius_distance(&right) < 1e-4);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        assert!(gemm_blocked(&a, &b).is_err());
+        assert!(gemm_naive(&a, &b).is_err());
+    }
+
+    #[test]
+    fn strided_matches_dense_on_subblocks() {
+        let mut rng = Pcg64::seeded(9);
+        let a = Matrix::gaussian(10, 12, &mut rng);
+        let b = Matrix::gaussian(12, 14, &mut rng);
+        // Multiply the top-left 6x8 of A with the left 8-row, 9-col block of B.
+        let (m, k, n) = (6, 8, 9);
+        let mut c = vec![0.0f32; m * n];
+        gemm_strided(a.data(), a.cols(), b.data(), b.cols(), &mut c, n, m, n, k);
+        let aa = a.block(0, 0, m, k);
+        let bb = b.block(0, 0, k, n);
+        let expect = aa.matmul(&bb);
+        for i in 0..m * n {
+            assert!((c[i] - expect.data()[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+}

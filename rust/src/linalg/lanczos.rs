@@ -1,0 +1,208 @@
+//! Golub–Kahan–Lanczos bidiagonalization for truncated SVD.
+//!
+//! The paper's §3.1 mentions "randomized SVD or Lanczos methods" as the
+//! truncated-decomposition options; this is the Lanczos one. We run k + q
+//! bidiagonalization steps with full reorthogonalization (the matrices here
+//! are small enough that the O(mk²) reorthogonalization is cheap and it
+//! removes the classic ghost-eigenvalue pathology), then take the SVD of
+//! the small bidiagonal matrix via the existing Jacobi kernel.
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::norms::{dot, normalize};
+use crate::linalg::rng::Pcg64;
+use crate::linalg::svd::{jacobi_svd, Svd};
+
+/// Truncated SVD via Lanczos bidiagonalization.
+///
+/// `extra` is the number of additional Lanczos steps beyond the target rank
+/// (analogous to rSVD oversampling; 4–8 is plenty for decaying spectra).
+pub fn lanczos_svd(a: &Matrix, r: usize, extra: usize, seed: u64) -> Result<Svd> {
+    let (m, n) = a.shape();
+    let kmax = m.min(n);
+    if r == 0 || r > kmax {
+        return Err(Error::InvalidRank {
+            requested: r,
+            max: kmax,
+        });
+    }
+    let steps = (r + extra).min(kmax);
+
+    // Lanczos vectors: U (m × steps), V (n × steps); bidiagonal alphas/betas.
+    let mut us: Vec<Vec<f32>> = Vec::with_capacity(steps);
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(steps);
+    let mut alphas = Vec::with_capacity(steps);
+    let mut betas = Vec::with_capacity(steps);
+
+    let mut rng = Pcg64::seeded(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_gaussian(&mut v);
+    normalize(&mut v, 1e-30);
+
+    let mut beta = 0.0f32;
+    let mut u_prev: Vec<f32> = vec![0.0; m];
+
+    for j in 0..steps {
+        // u_j = A v_j - beta_{j-1} u_{j-1}
+        let mut u = a.matvec(&v);
+        if j > 0 {
+            for (ui, &pi) in u.iter_mut().zip(&u_prev) {
+                *ui -= beta * pi;
+            }
+        }
+        // Full reorthogonalization against previous u's.
+        for prev in &us {
+            let c = dot(&u, prev);
+            for (ui, &pi) in u.iter_mut().zip(prev) {
+                *ui -= c * pi;
+            }
+        }
+        let alpha = normalize(&mut u, 1e-30);
+        if alpha == 0.0 {
+            break; // invariant subspace found
+        }
+        us.push(u.clone());
+        vs.push(v.clone());
+        alphas.push(alpha);
+
+        // v_{j+1} = Aᵀ u_j - alpha_j v_j
+        let mut vnext = a.matvec_t(&u);
+        for (vi, &ci) in vnext.iter_mut().zip(&v) {
+            *vi -= alpha * ci;
+        }
+        for prev in &vs {
+            let c = dot(&vnext, prev);
+            for (vi, &pi) in vnext.iter_mut().zip(prev) {
+                *vi -= c * pi;
+            }
+        }
+        beta = normalize(&mut vnext, 1e-30);
+        betas.push(beta);
+        if beta == 0.0 {
+            break;
+        }
+        u_prev = u;
+        v = vnext;
+    }
+
+    let k = alphas.len();
+    if k == 0 {
+        // A is (numerically) zero.
+        return Ok(Svd {
+            u: Matrix::zeros(m, r),
+            s: vec![0.0; r],
+            vt: Matrix::zeros(r, n),
+        });
+    }
+
+    // Build the small upper-bidiagonal matrix B (k×k): the recurrence
+    // `u_j = A v_j − β_{j−1} u_{j−1}`, `v_{j+1} = Aᵀ u_j − α_j v_j` yields
+    // A V_k = U_k B with B[j,j] = alpha_j and B[j,j+1] = beta_j.
+    let mut b = Matrix::zeros(k, k);
+    for j in 0..k {
+        b[(j, j)] = alphas[j];
+        if j + 1 < k {
+            b[(j, j + 1)] = betas[j];
+        }
+    }
+    let small = jacobi_svd(&b)?;
+
+    // Assemble U = Us · U_B, Vt = V_Bᵀ · Vsᵀ, truncated to r.
+    let rr = r.min(k);
+    let mut u_out = Matrix::zeros(m, rr);
+    for c in 0..rr {
+        for (j, uj) in us.iter().enumerate() {
+            let w = small.u[(j, c)];
+            if w == 0.0 {
+                continue;
+            }
+            for i in 0..m {
+                u_out[(i, c)] += w * uj[i];
+            }
+        }
+    }
+    let mut vt_out = Matrix::zeros(rr, n);
+    for rrow in 0..rr {
+        for (j, vj) in vs.iter().enumerate() {
+            let w = small.vt[(rrow, j)];
+            if w == 0.0 {
+                continue;
+            }
+            for i in 0..n {
+                vt_out[(rrow, i)] += w * vj[i];
+            }
+        }
+    }
+    let mut s = small.s[..rr].to_vec();
+    s.resize(r.min(kmax), 0.0);
+
+    Ok(Svd {
+        u: u_out,
+        s,
+        vt: vt_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::orthonormality_defect;
+
+    #[test]
+    fn recovers_exact_low_rank() {
+        let mut rng = Pcg64::seeded(51);
+        let a = Matrix::low_rank(36, 28, 4, &mut rng);
+        let f = lanczos_svd(&a, 4, 6, 7).unwrap();
+        let err = f.reconstruct().rel_frobenius_distance(&a);
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn matches_jacobi_on_leading_singular_values() {
+        let mut rng = Pcg64::seeded(52);
+        let sv = [9.0, 5.0, 2.5, 1.2, 0.6, 0.3, 0.1];
+        let a = Matrix::with_spectrum(30, 24, &sv, &mut rng);
+        let f = lanczos_svd(&a, 3, 8, 11).unwrap();
+        for (i, &want) in sv[..3].iter().enumerate() {
+            assert!(
+                (f.s[i] - want).abs() / want < 0.02,
+                "sv[{i}] got {} want {want}",
+                f.s[i]
+            );
+        }
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let mut rng = Pcg64::seeded(53);
+        let a = Matrix::gaussian(25, 18, &mut rng);
+        let f = lanczos_svd(&a, 6, 6, 13).unwrap();
+        assert!(orthonormality_defect(&f.u) < 1e-2);
+        assert!(orthonormality_defect(&f.vt.transpose()) < 1e-2);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Matrix::zeros(10, 6);
+        let f = lanczos_svd(&a, 3, 2, 17).unwrap();
+        assert!(f.s.iter().all(|&s| s < 1e-6));
+    }
+
+    #[test]
+    fn rank_bounds() {
+        let a = Matrix::eye(5);
+        assert!(lanczos_svd(&a, 0, 2, 1).is_err());
+        assert!(lanczos_svd(&a, 6, 2, 1).is_err());
+    }
+
+    #[test]
+    fn early_breakdown_on_exact_rank() {
+        // rank-2 matrix with steps > 2: Lanczos must stop gracefully.
+        let mut rng = Pcg64::seeded(54);
+        let a = Matrix::low_rank(16, 16, 2, &mut rng);
+        let f = lanczos_svd(&a, 5, 5, 19).unwrap();
+        assert!(f.s[0] > 0.0);
+        assert!(f.s[2] < 1e-3 * f.s[0].max(1e-9));
+        assert!(f.u.all_finite() && f.vt.all_finite());
+    }
+}

@@ -1,0 +1,619 @@
+//! Row-major dense `f32` matrix.
+//!
+//! The workhorse type of the CPU substrate. Storage is a flat `Vec<f32>` in
+//! row-major order (`data[r * cols + c]`), matching both the XLA literal
+//! layout used by the runtime bridge and the paper's PyTorch baseline.
+
+use crate::error::{Error, Result};
+use crate::linalg::rng::Pcg64;
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rshow = self.rows.min(6);
+        let cshow = self.cols.min(8);
+        for r in 0..rshow {
+            write!(f, "  ")?;
+            for c in 0..cshow {
+                write!(f, "{:>10.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}", if cshow < self.cols { "…" } else { "" })?;
+        }
+        if rshow < self.rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Matrix {
+    // ------------------------------------------------------------------
+    // Constructors
+    // ------------------------------------------------------------------
+
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Matrix from an explicit row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::ShapeMismatch {
+                op: "from_vec",
+                lhs: (rows, cols),
+                rhs: (data.len(), 1),
+            });
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix built from a function of `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// I.i.d. standard-normal entries.
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data);
+        m
+    }
+
+    /// I.i.d. uniform entries in `[lo, hi)`.
+    pub fn uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Pcg64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    /// Exactly rank-`r` matrix: product of two Gaussian factors, scaled so
+    /// the Frobenius norm is O(sqrt(rows*cols)).
+    pub fn low_rank(rows: usize, cols: usize, rank: usize, rng: &mut Pcg64) -> Self {
+        let rank = rank.max(1).min(rows.min(cols));
+        let g1 = Matrix::gaussian(rows, rank, rng);
+        let g2 = Matrix::gaussian(rank, cols, rng);
+        let mut m = g1.matmul(&g2);
+        let scale = 1.0 / (rank as f32).sqrt();
+        m.scale_in_place(scale);
+        m
+    }
+
+    /// Rank-`r` signal plus i.i.d. Gaussian noise of amplitude
+    /// `noise * signal_rms` — the structured generator used throughout the
+    /// benchmark suite (the paper evaluates on matrices with rapidly
+    /// decaying spectra; this is the simplest such family).
+    pub fn low_rank_noisy(
+        rows: usize,
+        cols: usize,
+        rank: usize,
+        noise: f32,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let mut m = Matrix::low_rank(rows, cols, rank, rng);
+        if noise > 0.0 {
+            let rms = (m.sq_frobenius_norm() / (rows * cols) as f32).sqrt();
+            for v in m.data.iter_mut() {
+                *v += noise * rms * rng.gaussian();
+            }
+        }
+        m
+    }
+
+    /// Matrix with an explicit singular-value profile: `A = U diag(s) Vᵀ`
+    /// with Haar-ish random orthonormal `U`, `V` (QR of Gaussian).
+    /// Used by the error-analysis experiments to generate exponential-decay
+    /// and heavy-tail spectra.
+    pub fn with_spectrum(rows: usize, cols: usize, sv: &[f32], rng: &mut Pcg64) -> Self {
+        let k = sv.len().min(rows.min(cols));
+        let gu = Matrix::gaussian(rows, k, rng);
+        let gv = Matrix::gaussian(cols, k, rng);
+        let u = crate::linalg::qr::qr_thin(&gu).q;
+        let v = crate::linalg::qr::qr_thin(&gv).q;
+        // A = U * diag(sv) * Vᵀ
+        let mut us = u;
+        for c in 0..k {
+            let s = sv[c];
+            for r in 0..rows {
+                us[(r, c)] *= s;
+            }
+        }
+        us.matmul_nt(&v)
+    }
+
+    // ------------------------------------------------------------------
+    // Accessors
+    // ------------------------------------------------------------------
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat row-major data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy column `c` out.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Elementwise / structural ops
+    // ------------------------------------------------------------------
+
+    /// Transpose (allocates).
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Matrix) -> Result<Matrix> {
+        self.check_same_shape("add", other)?;
+        let mut out = self.clone();
+        for (o, x) in out.data.iter_mut().zip(&other.data) {
+            *o += x;
+        }
+        Ok(out)
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Result<Matrix> {
+        self.check_same_shape("sub", other)?;
+        let mut out = self.clone();
+        for (o, x) in out.data.iter_mut().zip(&other.data) {
+            *o -= x;
+        }
+        Ok(out)
+    }
+
+    /// In-place `self += alpha * other` (axpy).
+    pub fn axpy_in_place(&mut self, alpha: f32, other: &Matrix) -> Result<()> {
+        self.check_same_shape("axpy", other)?;
+        for (o, x) in self.data.iter_mut().zip(&other.data) {
+            *o += alpha * x;
+        }
+        Ok(())
+    }
+
+    /// In-place scalar multiply.
+    pub fn scale_in_place(&mut self, alpha: f32) {
+        for v in self.data.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Scale each column `c` by `s[c]` (i.e. `self * diag(s)`), in place.
+    pub fn scale_cols_in_place(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.cols, "scale_cols length");
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (v, &sc) in row.iter_mut().zip(s) {
+                *v *= sc;
+            }
+        }
+    }
+
+    /// Scale each row `r` by `s[r]` (i.e. `diag(s) * self`), in place.
+    pub fn scale_rows_in_place(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.rows, "scale_rows length");
+        for r in 0..self.rows {
+            let sc = s[r];
+            for v in &mut self.data[r * self.cols..(r + 1) * self.cols] {
+                *v *= sc;
+            }
+        }
+    }
+
+    /// Copy a sub-block `[r0..r0+h, c0..c0+w]`.
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        let mut out = Matrix::zeros(h, w);
+        for r in 0..h {
+            let src = &self.data[(r0 + r) * self.cols + c0..(r0 + r) * self.cols + c0 + w];
+            out.row_mut(r).copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Keep only the first `k` columns.
+    pub fn take_cols(&self, k: usize) -> Matrix {
+        self.block(0, 0, self.rows, k.min(self.cols))
+    }
+
+    /// Keep only the first `k` rows.
+    pub fn take_rows(&self, k: usize) -> Matrix {
+        self.block(0, 0, k.min(self.rows), self.cols)
+    }
+
+    // ------------------------------------------------------------------
+    // Products (thin wrappers over `gemm`)
+    // ------------------------------------------------------------------
+
+    /// `self · other` using the fastest available dense kernel.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        crate::linalg::gemm::gemm_blocked(self, other)
+            .expect("matmul: inner dimensions must agree")
+    }
+
+    /// `self · otherᵀ` without materializing the transpose.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt inner dim");
+        let m = self.rows;
+        let n = other.rows;
+        let k = self.cols;
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let out_row = out.row_mut(i);
+            for (j, o) in out_row.iter_mut().enumerate().take(n) {
+                let b_row = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += a_row[t] * b_row[t];
+                }
+                *o = acc;
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · other` without materializing the transpose.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn inner dim");
+        let m = self.cols;
+        let n = other.cols;
+        let k = self.rows;
+        let mut out = Matrix::zeros(m, n);
+        for t in 0..k {
+            let a_row = self.row(t);
+            let b_row = other.row(t);
+            for i in 0..m {
+                let a = a_row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "matvec dim");
+        (0..self.rows)
+            .map(|r| {
+                self.row(r)
+                    .iter()
+                    .zip(x)
+                    .map(|(a, b)| a * b)
+                    .sum::<f32>()
+            })
+            .collect()
+    }
+
+    /// `selfᵀ x` without materializing the transpose.
+    pub fn matvec_t(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "matvec_t dim");
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(r)) {
+                *o += xr * a;
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Norms / comparisons
+    // ------------------------------------------------------------------
+
+    /// Squared Frobenius norm.
+    pub fn sq_frobenius_norm(&self) -> f32 {
+        // Accumulate in f64: the N=2048 benches overflow f32 granularity.
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() as f32
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius_norm(&self) -> f32 {
+        self.sq_frobenius_norm().sqrt()
+    }
+
+    /// `‖self − other‖_F / ‖other‖_F` — the relative-error metric used in
+    /// the paper's §5.4.
+    pub fn rel_frobenius_distance(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape(), "rel_frobenius_distance shape");
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            let d = (*a - *b) as f64;
+            num += d * d;
+            den += (*b as f64) * (*b as f64);
+        }
+        if den == 0.0 {
+            return if num == 0.0 { 0.0 } else { f32::INFINITY };
+        }
+        (num / den).sqrt() as f32
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// True if every entry is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    fn check_same_shape(&self, op: &'static str, other: &Matrix) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::ShapeMismatch {
+                op,
+                lhs: self.shape(),
+                rhs: other.shape(),
+            });
+        }
+        Ok(())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg64 {
+        Pcg64::seeded(1234)
+    }
+
+    #[test]
+    fn zeros_and_eye() {
+        let z = Matrix::zeros(3, 4);
+        assert_eq!(z.shape(), (3, 4));
+        assert!(z.data().iter().all(|&v| v == 0.0));
+        let i = Matrix::eye(3);
+        assert_eq!(i[(0, 0)], 1.0);
+        assert_eq!(i[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 4]).is_ok());
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Matrix::gaussian(17, 33, &mut rng());
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn transpose_entries() {
+        let m = Matrix::from_fn(3, 2, |r, c| (r * 10 + c) as f32);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (2, 3));
+        assert_eq!(t[(1, 2)], m[(2, 1)]);
+    }
+
+    #[test]
+    fn add_sub_axpy() {
+        let mut r = rng();
+        let a = Matrix::gaussian(5, 7, &mut r);
+        let b = Matrix::gaussian(5, 7, &mut r);
+        let s = a.add(&b).unwrap().sub(&b).unwrap();
+        assert!(s.rel_frobenius_distance(&a) < 1e-6);
+        let mut c = a.clone();
+        c.axpy_in_place(2.0, &b).unwrap();
+        let expect = a.add(&b).unwrap().add(&b).unwrap();
+        assert!(c.rel_frobenius_distance(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(3, 2);
+        assert!(a.add(&b).is_err());
+        assert!(a.sub(&b).is_err());
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut r = rng();
+        let a = Matrix::gaussian(8, 6, &mut r);
+        let b = Matrix::gaussian(9, 6, &mut r);
+        let fast = a.matmul_nt(&b);
+        let slow = a.matmul(&b.transpose());
+        assert!(fast.rel_frobenius_distance(&slow) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut r = rng();
+        let a = Matrix::gaussian(6, 8, &mut r);
+        let b = Matrix::gaussian(6, 9, &mut r);
+        let fast = a.matmul_tn(&b);
+        let slow = a.transpose().matmul(&b);
+        assert!(fast.rel_frobenius_distance(&slow) < 1e-5);
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let mut r = rng();
+        let a = Matrix::gaussian(5, 4, &mut r);
+        let x: Vec<f32> = (0..4).map(|i| i as f32 + 1.0).collect();
+        let y = a.matvec(&x);
+        let xm = Matrix::from_vec(4, 1, x.clone()).unwrap();
+        let ym = a.matmul(&xm);
+        for i in 0..5 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-5);
+        }
+        // matvec_t
+        let z = a.matvec_t(&y);
+        let zm = a.transpose().matvec(&y);
+        for i in 0..4 {
+            assert!((z[i] - zm[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn low_rank_has_given_rank() {
+        let mut r = rng();
+        let m = Matrix::low_rank(32, 24, 4, &mut r);
+        let svd = crate::linalg::svd::jacobi_svd(&m).unwrap();
+        // singular values beyond index 3 should be ~0
+        assert!(svd.s[3] > 1e-3);
+        assert!(svd.s[4] < 1e-3 * svd.s[0]);
+    }
+
+    #[test]
+    fn with_spectrum_matches_requested_singular_values() {
+        let mut r = rng();
+        let sv = [8.0, 4.0, 2.0, 1.0];
+        let m = Matrix::with_spectrum(20, 16, &sv, &mut r);
+        let svd = crate::linalg::svd::jacobi_svd(&m).unwrap();
+        for (i, &want) in sv.iter().enumerate() {
+            assert!(
+                (svd.s[i] - want).abs() / want < 1e-3,
+                "sv[{i}] = {} want {want}",
+                svd.s[i]
+            );
+        }
+    }
+
+    #[test]
+    fn block_and_take() {
+        let m = Matrix::from_fn(6, 6, |r, c| (r * 6 + c) as f32);
+        let b = m.block(1, 2, 2, 3);
+        assert_eq!(b.shape(), (2, 3));
+        assert_eq!(b[(0, 0)], m[(1, 2)]);
+        assert_eq!(b[(1, 2)], m[(2, 4)]);
+        assert_eq!(m.take_cols(2).shape(), (6, 2));
+        assert_eq!(m.take_rows(2).shape(), (2, 6));
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let mut m = Matrix::from_fn(2, 3, |_, _| 1.0);
+        m.scale_cols_in_place(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        m.scale_rows_in_place(&[1.0, 10.0]);
+        assert_eq!(m.row(1), &[10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let m = Matrix::from_vec(1, 2, vec![3.0, 4.0]).unwrap();
+        assert!((m.frobenius_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(m.max_abs(), 4.0);
+        assert!(m.all_finite());
+    }
+
+    #[test]
+    fn rel_distance_zero_for_equal() {
+        let m = Matrix::gaussian(4, 4, &mut rng());
+        assert_eq!(m.rel_frobenius_distance(&m), 0.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! Dense linear-algebra substrate.
+//!
+//! This module is the reproduction's stand-in for cuBLAS/LAPACK: a
+//! from-scratch, dependency-free dense matrix library providing everything
+//! the paper's pipeline needs —
+//!
+//! - [`Matrix`]: row-major `f32` dense matrices with structured generators
+//!   (the paper's experiments are on synthetic matrices with controlled
+//!   spectra),
+//! - [`gemm`]: naive, blocked and register-blocked GEMM (the "cuBLAS"
+//!   comparator and the CPU hot path for shapes not covered by AOT
+//!   artifacts),
+//! - [`qr`]: Householder QR (used by randomized SVD's orthonormalization),
+//! - [`svd`]: one-sided Jacobi SVD (the exact truncated-SVD reference),
+//! - [`rsvd`]: Halko–Martinsson–Tropp randomized SVD with power iterations,
+//! - [`lanczos`]: Golub–Kahan–Lanczos bidiagonalization for truncated SVD,
+//! - [`rng`]: a PCG-family PRNG (no `rand` crate offline).
+
+pub mod gemm;
+pub mod lanczos;
+pub mod matrix;
+pub mod norms;
+pub mod qr;
+pub mod rng;
+pub mod rsvd;
+pub mod svd;
+
+pub use gemm::{gemm_blocked, gemm_flops, gemm_naive, GemmAlgo};
+pub use lanczos::lanczos_svd;
+pub use matrix::Matrix;
+pub use qr::{qr_thin, QrFactors};
+pub use rng::Pcg64;
+pub use rsvd::{rsvd, RsvdOptions};
+pub use svd::{jacobi_svd, Svd};

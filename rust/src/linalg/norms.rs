@@ -1,0 +1,117 @@
+//! Vector and matrix norm helpers shared across the decomposition routines.
+
+use crate::linalg::matrix::Matrix;
+
+/// Euclidean norm of a vector, accumulated in f64 for stability.
+pub fn norm2(x: &[f32]) -> f32 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Dot product, accumulated in f64.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>() as f32
+}
+
+/// Normalize a vector in place; returns the original norm. Vectors with
+/// norm below `eps` are zeroed (caller decides how to handle breakdown).
+pub fn normalize(x: &mut [f32], eps: f32) -> f32 {
+    let n = norm2(x);
+    if n > eps {
+        let inv = 1.0 / n;
+        for v in x.iter_mut() {
+            *v *= inv;
+        }
+    } else {
+        for v in x.iter_mut() {
+            *v = 0.0;
+        }
+    }
+    n
+}
+
+/// Spectral-norm estimate via power iteration on `AᵀA` (used by error
+/// reporting; exact SVD is overkill there).
+pub fn spectral_norm_est(a: &Matrix, iters: usize, seed: u64) -> f32 {
+    let mut rng = crate::linalg::rng::Pcg64::seeded(seed);
+    let mut v: Vec<f32> = (0..a.cols()).map(|_| rng.gaussian()).collect();
+    normalize(&mut v, 1e-30);
+    let mut sigma = 0.0f32;
+    for _ in 0..iters.max(1) {
+        let u = a.matvec(&v);
+        let mut w = a.matvec_t(&u);
+        sigma = normalize(&mut w, 1e-30).sqrt();
+        v = w;
+        if sigma == 0.0 {
+            break;
+        }
+    }
+    sigma
+}
+
+/// Column-orthonormality defect `‖QᵀQ − I‖_F` — a property checked by the
+/// QR/rSVD tests and the integration suite.
+pub fn orthonormality_defect(q: &Matrix) -> f32 {
+    let gram = q.matmul_tn(q);
+    let k = gram.rows();
+    let mut acc = 0.0f64;
+    for i in 0..k {
+        for j in 0..k {
+            let want = if i == j { 1.0 } else { 0.0 };
+            let d = (gram[(i, j)] - want) as f64;
+            acc += d * d;
+        }
+    }
+    acc.sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn norm2_known() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert_eq!(norm2(&[]), 0.0);
+    }
+
+    #[test]
+    fn dot_known() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn normalize_unit() {
+        let mut v = vec![1.0, 2.0, 2.0];
+        let n = normalize(&mut v, 1e-12);
+        assert!((n - 3.0).abs() < 1e-6);
+        assert!((norm2(&v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_zero_vector() {
+        let mut v = vec![0.0, 0.0];
+        let n = normalize(&mut v, 1e-12);
+        assert_eq!(n, 0.0);
+        assert_eq!(v, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut m = Matrix::zeros(4, 4);
+        m[(0, 0)] = 7.0;
+        m[(1, 1)] = 3.0;
+        m[(2, 2)] = 1.0;
+        let est = spectral_norm_est(&m, 50, 42);
+        assert!((est - 7.0).abs() < 1e-2, "est {est}");
+    }
+
+    #[test]
+    fn orthonormality_defect_of_identity_block() {
+        let mut rng = Pcg64::seeded(2);
+        let g = Matrix::gaussian(30, 5, &mut rng);
+        let q = crate::linalg::qr::qr_thin(&g).q;
+        assert!(orthonormality_defect(&q) < 1e-4);
+    }
+}

@@ -1,0 +1,191 @@
+//! Thin (economy) QR factorization via Householder reflections.
+//!
+//! `A (m×n, m ≥ n)  =  Q (m×n, orthonormal columns) · R (n×n, upper
+//! triangular)`. This is the orthonormalization primitive inside the
+//! randomized SVD range finder and the Lanczos reorthogonalization — the
+//! reproduction's equivalent of LAPACK `geqrf`/`orgqr`.
+
+use crate::linalg::matrix::Matrix;
+
+/// Result of a thin QR factorization.
+pub struct QrFactors {
+    /// m×n with orthonormal columns.
+    pub q: Matrix,
+    /// n×n upper triangular.
+    pub r: Matrix,
+}
+
+/// Thin QR of `a` (requires `rows ≥ cols`; callers shrink first otherwise).
+///
+/// Implementation: in-place Householder on a working copy, then explicit
+/// back-accumulation of Q applied to the first n columns of the identity.
+pub fn qr_thin(a: &Matrix) -> QrFactors {
+    let (m, n) = a.shape();
+    assert!(m >= n, "qr_thin requires rows >= cols (got {m}x{n})");
+    let mut work = a.clone();
+    // Householder vectors are stored below the diagonal of `work`; betas here.
+    let mut betas = vec![0.0f32; n];
+
+    for j in 0..n {
+        // Build the Householder vector for column j from work[j.., j].
+        let mut sigma = 0.0f64;
+        for i in j..m {
+            let v = work[(i, j)] as f64;
+            sigma += v * v;
+        }
+        let norm = sigma.sqrt() as f32;
+        let x0 = work[(j, j)];
+        if norm == 0.0 {
+            betas[j] = 0.0;
+            continue;
+        }
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        // v = x - alpha * e1, normalized so v[0] = 1.
+        let v0 = x0 - alpha;
+        betas[j] = if v0 == 0.0 { 0.0 } else { -v0 / alpha };
+        if v0 != 0.0 {
+            let inv = 1.0 / v0;
+            for i in (j + 1)..m {
+                work[(i, j)] *= inv;
+            }
+        }
+        work[(j, j)] = alpha;
+
+        // Apply H = I - beta v vᵀ to the trailing columns.
+        if betas[j] != 0.0 {
+            for c in (j + 1)..n {
+                // w = vᵀ * work[:, c]
+                let mut w = work[(j, c)] as f64;
+                for i in (j + 1)..m {
+                    w += work[(i, j)] as f64 * work[(i, c)] as f64;
+                }
+                let bw = betas[j] as f64 * w;
+                work[(j, c)] -= bw as f32;
+                for i in (j + 1)..m {
+                    let vij = work[(i, j)];
+                    work[(i, c)] -= (bw * vij as f64) as f32;
+                }
+            }
+        }
+    }
+
+    // Extract R.
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r[(i, j)] = work[(i, j)];
+        }
+    }
+
+    // Accumulate Q = H_0 H_1 … H_{n-1} applied to I(:, 0..n), by applying
+    // reflections in reverse order.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        let beta = betas[j];
+        if beta == 0.0 {
+            continue;
+        }
+        for c in 0..n {
+            let mut w = q[(j, c)] as f64;
+            for i in (j + 1)..m {
+                w += work[(i, j)] as f64 * q[(i, c)] as f64;
+            }
+            let bw = beta as f64 * w;
+            q[(j, c)] -= bw as f32;
+            for i in (j + 1)..m {
+                let vij = work[(i, j)];
+                q[(i, c)] -= (bw * vij as f64) as f32;
+            }
+        }
+    }
+
+    QrFactors { q, r }
+}
+
+/// Orthonormalize the columns of `a` (returns only Q). Handles the
+/// rows < cols case by truncating to the first `rows` columns.
+pub fn orthonormalize(a: &Matrix) -> Matrix {
+    if a.rows() >= a.cols() {
+        qr_thin(a).q
+    } else {
+        qr_thin(&a.take_cols(a.rows())).q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::orthonormality_defect;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Pcg64::seeded(21);
+        for (m, n) in [(8, 8), (20, 5), (50, 50), (33, 17)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let QrFactors { q, r } = qr_thin(&a);
+            let qr = q.matmul(&r);
+            assert!(
+                qr.rel_frobenius_distance(&a) < 1e-4,
+                "reconstruction failed at {m}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Pcg64::seeded(22);
+        for (m, n) in [(10, 10), (40, 7), (64, 32)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let q = qr_thin(&a).q;
+            assert!(
+                orthonormality_defect(&q) < 1e-4,
+                "Q not orthonormal at {m}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::seeded(23);
+        let a = Matrix::gaussian(12, 6, &mut rng);
+        let r = qr_thin(&a).r;
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency() {
+        let mut rng = Pcg64::seeded(24);
+        // rank-2 matrix, 10x4
+        let a = Matrix::low_rank(10, 4, 2, &mut rng);
+        let QrFactors { q, r } = qr_thin(&a);
+        let qr = q.matmul(&r);
+        assert!(qr.rel_frobenius_distance(&a) < 1e-4);
+        assert!(q.all_finite());
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Matrix::zeros(5, 3);
+        let QrFactors { q, r } = qr_thin(&a);
+        assert!(q.all_finite());
+        assert!(r.all_finite());
+        assert!(q.matmul(&r).frobenius_norm() < 1e-6);
+    }
+
+    #[test]
+    fn orthonormalize_wide_truncates() {
+        let mut rng = Pcg64::seeded(25);
+        let a = Matrix::gaussian(4, 9, &mut rng);
+        let q = orthonormalize(&a);
+        assert_eq!(q.shape(), (4, 4));
+        assert!(orthonormality_defect(&q) < 1e-4);
+    }
+}

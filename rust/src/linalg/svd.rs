@@ -1,0 +1,279 @@
+//! Exact SVD via the one-sided Jacobi method.
+//!
+//! `A (m×n) = U (m×k) · diag(s) (k) · Vᵀ (k×n)`, `k = min(m, n)`, singular
+//! values in non-increasing order. One-sided Jacobi is chosen over
+//! Golub–Kahan because it is simple, numerically robust (it computes small
+//! singular values to high relative accuracy) and needs no bidiagonal QR
+//! machinery. It is O(mn²) per sweep — fine as the *exact* reference the
+//! paper's "SVD" decomposition option maps to; the fast path at scale is
+//! [`crate::linalg::rsvd`].
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+
+/// Singular value decomposition result (thin form).
+pub struct Svd {
+    /// m×k left singular vectors (orthonormal columns).
+    pub u: Matrix,
+    /// k singular values, non-increasing.
+    pub s: Vec<f32>,
+    /// k×n — this is Vᵀ, not V.
+    pub vt: Matrix,
+}
+
+impl Svd {
+    /// Reconstruct `U diag(s) Vᵀ` (testing / error analysis).
+    pub fn reconstruct(&self) -> Matrix {
+        let mut us = self.u.clone();
+        us.scale_cols_in_place(&self.s);
+        us.matmul(&self.vt)
+    }
+
+    /// Truncate to the leading `r` components.
+    pub fn truncate(&self, r: usize) -> Svd {
+        let r = r.min(self.s.len());
+        Svd {
+            u: self.u.take_cols(r),
+            s: self.s[..r].to_vec(),
+            vt: self.vt.take_rows(r),
+        }
+    }
+}
+
+/// Maximum Jacobi sweeps before declaring non-convergence.
+const MAX_SWEEPS: usize = 60;
+
+/// One-sided Jacobi SVD.
+///
+/// Works on `G = A` (m ≥ n) or `G = Aᵀ` (m < n, result transposed back).
+/// Repeatedly applies Givens rotations on column pairs of `G` until all
+/// pairs are numerically orthogonal; then `‖g_j‖ = σ_j`, `g_j/σ_j = u_j`,
+/// and the accumulated rotations form `V`.
+pub fn jacobi_svd(a: &Matrix) -> Result<Svd> {
+    let (m, n) = a.shape();
+    if m < n {
+        // Decompose Aᵀ = U Σ Vᵀ  ⇒  A = V Σ Uᵀ.
+        let t = jacobi_svd(&a.transpose())?;
+        return Ok(Svd {
+            u: t.vt.transpose(),
+            s: t.s,
+            vt: t.u.transpose(),
+        });
+    }
+
+    let mut g = a.clone(); // m×n, columns will converge to σ_j u_j
+    let mut v = Matrix::eye(n);
+    let eps = 1e-7_f64;
+
+    // Frobenius scale for the convergence threshold.
+    let scale = (a.sq_frobenius_norm() as f64 / (n.max(1) as f64)).sqrt() + 1e-30;
+    let tol = eps * scale * scale;
+
+    let mut converged = false;
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Compute the 2x2 Gram block for columns p, q.
+                let mut app = 0.0f64;
+                let mut aqq = 0.0f64;
+                let mut apq = 0.0f64;
+                for i in 0..m {
+                    let gp = g[(i, p)] as f64;
+                    let gq = g[(i, q)] as f64;
+                    app += gp * gp;
+                    aqq += gq * gq;
+                    apq += gp * gq;
+                }
+                off = off.max(apq.abs());
+                if apq.abs() <= tol || apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation that annihilates apq.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let gp = g[(i, p)];
+                    let gq = g[(i, q)];
+                    g[(i, p)] = cf * gp - sf * gq;
+                    g[(i, q)] = sf * gp + cf * gq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = cf * vp - sf * vq;
+                    v[(i, q)] = sf * vp + cf * vq;
+                }
+            }
+        }
+        if off <= tol {
+            converged = true;
+            break;
+        }
+    }
+    if !converged {
+        // One-sided Jacobi degrades gracefully; treat near-convergence as ok
+        // unless the residual is egregious.
+        let mut worst = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut apq = 0.0f64;
+                for i in 0..m {
+                    apq += g[(i, p)] as f64 * g[(i, q)] as f64;
+                }
+                worst = worst.max(apq.abs());
+            }
+        }
+        if worst > 1e-3 * scale * scale {
+            return Err(Error::NoConvergence {
+                what: "jacobi_svd",
+                iters: MAX_SWEEPS,
+            });
+        }
+    }
+
+    // Extract singular values and U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigmas = vec![0.0f32; n];
+    for (j, s) in sigmas.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for i in 0..m {
+            let gij = g[(i, j)] as f64;
+            acc += gij * gij;
+        }
+        *s = acc.sqrt() as f32;
+    }
+    order.sort_by(|&a, &b| sigmas[b].partial_cmp(&sigmas[a]).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut s_sorted = vec![0.0f32; n];
+    let mut vt = Matrix::zeros(n, n);
+    for (dst, &src) in order.iter().enumerate() {
+        let sv = sigmas[src];
+        s_sorted[dst] = sv;
+        if sv > 1e-30 {
+            let inv = 1.0 / sv;
+            for i in 0..m {
+                u[(i, dst)] = g[(i, src)] * inv;
+            }
+        }
+        for i in 0..n {
+            vt[(dst, i)] = v[(i, src)];
+        }
+    }
+
+    Ok(Svd {
+        u,
+        s: s_sorted,
+        vt,
+    })
+}
+
+/// Truncated exact SVD: the best rank-`r` approximation (Eckart–Young).
+pub fn truncated_svd(a: &Matrix, r: usize) -> Result<Svd> {
+    let k = a.rows().min(a.cols());
+    if r == 0 || r > k {
+        return Err(Error::InvalidRank {
+            requested: r,
+            max: k,
+        });
+    }
+    Ok(jacobi_svd(a)?.truncate(r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::orthonormality_defect;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn reconstructs_exactly() {
+        let mut rng = Pcg64::seeded(31);
+        for (m, n) in [(6, 6), (12, 5), (5, 12), (20, 20)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let svd = jacobi_svd(&a).unwrap();
+            assert!(
+                svd.reconstruct().rel_frobenius_distance(&a) < 1e-4,
+                "reconstruction failed at {m}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn factors_are_orthonormal() {
+        let mut rng = Pcg64::seeded(32);
+        let a = Matrix::gaussian(15, 9, &mut rng);
+        let svd = jacobi_svd(&a).unwrap();
+        assert!(orthonormality_defect(&svd.u) < 1e-4);
+        assert!(orthonormality_defect(&svd.vt.transpose()) < 1e-4);
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let mut rng = Pcg64::seeded(33);
+        let a = Matrix::gaussian(10, 14, &mut rng);
+        let svd = jacobi_svd(&a).unwrap();
+        for w in svd.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(svd.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Matrix::zeros(4, 4);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 9.0;
+        a[(2, 2)] = 1.0;
+        a[(3, 3)] = 5.0;
+        let svd = jacobi_svd(&a).unwrap();
+        let want = [9.0, 5.0, 3.0, 1.0];
+        for (got, want) in svd.s.iter().zip(want) {
+            assert!((got - want).abs() < 1e-4, "got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn eckart_young_optimality() {
+        // Truncated SVD must beat any other rank-r factorization we can
+        // easily construct (here: the first r columns/rows outer product).
+        let mut rng = Pcg64::seeded(34);
+        let sv = [10.0, 6.0, 3.0, 1.5, 0.8, 0.3];
+        let a = Matrix::with_spectrum(16, 12, &sv, &mut rng);
+        let r = 3;
+        let t = truncated_svd(&a, r).unwrap();
+        let err = t.reconstruct().sub(&a).unwrap().frobenius_norm();
+        // Theoretical optimum: sqrt(sum of squared discarded svs).
+        let opt = (1.5f32 * 1.5 + 0.8 * 0.8 + 0.3 * 0.3).sqrt();
+        assert!((err - opt).abs() / opt < 0.02, "err {err} vs opt {opt}");
+    }
+
+    #[test]
+    fn truncate_rank_bounds() {
+        let a = Matrix::eye(4);
+        assert!(truncated_svd(&a, 0).is_err());
+        assert!(truncated_svd(&a, 5).is_err());
+        assert!(truncated_svd(&a, 4).is_ok());
+    }
+
+    #[test]
+    fn zero_matrix_is_fine() {
+        let a = Matrix::zeros(6, 4);
+        let svd = jacobi_svd(&a).unwrap();
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        assert!(svd.reconstruct().frobenius_norm() < 1e-6);
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        let mut rng = Pcg64::seeded(35);
+        let a = Matrix::low_rank(10, 8, 1, &mut rng);
+        let svd = jacobi_svd(&a).unwrap();
+        assert!(svd.s[0] > 0.0);
+        assert!(svd.s[1] < 1e-4 * svd.s[0]);
+    }
+}

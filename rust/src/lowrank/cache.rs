@@ -1,0 +1,302 @@
+//! Offline-decomposition factor cache — paper §6.5.
+//!
+//! "For best performance, the low-rank factorization of matrices is
+//! ideally computed in advance." In the serving system this is an LRU
+//! cache keyed by a caller-supplied matrix identity (weights are stable
+//! across requests; activations are not and take the dense path). The
+//! cache is byte-budgeted, not entry-budgeted, because factor size varies
+//! with rank: evictions free the least-recently-used factors until the new
+//! entry fits.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::lowrank::factor::LowRankFactor;
+
+/// Stable identity for a cached matrix (e.g. a weight tensor id).
+pub type MatrixId = u64;
+
+/// Hit/miss counters (snapshot via [`FactorCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found a live factor.
+    pub hits: u64,
+    /// Lookups that missed.
+    pub misses: u64,
+    /// Entries evicted to make room.
+    pub evictions: u64,
+    /// Current resident bytes.
+    pub resident_bytes: u64,
+    /// Current entry count.
+    pub entries: u64,
+}
+
+struct Entry {
+    factor: LowRankFactor,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<MatrixId, Entry>,
+    clock: u64,
+    resident: usize,
+    stats: CacheStats,
+}
+
+/// Thread-safe, byte-budgeted LRU cache of low-rank factors.
+pub struct FactorCache {
+    budget_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+impl FactorCache {
+    /// Create a cache with the given byte budget.
+    pub fn new(budget_bytes: usize) -> Self {
+        FactorCache {
+            budget_bytes,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+                resident: 0,
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    /// Look up a factor; clones on hit (factors are cheap to clone relative
+    /// to recomputation — the payload Vec is the bulk and must cross the
+    /// worker boundary anyway).
+    pub fn get(&self, id: MatrixId) -> Option<LowRankFactor> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        match g.map.get_mut(&id) {
+            Some(e) => {
+                e.last_used = clock;
+                let f = e.factor.clone();
+                g.stats.hits += 1;
+                Some(f)
+            }
+            None => {
+                g.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Presence probe that neither clones nor perturbs LRU order or
+    /// hit/miss stats (used by the router, which only *plans*).
+    pub fn contains(&self, id: MatrixId) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&id)
+    }
+
+    /// Insert (or replace) a factor, evicting LRU entries as needed.
+    /// Factors larger than the whole budget are rejected (returns false).
+    pub fn put(&self, id: MatrixId, factor: LowRankFactor) -> bool {
+        let bytes = factor.storage_bytes();
+        if bytes > self.budget_bytes {
+            return false;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        if let Some(old) = g.map.remove(&id) {
+            g.resident -= old.bytes;
+        }
+        while g.resident + bytes > self.budget_bytes {
+            // Evict the least recently used entry.
+            let victim = g
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k);
+            match victim {
+                Some(k) => {
+                    let e = g.map.remove(&k).unwrap();
+                    g.resident -= e.bytes;
+                    g.stats.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        g.resident += bytes;
+        g.map.insert(
+            id,
+            Entry {
+                factor,
+                bytes,
+                last_used: clock,
+            },
+        );
+        g.stats.resident_bytes = g.resident as u64;
+        g.stats.entries = g.map.len() as u64;
+        true
+    }
+
+    /// Fetch-or-compute: single-flight is unnecessary at our concurrency
+    /// level (workers share one CPU); duplicate computes are benign.
+    pub fn get_or_insert_with(
+        &self,
+        id: MatrixId,
+        make: impl FnOnce() -> crate::error::Result<LowRankFactor>,
+    ) -> crate::error::Result<LowRankFactor> {
+        if let Some(f) = self.get(id) {
+            return Ok(f);
+        }
+        let f = make()?;
+        self.put(id, f.clone());
+        Ok(f)
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.resident_bytes = g.resident as u64;
+        g.stats.entries = g.map.len() as u64;
+        g.stats
+    }
+
+    /// Drop everything (tests / reconfiguration).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.resident = 0;
+        g.stats.resident_bytes = 0;
+        g.stats.entries = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::StorageFormat;
+    use crate::linalg::matrix::Matrix;
+    use crate::linalg::rng::Pcg64;
+    use crate::lowrank::factor::{DecompMethod, LowRankConfig};
+    use crate::lowrank::gemm::factorize;
+    use crate::lowrank::rank::RankStrategy;
+
+    fn make_factor(seed: u64, n: usize, r: usize) -> LowRankFactor {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::low_rank(n, n, r, &mut rng);
+        factorize(
+            &a,
+            &LowRankConfig {
+                rank: RankStrategy::Fixed(r),
+                method: DecompMethod::RandomizedSvd,
+                storage: StorageFormat::F32,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn hit_after_put() {
+        let cache = FactorCache::new(1 << 20);
+        let f = make_factor(1, 16, 2);
+        assert!(cache.put(7, f));
+        assert!(cache.get(7).is_some());
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn miss_counts() {
+        let cache = FactorCache::new(1 << 20);
+        assert!(cache.get(42).is_none());
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let f = make_factor(2, 16, 2);
+        let bytes = f.storage_bytes();
+        // Budget for exactly 2 entries.
+        let cache = FactorCache::new(2 * bytes + bytes / 2);
+        cache.put(1, f.clone());
+        cache.put(2, f.clone());
+        cache.get(1); // make 2 the LRU
+        cache.put(3, f.clone());
+        assert!(cache.get(1).is_some(), "recently used survives");
+        assert!(cache.get(2).is_none(), "LRU evicted");
+        assert!(cache.get(3).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let f = make_factor(3, 64, 8);
+        let cache = FactorCache::new(f.storage_bytes() - 1);
+        assert!(!cache.put(1, f));
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn replace_same_id_updates_bytes() {
+        let small = make_factor(4, 16, 2);
+        let big = make_factor(5, 32, 4);
+        let cache = FactorCache::new(1 << 20);
+        cache.put(1, small.clone());
+        let before = cache.stats().resident_bytes;
+        cache.put(1, big.clone());
+        let after = cache.stats().resident_bytes;
+        assert_eq!(cache.stats().entries, 1);
+        assert!(after > before);
+    }
+
+    #[test]
+    fn get_or_insert_computes_once_per_miss() {
+        let cache = FactorCache::new(1 << 20);
+        let mut computed = 0;
+        for _ in 0..3 {
+            cache
+                .get_or_insert_with(9, || {
+                    computed += 1;
+                    Ok(make_factor(6, 16, 2))
+                })
+                .unwrap();
+        }
+        assert_eq!(computed, 1);
+        assert_eq!(cache.stats().hits, 2);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let cache = FactorCache::new(1 << 20);
+        cache.put(1, make_factor(7, 16, 2));
+        cache.clear();
+        assert_eq!(cache.stats().entries, 0);
+        assert_eq!(cache.stats().resident_bytes, 0);
+        assert!(cache.get(1).is_none());
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        use std::sync::Arc;
+        let cache = Arc::new(FactorCache::new(1 << 22));
+        let f = make_factor(8, 24, 3);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = Arc::clone(&cache);
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let id = (t * 50 + i) % 13;
+                    if i % 3 == 0 {
+                        c.put(id, f.clone());
+                    } else {
+                        c.get(id);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = cache.stats();
+        assert!(s.hits + s.misses > 0);
+    }
+}

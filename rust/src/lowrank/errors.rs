@@ -1,0 +1,126 @@
+//! Error bounds and measured-error helpers — paper §5.4.
+//!
+//! - Eckart–Young: the rank-r truncation error is exactly
+//!   `sqrt(Σ_{j>r} σ_j²)` in Frobenius norm — the *best possible* for any
+//!   rank-r factorization.
+//! - The paper's §5.4.4 quotes a heuristic `ε ≈ sqrt(n/r)`-shaped scaling
+//!   for well-conditioned matrices; [`predicted_rel_error`] implements it
+//!   so the benchmarks can plot paper-prediction vs measured side by side
+//!   (EXPERIMENTS.md records where the heuristic does and does not hold).
+
+use crate::linalg::matrix::Matrix;
+
+/// Exact Eckart–Young truncation error (absolute, Frobenius) for keeping
+/// `r` of the given singular values.
+pub fn eckart_young_error(sv: &[f32], r: usize) -> f32 {
+    sv.iter()
+        .skip(r)
+        .map(|&s| (s as f64) * (s as f64))
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+/// Relative version: tail energy over total energy, as a Frobenius ratio.
+pub fn eckart_young_rel_error(sv: &[f32], r: usize) -> f32 {
+    let total: f64 = sv.iter().map(|&s| (s as f64) * (s as f64)).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let tail: f64 = sv
+        .iter()
+        .skip(r)
+        .map(|&s| (s as f64) * (s as f64))
+        .sum();
+    (tail / total).sqrt() as f32
+}
+
+/// Fraction of spectral energy captured by the leading `r` values.
+pub fn energy_capture(sv: &[f32], r: usize) -> f32 {
+    let total: f64 = sv.iter().map(|&s| (s as f64) * (s as f64)).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let head: f64 = sv
+        .iter()
+        .take(r)
+        .map(|&s| (s as f64) * (s as f64))
+        .sum();
+    (head / total) as f32
+}
+
+/// The paper's §5.4.4 heuristic error model, `ε ≈ c · sqrt(n / r)` with the
+/// constant calibrated so that the paper's own operating point
+/// (N = 20480, r = 512 → ~1–2% error) is reproduced (c ≈ 0.0025).
+pub fn predicted_rel_error(n: usize, r: usize) -> f32 {
+    const C: f32 = 0.0025;
+    if r == 0 {
+        return 1.0;
+    }
+    C * ((n as f32) / (r as f32)).sqrt()
+}
+
+/// Measured relative Frobenius error between an approximation and the
+/// exact product (convenience wrapper used by benches and examples).
+pub fn measured_rel_error(approx: &Matrix, exact: &Matrix) -> f32 {
+    approx.rel_frobenius_distance(exact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+    use crate::linalg::svd::truncated_svd;
+
+    #[test]
+    fn eckart_young_known_values() {
+        let sv = [3.0, 2.0, 1.0];
+        assert!((eckart_young_error(&sv, 0) - (14.0f32).sqrt()).abs() < 1e-6);
+        assert!((eckart_young_error(&sv, 2) - 1.0).abs() < 1e-6);
+        assert_eq!(eckart_young_error(&sv, 3), 0.0);
+    }
+
+    #[test]
+    fn relative_error_and_energy_are_complementary() {
+        let sv = [4.0, 2.0, 1.0, 0.5];
+        for r in 0..=4 {
+            let e = eckart_young_rel_error(&sv, r);
+            let g = energy_capture(&sv, r);
+            assert!((e * e + g - 1.0).abs() < 1e-6, "r={r}");
+        }
+    }
+
+    #[test]
+    fn matches_measured_truncation_error() {
+        let mut rng = Pcg64::seeded(81);
+        let sv = [9.0, 4.0, 2.0, 1.0, 0.5, 0.25];
+        let a = Matrix::with_spectrum(24, 20, &sv, &mut rng);
+        let r = 3;
+        let t = truncated_svd(&a, r).unwrap();
+        let measured = t.reconstruct().sub(&a).unwrap().frobenius_norm();
+        let predicted = eckart_young_error(&sv, r);
+        assert!(
+            (measured - predicted).abs() / predicted < 0.02,
+            "measured {measured} predicted {predicted}"
+        );
+    }
+
+    #[test]
+    fn paper_heuristic_at_operating_point() {
+        // N=20480, r=512 → ≈ 1.6% — inside the paper's "1-2%" band.
+        let e = predicted_rel_error(20480, 512);
+        assert!((0.01..=0.02).contains(&e), "e = {e}");
+    }
+
+    #[test]
+    fn heuristic_monotonicity() {
+        assert!(predicted_rel_error(4096, 64) > predicted_rel_error(4096, 256));
+        assert!(predicted_rel_error(16384, 128) > predicted_rel_error(4096, 128));
+    }
+
+    #[test]
+    fn zero_spectrum_edge_cases() {
+        assert_eq!(eckart_young_rel_error(&[], 0), 0.0);
+        assert_eq!(energy_capture(&[], 3), 1.0);
+        assert_eq!(eckart_young_rel_error(&[0.0, 0.0], 1), 0.0);
+    }
+}

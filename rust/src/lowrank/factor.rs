@@ -1,0 +1,252 @@
+//! Factorized matrix representation and decomposition configuration.
+
+use crate::error::Result;
+use crate::fp8::{dequantize, quantize, QuantizedTensor, StorageFormat};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::rsvd::RsvdOptions;
+use crate::lowrank::rank::RankStrategy;
+
+/// Which decomposition algorithm produces the factors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecompMethod {
+    /// Exact truncated SVD (one-sided Jacobi) — highest quality, O(mn²).
+    ExactSvd,
+    /// Randomized SVD (Halko) — the paper's default for large matrices.
+    RandomizedSvd,
+    /// Golub–Kahan–Lanczos bidiagonalization.
+    Lanczos,
+}
+
+impl DecompMethod {
+    /// Parse a config-file name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "svd" | "exact" => DecompMethod::ExactSvd,
+            "rsvd" | "randomized" => DecompMethod::RandomizedSvd,
+            "lanczos" => DecompMethod::Lanczos,
+            _ => return None,
+        })
+    }
+
+    /// Human name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DecompMethod::ExactSvd => "svd",
+            DecompMethod::RandomizedSvd => "rsvd",
+            DecompMethod::Lanczos => "lanczos",
+        }
+    }
+}
+
+/// Full configuration for producing a [`LowRankFactor`].
+#[derive(Clone, Debug)]
+pub struct LowRankConfig {
+    /// How the rank is chosen (paper §3.2).
+    pub rank: RankStrategy,
+    /// Which decomposition runs (paper §3.1).
+    pub method: DecompMethod,
+    /// Storage precision of U and Vᵀ (paper §3.3: FP8 storage).
+    pub storage: StorageFormat,
+    /// Randomized-SVD tuning.
+    pub rsvd: RsvdOptions,
+}
+
+impl Default for LowRankConfig {
+    fn default() -> Self {
+        LowRankConfig {
+            rank: RankStrategy::EnergyFraction(0.99),
+            method: DecompMethod::RandomizedSvd,
+            storage: StorageFormat::F32,
+            rsvd: RsvdOptions::default(),
+        }
+    }
+}
+
+/// A matrix in factored form `A ≈ U · diag(s) · Vᵀ`, with U/Vᵀ optionally
+/// held in reduced precision. Singular values are always f32: they are
+/// `r` scalars, and keeping them exact is free and numerically important
+/// (the paper's "FP32 accumulation" discipline applied to the spectrum).
+#[derive(Clone, Debug)]
+pub struct LowRankFactor {
+    /// m×r left factor (quantized).
+    pub u: QuantizedTensor,
+    /// Singular values, length r.
+    pub s: Vec<f32>,
+    /// r×n right factor (quantized).
+    pub vt: QuantizedTensor,
+    /// Original shape of the dense matrix this approximates.
+    pub orig_shape: (usize, usize),
+    /// Decomposition that produced this factor.
+    pub method: DecompMethod,
+}
+
+impl LowRankFactor {
+    /// Build from dense SVD factors, quantizing to `storage`.
+    pub fn from_svd(
+        u: &Matrix,
+        s: Vec<f32>,
+        vt: &Matrix,
+        storage: StorageFormat,
+        orig_shape: (usize, usize),
+        method: DecompMethod,
+    ) -> Self {
+        LowRankFactor {
+            u: quantize(u, storage),
+            s,
+            vt: quantize(vt, storage),
+            orig_shape,
+            method,
+        }
+    }
+
+    /// Retained rank.
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+
+    /// Dense U (dequantized).
+    pub fn u_dense(&self) -> Matrix {
+        dequantize(&self.u)
+    }
+
+    /// Dense Vᵀ (dequantized).
+    pub fn vt_dense(&self) -> Matrix {
+        dequantize(&self.vt)
+    }
+
+    /// Reconstruct the dense approximation `U diag(s) Vᵀ`.
+    pub fn reconstruct(&self) -> Matrix {
+        let mut u = self.u_dense();
+        u.scale_cols_in_place(&self.s);
+        u.matmul(&self.vt_dense())
+    }
+
+    /// Bytes used by the factorized storage (paper §5.3 accounting):
+    /// `(m·r + r + r·n) × bytes_per_element`, with the spectrum charged at
+    /// f32 width.
+    pub fn storage_bytes(&self) -> usize {
+        let (m, n) = self.orig_shape;
+        let r = self.rank();
+        let be = self.u.format.bytes_per_element();
+        m * r * be + r * 4 + r * n * be
+    }
+
+    /// Bytes the dense matrix would use at the same storage precision.
+    pub fn dense_bytes(&self) -> usize {
+        let (m, n) = self.orig_shape;
+        m * n * self.u.format.bytes_per_element()
+    }
+
+    /// Memory saving ratio `1 − factored/dense` (the paper's "75%").
+    pub fn memory_saving(&self) -> f64 {
+        1.0 - self.storage_bytes() as f64 / self.dense_bytes() as f64
+    }
+
+    /// Measured relative Frobenius error against the original dense matrix.
+    pub fn measured_error(&self, original: &Matrix) -> f32 {
+        self.reconstruct().rel_frobenius_distance(original)
+    }
+
+    /// The rank-sized core against another factor (paper Eq. 1):
+    /// `core = diag(s_a) · (Vᵀ_a U_b) · diag(s_b)`, an `r_a × r_b` dense
+    /// matrix. This is the only place the contracted dimension k appears;
+    /// the backend ships it to the `lowrank_apply` artifact alongside
+    /// `U_a` and `Vᵀ_b`.
+    pub fn core_with(&self, other: &LowRankFactor) -> Result<Matrix> {
+        if self.orig_shape.1 != other.orig_shape.0 {
+            return Err(crate::error::Error::ShapeMismatch {
+                op: "lowrank core",
+                lhs: self.orig_shape,
+                rhs: other.orig_shape,
+            });
+        }
+        let vt_a = self.vt_dense();
+        let u_b = other.u_dense();
+        let mut core = vt_a.matmul(&u_b);
+        core.scale_rows_in_place(&self.s);
+        core.scale_cols_in_place(&other.s);
+        Ok(core)
+    }
+
+    /// Apply to a dense vector: `y = U (s ⊙ (Vᵀ x))` without reconstructing.
+    pub fn apply(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let vt = self.vt_dense();
+        let u = self.u_dense();
+        let mut core = vt.matvec(x);
+        for (c, &s) in core.iter_mut().zip(&self.s) {
+            *c *= s;
+        }
+        Ok(u.matvec(&core))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+    use crate::linalg::svd::truncated_svd;
+
+    fn factor_of(seed: u64, storage: StorageFormat) -> (Matrix, LowRankFactor) {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::low_rank_noisy(32, 24, 5, 1e-3, &mut rng);
+        let svd = truncated_svd(&a, 5).unwrap();
+        let f = LowRankFactor::from_svd(&svd.u, svd.s.clone(), &svd.vt, storage, a.shape(), DecompMethod::ExactSvd);
+        (a, f)
+    }
+
+    #[test]
+    fn reconstruct_close_to_original() {
+        let (a, f) = factor_of(61, StorageFormat::F32);
+        assert!(f.measured_error(&a) < 5e-3);
+    }
+
+    #[test]
+    fn fp8_storage_degrades_gracefully() {
+        let (a, f32f) = factor_of(62, StorageFormat::F32);
+        let (_, f8) = factor_of(62, StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3));
+        let e32 = f32f.measured_error(&a);
+        let e8 = f8.measured_error(&a);
+        assert!(e8 > e32);
+        assert!(e8 < 0.08, "fp8 factor err {e8}");
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let (_, f) = factor_of(63, StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3));
+        let (m, n) = (32usize, 24usize);
+        let r = 5usize;
+        assert_eq!(f.storage_bytes(), m * r + r * 4 + r * n);
+        assert_eq!(f.dense_bytes(), m * n);
+        assert!(f.memory_saving() > 0.0);
+    }
+
+    #[test]
+    fn paper_table2_memory_ratio() {
+        // Paper §5.3: N=20480, r=512 factorized FP8 ≈ 21 MB/matrix vs
+        // 419 MB dense FP8 → saving ≈ 95% per matrix; the "75%" headline
+        // comes from workspace overheads modeled in gpu_sim. Here we check
+        // the raw factor arithmetic the section states (~20.99 M elements).
+        let (m, n, r) = (20480usize, 20480usize, 512usize);
+        let elems = m * r + r + r * n;
+        assert_eq!(elems, 20_971_520 + 512);
+    }
+
+    #[test]
+    fn apply_matches_reconstruct_matvec() {
+        let (_, f) = factor_of(64, StorageFormat::F32);
+        let x: Vec<f32> = (0..24).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y1 = f.apply(&x).unwrap();
+        let y2 = f.reconstruct().matvec(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [DecompMethod::ExactSvd, DecompMethod::RandomizedSvd, DecompMethod::Lanczos] {
+            assert_eq!(DecompMethod::parse(m.name()), Some(m));
+        }
+        assert_eq!(DecompMethod::parse("qr"), None);
+    }
+}

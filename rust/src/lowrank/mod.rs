@@ -1,0 +1,25 @@
+//! The paper's core contribution: low-rank GEMM.
+//!
+//! `C = A·B ≈ U_A (Σ_A V_Aᵀ U_B) Σ_B V_Bᵀ` (paper Eq. 1), with
+//!
+//! - [`factor`]: the factorized representation ([`LowRankFactor`]) and its
+//!   memory accounting (the paper's 75%-savings claim),
+//! - [`gemm`]: the factor-chain multiplication, ordered so every
+//!   intermediate is rank-sized (`O((m+k+n)r²)` — paper §3.1),
+//! - [`rank`]: the four adaptive rank-selection strategies (§3.2),
+//! - [`errors`]: Eckart–Young bounds and measured-error helpers (§5.4),
+//! - [`cache`]: the offline-decomposition factor cache (§6.5's
+//!   "decomposition ideally computed in advance").
+
+pub mod cache;
+pub mod errors;
+pub mod factor;
+pub mod gemm;
+pub mod rank;
+
+pub use cache::FactorCache;
+pub use errors::{eckart_young_error, eckart_young_rel_error, energy_capture, measured_rel_error, predicted_rel_error};
+pub use factor::{DecompMethod, LowRankConfig, LowRankFactor};
+pub use gemm::{factorize, lowrank_matmul, lowrank_matmul_dense_lhs, lowrank_matmul_dense_rhs};
+pub use rank::{select_rank, RankStrategy};
+pub use cache::{CacheStats, MatrixId};

@@ -1,0 +1,206 @@
+//! Adaptive rank selection — paper §3.2.
+//!
+//! Four strategies, matching the paper's list verbatim:
+//!
+//! 1. **Fixed fraction**: `r = α · min(m, n)`, `α ∈ [0.01, 0.1]`.
+//! 2. **Energy-based**: smallest `r` with `Σ_{j≤r} σ_j² ≥ τ · ‖A‖_F²`.
+//! 3. **Error-constrained**: smallest `r` whose Eckart–Young tail error is
+//!    below a relative threshold.
+//! 4. **Hardware-aware**: the largest rank whose factor working set fits a
+//!    memory budget (and respects an alignment granule so the MXU/TensorCore
+//!    tiles stay full).
+
+use crate::gpu_sim::profile::DeviceProfile;
+
+/// Rank-selection strategy (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RankStrategy {
+    /// Explicit rank.
+    Fixed(usize),
+    /// `r = α · min(m, n)`.
+    FixedFraction(f32),
+    /// Retain the smallest rank capturing this fraction of spectral energy.
+    EnergyFraction(f32),
+    /// Smallest rank with relative Frobenius tail error ≤ this bound.
+    ErrorBound(f32),
+    /// Largest hardware-friendly rank whose factors fit the device budget.
+    HardwareAware {
+        /// Fraction of device memory the factors may use (e.g. 0.15).
+        memory_fraction: f32,
+        /// Round the rank down to a multiple of this (tile granule).
+        granule: usize,
+    },
+}
+
+impl RankStrategy {
+    /// Human name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RankStrategy::Fixed(_) => "fixed",
+            RankStrategy::FixedFraction(_) => "fixed_fraction",
+            RankStrategy::EnergyFraction(_) => "energy",
+            RankStrategy::ErrorBound(_) => "error_bound",
+            RankStrategy::HardwareAware { .. } => "hardware_aware",
+        }
+    }
+}
+
+/// Select a rank for an `m×n` matrix with (estimated or exact) singular
+/// values `sv` (non-increasing). `device` is consulted only by the
+/// hardware-aware strategy. Always returns `1 ≤ r ≤ min(m, n, sv.len())`
+/// (or `min(m,n)` when `sv` is empty and the strategy is spectrum-free).
+pub fn select_rank(
+    strategy: &RankStrategy,
+    m: usize,
+    n: usize,
+    sv: &[f32],
+    device: &DeviceProfile,
+) -> usize {
+    let kmax = m.min(n).max(1);
+    let clamp = |r: usize| r.clamp(1, kmax);
+    match *strategy {
+        RankStrategy::Fixed(r) => clamp(r),
+        RankStrategy::FixedFraction(alpha) => clamp((alpha * kmax as f32).round() as usize),
+        RankStrategy::EnergyFraction(tau) => {
+            let sv = &sv[..sv.len().min(kmax)];
+            if sv.is_empty() {
+                return 1;
+            }
+            let total: f64 = sv.iter().map(|&s| (s as f64) * (s as f64)).sum();
+            if total <= 0.0 {
+                return 1;
+            }
+            let mut acc = 0.0f64;
+            for (j, &s) in sv.iter().enumerate() {
+                acc += (s as f64) * (s as f64);
+                if acc / total >= tau as f64 {
+                    return clamp(j + 1);
+                }
+            }
+            clamp(sv.len())
+        }
+        RankStrategy::ErrorBound(eps) => {
+            // Tail error after r terms: sqrt(Σ_{j>r} σ²) / ‖A‖_F ≤ eps.
+            let sv = &sv[..sv.len().min(kmax)];
+            if sv.is_empty() {
+                return kmax; // no spectrum info: be safe
+            }
+            let total: f64 = sv.iter().map(|&s| (s as f64) * (s as f64)).sum();
+            if total <= 0.0 {
+                return 1;
+            }
+            let mut tail = total;
+            for (j, &s) in sv.iter().enumerate() {
+                tail -= (s as f64) * (s as f64);
+                if (tail.max(0.0) / total).sqrt() <= eps as f64 {
+                    return clamp(j + 1);
+                }
+            }
+            clamp(sv.len())
+        }
+        RankStrategy::HardwareAware {
+            memory_fraction,
+            granule,
+        } => {
+            // Factors for BOTH operands plus the rank-sized core:
+            // bytes ≈ (m + n) r + r² per matrix pair at 1 B/elt (FP8).
+            let budget = (device.memory_bytes as f64 * memory_fraction as f64).max(1.0);
+            // Solve (m + n) r + r² ≤ budget for r (quadratic formula).
+            let p = (m + n) as f64;
+            let r = ((-p + (p * p + 4.0 * budget).sqrt()) / 2.0).floor() as usize;
+            let g = granule.max(1);
+            let r = (r / g) * g;
+            clamp(r.max(g.min(kmax)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::profile::DeviceProfile;
+
+    fn dev() -> DeviceProfile {
+        DeviceProfile::rtx4090()
+    }
+
+    #[test]
+    fn fixed_clamped() {
+        assert_eq!(select_rank(&RankStrategy::Fixed(5), 10, 8, &[], &dev()), 5);
+        assert_eq!(select_rank(&RankStrategy::Fixed(0), 10, 8, &[], &dev()), 1);
+        assert_eq!(select_rank(&RankStrategy::Fixed(99), 10, 8, &[], &dev()), 8);
+    }
+
+    #[test]
+    fn fixed_fraction_paper_range() {
+        // Paper: α ∈ [0.01, 0.1]; at N=20480, α=0.025 → r=512.
+        let r = select_rank(&RankStrategy::FixedFraction(0.025), 20480, 20480, &[], &dev());
+        assert_eq!(r, 512);
+    }
+
+    #[test]
+    fn energy_fraction_on_known_spectrum() {
+        // sv² = [100, 25, 1, 0.01] → energy fractions 0.7936.., 0.992.., ...
+        let sv = [10.0, 5.0, 1.0, 0.1];
+        assert_eq!(
+            select_rank(&RankStrategy::EnergyFraction(0.79), 20, 20, &sv, &dev()),
+            1
+        );
+        assert_eq!(
+            select_rank(&RankStrategy::EnergyFraction(0.99), 20, 20, &sv, &dev()),
+            2
+        );
+        assert_eq!(
+            select_rank(&RankStrategy::EnergyFraction(0.9999), 20, 20, &sv, &dev()),
+            3
+        );
+    }
+
+    #[test]
+    fn energy_fraction_degenerate() {
+        assert_eq!(select_rank(&RankStrategy::EnergyFraction(0.99), 5, 5, &[], &dev()), 1);
+        assert_eq!(
+            select_rank(&RankStrategy::EnergyFraction(0.99), 5, 5, &[0.0, 0.0], &dev()),
+            1
+        );
+    }
+
+    #[test]
+    fn error_bound_monotone_in_eps() {
+        let sv: Vec<f32> = (0..32).map(|i| (0.8f32).powi(i)).collect();
+        let tight = select_rank(&RankStrategy::ErrorBound(0.001), 64, 64, &sv, &dev());
+        let loose = select_rank(&RankStrategy::ErrorBound(0.1), 64, 64, &sv, &dev());
+        assert!(tight > loose, "tight {tight} loose {loose}");
+    }
+
+    #[test]
+    fn error_bound_without_spectrum_is_safe() {
+        assert_eq!(select_rank(&RankStrategy::ErrorBound(0.01), 6, 9, &[], &dev()), 6);
+    }
+
+    #[test]
+    fn hardware_aware_fits_budget_and_granule() {
+        let d = dev();
+        let strat = RankStrategy::HardwareAware {
+            memory_fraction: 0.15,
+            granule: 16,
+        };
+        let (m, n) = (20480usize, 20480usize);
+        let r = select_rank(&strat, m, n, &[], &d);
+        assert_eq!(r % 16, 0);
+        let bytes = ((m + n) * r + r * r) as f64;
+        assert!(bytes <= d.memory_bytes as f64 * 0.15);
+        // And it should be generous at this scale (paper uses r=512).
+        assert!(r >= 512, "r = {r}");
+    }
+
+    #[test]
+    fn hardware_aware_small_matrix() {
+        let strat = RankStrategy::HardwareAware {
+            memory_fraction: 0.15,
+            granule: 16,
+        };
+        let r = select_rank(&strat, 8, 8, &[], &dev());
+        assert!((1..=8).contains(&r));
+    }
+}

@@ -1,0 +1,312 @@
+//! `lowrank-gemm` — leader binary for the Low-Rank GEMM serving system.
+//!
+//! Subcommands:
+//!
+//! - `serve`     start the GemmService and replay a synthetic request load
+//! - `gemm`      one GEMM through the full router (handy smoke test)
+//! - `factorize` offline decomposition of a synthetic matrix; prints
+//!               rank/error/memory accounting
+//! - `route`     show the AutoKernelSelector's decision table for a size
+//! - `info`      device profiles, artifact manifest, build info
+//!
+//! Run `lowrank-gemm help` for flags.
+
+use std::process::ExitCode;
+
+use lowrank_gemm::cli::{parse_args, CliArgs};
+use lowrank_gemm::config::AppConfig;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::error::Result;
+use lowrank_gemm::gpu_sim::DeviceProfile;
+use lowrank_gemm::kernels::{KernelKind, SelectorInputs};
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::lowrank::{factorize, LowRankConfig, RankStrategy};
+use lowrank_gemm::trace;
+
+fn main() -> ExitCode {
+    let args = match parse_args(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "gemm" => cmd_gemm(&args),
+        "factorize" => cmd_factorize(&args),
+        "route" => cmd_route(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`; try `lowrank-gemm help`");
+            return ExitCode::from(2);
+        }
+    };
+
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "lowrank-gemm — Low-Rank GEMM serving system (paper reproduction)
+
+USAGE: lowrank-gemm <command> [options]
+
+COMMANDS:
+  serve      --requests N --size N [--config F] [--workers W] [--no-xla]
+             start the service and replay a synthetic transformer trace
+  gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
+             run one GEMM end-to-end and report error/latency
+  factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
+             offline decomposition; prints error + memory accounting
+  route      --n N [--rank R] [--tolerance T] [--device D] [--cached]
+             print the selector's ranked decision table
+  info       [--artifacts DIR]
+             device profiles and the artifact manifest
+
+Config file (TOML subset) via --config; flags override."
+    );
+}
+
+fn load_config(args: &CliArgs) -> Result<AppConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => AppConfig::from_file(path)?,
+        None => AppConfig::default(),
+    };
+    if let Some(d) = args.get("device") {
+        cfg.device = d.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.to_string();
+    }
+    if args.has_flag("no-xla") {
+        cfg.use_xla = false;
+    }
+    cfg.service.workers = args.get_parse("workers", cfg.service.workers)?;
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &CliArgs) -> Result<()> {
+    let app = load_config(args)?;
+    let svc = GemmService::start(ServiceConfig::from_app(&app)?)?;
+    let requests: usize = args.get_parse("requests", 64)?;
+    let size: usize = args.get_parse("size", 128)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+    let mut rng = Pcg64::seeded(seed);
+
+    // Offline-decompose the "weights" of a toy transformer layer, then
+    // replay activations against them (the paper's intended deployment).
+    let shapes = trace::transformer_layer_trace(size, size, size * 4, 1);
+    println!("preloading {} weight factors …", shapes.len());
+    let mut weights = Vec::new();
+    for (i, shape) in shapes.iter().enumerate() {
+        let w = Matrix::low_rank_noisy(shape.k, shape.n, (shape.k / 8).max(2), 1e-4, &mut rng);
+        svc.preload_factor(i as u64 + 1, &w)?;
+        weights.push(w);
+    }
+
+    println!("replaying {requests} requests at batch-size-{size} activations …");
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let wi = i % weights.len();
+        let x = Matrix::gaussian(size, weights[wi].rows(), &mut rng);
+        let req = GemmRequest::new(x, weights[wi].clone()).with_ids(None, Some(wi as u64 + 1));
+        rxs.push(svc.submit(req)?);
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().map_err(|_| {
+            lowrank_gemm::error::Error::Service("response channel closed".into())
+        })?.is_ok()
+        {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed();
+
+    let stats = svc.stats();
+    println!(
+        "done: {ok}/{requests} ok in {:.3}s ({:.1} req/s)",
+        dt.as_secs_f64(),
+        requests as f64 / dt.as_secs_f64()
+    );
+    println!(
+        "cache: {} hits / {} misses / {} entries",
+        stats.cache.hits, stats.cache.misses, stats.cache.entries
+    );
+    println!("{}", svc.metrics().render());
+    Ok(())
+}
+
+fn cmd_gemm(args: &CliArgs) -> Result<()> {
+    let app = load_config(args)?;
+    let n: usize = args.get_parse("n", 256)?;
+    let seed: u64 = args.get_parse("seed", 1)?;
+    let mut cfg = ServiceConfig::from_app(&app)?;
+    if let Some(r) = args.get("rank") {
+        cfg.router.rank_strategy = RankStrategy::Fixed(r.parse().map_err(|_| {
+            lowrank_gemm::error::Error::Config(format!("--rank: bad value `{r}`"))
+        })?);
+    }
+    let svc = GemmService::start(cfg)?;
+
+    let mut rng = Pcg64::seeded(seed);
+    let a = Matrix::low_rank_noisy(n, n, (n / 16).max(2), 1e-4, &mut rng);
+    let b = Matrix::low_rank_noisy(n, n, (n / 16).max(2), 1e-4, &mut rng);
+    let mut req = GemmRequest::new(a.clone(), b.clone());
+    if let Some(k) = args.get("kernel") {
+        req = req.with_kernel(KernelKind::parse(k).ok_or_else(|| {
+            lowrank_gemm::error::Error::Config(format!("unknown kernel `{k}`"))
+        })?);
+    }
+    if let Some(t) = args.get("tolerance") {
+        req = req.with_tolerance(t.parse().map_err(|_| {
+            lowrank_gemm::error::Error::Config(format!("--tolerance: bad value `{t}`"))
+        })?);
+    }
+
+    let resp = svc.gemm_blocking(req)?;
+    let exact = a.matmul(&b);
+    println!(
+        "kernel={} backend={} rank={} exec={}us queue={}us",
+        resp.kernel.paper_name(),
+        resp.backend.name(),
+        resp.rank,
+        resp.exec_us,
+        resp.queue_us
+    );
+    println!(
+        "predicted rel err = {:.3e}, measured = {:.3e}",
+        resp.predicted_rel_error,
+        resp.c.rel_frobenius_distance(&exact)
+    );
+    Ok(())
+}
+
+fn cmd_factorize(args: &CliArgs) -> Result<()> {
+    let n: usize = args.get_parse("n", 512)?;
+    let rank: usize = args.get_parse("rank", n / 16)?;
+    let seed: u64 = args.get_parse("seed", 1)?;
+    let mut cfg = LowRankConfig {
+        rank: RankStrategy::Fixed(rank),
+        ..Default::default()
+    };
+    if let Some(m) = args.get("method") {
+        cfg.method = lowrank_gemm::lowrank::DecompMethod::parse(m).ok_or_else(|| {
+            lowrank_gemm::error::Error::Config(format!("unknown method `{m}`"))
+        })?;
+    }
+    if let Some(s) = args.get("storage") {
+        cfg.storage = lowrank_gemm::fp8::StorageFormat::parse(s).ok_or_else(|| {
+            lowrank_gemm::error::Error::Config(format!("unknown storage `{s}`"))
+        })?;
+    }
+
+    let mut rng = Pcg64::seeded(seed);
+    let a = Matrix::low_rank_noisy(n, n, rank, 1e-3, &mut rng);
+    let t0 = std::time::Instant::now();
+    let f = factorize(&a, &cfg)?;
+    let dt = t0.elapsed();
+    println!(
+        "factorized {n}x{n} with {} → rank {} in {:.1} ms",
+        cfg.method.name(),
+        f.rank(),
+        dt.as_secs_f64() * 1e3
+    );
+    println!(
+        "storage: {} KiB factored vs {} KiB dense ({:.1}% saving)",
+        f.storage_bytes() / 1024,
+        f.dense_bytes() / 1024,
+        100.0 * f.memory_saving()
+    );
+    println!("measured rel error = {:.3e}", f.measured_error(&a));
+    Ok(())
+}
+
+fn cmd_route(args: &CliArgs) -> Result<()> {
+    let n: usize = args.get_parse("n", 4096)?;
+    let rank: usize = args.get_parse("rank", (n / 16).max(1))?;
+    let tolerance: f32 = args.get_parse("tolerance", 0.05)?;
+    let device = args.get("device").unwrap_or("rtx4090");
+    let profile = DeviceProfile::by_name(device).ok_or_else(|| {
+        lowrank_gemm::error::Error::Config(format!("unknown device `{device}`"))
+    })?;
+    let selector = lowrank_gemm::kernels::AutoKernelSelector::new(profile);
+
+    let inp = SelectorInputs {
+        m: n,
+        k: n,
+        n,
+        error_tolerance: tolerance,
+        rank,
+        factors_cached: args.has_flag("cached"),
+        factored_output_ok: args.has_flag("factored-ok"),
+    };
+    println!(
+        "decision table for N={n}, r={rank}, tol={tolerance}, cached={}:",
+        inp.factors_cached
+    );
+    println!(
+        "{:<22} {:>12} {:>14} {:>12}",
+        "kernel", "pred time", "pred TFLOPS", "pred err"
+    );
+    for c in selector.ranked(&inp) {
+        println!(
+            "{:<22} {:>10.3} ms {:>14.1} {:>12.2e}",
+            c.kind.paper_name(),
+            c.cost.time_s * 1e3,
+            c.cost.flops / c.cost.time_s / 1e12,
+            c.predicted_error
+        );
+    }
+    let best = selector.select(&inp);
+    println!("selected: {}", best.kind.paper_name());
+    Ok(())
+}
+
+fn cmd_info(args: &CliArgs) -> Result<()> {
+    println!("device profiles:");
+    for name in ["rtx4090", "h200", "b200", "cpu"] {
+        let p = DeviceProfile::by_name(name).expect("built-in profile");
+        println!(
+            "  {:<8} {:>7.1} GB  {:>6.2} TB/s  fp8 {:>8.1} TFLOPS  f32 {:>7.1} TFLOPS",
+            p.name,
+            p.memory_bytes as f64 / 1e9,
+            p.bandwidth_bps / 1e12,
+            p.peak_flops(lowrank_gemm::gpu_sim::Precision::Fp8) / 1e12,
+            p.peak_flops(lowrank_gemm::gpu_sim::Precision::F32) / 1e12,
+        );
+    }
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    match lowrank_gemm::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!("\nartifacts in {dir} (oversample {}):", m.oversample);
+            for e in m.entries() {
+                println!(
+                    "  {:<30} op={:<18} n={:<5} r={:<3} {} in / {} out",
+                    e.name,
+                    e.op,
+                    e.n,
+                    e.rank,
+                    e.inputs.len(),
+                    e.outputs.len()
+                );
+            }
+        }
+        Err(e) => println!("\nno artifact manifest: {e}"),
+    }
+    Ok(())
+}

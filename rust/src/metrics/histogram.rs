@@ -1,0 +1,167 @@
+//! Log-bucketed histogram with percentile estimation.
+//!
+//! Buckets are powers of `2^(1/8)` spanning ~1 ns … ~10⁶ s when samples are
+//! seconds, giving ≤ 9% relative quantile error — plenty for latency
+//! reporting. Exact min/max/sum are tracked alongside.
+
+/// Growth factor per bucket: 2^(1/8).
+const BUCKET_FACTOR: f64 = 1.0905077326652577;
+/// Smallest representable sample.
+const MIN_SAMPLE: f64 = 1e-9;
+/// Number of buckets (covers up to ~3.5e6 × MIN_SAMPLE^-1).
+const NBUCKETS: usize = 512;
+
+/// A fixed-size log-bucketed histogram.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; NBUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        let v = v.max(MIN_SAMPLE);
+        let idx = (v / MIN_SAMPLE).ln() / BUCKET_FACTOR.ln();
+        (idx as usize).min(NBUCKETS - 1)
+    }
+
+    fn bucket_value(idx: usize) -> f64 {
+        MIN_SAMPLE * BUCKET_FACTOR.powi(idx as i32)
+    }
+
+    /// Record one sample (non-finite samples are dropped).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Sample count.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean of recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile estimate (`q` in [0, 1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // Clamp the bucket midpoint into the true observed range.
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Summary tuple used by the registry.
+    pub fn summary(&self) -> crate::metrics::HistogramSummary {
+        crate::metrics::HistogramSummary {
+            count: self.count,
+            mean: self.mean(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            max: if self.count == 0 { 0.0 } else { self.max },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for v in [1.0, 2.0, 3.0] {
+            h.record(v);
+        }
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // uniform on (0, 1]
+        }
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 0.5).abs() < 0.05, "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((p99 - 0.99).abs() / 0.99 < 0.10, "p99 {p99}");
+    }
+
+    #[test]
+    fn min_max_clamping() {
+        let mut h = Histogram::new();
+        h.record(5.0);
+        assert_eq!(h.quantile(0.0), 5.0);
+        assert_eq!(h.quantile(1.0), 5.0);
+    }
+
+    #[test]
+    fn ignores_non_finite() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn wide_dynamic_range() {
+        let mut h = Histogram::new();
+        h.record(1e-8);
+        h.record(1e3);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.1) < 1e-6);
+        assert!(h.quantile(0.99) > 100.0);
+    }
+}

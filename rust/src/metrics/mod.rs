@@ -1,0 +1,170 @@
+//! Metrics substrate: counters, latency histograms, timers.
+//!
+//! No external metrics crate offline, so this is a minimal but real
+//! implementation: lock-free counters, a log-bucketed histogram with
+//! p50/p90/p99 estimation, and a scoped timer. The coordinator exposes a
+//! [`MetricsRegistry`] snapshot through the CLI `stats` output and the
+//! serving example's final report.
+
+pub mod histogram;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+pub use histogram::Histogram;
+
+/// A named, thread-safe monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Registry of counters and histograms, keyed by name.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl MetricsRegistry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to the named counter (creating it at 0).
+    pub fn count(&self, name: &str, v: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += v;
+    }
+
+    /// Record a sample (e.g. seconds) into the named histogram.
+    pub fn observe(&self, name: &str, v: f64) {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(Histogram::new)
+            .record(v);
+    }
+
+    /// Time a closure into the named histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Snapshot counter values.
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.counters.lock().unwrap().clone()
+    }
+
+    /// Snapshot histogram summaries as `(count, mean, p50, p90, p99, max)`.
+    pub fn histogram_summaries(&self) -> BTreeMap<String, HistogramSummary> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), h.summary()))
+            .collect()
+    }
+
+    /// Render a human-readable report block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters() {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, s) in self.histogram_summaries() {
+            out.push_str(&format!(
+                "hist {k}: n={} mean={:.3e} p50={:.3e} p90={:.3e} p99={:.3e} max={:.3e}\n",
+                s.count, s.mean, s.p50, s.p90, s.p99, s.max
+            ));
+        }
+        out
+    }
+}
+
+/// Point-in-time histogram summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistogramSummary {
+    /// Sample count.
+    pub count: u64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Median estimate.
+    pub p50: f64,
+    /// 90th percentile estimate.
+    pub p90: f64,
+    /// 99th percentile estimate.
+    pub p99: f64,
+    /// Largest sample.
+    pub max: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_ops() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn registry_counts_and_observes() {
+        let r = MetricsRegistry::new();
+        r.count("req", 1);
+        r.count("req", 2);
+        r.observe("lat", 0.5);
+        r.observe("lat", 1.5);
+        assert_eq!(r.counters()["req"], 3);
+        let s = r.histogram_summaries()["lat"];
+        assert_eq!(s.count, 2);
+        assert!((s.mean - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_records() {
+        let r = MetricsRegistry::new();
+        let out = r.time("t", || 7);
+        assert_eq!(out, 7);
+        assert_eq!(r.histogram_summaries()["t"].count, 1);
+    }
+
+    #[test]
+    fn render_contains_names() {
+        let r = MetricsRegistry::new();
+        r.count("a", 1);
+        r.observe("b", 2.0);
+        let s = r.render();
+        assert!(s.contains("counter a = 1"));
+        assert!(s.contains("hist b"));
+    }
+}

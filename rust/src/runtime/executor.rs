@@ -1,0 +1,185 @@
+//! Thread-confined XLA execution service.
+//!
+//! `PjRtClient` is not `Send`, so the runtime lives on one dedicated
+//! thread; [`XlaExecutor`] is the cloneable, `Send` handle the coordinator
+//! workers use. Jobs are (artifact name, input tensors); responses come
+//! back over a per-job oneshot channel. On the single-core evaluation host
+//! this serialization costs nothing — PJRT execution is CPU-bound anyway.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::runtime::client::XlaRuntime;
+use crate::runtime::manifest::Manifest;
+
+enum Job {
+    Run {
+        name: String,
+        inputs: Vec<Matrix>,
+        respond: Sender<Result<Vec<Matrix>>>,
+    },
+    Warm {
+        name: String,
+        respond: Sender<Result<()>>,
+    },
+    Stats {
+        respond: Sender<u64>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the XLA executor thread.
+pub struct XlaExecutor {
+    tx: Sender<Job>,
+    /// Join handle, present only on the original (for clean shutdown).
+    join: Option<JoinHandle<()>>,
+    /// Manifest snapshot (parsed a second time on the caller side so the
+    /// router can consult shapes without a channel round-trip).
+    manifest: Manifest,
+}
+
+impl XlaExecutor {
+    /// Spawn the executor thread and load artifacts from `dir`.
+    ///
+    /// Fails fast (before returning) if the manifest is unreadable or the
+    /// PJRT client cannot start.
+    pub fn start(dir: impl AsRef<std::path::Path>) -> Result<XlaExecutor> {
+        let dir = dir.as_ref().to_path_buf();
+        // Parse the manifest on the caller side first: cheap, and gives
+        // the router its own copy.
+        let manifest = Manifest::load(&dir)?;
+
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("xla-executor".into())
+            .spawn(move || {
+                let mut rt = match XlaRuntime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                Self::serve(&mut rt, rx);
+            })
+            .map_err(|e| Error::Service(format!("spawning xla-executor: {e}")))?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Service("xla-executor died during startup".into()))??;
+
+        Ok(XlaExecutor {
+            tx,
+            join: Some(join),
+            manifest,
+        })
+    }
+
+    fn serve(rt: &mut XlaRuntime, rx: Receiver<Job>) {
+        while let Ok(job) = rx.recv() {
+            match job {
+                Job::Run {
+                    name,
+                    inputs,
+                    respond,
+                } => {
+                    let refs: Vec<&Matrix> = inputs.iter().collect();
+                    let _ = respond.send(rt.run(&name, &refs));
+                }
+                Job::Warm { name, respond } => {
+                    let _ = respond.send(rt.warm(&name));
+                }
+                Job::Stats { respond } => {
+                    let _ = respond.send(rt.compiles());
+                }
+                Job::Shutdown => break,
+            }
+        }
+    }
+
+    /// The artifact manifest (caller-side copy).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name`; blocks until the result is back.
+    pub fn run(&self, name: &str, inputs: Vec<Matrix>) -> Result<Vec<Matrix>> {
+        let (respond, rx) = channel();
+        self.tx
+            .send(Job::Run {
+                name: name.to_string(),
+                inputs,
+                respond,
+            })
+            .map_err(|_| Error::Service("xla-executor is gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Service("xla-executor dropped the response".into()))?
+    }
+
+    /// Pre-compile an artifact.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (respond, rx) = channel();
+        self.tx
+            .send(Job::Warm {
+                name: name.to_string(),
+                respond,
+            })
+            .map_err(|_| Error::Service("xla-executor is gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Service("xla-executor dropped the response".into()))?
+    }
+
+    /// Number of artifact compilations performed so far.
+    pub fn compile_count(&self) -> Result<u64> {
+        let (respond, rx) = channel();
+        self.tx
+            .send(Job::Stats { respond })
+            .map_err(|_| Error::Service("xla-executor is gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Service("xla-executor dropped the response".into()))
+    }
+
+    /// Cloneable sender-only handle for worker threads.
+    pub fn handle(&self) -> XlaHandle {
+        XlaHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for XlaExecutor {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Lightweight `Send + Clone` handle used inside worker threads.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: Sender<Job>,
+}
+
+impl XlaHandle {
+    /// Execute artifact `name`; blocks until the result is back.
+    pub fn run(&self, name: &str, inputs: Vec<Matrix>) -> Result<Vec<Matrix>> {
+        let (respond, rx) = channel();
+        self.tx
+            .send(Job::Run {
+                name: name.to_string(),
+                inputs,
+                respond,
+            })
+            .map_err(|_| Error::Service("xla-executor is gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Service("xla-executor dropped the response".into()))?
+    }
+}

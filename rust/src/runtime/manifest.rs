@@ -1,0 +1,270 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the contract between `compile/aot.py` (which writes it)
+//! and the serving runtime (which routes requests onto artifacts by op kind
+//! and shape). Shapes are static in HLO, so lookup is exact-match; anything
+//! off-lattice takes the CPU `linalg` fallback path in the executor.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::runtime::json::{parse_json, Json};
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Unique artifact name, e.g. `lowrank_apply_fp8_n256_r16`.
+    pub name: String,
+    /// Op kind: `dense_f32`, `dense_f16`, `dense_fp8`, `lowrank_apply`,
+    /// `lowrank_apply_fp8`, `rsvd`, `lowrank_gemm[_fp8]`, `lowrank_e2e`.
+    pub op: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Square problem edge this entry was lowered for.
+    pub n: usize,
+    /// Rank (0 for dense ops).
+    pub rank: usize,
+    /// Input shapes, in call order (all f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes, in tuple order (all f32).
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactEntry {
+    /// Total f32 elements expected for input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+}
+
+/// The parsed manifest with an op/shape index.
+#[derive(Debug)]
+pub struct Manifest {
+    /// Artifact directory (files in entries are relative to this).
+    pub dir: PathBuf,
+    /// rSVD oversampling used at lowering time (sketch width = r + this).
+    pub oversample: usize,
+    entries: Vec<ArtifactEntry>,
+    by_name: HashMap<String, usize>,
+    /// (op, n, rank) -> entry index.
+    by_key: HashMap<(String, usize, usize), usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = parse_json(text)?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Artifact("manifest missing integer 'version'".into()))?;
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "unsupported manifest version {version} (expected 1)"
+            )));
+        }
+        let oversample = root
+            .get("oversample")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Artifact("manifest missing 'oversample'".into()))?;
+
+        let raw_entries = root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest missing 'entries' array".into()))?;
+
+        let mut entries = Vec::with_capacity(raw_entries.len());
+        for (i, e) in raw_entries.iter().enumerate() {
+            entries.push(Self::parse_entry(e).map_err(|err| {
+                Error::Artifact(format!("manifest entry {i}: {err}"))
+            })?);
+        }
+
+        let mut by_name = HashMap::new();
+        let mut by_key = HashMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            if by_name.insert(e.name.clone(), i).is_some() {
+                return Err(Error::Artifact(format!("duplicate artifact name {}", e.name)));
+            }
+            by_key.insert((e.op.clone(), e.n, e.rank), i);
+        }
+
+        Ok(Manifest {
+            dir,
+            oversample,
+            entries,
+            by_name,
+            by_key,
+        })
+    }
+
+    fn parse_entry(e: &Json) -> Result<ArtifactEntry> {
+        let get_str = |k: &str| -> Result<String> {
+            e.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::Artifact(format!("missing string field '{k}'")))
+        };
+        let get_usize = |k: &str| -> Result<usize> {
+            e.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Artifact(format!("missing integer field '{k}'")))
+        };
+        let get_shapes = |k: &str| -> Result<Vec<Vec<usize>>> {
+            let arr = e
+                .get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Artifact(format!("missing array field '{k}'")))?;
+            arr.iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .ok_or_else(|| Error::Artifact(format!("'{k}' element not an array")))?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize()
+                                .ok_or_else(|| Error::Artifact(format!("bad dim in '{k}'")))
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+
+        Ok(ArtifactEntry {
+            name: get_str("name")?,
+            op: get_str("op")?,
+            file: get_str("file")?,
+            n: get_usize("n")?,
+            rank: get_usize("rank")?,
+            inputs: get_shapes("inputs")?,
+            outputs: get_shapes("outputs")?,
+        })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Lookup by unique name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Exact lookup by (op, n, rank); dense ops use rank 0.
+    pub fn lookup(&self, op: &str, n: usize, rank: usize) -> Option<&ArtifactEntry> {
+        self.by_key
+            .get(&(op.to_string(), n, rank))
+            .map(|&i| &self.entries[i])
+    }
+
+    /// Largest lattice edge available for `op` that is >= `n` (used to
+    /// decide whether a request can be padded onto an artifact or must
+    /// fall back to the CPU substrate).
+    pub fn best_cover(&self, op: &str, n: usize, rank: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.rank == rank && e.n >= n)
+            .min_by_key(|e| e.n)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "oversample": 8,
+      "entries": [
+        {"name": "dense_f32_n128", "op": "dense_f32", "file": "dense_f32_n128.hlo.txt",
+         "n": 128, "rank": 0, "inputs": [[128,128],[128,128]], "outputs": [[128,128]]},
+        {"name": "rsvd_n128_r16", "op": "rsvd", "file": "rsvd_n128_r16.hlo.txt",
+         "n": 128, "rank": 16, "inputs": [[128,128],[128,24]],
+         "outputs": [[128,16],[16],[16,128]]}
+      ]
+    }"#;
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let m = sample();
+        assert_eq!(m.entries().len(), 2);
+        assert_eq!(m.oversample, 8);
+        let e = m.by_name("rsvd_n128_r16").unwrap();
+        assert_eq!(e.inputs[1], vec![128, 24]);
+        assert_eq!(e.outputs.len(), 3);
+    }
+
+    #[test]
+    fn lookup_by_key() {
+        let m = sample();
+        assert!(m.lookup("dense_f32", 128, 0).is_some());
+        assert!(m.lookup("dense_f32", 256, 0).is_none());
+        assert!(m.lookup("rsvd", 128, 16).is_some());
+    }
+
+    #[test]
+    fn best_cover_picks_smallest_geq() {
+        let m = sample();
+        assert_eq!(m.best_cover("dense_f32", 100, 0).unwrap().n, 128);
+        assert!(m.best_cover("dense_f32", 129, 0).is_none());
+    }
+
+    #[test]
+    fn input_len() {
+        let m = sample();
+        let e = m.by_name("dense_f32_n128").unwrap();
+        assert_eq!(e.input_len(0), 128 * 128);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 2");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let dup = SAMPLE.replace("rsvd_n128_r16\", \"op\": \"rsvd", "dense_f32_n128\", \"op\": \"rsvd");
+        assert!(Manifest::parse(&dup, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let bad = r#"{"version": 1, "oversample": 8, "entries": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn hlo_path_joins_dir() {
+        let m = sample();
+        let e = m.by_name("dense_f32_n128").unwrap();
+        assert_eq!(
+            m.hlo_path(e),
+            PathBuf::from("/tmp/artifacts/dense_f32_n128.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,23 @@
+//! AOT artifact runtime: PJRT CPU client + manifest + executor thread.
+//!
+//! The bridge between the Python compile path and the Rust serving path:
+//!
+//! - [`json`]: dependency-free JSON parser for the manifest,
+//! - [`manifest`]: typed artifact index ((op, n, rank) -> HLO file),
+//! - [`client`]: [`XlaRuntime`] — loads HLO text, compiles once per
+//!   artifact, executes with validated shapes (single-threaded: the
+//!   `xla` crate's client is `Rc`-backed),
+//! - [`executor`]: [`XlaExecutor`] — confines the runtime to a dedicated
+//!   thread and exposes a `Send + Clone` handle to the coordinator.
+//!
+//! Python runs only at `make artifacts` time; everything here consumes the
+//! frozen `artifacts/` directory.
+
+pub mod client;
+pub mod executor;
+pub mod json;
+pub mod manifest;
+
+pub use client::XlaRuntime;
+pub use executor::{XlaExecutor, XlaHandle};
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,196 @@
+//! Workload generation for benchmarks and the serving examples.
+//!
+//! - the paper's §4.3 sweep: N from 1024 to 20480 in √2-geometric steps;
+//! - transformer inference GEMM traces (the workload the paper's intro
+//!   motivates: attention and MLP matmuls at LLM-ish shapes);
+//! - structured matrix generators with controlled spectra for the error
+//!   analysis.
+
+use crate::linalg::matrix::Matrix;
+use crate::linalg::rng::Pcg64;
+
+/// The paper's benchmark sweep: geometric progression by √2 from `lo` up
+/// to (and including, when it lands exactly) `hi`, rounded to multiples
+/// of 64 for tile friendliness.
+pub fn sqrt2_sweep(lo: usize, hi: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut x = lo as f64;
+    while (x as usize) <= hi {
+        let n = ((x / 64.0).round() as usize * 64).max(64);
+        if out.last() != Some(&n) {
+            out.push(n);
+        }
+        x *= std::f64::consts::SQRT_2;
+    }
+    // The paper's sweep is inclusive of its maximum (N = 20480 appears in
+    // every table); append the endpoint when √2 stepping skips past it.
+    let hi_tile = (hi / 64).max(1) * 64;
+    if out.last().is_none_or(|&last| last < hi_tile) {
+        out.push(hi_tile);
+    }
+    out
+}
+
+/// One GEMM in a workload trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Output rows.
+    pub m: usize,
+    /// Inner dimension.
+    pub k: usize,
+    /// Output cols.
+    pub n: usize,
+    /// Stable identity of the weight operand (None = both operands dynamic).
+    pub weight_id: Option<u64>,
+}
+
+impl GemmShape {
+    /// Square helper.
+    pub fn square(n: usize) -> Self {
+        GemmShape {
+            m: n,
+            k: n,
+            n,
+            weight_id: None,
+        }
+    }
+}
+
+/// Transformer decoder-layer GEMM trace for a given model size, mirroring
+/// the shapes a serving stack issues per layer per step:
+/// QKV projection, attention output, MLP up, MLP down.
+pub fn transformer_layer_trace(
+    batch_tokens: usize,
+    d_model: usize,
+    d_ff: usize,
+    layer: u64,
+) -> Vec<GemmShape> {
+    let wid = |slot: u64| Some(layer * 8 + slot);
+    vec![
+        // x · W_qkv : (T, d) × (d, 3d)
+        GemmShape { m: batch_tokens, k: d_model, n: 3 * d_model, weight_id: wid(0) },
+        // attn_out : (T, d) × (d, d)
+        GemmShape { m: batch_tokens, k: d_model, n: d_model, weight_id: wid(1) },
+        // mlp up : (T, d) × (d, d_ff)
+        GemmShape { m: batch_tokens, k: d_model, n: d_ff, weight_id: wid(2) },
+        // mlp down : (T, d_ff) × (d_ff, d)
+        GemmShape { m: batch_tokens, k: d_ff, n: d_model, weight_id: wid(3) },
+    ]
+}
+
+/// Full-model trace: `layers` decoder layers at the given shapes.
+pub fn transformer_model_trace(
+    batch_tokens: usize,
+    d_model: usize,
+    d_ff: usize,
+    layers: usize,
+) -> Vec<GemmShape> {
+    (0..layers)
+        .flat_map(|l| transformer_layer_trace(batch_tokens, d_model, d_ff, l as u64))
+        .collect()
+}
+
+/// Spectrum families for the §5.4 error study.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpectrumKind {
+    /// σ_j = ρ^j (exponential decay — the paper's favorable case).
+    ExponentialDecay,
+    /// σ_j = 1/(1+j) (heavy-tail power law).
+    PowerLaw,
+    /// σ_j = 1 (flat — the adversarial case where low-rank must fail).
+    Flat,
+}
+
+impl SpectrumKind {
+    /// Generate `k` singular values of the family.
+    pub fn values(self, k: usize) -> Vec<f32> {
+        match self {
+            SpectrumKind::ExponentialDecay => {
+                (0..k).map(|j| (0.85f32).powi(j as i32)).collect()
+            }
+            SpectrumKind::PowerLaw => (0..k).map(|j| 1.0 / (1.0 + j as f32)).collect(),
+            SpectrumKind::Flat => vec![1.0; k],
+        }
+    }
+
+    /// Human name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpectrumKind::ExponentialDecay => "exp_decay",
+            SpectrumKind::PowerLaw => "power_law",
+            SpectrumKind::Flat => "flat",
+        }
+    }
+}
+
+/// Build a test matrix with the requested spectrum family.
+pub fn matrix_with_spectrum(n: usize, kind: SpectrumKind, rng: &mut Pcg64) -> Matrix {
+    let k = n.min(96); // enough spectral content; keeps generation cheap
+    let sv = kind.values(k);
+    Matrix::with_spectrum(n, n, &sv, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_matches_paper_progression() {
+        let s = sqrt2_sweep(1024, 20480);
+        assert_eq!(s.first(), Some(&1024));
+        assert!(s.contains(&4096));
+        assert_eq!(s.last(), Some(&20480), "paper's sweep includes its max");
+        // Each step ≈ √2× the previous (the final step to the appended
+        // endpoint may be shorter).
+        for w in s.windows(2) {
+            let ratio = w[1] as f64 / w[0] as f64;
+            assert!((1.20..1.55).contains(&ratio), "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn sweep_is_tile_aligned() {
+        for n in sqrt2_sweep(1024, 20480) {
+            assert_eq!(n % 64, 0);
+        }
+    }
+
+    #[test]
+    fn transformer_trace_shapes() {
+        let t = transformer_layer_trace(128, 512, 2048, 0);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[0].n, 3 * 512);
+        assert_eq!(t[3].k, 2048);
+        // weight ids stable and distinct
+        let ids: Vec<_> = t.iter().map(|g| g.weight_id.unwrap()).collect();
+        let mut dedup = ids.clone();
+        dedup.dedup();
+        assert_eq!(ids, dedup);
+    }
+
+    #[test]
+    fn model_trace_scales_with_layers() {
+        let t = transformer_model_trace(64, 256, 1024, 3);
+        assert_eq!(t.len(), 12);
+        // Layer 2's ids don't collide with layer 0's.
+        assert_ne!(t[0].weight_id, t[8].weight_id);
+    }
+
+    #[test]
+    fn spectra_families() {
+        let e = SpectrumKind::ExponentialDecay.values(10);
+        assert!(e[9] < e[0] * 0.3);
+        let f = SpectrumKind::Flat.values(5);
+        assert!(f.iter().all(|&v| v == 1.0));
+        let p = SpectrumKind::PowerLaw.values(4);
+        assert!((p[3] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spectrum_matrix_is_finite() {
+        let mut rng = Pcg64::seeded(91);
+        let m = matrix_with_spectrum(48, SpectrumKind::PowerLaw, &mut rng);
+        assert!(m.all_finite());
+        assert_eq!(m.shape(), (48, 48));
+    }
+}

@@ -1,0 +1,212 @@
+//! Randomized property tests over coordinator + numeric invariants.
+//!
+//! No proptest crate in the offline vendor set, so properties are swept
+//! with the house Pcg64 over many random cases; each case prints its seed
+//! on failure for replay.
+
+use std::sync::Arc;
+
+use lowrank_gemm::coordinator::{Batcher, BucketKey, GemmRequest, Router, RouterConfig};
+use lowrank_gemm::fp8::{dequantize, quantize, StorageFormat};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{gemm_blocked, gemm_naive, Matrix, Pcg64};
+use lowrank_gemm::lowrank::{
+    eckart_young_error, energy_capture, factorize, lowrank_matmul, FactorCache, LowRankConfig,
+    RankStrategy,
+};
+
+fn dims(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+/// Property: blocked GEMM ≡ naive GEMM on arbitrary shapes.
+#[test]
+fn prop_blocked_gemm_matches_naive() {
+    for seed in 0..30u64 {
+        let mut rng = Pcg64::seeded(1000 + seed);
+        let (m, k, n) = (dims(&mut rng, 1, 60), dims(&mut rng, 1, 60), dims(&mut rng, 1, 60));
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let b = Matrix::gaussian(k, n, &mut rng);
+        let c1 = gemm_naive(&a, &b).unwrap();
+        let c2 = gemm_blocked(&a, &b).unwrap();
+        let err = c1.rel_frobenius_distance(&c2);
+        assert!(err < 1e-5, "seed {seed} ({m}x{k}x{n}): err {err}");
+    }
+}
+
+/// Property: quantize→dequantize error ordering F32 ≤ F16 ≤ FP8 in
+/// Frobenius norm, for any input distribution.
+#[test]
+fn prop_storage_precision_error_ordering() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg64::seeded(2000 + seed);
+        let scale = (2.0f32).powi((rng.next_u64() % 24) as i32 - 12);
+        let m = Matrix::uniform(24, 24, -scale, scale, &mut rng);
+        let err = |f: StorageFormat| dequantize(&quantize(&m, f)).rel_frobenius_distance(&m);
+        let e32 = err(StorageFormat::F32);
+        let e16 = err(StorageFormat::F16);
+        let e8 = err(StorageFormat::Fp8(lowrank_gemm::fp8::Fp8Format::E4M3));
+        assert!(e32 <= e16 + 1e-7, "seed {seed}: f32 {e32} vs f16 {e16}");
+        assert!(e16 <= e8 + 1e-7, "seed {seed}: f16 {e16} vs fp8 {e8}");
+    }
+}
+
+/// Property: the factor-chain product error is bounded by the sum of the
+/// two truncation errors plus quantization noise (triangle-style bound).
+#[test]
+fn prop_chain_error_bounded_by_operand_truncations() {
+    for seed in 0..15u64 {
+        let mut rng = Pcg64::seeded(3000 + seed);
+        let n = dims(&mut rng, 24, 64);
+        let r = dims(&mut rng, 2, 8);
+        let a = Matrix::low_rank_noisy(n, n, r, 1e-3, &mut rng);
+        let b = Matrix::low_rank_noisy(n, n, r, 1e-3, &mut rng);
+        let cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(r),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let fa = factorize(&a, &cfg).unwrap();
+        let fb = factorize(&b, &cfg).unwrap();
+        let ea = fa.measured_error(&a);
+        let eb = fb.measured_error(&b);
+        let ec = lowrank_matmul(&fa, &fb).rel_frobenius_distance(&a.matmul(&b));
+        // Condition-number slack of 4 over the naive triangle bound.
+        assert!(
+            ec <= 4.0 * (ea + eb) + 5e-3,
+            "seed {seed}: chain {ec} vs operands {ea}+{eb}"
+        );
+    }
+}
+
+/// Property: energy capture is monotone in rank and hits 1 at full rank;
+/// Eckart–Young error is monotone decreasing.
+#[test]
+fn prop_energy_and_eckart_young_monotone() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg64::seeded(4000 + seed);
+        let k = dims(&mut rng, 3, 40);
+        let mut sv: Vec<f32> = (0..k).map(|_| (rng.next_u64() % 1000) as f32 / 100.0 + 0.01).collect();
+        sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut prev_energy = 0.0f32;
+        let mut prev_err = f32::INFINITY;
+        for r in 1..=k {
+            let e = energy_capture(&sv, r);
+            let err = eckart_young_error(&sv, r);
+            assert!(e >= prev_energy - 1e-6, "seed {seed} r={r}");
+            assert!(err <= prev_err + 1e-6, "seed {seed} r={r}");
+            prev_energy = e;
+            prev_err = err;
+        }
+        assert!((prev_energy - 1.0).abs() < 1e-5);
+        assert!(prev_err.abs() < 1e-4);
+    }
+}
+
+/// Property: the router never picks a low-rank kernel when the tolerance
+/// is tighter than the predicted truncation error.
+#[test]
+fn prop_router_respects_tolerance() {
+    let router = Router::new(RouterConfig::default(), Arc::new(FactorCache::new(1 << 20)));
+    for seed in 0..25u64 {
+        let mut rng = Pcg64::seeded(5000 + seed);
+        let n = 32 << (rng.next_u64() % 6); // 32..1024
+        let a = Matrix::zeros(n, n);
+        let b = Matrix::zeros(n, n);
+        let req = GemmRequest::new(a, b).with_tolerance(1e-6);
+        let plan = router.route(&req);
+        assert!(
+            !plan.choice.kind.is_lowrank(),
+            "seed {seed} n={n}: picked {:?} at tol 1e-6",
+            plan.choice.kind
+        );
+        assert!(plan.choice.predicted_error <= 1e-5, "seed {seed}");
+    }
+}
+
+/// Property: batcher conservation — every pushed item comes back exactly
+/// once across full-batch flushes, expiry flushes and the final drain.
+#[test]
+fn prop_batcher_conserves_items() {
+    use std::time::{Duration, Instant};
+    for seed in 0..20u64 {
+        let mut rng = Pcg64::seeded(6000 + seed);
+        let max_batch = 1 + (rng.next_u64() % 6) as usize;
+        let mut batcher: Batcher<u64> = Batcher::new(max_batch, Duration::from_micros(50));
+        let t0 = Instant::now();
+        let total = 50 + (rng.next_u64() % 100) as usize;
+        let mut seen = Vec::new();
+        for i in 0..total {
+            let kind = if rng.next_u64() % 2 == 0 {
+                KernelKind::DenseF32
+            } else {
+                KernelKind::LowRankFp8
+            };
+            let n = 16 << (rng.next_u64() % 8);
+            let key = BucketKey::of(kind, n, n, n);
+            let t = t0 + Duration::from_micros(i as u64 * 7);
+            if let Some((_, items)) = batcher.push(key, i as u64, t) {
+                assert!(items.len() == max_batch, "full flush wrong size");
+                seen.extend(items);
+            }
+            for (_, items) in batcher.flush_expired(t) {
+                seen.extend(items);
+            }
+        }
+        for (_, items) in batcher.flush_all() {
+            seen.extend(items);
+        }
+        seen.sort_unstable();
+        let expect: Vec<u64> = (0..total as u64).collect();
+        assert_eq!(seen, expect, "seed {seed}: item loss or duplication");
+    }
+}
+
+/// Property: factor cache respects its byte budget under random workloads
+/// and never loses the most recently used entry.
+#[test]
+fn prop_cache_budget_and_lru() {
+    for seed in 0..15u64 {
+        let mut rng = Pcg64::seeded(7000 + seed);
+        let budget = 40_000usize;
+        let cache = FactorCache::new(budget);
+        let cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(4),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let mut last = 0u64;
+        for i in 0..40u64 {
+            let n = dims(&mut rng, 16, 48);
+            let m = Matrix::low_rank(n, n, 4, &mut rng);
+            let f = factorize(&m, &cfg).unwrap();
+            if cache.put(i, f) {
+                last = i;
+            }
+            let stats = cache.stats();
+            assert!(
+                stats.resident_bytes <= budget as u64,
+                "seed {seed}: over budget"
+            );
+            // The entry we just inserted must be resident.
+            assert!(cache.contains(last), "seed {seed}: MRU evicted");
+        }
+    }
+}
+
+/// Property: Lanczos, rSVD and exact SVD agree on the leading singular
+/// value for arbitrary (well-scaled) inputs.
+#[test]
+fn prop_decomposition_methods_agree_on_sigma1() {
+    use lowrank_gemm::linalg::{jacobi_svd, lanczos_svd, rsvd, RsvdOptions};
+    for seed in 0..12u64 {
+        let mut rng = Pcg64::seeded(8000 + seed);
+        let (m, n) = (dims(&mut rng, 12, 40), dims(&mut rng, 12, 40));
+        let a = Matrix::gaussian(m, n, &mut rng);
+        let exact = jacobi_svd(&a).unwrap().s[0];
+        let rs = rsvd(&a, 6.min(m.min(n)), &RsvdOptions::default()).unwrap().s[0];
+        let lz = lanczos_svd(&a, 6.min(m.min(n)), 6, 42).unwrap().s[0];
+        assert!((rs - exact).abs() / exact < 0.02, "seed {seed}: rsvd {rs} vs {exact}");
+        assert!((lz - exact).abs() / exact < 0.02, "seed {seed}: lanczos {lz} vs {exact}");
+    }
+}

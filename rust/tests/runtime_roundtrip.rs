@@ -1,0 +1,219 @@
+//! Integration: AOT artifacts through the PJRT runtime vs the CPU substrate.
+//!
+//! This is the cross-layer correctness bar: the Pallas-lowered HLO
+//! (L1+L2) must agree with the native Rust implementations (L3 substrate)
+//! on every op kind the manifest serves. Requires `make artifacts`.
+
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::lowrank::{factorize, lowrank_matmul, LowRankConfig, RankStrategy};
+use lowrank_gemm::runtime::{Manifest, XlaExecutor, XlaRuntime};
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping runtime integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn f32_cfg(rank: usize) -> LowRankConfig {
+    LowRankConfig {
+        rank: RankStrategy::Fixed(rank),
+        storage: lowrank_gemm::fp8::StorageFormat::F32,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn manifest_loads_and_indexes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(dir).unwrap();
+    assert!(m.entries().len() >= 30, "expected full lattice, got {}", m.entries().len());
+    for op in ["dense_f32", "dense_f16", "dense_fp8"] {
+        for n in [64, 128, 256] {
+            assert!(m.lookup(op, n, 0).is_some(), "{op} n={n} missing");
+        }
+    }
+    assert!(m.lookup("rsvd", 128, 16).is_some());
+    assert!(m.lookup("lowrank_apply", 256, 32).is_some());
+}
+
+#[test]
+fn dense_f32_artifact_matches_cpu_gemm() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(dir).unwrap();
+    let mut rng = Pcg64::seeded(11);
+    for n in [64usize, 128] {
+        let a = Matrix::gaussian(n, n, &mut rng);
+        let b = Matrix::gaussian(n, n, &mut rng);
+        let c = rt.dense_gemm("dense_f32", &a, &b).unwrap();
+        let exact = a.matmul(&b);
+        let err = c.rel_frobenius_distance(&exact);
+        assert!(err < 1e-5, "n={n}: err {err}");
+    }
+}
+
+#[test]
+fn dense_fp8_artifact_error_band() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(dir).unwrap();
+    let mut rng = Pcg64::seeded(12);
+    let n = 64;
+    let a = Matrix::gaussian(n, n, &mut rng);
+    let b = Matrix::gaussian(n, n, &mut rng);
+    let c = rt.dense_gemm("dense_fp8", &a, &b).unwrap();
+    let exact = a.matmul(&b);
+    let err = c.rel_frobenius_distance(&exact);
+    // Same §5.4 band the CPU fp8 substrate lands in.
+    assert!(err > 1e-4 && err < 0.15, "err {err}");
+}
+
+#[test]
+fn dense_f16_artifact_between_f32_and_fp8() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(dir).unwrap();
+    let mut rng = Pcg64::seeded(13);
+    let n = 64;
+    let a = Matrix::gaussian(n, n, &mut rng);
+    let b = Matrix::gaussian(n, n, &mut rng);
+    let exact = a.matmul(&b);
+    let e16 = rt.dense_gemm("dense_f16", &a, &b).unwrap().rel_frobenius_distance(&exact);
+    let e8 = rt.dense_gemm("dense_fp8", &a, &b).unwrap().rel_frobenius_distance(&exact);
+    assert!(e16 < e8, "f16 {e16} should beat fp8 {e8}");
+    assert!(e16 > 1e-7 && e16 < 5e-3, "f16 err {e16}");
+}
+
+#[test]
+fn lowrank_apply_artifact_matches_cpu_chain() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(dir).unwrap();
+    let mut rng = Pcg64::seeded(14);
+    let (n, r) = (128usize, 16usize);
+    let a = Matrix::low_rank_noisy(n, n, r / 2, 1e-5, &mut rng);
+    let b = Matrix::low_rank_noisy(n, n, r / 2, 1e-5, &mut rng);
+    let fa = factorize(&a, &f32_cfg(r)).unwrap();
+    let fb = factorize(&b, &f32_cfg(r)).unwrap();
+
+    // CPU chain.
+    let cpu = lowrank_matmul(&fa, &fb);
+
+    // Artifact chain: U_A, core, V_Bᵀ.
+    let core = fa.core_with(&fb).unwrap();
+    let out = rt
+        .run(
+            &format!("lowrank_apply_n{n}_r{r}"),
+            &[&fa.u_dense(), &core, &fb.vt_dense()],
+        )
+        .unwrap()
+        .remove(0);
+    let err = out.rel_frobenius_distance(&cpu);
+    assert!(err < 1e-4, "xla vs cpu chain err {err}");
+
+    // And both approximate the dense product.
+    let exact = a.matmul(&b);
+    assert!(out.rel_frobenius_distance(&exact) < 0.02);
+}
+
+#[test]
+fn rsvd_artifact_reconstructs_low_rank_input() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(dir).unwrap();
+    let mut rng = Pcg64::seeded(15);
+    let (n, r) = (128usize, 16usize);
+    let l = r + rt.manifest().oversample;
+    let a = Matrix::low_rank(n, n, r / 2, &mut rng);
+    let omega = Matrix::gaussian(n, l, &mut rng);
+
+    let outs = rt.run(&format!("rsvd_n{n}_r{r}"), &[&a, &omega]).unwrap();
+    let (u, s, vt) = (&outs[0], &outs[1], &outs[2]);
+    assert_eq!(u.shape(), (n, r));
+    assert_eq!(s.shape(), (1, r));
+    assert_eq!(vt.shape(), (r, n));
+
+    // Reconstruct U diag(s) Vᵀ and compare.
+    let mut us = u.clone();
+    us.scale_cols_in_place(s.data());
+    let rec = us.matmul(vt);
+    let err = rec.rel_frobenius_distance(&a);
+    assert!(err < 1e-3, "rsvd artifact reconstruction err {err}");
+
+    // Singular values descend.
+    for w in s.data().windows(2) {
+        assert!(w[0] >= w[1] - 1e-5);
+    }
+}
+
+#[test]
+fn e2e_artifact_runs_cold_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(dir).unwrap();
+    let mut rng = Pcg64::seeded(16);
+    let (n, r) = (128usize, 16usize);
+    let l = r + rt.manifest().oversample;
+    let a = Matrix::low_rank(n, n, r / 2, &mut rng);
+    let b = Matrix::low_rank(n, n, r / 2, &mut rng);
+    let oa = Matrix::gaussian(n, l, &mut rng);
+    let ob = Matrix::gaussian(n, l, &mut rng);
+
+    let c = rt
+        .run("lowrank_e2e_n128_r16", &[&a, &b, &oa, &ob])
+        .unwrap()
+        .remove(0);
+    let exact = a.matmul(&b);
+    let err = c.rel_frobenius_distance(&exact);
+    assert!(err < 1e-3, "e2e err {err}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(dir).unwrap();
+    let mut rng = Pcg64::seeded(17);
+    let a = Matrix::gaussian(64, 64, &mut rng);
+    let b = Matrix::gaussian(64, 64, &mut rng);
+    assert_eq!(rt.compiles(), 0);
+    rt.dense_gemm("dense_f32", &a, &b).unwrap();
+    assert_eq!(rt.compiles(), 1);
+    rt.dense_gemm("dense_f32", &a, &b).unwrap();
+    assert_eq!(rt.compiles(), 1, "second call must hit the cache");
+}
+
+#[test]
+fn run_validates_shapes_and_names() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::new(dir).unwrap();
+    let a = Matrix::zeros(64, 64);
+    // Unknown artifact.
+    assert!(rt.run("nonexistent_op", &[&a]).is_err());
+    // Wrong arity.
+    assert!(rt.run("dense_f32_n64", &[&a]).is_err());
+    // Wrong element count.
+    let bad = Matrix::zeros(32, 32);
+    assert!(rt.run("dense_f32_n64", &[&a, &bad]).is_err());
+}
+
+#[test]
+fn executor_thread_serves_concurrent_callers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ex = XlaExecutor::start(dir).unwrap();
+    let mut rng = Pcg64::seeded(18);
+    let a = Matrix::gaussian(64, 64, &mut rng);
+    let b = Matrix::gaussian(64, 64, &mut rng);
+    let exact = a.matmul(&b);
+
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let h = ex.handle();
+        let (a, b, exact) = (a.clone(), b.clone(), exact.clone());
+        joins.push(std::thread::spawn(move || {
+            let c = h.run("dense_f32_n64", vec![a, b]).unwrap().remove(0);
+            assert!(c.rel_frobenius_distance(&exact) < 1e-5);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // All four callers shared one compilation.
+    assert_eq!(ex.compile_count().unwrap(), 1);
+}

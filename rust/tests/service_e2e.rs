@@ -1,0 +1,231 @@
+//! End-to-end serving tests: GemmService over the full stack
+//! (router → batcher → workers → XLA artifacts / CPU substrate).
+
+use std::time::Duration;
+
+use lowrank_gemm::coordinator::{BackendKind, GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::lowrank::RankStrategy;
+use lowrank_gemm::trace;
+
+fn with_artifacts() -> Option<ServiceConfig> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping service e2e test: run `make artifacts` first");
+        return None;
+    }
+    let mut cfg = ServiceConfig::default();
+    cfg.artifacts_dir = Some("artifacts".into());
+    cfg.workers = 2;
+    cfg.max_batch = 4;
+    cfg.batch_window = Duration::from_micros(150);
+    Some(cfg)
+}
+
+#[test]
+fn shipped_config_file_parses_and_boots() {
+    // The example config in the repo root must stay in sync with the
+    // schema — and a service must boot from it (CPU-only to keep the
+    // test independent of artifacts).
+    let text = std::fs::read_to_string("lowrank-gemm.toml").expect("shipped config");
+    let mut app = lowrank_gemm::config::AppConfig::from_toml(&text).expect("parse");
+    assert_eq!(app.device, "rtx4090");
+    assert_eq!(
+        app.rank_strategy,
+        lowrank_gemm::lowrank::RankStrategy::EnergyFraction(0.99)
+    );
+    assert_eq!(app.service.factor_cache_bytes, 256 << 20);
+    app.use_xla = false;
+    let cfg = ServiceConfig::from_app(&app).expect("service config");
+    let svc = GemmService::start(cfg).expect("boot");
+    let mut rng = Pcg64::seeded(31);
+    let resp = svc
+        .gemm_blocking(GemmRequest::new(
+            Matrix::gaussian(24, 24, &mut rng),
+            Matrix::gaussian(24, 24, &mut rng),
+        ))
+        .unwrap();
+    assert_eq!(resp.c.shape(), (24, 24));
+}
+
+#[test]
+fn dense_requests_on_lattice_run_via_xla() {
+    let Some(cfg) = with_artifacts() else { return };
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rng = Pcg64::seeded(21);
+    let a = Matrix::gaussian(128, 128, &mut rng);
+    let b = Matrix::gaussian(128, 128, &mut rng);
+    let exact = a.matmul(&b);
+
+    let resp = svc
+        .gemm_blocking(GemmRequest::new(a, b).with_kernel(KernelKind::DenseF32))
+        .unwrap();
+    assert_eq!(resp.backend, BackendKind::Xla, "lattice hit must use XLA");
+    assert!(resp.c.rel_frobenius_distance(&exact) < 1e-5);
+}
+
+#[test]
+fn off_lattice_requests_fall_back_to_cpu() {
+    let Some(cfg) = with_artifacts() else { return };
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rng = Pcg64::seeded(22);
+    // 100 is not on the {64,128,256} lattice.
+    let a = Matrix::gaussian(100, 100, &mut rng);
+    let b = Matrix::gaussian(100, 100, &mut rng);
+    let exact = a.matmul(&b);
+
+    let resp = svc
+        .gemm_blocking(GemmRequest::new(a, b).with_kernel(KernelKind::DenseF32))
+        .unwrap();
+    assert_eq!(resp.backend, BackendKind::CpuSubstrate);
+    assert!(resp.c.rel_frobenius_distance(&exact) < 1e-5);
+}
+
+#[test]
+fn lowrank_xla_path_with_preloaded_factors() {
+    let Some(mut cfg) = with_artifacts() else { return };
+    // Fixed rank 16 lines the request up with the artifact lattice;
+    // f32 factor storage isolates the truncation error from fp8 noise.
+    cfg.router.rank_strategy = RankStrategy::Fixed(16);
+    cfg.router.storage = lowrank_gemm::fp8::StorageFormat::F32;
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rng = Pcg64::seeded(23);
+    let n = 128;
+    let a = Matrix::low_rank_noisy(n, n, 8, 1e-5, &mut rng);
+    let b = Matrix::low_rank_noisy(n, n, 8, 1e-5, &mut rng);
+    svc.preload_factor(1, &a).unwrap();
+    svc.preload_factor(2, &b).unwrap();
+
+    let req = GemmRequest::new(a.clone(), b.clone())
+        .with_ids(Some(1), Some(2))
+        .with_kernel(KernelKind::LowRankAuto);
+    let resp = svc.gemm_blocking(req).unwrap();
+    assert_eq!(resp.backend, BackendKind::Xla, "equal-rank lattice hit must use XLA");
+    assert_eq!(resp.rank, 16);
+    let exact = a.matmul(&b);
+    let err = resp.c.rel_frobenius_distance(&exact);
+    assert!(err < 0.02, "err {err}");
+    assert!(svc.stats().cache.hits >= 2);
+}
+
+#[test]
+fn transformer_trace_replay_end_to_end() {
+    // The examples/transformer_serving driver in miniature: weights
+    // preloaded, activations replayed, everything correct and counted.
+    let Some(cfg) = with_artifacts() else { return };
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rng = Pcg64::seeded(24);
+    let d = 64;
+    let shapes = trace::transformer_layer_trace(d, d, 2 * d, 0);
+
+    let mut weights = Vec::new();
+    for shape in &shapes {
+        let w = Matrix::low_rank_noisy(shape.k, shape.n, 6, 1e-4, &mut rng);
+        let id = shape.weight_id.unwrap();
+        svc.preload_factor(id, &w).unwrap();
+        weights.push((id, w));
+    }
+
+    let mut rxs = Vec::new();
+    let mut exacts = Vec::new();
+    for step in 0..12 {
+        let (id, w) = &weights[step % weights.len()];
+        let x = Matrix::gaussian(d, w.rows(), &mut rng);
+        exacts.push(x.matmul(w));
+        rxs.push(
+            svc.submit(GemmRequest::new(x, w.clone()).with_ids(None, Some(*id)))
+                .unwrap(),
+        );
+    }
+    for (rx, exact) in rxs.into_iter().zip(exacts) {
+        let resp = rx.recv().unwrap().unwrap();
+        let err = resp.c.rel_frobenius_distance(&exact);
+        assert!(err < 0.05, "replay err {err}");
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.completed, 12);
+    assert_eq!(stats.rejected, 0);
+
+    // Latency histograms were populated.
+    let summaries = svc.metrics().histogram_summaries();
+    assert!(summaries.contains_key("gemm.exec_us"));
+    assert!(summaries["gemm.exec_us"].count >= 12);
+}
+
+#[test]
+fn mixed_kernel_burst_batches_by_bucket() {
+    let Some(mut cfg) = with_artifacts() else { return };
+    cfg.max_batch = 3;
+    cfg.batch_window = Duration::from_millis(5);
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rng = Pcg64::seeded(25);
+
+    let mut rxs = Vec::new();
+    for i in 0..9 {
+        let n = if i % 2 == 0 { 64 } else { 128 };
+        let a = Matrix::gaussian(n, n, &mut rng);
+        let b = Matrix::gaussian(n, n, &mut rng);
+        rxs.push(
+            svc.submit(GemmRequest::new(a, b).with_kernel(KernelKind::DenseF32))
+                .unwrap(),
+        );
+    }
+    let mut batched = 0;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        if resp.batch_size > 1 {
+            batched += 1;
+        }
+    }
+    assert!(batched >= 4, "expected bucket batching, got {batched} batched responses");
+}
+
+#[test]
+fn mixed_factored_dense_serving_path() {
+    // The x·W serving case: weight factored + cached, activation dense.
+    // Must (a) route low-rank warm, (b) never factorize the activation,
+    // (c) stay in the error band.
+    let Some(mut cfg) = with_artifacts() else { return };
+    cfg.router.rank_strategy = RankStrategy::Fixed(8);
+    cfg.router.storage = lowrank_gemm::fp8::StorageFormat::F32;
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rng = Pcg64::seeded(27);
+    let (t, k, n) = (64usize, 96usize, 80usize);
+    let w = Matrix::low_rank_noisy(k, n, 6, 1e-5, &mut rng);
+    svc.preload_factor(5, &w).unwrap();
+
+    for _ in 0..3 {
+        let x = Matrix::gaussian(t, k, &mut rng);
+        let exact = x.matmul(&w);
+        let req = GemmRequest::new(x, w.clone())
+            .with_ids(None, Some(5))
+            .with_kernel(KernelKind::LowRankAuto);
+        let plan = svc.plan(&req);
+        assert!(plan.factors_cached, "one-sided cache must count as warm");
+        let resp = svc.gemm_blocking(req).unwrap();
+        assert_eq!(resp.rank, 8); // service strategy Fixed(8)
+        assert!(resp.c.rel_frobenius_distance(&exact) < 0.02);
+    }
+    let stats = svc.stats();
+    assert!(stats.cache.hits >= 3);
+    assert_eq!(stats.cache.misses, 0, "activation must never be factorized");
+}
+
+#[test]
+fn per_request_tolerance_steers_kernel_choice() {
+    let Some(cfg) = with_artifacts() else { return };
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rng = Pcg64::seeded(26);
+    let a = Matrix::gaussian(256, 256, &mut rng);
+    let b = Matrix::gaussian(256, 256, &mut rng);
+
+    // Tight tolerance: must land on the exact kernel.
+    let strict = svc
+        .plan(&GemmRequest::new(a.clone(), b.clone()).with_tolerance(1e-6));
+    assert_eq!(strict.choice.kind, KernelKind::DenseF32);
+
+    // Loose tolerance at this (small) size: still dense (crossover is far
+    // away), but allowed to pick a reduced-precision kernel.
+    let loose = svc.plan(&GemmRequest::new(a, b).with_tolerance(0.5));
+    assert!(!loose.choice.kind.is_lowrank());
+}
