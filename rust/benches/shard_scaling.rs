@@ -1,0 +1,162 @@
+//! Shard-scaling sweep: workers ∈ {1, 2, 4, 8} × N ∈ {1024, 4096, 8192}
+//! for the dense and low-rank sharded paths, against the single-threaded
+//! kernels as baseline.
+//!
+//! Prints the usual bench table plus one JSON record per measurement
+//! (same measurement shape as `bench_harness::Measurement`, tagged with
+//! the sweep point) so downstream tooling can diff runs:
+//!
+//! ```json
+//! {"bench":"shard_scaling","path":"dense","n":4096,"workers":4,
+//!  "mean_s":…,"min_s":…,"max_s":…,"stddev_s":…,"iters":5,
+//!  "gflops":…,"speedup_vs_serial":…}
+//! ```
+//!
+//! Env knobs: `LRG_BENCH_QUICK=1` shrinks sizes and iterations;
+//! `LRG_BENCH_MAXN=<n>` caps the sweep (dense 8192³ is ~1.1 TFLOP per
+//! iteration on the CPU substrate — budget accordingly).
+
+use lowrank_gemm::bench_harness::{bench, config_from_env, BenchConfig, Measurement, Table};
+use lowrank_gemm::fp8::StorageFormat;
+use lowrank_gemm::linalg::gemm::gemm_flops;
+use lowrank_gemm::linalg::{gemm_blocked, Matrix, Pcg64};
+use lowrank_gemm::lowrank::gemm::lowrank_flops;
+use lowrank_gemm::lowrank::{lowrank_matmul, LowRankConfig, RankStrategy};
+use lowrank_gemm::shard::{factorize_sharded, ShardExecutor, ShardPlan, TileGrid};
+
+const WORKER_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+fn executor(workers: usize) -> ShardExecutor {
+    ShardExecutor::new(ShardPlan {
+        grid: TileGrid::default(),
+        workers,
+        min_parallel_n: 256,
+    })
+}
+
+fn json_row(path: &str, n: usize, workers: usize, m: &Measurement, flops: f64, speedup: f64) {
+    println!(
+        "{{\"bench\":\"shard_scaling\",\"path\":\"{path}\",\"n\":{n},\"workers\":{workers},\
+         \"mean_s\":{:.6e},\"min_s\":{:.6e},\"max_s\":{:.6e},\"stddev_s\":{:.6e},\
+         \"iters\":{},\"gflops\":{:.2},\"speedup_vs_serial\":{:.3}}}",
+        m.mean_s,
+        m.min_s,
+        m.max_s,
+        m.stddev_s,
+        m.iters,
+        flops / m.mean_s / 1e9,
+        speedup
+    );
+}
+
+fn main() {
+    let base_cfg = config_from_env();
+    let quick = std::env::var("LRG_BENCH_QUICK").is_ok();
+    let max_n: usize = std::env::var("LRG_BENCH_MAXN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX);
+    let sizes: Vec<usize> = if quick {
+        vec![256, 512, 1024]
+    } else {
+        vec![1024, 4096, 8192]
+    };
+    let sizes: Vec<usize> = sizes.into_iter().filter(|&n| n <= max_n).collect();
+
+    let mut table = Table::new(
+        "Shard scaling — sharded vs single-threaded (dense f32 / warm low-rank chain)",
+        &["path", "N", "workers", "mean ms", "GFLOPS", "speedup vs serial"],
+    );
+
+    for &n in &sizes {
+        // Large sizes: trim iterations — each dense iteration is 2·N³ FLOPs.
+        let cfg = if n >= 4096 {
+            BenchConfig {
+                warmup_iters: 1,
+                measure_iters: base_cfg.measure_iters.min(2),
+            }
+        } else {
+            base_cfg
+        };
+
+        let mut rng = Pcg64::seeded(4242);
+        let r = (n / 16).max(16);
+        let a = Matrix::low_rank_noisy(n, n, r, 1e-4, &mut rng);
+        let b = Matrix::low_rank_noisy(n, n, r, 1e-4, &mut rng);
+        let dense_flops = gemm_flops(n, n, n);
+        let lr_flops = lowrank_flops(n, n, n, r, r);
+
+        // Offline factorization (not timed) for the warm chain path.
+        let fcfg = LowRankConfig {
+            rank: RankStrategy::Fixed(r),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let warm = executor(4);
+        let fa = factorize_sharded(&warm, &a, &fcfg).expect("factorize A");
+        let fb = factorize_sharded(&warm, &b, &fcfg).expect("factorize B");
+        drop(warm);
+
+        // Single-threaded baselines.
+        let dense_serial = bench(&cfg, || {
+            gemm_blocked(&a, &b).unwrap();
+        });
+        let lr_serial = bench(&cfg, || {
+            lowrank_matmul(&fa, &fb);
+        });
+        table.row(&[
+            "dense-serial".into(),
+            n.to_string(),
+            "-".into(),
+            format!("{:10.2}", dense_serial.mean_s * 1e3),
+            format!("{:8.2}", dense_flops / dense_serial.mean_s / 1e9),
+            "1.00x".into(),
+        ]);
+        json_row("dense-serial", n, 0, &dense_serial, dense_flops, 1.0);
+        table.row(&[
+            "lowrank-serial".into(),
+            n.to_string(),
+            "-".into(),
+            format!("{:10.2}", lr_serial.mean_s * 1e3),
+            format!("{:8.2}", lr_flops / lr_serial.mean_s / 1e9),
+            "1.00x".into(),
+        ]);
+        json_row("lowrank-serial", n, 0, &lr_serial, lr_flops, 1.0);
+
+        for &workers in &WORKER_SWEEP {
+            let ex = executor(workers);
+            let dense = bench(&cfg, || {
+                ex.gemm(&a, &b).unwrap();
+            });
+            let dsp = dense_serial.mean_s / dense.mean_s;
+            table.row(&[
+                "dense".into(),
+                n.to_string(),
+                workers.to_string(),
+                format!("{:10.2}", dense.mean_s * 1e3),
+                format!("{:8.2}", dense_flops / dense.mean_s / 1e9),
+                format!("{dsp:5.2}x"),
+            ]);
+            json_row("dense", n, workers, &dense, dense_flops, dsp);
+
+            let lr = bench(&cfg, || {
+                ex.lowrank_matmul(&fa, &fb).unwrap();
+            });
+            let lsp = lr_serial.mean_s / lr.mean_s;
+            table.row(&[
+                "lowrank".into(),
+                n.to_string(),
+                workers.to_string(),
+                format!("{:10.2}", lr.mean_s * 1e3),
+                format!("{:8.2}", lr_flops / lr.mean_s / 1e9),
+                format!("{lsp:5.2}x"),
+            ]);
+            json_row("lowrank", n, workers, &lr, lr_flops, lsp);
+        }
+    }
+    table.print();
+    println!(
+        "\n(acceptance: dense N=4096 workers=4 should show ≥ 2x speedup vs serial \
+         on a ≥ 4-core host)"
+    );
+}

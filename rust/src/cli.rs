@@ -25,7 +25,7 @@ pub struct CliArgs {
 const VALUE_KEYS: &[&str] = &[
     "config", "device", "artifacts", "n", "rank", "size", "sizes", "kernel", "strategy",
     "method", "storage", "tolerance", "requests", "workers", "batch", "window-us", "seed",
-    "out", "iters", "warmup",
+    "out", "iters", "warmup", "shard-workers", "tile-m", "tile-n", "min-parallel-n",
 ];
 
 /// Parse an argv (excluding the program name).

@@ -1,4 +1,33 @@
 //! Typed application configuration backed by the TOML-subset parser.
+//!
+//! Shipped example (`lowrank-gemm.toml` in the repo root stays in sync
+//! with this schema — asserted by the e2e tests):
+//!
+//! ```toml
+//! device = "rtx4090"
+//! artifacts_dir = "artifacts"
+//! use_xla = true
+//!
+//! [lowrank]
+//! decomp = "rsvd"                # rsvd | svd | lanczos
+//! storage = "fp8_e4m3"           # fp8_e4m3 | fp8_e5m2 | f16 | bf16 | f32
+//! rank_strategy = "energy"       # fixed | fixed_fraction | energy | error_bound | hardware_aware
+//! tau = 0.99
+//!
+//! [service]
+//! workers = 2                    # request-level dispatcher pool
+//! queue_depth = 1024
+//! max_batch = 8
+//! batch_window_us = 200
+//! default_tolerance = 0.05
+//! factor_cache_mb = 256
+//!
+//! [shard]                        # tile-execution plane (crate::shard)
+//! workers = 4                    # intra-GEMM worker threads
+//! tile_m = 256                   # output tile height (keep % 128 == 0)
+//! tile_n = 256                   # output tile width  (keep % 256 == 0)
+//! min_parallel_n = 512           # below this, requests stay single-threaded
+//! ```
 
 use crate::config::toml::{parse_toml, TomlDoc};
 use crate::error::{Error, Result};
@@ -37,6 +66,33 @@ impl Default for ServiceSettings {
     }
 }
 
+/// `[shard]` section: the tile-execution plane's knobs
+/// (see [`crate::shard::ShardPlan`], built from these settings).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSettings {
+    /// Worker threads in the shard pool (intra-GEMM parallelism; the
+    /// `[service]` workers handle request-level concurrency).
+    pub workers: usize,
+    /// Output tile height. Keep a multiple of 128 (the blocked kernel's
+    /// MC) to preserve bitwise equality with single-threaded execution.
+    pub tile_m: usize,
+    /// Output tile width. Keep a multiple of 256 (the blocked kernel's NC).
+    pub tile_n: usize,
+    /// Requests with `max(m, n)` below this stay single-threaded.
+    pub min_parallel_n: usize,
+}
+
+impl Default for ShardSettings {
+    fn default() -> Self {
+        ShardSettings {
+            workers: 4,
+            tile_m: 256,
+            tile_n: 256,
+            min_parallel_n: 512,
+        }
+    }
+}
+
 /// Whole-app configuration.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -55,6 +111,8 @@ pub struct AppConfig {
     pub storage: StorageFormat,
     /// `[service]` knobs.
     pub service: ServiceSettings,
+    /// `[shard]` knobs.
+    pub shard: ShardSettings,
 }
 
 impl Default for AppConfig {
@@ -67,6 +125,7 @@ impl Default for AppConfig {
             decomp: DecompMethod::RandomizedSvd,
             storage: StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
             service: ServiceSettings::default(),
+            shard: ShardSettings::default(),
         }
     }
 }
@@ -136,6 +195,21 @@ impl AppConfig {
                 s.factor_cache_bytes = req_usize(v, "service.factor_cache_mb")? << 20;
             }
         }
+        if let Some(sh) = doc.get("shard") {
+            let s = &mut cfg.shard;
+            if let Some(v) = sh.get("workers") {
+                s.workers = req_usize(v, "shard.workers")?;
+            }
+            if let Some(v) = sh.get("tile_m") {
+                s.tile_m = req_nonzero(v, "shard.tile_m")?;
+            }
+            if let Some(v) = sh.get("tile_n") {
+                s.tile_n = req_nonzero(v, "shard.tile_n")?;
+            }
+            if let Some(v) = sh.get("min_parallel_n") {
+                s.min_parallel_n = req_usize(v, "shard.min_parallel_n")?;
+            }
+        }
         Ok(cfg)
     }
 }
@@ -196,6 +270,14 @@ fn req_usize(v: &crate::config::toml::TomlValue, key: &str) -> Result<usize> {
     Ok(i as usize)
 }
 
+fn req_nonzero(v: &crate::config::toml::TomlValue, key: &str) -> Result<usize> {
+    let u = req_usize(v, key)?;
+    if u == 0 {
+        return Err(Error::Config(format!("{key} must be positive")));
+    }
+    Ok(u)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +310,12 @@ max_batch = 4
 batch_window_us = 500
 default_tolerance = 0.01
 factor_cache_mb = 128
+
+[shard]
+workers = 6
+tile_m = 128
+tile_n = 512
+min_parallel_n = 1024
 "#,
         )
         .unwrap();
@@ -238,6 +326,27 @@ factor_cache_mb = 128
         assert_eq!(cfg.rank_strategy, RankStrategy::EnergyFraction(0.999));
         assert_eq!(cfg.service.workers, 8);
         assert_eq!(cfg.service.factor_cache_bytes, 128 << 20);
+        assert_eq!(
+            cfg.shard,
+            ShardSettings {
+                workers: 6,
+                tile_m: 128,
+                tile_n: 512,
+                min_parallel_n: 1024
+            }
+        );
+    }
+
+    #[test]
+    fn shard_defaults_and_validation() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.shard, ShardSettings::default());
+        let cfg = AppConfig::from_toml("[shard]\nworkers = 1").unwrap();
+        assert_eq!(cfg.shard.workers, 1);
+        assert_eq!(cfg.shard.tile_m, 256);
+        assert!(AppConfig::from_toml("[shard]\ntile_m = 0").is_err());
+        assert!(AppConfig::from_toml("[shard]\ntile_n = 0").is_err());
+        assert!(AppConfig::from_toml("[shard]\nworkers = -2").is_err());
     }
 
     #[test]

@@ -14,15 +14,16 @@
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::fp8::{quantized_matmul, StorageFormat};
+use crate::fp8::StorageFormat;
 use crate::kernels::KernelKind;
-use crate::linalg::{gemm_blocked, Matrix};
+use crate::linalg::Matrix;
 use crate::lowrank::cache::MatrixId;
 use crate::lowrank::factor::{LowRankConfig, LowRankFactor};
-use crate::lowrank::{factorize, lowrank_matmul, FactorCache};
+use crate::lowrank::FactorCache;
 use crate::coordinator::request::BackendKind;
 use crate::runtime::XlaHandle;
 use crate::runtime::Manifest;
+use crate::shard::{factorize_sharded, ShardExecutor, ShardPlan};
 
 /// Execution outcome details for one kernel run.
 #[derive(Clone, Debug)]
@@ -43,17 +44,47 @@ pub struct Backend {
     cache: Arc<FactorCache>,
     /// Factorization configuration for on-the-fly (cold) decomposition.
     lr_cfg: LowRankConfig,
+    /// Tile-execution plane: every CPU-substrate product routes through
+    /// it, sharding across workers when the plan's gates pass and falling
+    /// back to the single-threaded kernels otherwise.
+    shard: Arc<ShardExecutor>,
 }
 
 impl Backend {
-    /// Build a backend. `xla` is optional: benches that sweep large
-    /// off-lattice shapes run CPU-only.
+    /// Build a backend with a default tile plane. `xla` is optional:
+    /// benches that sweep large off-lattice shapes run CPU-only.
     pub fn new(
         xla: Option<(XlaHandle, Arc<Manifest>)>,
         cache: Arc<FactorCache>,
         lr_cfg: LowRankConfig,
     ) -> Self {
-        Backend { xla, cache, lr_cfg }
+        Self::with_shard(
+            xla,
+            cache,
+            lr_cfg,
+            Arc::new(ShardExecutor::new(ShardPlan::default())),
+        )
+    }
+
+    /// Build a backend over an explicit (possibly shared, metrics-wired)
+    /// tile executor.
+    pub fn with_shard(
+        xla: Option<(XlaHandle, Arc<Manifest>)>,
+        cache: Arc<FactorCache>,
+        lr_cfg: LowRankConfig,
+        shard: Arc<ShardExecutor>,
+    ) -> Self {
+        Backend {
+            xla,
+            cache,
+            lr_cfg,
+            shard,
+        }
+    }
+
+    /// The tile executor this backend runs CPU-substrate products on.
+    pub fn shard(&self) -> &Arc<ShardExecutor> {
+        &self.shard
     }
 
     /// Execute `kind` on (a, b). `a_id`/`b_id` enable factor caching.
@@ -115,12 +146,14 @@ impl Backend {
                 rank: 0,
             });
         }
-        // CPU substrate: exact f32 path uses the blocked GEMM; reduced
-        // precisions round-trip storage through the software codecs
-        // (f32 accumulation inside, same as the kernels).
+        // CPU substrate, on the tile plane: the exact f32 path shards the
+        // blocked GEMM; reduced precisions round-trip storage through the
+        // software codecs (f32 accumulation inside, same as the kernels)
+        // and shard the resulting product. Small requests fall back to
+        // the single-threaded kernels inside the executor.
         let c = match storage {
-            StorageFormat::F32 => gemm_blocked(a, b)?,
-            other => quantized_matmul(a, b, other),
+            StorageFormat::F32 => self.shard.gemm(a, b)?,
+            other => self.shard.quantized_matmul(a, b, other)?,
         };
         Ok(ExecOutcome {
             c,
@@ -131,12 +164,14 @@ impl Backend {
 
     /// Fetch a factor from the cache or factorize now (charging the cold
     /// path — this is the miss cost the router's cost model anticipated).
+    /// Cold decompositions run the panel-parallel randomized SVD on the
+    /// tile plane.
     fn factor_of(&self, m: &Matrix, id: Option<MatrixId>) -> Result<LowRankFactor> {
         match id {
             Some(id) => self
                 .cache
-                .get_or_insert_with(id, || factorize(m, &self.lr_cfg)),
-            None => factorize(m, &self.lr_cfg),
+                .get_or_insert_with(id, || factorize_sharded(&self.shard, m, &self.lr_cfg)),
+            None => factorize_sharded(&self.shard, m, &self.lr_cfg),
         }
     }
 
@@ -157,7 +192,7 @@ impl Backend {
             (Some(_), None) => {
                 let fa = self.factor_of(a, a_id)?;
                 let rank = fa.rank();
-                let c = crate::lowrank::lowrank_matmul_dense_rhs(&fa, b);
+                let c = self.shard.lowrank_matmul_dense_rhs(&fa, b)?;
                 return Ok(ExecOutcome {
                     c,
                     backend: BackendKind::CpuSubstrate,
@@ -167,7 +202,7 @@ impl Backend {
             (None, Some(_)) => {
                 let fb = self.factor_of(b, b_id)?;
                 let rank = fb.rank();
-                let c = crate::lowrank::lowrank_matmul_dense_lhs(a, &fb);
+                let c = self.shard.lowrank_matmul_dense_lhs(a, &fb)?;
                 return Ok(ExecOutcome {
                     c,
                     backend: BackendKind::CpuSubstrate,
@@ -204,7 +239,7 @@ impl Backend {
             }
         }
 
-        let c = lowrank_matmul(&fa, &fb);
+        let c = self.shard.lowrank_matmul(&fa, &fb)?;
         Ok(ExecOutcome {
             c,
             backend: BackendKind::CpuSubstrate,

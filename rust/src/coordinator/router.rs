@@ -19,6 +19,7 @@ use crate::lowrank::cache::FactorCache;
 use crate::lowrank::factor::{DecompMethod, LowRankConfig};
 use crate::lowrank::rank::{select_rank, RankStrategy};
 use crate::coordinator::request::GemmRequest;
+use crate::shard::ShardPlan;
 
 /// Everything a worker needs to execute one request.
 #[derive(Clone, Debug)]
@@ -47,6 +48,12 @@ pub struct RouterConfig {
     pub storage: crate::fp8::StorageFormat,
     /// Tolerance when the request doesn't carry one.
     pub default_tolerance: f32,
+    /// Shard plan of the serving tile-execution plane; feeds the cost
+    /// model's parallel-speedup term so routing stays calibrated against
+    /// the substrate that actually executes. Inside the service this is
+    /// derived from `ServiceConfig::shard` (which wins over a hand-set
+    /// value) — set it directly only for a standalone [`Router`].
+    pub shard: ShardPlan,
 }
 
 impl Default for RouterConfig {
@@ -57,6 +64,7 @@ impl Default for RouterConfig {
             decomp: DecompMethod::RandomizedSvd,
             storage: crate::fp8::StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
             default_tolerance: 0.05,
+            shard: ShardPlan::default(),
         }
     }
 }
@@ -72,7 +80,7 @@ impl Router {
     /// Build a router over a shared factor cache.
     pub fn new(cfg: RouterConfig, cache: Arc<FactorCache>) -> Self {
         Router {
-            selector: AutoKernelSelector::new(cfg.device.clone()),
+            selector: AutoKernelSelector::with_shard(cfg.device.clone(), cfg.shard),
             cfg,
             cache,
         }
@@ -142,11 +150,7 @@ impl Router {
         };
 
         let choice = match req.kernel {
-            Some(kind) => KernelChoice {
-                kind,
-                cost: crate::kernels::kernel_cost(&self.cfg.device, kind, &inp),
-                predicted_error: self.selector.predicted_error(kind, &inp),
-            },
+            Some(kind) => self.selector.estimate(kind, &inp),
             None => self.selector.select(&inp),
         };
 

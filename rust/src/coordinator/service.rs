@@ -23,7 +23,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::schema::AppConfig;
+use crate::config::schema::{AppConfig, ShardSettings};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::batcher::{Batcher, BucketKey};
 use crate::coordinator::request::{GemmRequest, GemmResponse};
@@ -32,9 +32,11 @@ use crate::error::{Error, Result};
 use crate::exec::ThreadPool;
 use crate::linalg::Matrix;
 use crate::lowrank::cache::{CacheStats, MatrixId};
-use crate::lowrank::{factorize, FactorCache};
+use crate::lowrank::FactorCache;
+use crate::shard::factorize_sharded;
 use crate::metrics::MetricsRegistry;
 use crate::runtime::{Manifest, XlaExecutor};
+use crate::shard::{ShardExecutor, ShardPlan};
 
 /// Service configuration (distilled from [`AppConfig`]).
 #[derive(Clone, Debug)]
@@ -53,6 +55,11 @@ pub struct ServiceConfig {
     pub factor_cache_bytes: usize,
     /// AOT artifact directory; `None` runs CPU-substrate-only.
     pub artifacts_dir: Option<String>,
+    /// Tile-execution plane settings (intra-GEMM parallelism; `workers`
+    /// above is request-level concurrency). Single source of truth for
+    /// the plane: `start()` derives `router.shard` from this, overriding
+    /// whatever the `router` field carries.
+    pub shard: ShardSettings,
 }
 
 impl Default for ServiceConfig {
@@ -65,6 +72,7 @@ impl Default for ServiceConfig {
             batch_window: Duration::from_micros(200),
             factor_cache_bytes: 256 << 20,
             artifacts_dir: None,
+            shard: ShardSettings::default(),
         }
     }
 }
@@ -81,6 +89,7 @@ impl ServiceConfig {
                 decomp: app.decomp,
                 storage: app.storage,
                 default_tolerance: app.service.default_tolerance,
+                shard: ShardPlan::from(&app.shard),
             },
             workers: app.service.workers,
             queue_depth: app.service.queue_depth,
@@ -92,6 +101,7 @@ impl ServiceConfig {
             } else {
                 None
             },
+            shard: app.shard.clone(),
         })
     }
 }
@@ -142,8 +152,18 @@ impl GemmService {
     /// likely to serve first traffic.
     pub fn start(cfg: ServiceConfig) -> Result<GemmService> {
         let cache = Arc::new(FactorCache::new(cfg.factor_cache_bytes));
-        let router = Arc::new(Router::new(cfg.router.clone(), cache.clone()));
+        let mut router_cfg = cfg.router.clone();
+        // `cfg.shard` is the single source of truth for the tile plane
+        // (see its doc): the router's cost model must describe the plane
+        // that will actually execute, so any hand-set `router.shard` is
+        // deliberately overridden here.
+        router_cfg.shard = ShardPlan::from(&cfg.shard);
+        let router = Arc::new(Router::new(router_cfg, cache.clone()));
         let metrics = Arc::new(MetricsRegistry::new());
+        let shard = Arc::new(ShardExecutor::with_metrics(
+            ShardPlan::from(&cfg.shard),
+            metrics.clone(),
+        ));
 
         let xla = match &cfg.artifacts_dir {
             Some(dir) => Some(XlaExecutor::start(dir)?),
@@ -158,10 +178,11 @@ impl GemmService {
             )
         });
 
-        let backend = Arc::new(Backend::new(
+        let backend = Arc::new(Backend::with_shard(
             xla_pair,
             cache.clone(),
             router.lowrank_config(),
+            shard,
         ));
 
         let pool = ThreadPool::new(cfg.workers.max(1));
@@ -348,9 +369,11 @@ impl GemmService {
     }
 
     /// Offline decomposition (paper §6.5): factorize `m` now under the
-    /// service's low-rank config and pin it in the cache under `id`.
+    /// service's low-rank config — on the same panel-parallel tile plane
+    /// the cold path uses, so preloaded and on-the-fly factors agree
+    /// bit-for-bit — and pin it in the cache under `id`.
     pub fn preload_factor(&self, id: MatrixId, m: &Matrix) -> Result<()> {
-        let f = factorize(m, &self.lr_cfg)?;
+        let f = factorize_sharded(self.backend.shard(), m, &self.lr_cfg)?;
         self.cache.put(id, f);
         Ok(())
     }

@@ -1,10 +1,12 @@
 //! Execution substrate: a small thread pool.
 //!
-//! The offline vendor set has no tokio, so the coordinator's worker pool is
-//! built on `std::thread` + `std::sync::mpsc`. The pool is deliberately
-//! simple — FIFO queue, fixed worker count, graceful shutdown — because on
-//! the 1-core evaluation host concurrency buys overlap of queueing and
-//! compute, not parallel speedup.
+//! The offline vendor set has no tokio, so the worker pools are built on
+//! `std::thread` + `std::sync::mpsc` — FIFO queue, fixed worker count,
+//! graceful shutdown, and queue-depth accounting (`pending()`). Two pools
+//! run in the serving stack: the coordinator's request-level pool
+//! (overlap of queueing and compute) and the shard plane's tile pool
+//! ([`crate::shard`]), which turns multi-core hosts into intra-GEMM
+//! parallel speedup via atomic work-claiming over block-partitioned tasks.
 
 pub mod threadpool;
 

@@ -16,6 +16,10 @@ enum Message {
 pub struct ThreadPool {
     sender: mpsc::Sender<Message>,
     workers: Vec<JoinHandle<()>>,
+    /// Monotonic count of jobs ever submitted.
+    submitted: Arc<AtomicU64>,
+    /// Jobs submitted but not yet picked up by a worker: incremented on
+    /// submit, decremented when a worker starts the job.
     queued: Arc<AtomicU64>,
     completed: Arc<AtomicU64>,
 }
@@ -26,11 +30,13 @@ impl ThreadPool {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
+        let submitted = Arc::new(AtomicU64::new(0));
         let queued = Arc::new(AtomicU64::new(0));
         let completed = Arc::new(AtomicU64::new(0));
         let mut workers = Vec::with_capacity(size);
         for i in 0..size {
             let rx = Arc::clone(&rx);
+            let queued = Arc::clone(&queued);
             let completed = Arc::clone(&completed);
             workers.push(
                 std::thread::Builder::new()
@@ -42,6 +48,7 @@ impl ThreadPool {
                         };
                         match msg {
                             Ok(Message::Run(job)) => {
+                                queued.fetch_sub(1, Ordering::Relaxed);
                                 job();
                                 completed.fetch_add(1, Ordering::Relaxed);
                             }
@@ -54,6 +61,7 @@ impl ThreadPool {
         ThreadPool {
             sender: tx,
             workers,
+            submitted,
             queued,
             completed,
         }
@@ -61,6 +69,7 @@ impl ThreadPool {
 
     /// Enqueue a job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
         self.queued.fetch_add(1, Ordering::Relaxed);
         self.sender
             .send(Message::Run(Box::new(job)))
@@ -69,6 +78,13 @@ impl ThreadPool {
 
     /// Jobs submitted so far.
     pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Jobs waiting in the queue (submitted, not yet started). The shard
+    /// plane polls this to decide whether its claim jobs are still queued
+    /// behind other work.
+    pub fn pending(&self) -> u64 {
         self.queued.load(Ordering::Relaxed)
     }
 
@@ -143,6 +159,30 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(5)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn pending_decrements_when_job_starts() {
+        let pool = ThreadPool::new(1);
+        let (started_tx, started_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        // First job signals that it has started, then blocks on release.
+        pool.execute(move || {
+            started_tx.send(()).unwrap();
+            release_rx.recv().unwrap();
+        });
+        started_rx.recv().unwrap();
+        // Three more jobs queue behind the blocked one.
+        for _ in 0..3 {
+            pool.execute(|| {});
+        }
+        assert_eq!(pool.submitted(), 4);
+        assert_eq!(pool.pending(), 3, "started job must leave the queue");
+        release_tx.send(()).unwrap();
+        pool.wait_idle();
+        assert_eq!(pool.pending(), 0);
+        assert_eq!(pool.completed(), 4);
+        assert_eq!(pool.submitted(), 4, "submitted stays monotonic");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use crate::gpu_sim::profile::{DeviceProfile, Precision};
 use crate::gpu_sim::roofline::{OpCost, Roofline};
 use crate::kernels::selector::{KernelKind, SelectorInputs};
+use crate::shard::ShardPlan;
 
 /// Predicted cost of running one kernel on one request.
 #[derive(Clone, Copy, Debug)]
@@ -97,6 +98,43 @@ pub fn kernel_cost(device: &DeviceProfile, kind: KernelKind, inp: &SelectorInput
     }
 }
 
+/// Modeled wall-clock speedup of running `kind` on the shard plane under
+/// `plan`, Amdahl-style: the tileable phase scales with the effective
+/// worker count (capped by the tile count), the sequential phase does not.
+///
+/// Sequential fractions per kernel class (measured on the CPU substrate):
+/// dense pays only packing/assembly; FP8 adds the two codec round-trip
+/// passes; the factor chain adds the rank-sized products, and a cold
+/// factorization adds the QR/small-SVD stages of the panel-parallel rSVD.
+///
+/// Returns 1.0 whenever the plan's gates keep the request single-threaded,
+/// so the selector's view matches the executor's routing exactly.
+///
+/// Caveat: the term models the CPU tile plane. Requests that land on an
+/// AOT artifact (square lattice shapes with XLA configured) execute
+/// off-plane, yet are discounted the same way — acceptable while the
+/// artifact lattice is sparse, but worth revisiting if the XLA path
+/// starts serving a meaningful share of traffic.
+pub fn parallel_speedup(kind: KernelKind, inp: &SelectorInputs, plan: &ShardPlan) -> f64 {
+    if !plan.should_parallelize(inp.m, inp.n, inp.k) {
+        return 1.0;
+    }
+    let tiles = plan.grid.tile_count(inp.m, inp.n).max(1);
+    let w = plan.workers.clamp(1, tiles) as f64;
+    let serial_fraction = match kind {
+        KernelKind::DenseF32 | KernelKind::DenseF16 => 0.05,
+        KernelKind::DenseFp8 => 0.10,
+        KernelKind::LowRankFp8 | KernelKind::LowRankAuto => {
+            if inp.factors_cached {
+                0.15
+            } else {
+                0.30
+            }
+        }
+    };
+    1.0 / (serial_fraction + (1.0 - serial_fraction) / w)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +185,24 @@ mod tests {
         let auto = kernel_cost(&d, KernelKind::LowRankAuto, &inp(20480, 512, true));
         let mat = kernel_cost(&d, KernelKind::LowRankFp8, &inp(20480, 512, true));
         assert!(auto.bytes < mat.bytes / 5.0, "auto {} mat {}", auto.bytes, mat.bytes);
+    }
+
+    #[test]
+    fn parallel_speedup_scales_and_gates() {
+        let plan = ShardPlan::default();
+        // Large request: meaningful speedup, below the worker count.
+        let s = parallel_speedup(KernelKind::DenseF32, &inp(4096, 0, true), &plan);
+        assert!(s > 2.0 && s <= plan.workers as f64, "speedup {s}");
+        // Below the size gate: no speedup modeled.
+        let s = parallel_speedup(KernelKind::DenseF32, &inp(128, 0, true), &plan);
+        assert_eq!(s, 1.0);
+        // The factor chain has a larger sequential fraction than dense.
+        let d = parallel_speedup(KernelKind::DenseF32, &inp(4096, 128, false), &plan);
+        let l = parallel_speedup(KernelKind::LowRankFp8, &inp(4096, 128, false), &plan);
+        assert!(l < d, "lowrank {l} vs dense {d}");
+        // Cold factorization parallelizes worse than a warm chain.
+        let warm = parallel_speedup(KernelKind::LowRankFp8, &inp(4096, 128, true), &plan);
+        assert!(warm > l);
     }
 
     #[test]

@@ -9,5 +9,5 @@
 pub mod cost;
 pub mod selector;
 
-pub use cost::{kernel_cost, CostEstimate};
+pub use cost::{kernel_cost, parallel_speedup, CostEstimate};
 pub use selector::{AutoKernelSelector, KernelChoice, KernelKind, SelectorInputs};

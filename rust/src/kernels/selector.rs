@@ -2,8 +2,9 @@
 
 use crate::fp8::{Fp8Format, StorageFormat};
 use crate::gpu_sim::profile::{DeviceProfile, Precision};
-use crate::kernels::cost::{kernel_cost, CostEstimate};
+use crate::kernels::cost::{kernel_cost, parallel_speedup, CostEstimate};
 use crate::lowrank::errors::predicted_rel_error;
+use crate::shard::ShardPlan;
 
 /// The kernels the router can dispatch to — the paper's §4.4 method list.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -132,12 +133,41 @@ pub struct KernelChoice {
 pub struct AutoKernelSelector {
     /// Device the selector optimizes for.
     pub device: DeviceProfile,
+    /// Shard plan of the tile-execution plane, when one is serving; its
+    /// modeled speedup keeps the selector calibrated against the actual
+    /// (parallel) execution substrate.
+    pub shard: Option<ShardPlan>,
 }
 
 impl AutoKernelSelector {
-    /// Bind to a device.
+    /// Bind to a device (single-threaded cost model).
     pub fn new(device: DeviceProfile) -> Self {
-        AutoKernelSelector { device }
+        AutoKernelSelector {
+            device,
+            shard: None,
+        }
+    }
+
+    /// Bind to a device plus the serving shard plan.
+    pub fn with_shard(device: DeviceProfile, plan: ShardPlan) -> Self {
+        AutoKernelSelector {
+            device,
+            shard: Some(plan),
+        }
+    }
+
+    /// Cost + error verdict for one kernel on one request, including the
+    /// shard plane's parallel-speedup term when a plan is bound.
+    pub fn estimate(&self, kind: KernelKind, inp: &SelectorInputs) -> KernelChoice {
+        let mut cost = kernel_cost(&self.device, kind, inp);
+        if let Some(plan) = &self.shard {
+            cost.time_s /= parallel_speedup(kind, inp, plan);
+        }
+        KernelChoice {
+            kind,
+            cost,
+            predicted_error: self.predicted_error(kind, inp),
+        }
     }
 
     /// Predicted relative error of a kernel on this request. Dense kernels
@@ -170,11 +200,7 @@ impl AutoKernelSelector {
                 // LowRankAuto's factored-output trick needs caller opt-in.
                 **k != KernelKind::LowRankAuto || inp.factored_output_ok
             })
-            .map(|&kind| KernelChoice {
-                kind,
-                cost: kernel_cost(&self.device, kind, inp),
-                predicted_error: self.predicted_error(kind, inp),
-            })
+            .map(|&kind| self.estimate(kind, inp))
             .collect();
         out.sort_by(|a, b| a.cost.time_s.partial_cmp(&b.cost.time_s).unwrap());
         out
@@ -305,6 +331,24 @@ mod tests {
         for w in ranked.windows(2) {
             assert!(w[0].cost.time_s <= w[1].cost.time_s);
         }
+    }
+
+    #[test]
+    fn shard_plan_discounts_large_requests_only() {
+        let plain = sel();
+        let sharded = AutoKernelSelector::with_shard(
+            DeviceProfile::rtx4090(),
+            crate::shard::ShardPlan::default(),
+        );
+        let big = inputs(8192, 256);
+        let a = plain.estimate(KernelKind::DenseF32, &big);
+        let b = sharded.estimate(KernelKind::DenseF32, &big);
+        assert!(b.cost.time_s < a.cost.time_s);
+        // Below the gate the two selectors agree exactly.
+        let small = inputs(128, 8);
+        let a = plain.estimate(KernelKind::DenseF32, &small);
+        let b = sharded.estimate(KernelKind::DenseF32, &small);
+        assert_eq!(a.cost.time_s, b.cost.time_s);
     }
 
     #[test]

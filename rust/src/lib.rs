@@ -6,7 +6,7 @@
 //!
 //! - **Layer 3 (this crate)** — the serving coordinator: request router,
 //!   size-bucketed dynamic batcher, factor cache, auto kernel selector,
-//!   worker pool, metrics and CLI.
+//!   worker pool, tile-execution plane, metrics and CLI.
 //! - **Layer 2 (`python/compile/model.py`)** — JAX compute graphs (dense
 //!   GEMM, FP8 GEMM, randomized-SVD factorization, low-rank factor-chain
 //!   application) lowered once, AOT, to HLO text under `artifacts/`.
@@ -18,6 +18,34 @@
 //! (`runtime`), and every substrate the paper depends on — dense linear
 //! algebra ("cuBLAS"), software FP8, a roofline GPU model for the paper's
 //! RTX 4090/H200/B200 numbers — is implemented here from scratch.
+//!
+//! ## Layer-3 module map
+//!
+//! ```text
+//!                       ┌─────────────────────────────────────────────┐
+//!   GemmRequest ──────▶ │ coordinator: service → router → batcher     │
+//!                       │      │ (AutoKernelSelector + kernels::cost: │
+//!                       │      │  roofline × parallel-speedup term)   │
+//!                       │      ▼                                      │
+//!                       │   backend ──▶ runtime (XLA artifacts)       │
+//!                       │      │                                      │
+//!                       │      ▼                                      │
+//!                       │   shard: tile-execution plane               │
+//!                       │   ┌─ ShardPlan {grid, workers,              │
+//!                       │   │             min_parallel_n}             │
+//!                       │   │  tile grid → atomic work-claiming over  │
+//!                       │   │  exec::ThreadPool → per-shard metrics   │
+//!                       │   └─▶ linalg::gemm_panel / fp8 codecs /     │
+//!                       │       shard::rsvd (panel-parallel rSVD) /   │
+//!                       │       lowrank factor chain                  │
+//!                       └─────────────────────────────────────────────┘
+//! ```
+//!
+//! Large requests (`max(m, n) ≥ [shard].min_parallel_n`) are partitioned
+//! into an output tile grid and executed across the shard pool; each tile
+//! has a fixed summation order, so results are bitwise-identical at every
+//! worker count (and, on the default MC/NC-aligned grid, identical to the
+//! single-threaded kernels). Small requests never pay the tiling overhead.
 //!
 //! ## Quickstart
 //!
@@ -49,6 +77,7 @@ pub mod linalg;
 pub mod lowrank;
 pub mod metrics;
 pub mod runtime;
+pub mod shard;
 pub mod trace;
 
 /// Convenience re-exports covering the common public API surface.
@@ -63,4 +92,5 @@ pub mod prelude {
         factorize, lowrank_matmul, DecompMethod, FactorCache, LowRankConfig, LowRankFactor,
         RankStrategy,
     };
+    pub use crate::shard::{ShardExecutor, ShardPlan, TileGrid};
 }

@@ -8,6 +8,9 @@
 //!   and a packed B panel; the hot path used by everything else.
 //! - [`gemm_strided`] — operates on sub-blocks without copies; used by the
 //!   batcher when slicing fused batches.
+//! - [`gemm_panel`] — one output tile of the blocked GEMM, with a
+//!   tile-local (order-deterministic) summation schedule; the per-task
+//!   kernel of the shard execution plane ([`crate::shard`]).
 //!
 //! The micro-kernel mirrors, at CPU scale, the structure the paper's CUDA
 //! kernels have on the GPU: an outer HBM→shared (here L2→L1) tiling plus an
@@ -60,26 +63,78 @@ pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     check(a, b)?;
     let (m, k) = a.shape();
     let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
     // Small problems: blocking/packing overhead dominates; use the naive
     // loop. Cutover measured in §Perf iteration 4 (naive wins at 64³,
     // blocked wins from ~96³ up).
     if m * n * k <= 80 * 80 * 80 {
         return gemm_naive(a, b);
     }
+    let mut c = Matrix::zeros(m, n);
+    blocked_region(a, b, 0, m, 0, n, c.data_mut(), n);
+    Ok(c)
+}
+
+/// One output region `C[r0..r0+rows, c0..c0+cols] = A[r0.., :] · B[:, c0..]`
+/// of the blocked GEMM, materialized as a contiguous rows×cols matrix.
+///
+/// This is the per-tile kernel of the shard execution plane
+/// ([`crate::shard`]). It always runs the blocked/packed path (no naive
+/// cutover), so a tile's summation order is a function of the tile alone:
+/// executing a tile grid in *any* order — or concurrently — reproduces the
+/// same bits. When `r0`/`rows` are multiples of [`MC`] (or `r0 + rows`
+/// hits `m`) and `c0`/`cols` are multiples of [`NC`] (or `c0 + cols` hits
+/// `n`), the per-element order also matches a full-matrix [`gemm_blocked`]
+/// exactly, so tiled execution is bitwise-equal to the monolithic kernel.
+pub fn gemm_panel(
+    a: &Matrix,
+    b: &Matrix,
+    r0: usize,
+    rows: usize,
+    c0: usize,
+    cols: usize,
+) -> Result<Matrix> {
+    check(a, b)?;
+    if r0 + rows > a.rows() || c0 + cols > b.cols() {
+        return Err(Error::ShapeMismatch {
+            op: "gemm_panel",
+            lhs: (r0 + rows, c0 + cols),
+            rhs: (a.rows(), b.cols()),
+        });
+    }
+    let mut c = Matrix::zeros(rows, cols);
+    if rows > 0 && cols > 0 {
+        blocked_region(a, b, r0, rows, c0, cols, c.data_mut(), cols);
+    }
+    Ok(c)
+}
+
+/// Shared blocked core: `C_region = A[r0..r0+rows, :] · B[:, c0..c0+cols]`
+/// written into `cd` (row-major, row stride `c_stride`, region-local
+/// indexing). `gemm_blocked` calls this over the full matrix; `gemm_panel`
+/// over one tile.
+fn blocked_region(
+    a: &Matrix,
+    b: &Matrix,
+    r0: usize,
+    rows: usize,
+    c0: usize,
+    cols: usize,
+    cd: &mut [f32],
+    c_stride: usize,
+) {
+    let k = a.cols();
     let mut bpack = vec![0.0f32; KC * NC];
     for pc in (0..k).step_by(KC) {
         let kc = KC.min(k - pc);
-        for jc in (0..n).step_by(NC) {
-            let nc = NC.min(n - jc);
-            pack_b(b, pc, jc, kc, nc, &mut bpack);
-            for ic in (0..m).step_by(MC) {
-                let mc = MC.min(m - ic);
-                macro_kernel(a, &bpack, &mut c, ic, jc, pc, mc, nc, kc, n);
+        for jc in (0..cols).step_by(NC) {
+            let nc = NC.min(cols - jc);
+            pack_b(b, pc, c0 + jc, kc, nc, &mut bpack);
+            for ic in (0..rows).step_by(MC) {
+                let mc = MC.min(rows - ic);
+                macro_kernel(a, &bpack, cd, c_stride, r0 + ic, ic, jc, mc, nc, kc, pc);
             }
         }
     }
-    Ok(c)
 }
 
 /// Pack `B[pc..pc+kc, jc..jc+nc]` row-major into a contiguous panel.
@@ -94,44 +149,49 @@ fn pack_b(b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, out: &mut [f32
 }
 
 /// Multiply one MC×KC block of A with the packed KC×NC panel of B.
+///
+/// A rows are addressed globally (`a_row0`); C rows region-locally
+/// (`c_row0`, stride `c_stride`) so the same kernel serves both the
+/// full-matrix and the per-tile paths.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn macro_kernel(
     a: &Matrix,
     bpack: &[f32],
-    c: &mut Matrix,
-    ic: usize,
+    cd: &mut [f32],
+    c_stride: usize,
+    a_row0: usize,
+    c_row0: usize,
     jc: usize,
-    pc: usize,
     mc: usize,
     nc: usize,
     kc: usize,
-    n: usize,
+    pc: usize,
 ) {
     let ad = a.data();
     let ka = a.cols();
-    let cd = c.data_mut();
     let mut i = 0;
     // 4-row register tile.
     while i + 4 <= mc {
-        let r0 = ic + i;
+        let ar = a_row0 + i;
         micro_4xn(
-            &ad[(r0) * ka + pc..],
-            &ad[(r0 + 1) * ka + pc..],
-            &ad[(r0 + 2) * ka + pc..],
-            &ad[(r0 + 3) * ka + pc..],
+            &ad[(ar) * ka + pc..],
+            &ad[(ar + 1) * ka + pc..],
+            &ad[(ar + 2) * ka + pc..],
+            &ad[(ar + 3) * ka + pc..],
             bpack,
             kc,
             nc,
-            &mut SplitRows::new(cd, r0, n, jc),
+            &mut SplitRows::new(cd, c_row0 + i, c_stride, jc),
         );
         i += 4;
     }
     // Remainder rows.
     while i < mc {
-        let r = ic + i;
-        let arow = &ad[r * ka + pc..r * ka + pc + kc];
-        let crow = &mut cd[r * n + jc..r * n + jc + nc];
+        let ar = a_row0 + i;
+        let cr = c_row0 + i;
+        let arow = &ad[ar * ka + pc..ar * ka + pc + kc];
+        let crow = &mut cd[cr * c_stride + jc..cr * c_stride + jc + nc];
         for (t, &av) in arow.iter().enumerate() {
             if av == 0.0 {
                 continue;
@@ -154,11 +214,11 @@ struct SplitRows<'a> {
 }
 
 impl<'a> SplitRows<'a> {
-    fn new(cd: &'a mut [f32], r0: usize, n: usize, jc: usize) -> Self {
-        let (a, rest) = cd[r0 * n..].split_at_mut(n);
-        let (b, rest) = rest.split_at_mut(n);
-        let (c, rest) = rest.split_at_mut(n);
-        let (d, _) = rest.split_at_mut(n);
+    fn new(cd: &'a mut [f32], row0: usize, stride: usize, jc: usize) -> Self {
+        let (a, rest) = cd[row0 * stride..].split_at_mut(stride);
+        let (b, rest) = rest.split_at_mut(stride);
+        let (c, rest) = rest.split_at_mut(stride);
+        let (d, _) = rest.split_at_mut(stride);
         SplitRows {
             r0: &mut a[jc..],
             r1: &mut b[jc..],
@@ -384,5 +444,62 @@ mod tests {
     #[test]
     fn flops_formula() {
         assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+
+    #[test]
+    fn panel_full_range_is_bitwise_blocked() {
+        // Above the naive cutover, gemm_panel over the full output range
+        // must reproduce gemm_blocked exactly (same code path).
+        let mut rng = Pcg64::seeded(21);
+        let (m, k, n) = (130, 140, 150);
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let b = Matrix::gaussian(k, n, &mut rng);
+        let full = gemm_blocked(&a, &b).unwrap();
+        let panel = gemm_panel(&a, &b, 0, m, 0, n).unwrap();
+        assert_eq!(full.data(), panel.data());
+    }
+
+    #[test]
+    fn aligned_panels_tile_bitwise_into_blocked() {
+        // MC/NC-aligned tiles assembled into the full matrix are bitwise
+        // identical to the monolithic blocked GEMM — the invariant the
+        // shard plane's equivalence tests rely on.
+        let mut rng = Pcg64::seeded(22);
+        let (m, k, n) = (300, 96, 520);
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let b = Matrix::gaussian(k, n, &mut rng);
+        let full = gemm_blocked(&a, &b).unwrap();
+        let mut tiled = Matrix::zeros(m, n);
+        for r0 in (0..m).step_by(MC) {
+            let rows = MC.min(m - r0);
+            for c0 in (0..n).step_by(NC) {
+                let cols = NC.min(n - c0);
+                let tile = gemm_panel(&a, &b, r0, rows, c0, cols).unwrap();
+                for i in 0..rows {
+                    tiled.row_mut(r0 + i)[c0..c0 + cols].copy_from_slice(tile.row(i));
+                }
+            }
+        }
+        assert_eq!(full.data(), tiled.data());
+    }
+
+    #[test]
+    fn unaligned_panels_match_within_tolerance() {
+        // Arbitrary (unaligned) regions still compute the right product,
+        // just with a tile-local summation order.
+        let mut rng = Pcg64::seeded(23);
+        let a = Matrix::gaussian(57, 83, &mut rng);
+        let b = Matrix::gaussian(83, 61, &mut rng);
+        let panel = gemm_panel(&a, &b, 11, 30, 7, 40).unwrap();
+        let expect = a.block(11, 0, 30, 83).matmul(&b.block(0, 7, 83, 40));
+        assert!(panel.rel_frobenius_distance(&expect) < 1e-5);
+    }
+
+    #[test]
+    fn panel_out_of_range_rejected() {
+        let a = Matrix::zeros(8, 8);
+        let b = Matrix::zeros(8, 8);
+        assert!(gemm_panel(&a, &b, 4, 8, 0, 4).is_err());
+        assert!(gemm_panel(&a, &b, 0, 4, 4, 8).is_err());
     }
 }

@@ -66,6 +66,7 @@ USAGE: lowrank-gemm <command> [options]
 
 COMMANDS:
   serve      --requests N --size N [--config F] [--workers W] [--no-xla]
+             [--shard-workers W] [--tile-m M] [--tile-n N] [--min-parallel-n N]
              start the service and replay a synthetic transformer trace
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
@@ -95,6 +96,11 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
         cfg.use_xla = false;
     }
     cfg.service.workers = args.get_parse("workers", cfg.service.workers)?;
+    // `[shard]` overrides: the tile-execution plane's knobs.
+    cfg.shard.workers = args.get_parse("shard-workers", cfg.shard.workers)?;
+    cfg.shard.tile_m = args.get_parse("tile-m", cfg.shard.tile_m)?;
+    cfg.shard.tile_n = args.get_parse("tile-n", cfg.shard.tile_n)?;
+    cfg.shard.min_parallel_n = args.get_parse("min-parallel-n", cfg.shard.min_parallel_n)?;
     Ok(cfg)
 }
 

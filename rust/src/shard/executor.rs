@@ -1,0 +1,526 @@
+//! The tile executor: atomic work-claiming over [`crate::exec::ThreadPool`].
+//!
+//! One GEMM becomes `tile_count` independent tasks (one per output tile —
+//! no inter-task dependencies, since C tiles are disjoint). The executor
+//! submits `min(workers, tasks)` *claim jobs* to its dedicated pool; each
+//! claim job races an atomic cursor over the task list, computes every
+//! tile it wins with [`gemm_panel`] (packing the B panel it needs per
+//! tile, exactly like the monolithic kernel), and streams the finished
+//! tile back over a channel. The caller assembles tiles into C in arrival
+//! order — legal because tiles are disjoint and each tile's bits are
+//! fixed by the tile alone.
+//!
+//! Determinism contract: for a fixed [`ShardPlan`] grid, results are
+//! **bitwise identical for every worker count** (the per-tile summation
+//! order never depends on who computes the tile or when). With the
+//! default MC/NC-aligned grid, dense results are additionally bitwise
+//! identical to single-threaded [`gemm_blocked`] whenever the monolithic
+//! kernel takes its blocked path.
+//!
+//! The pool is *owned* by the executor and separate from the coordinator's
+//! request-level worker pool: a request worker blocks in [`ShardExecutor`]
+//! while its tiles run here, which would deadlock on a shared FIFO pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::exec::ThreadPool;
+use crate::fp8::{dequantize, quantize, StorageFormat};
+use crate::linalg::gemm::{gemm_blocked, gemm_panel};
+use crate::linalg::matrix::Matrix;
+use crate::lowrank::factor::LowRankFactor;
+use crate::metrics::MetricsRegistry;
+use crate::shard::plan::{ShardPlan, Tile};
+
+/// Executes GEMM-shaped work over a tile grid on a dedicated worker pool.
+pub struct ShardExecutor {
+    plan: ShardPlan,
+    pool: ThreadPool,
+    metrics: Option<Arc<MetricsRegistry>>,
+}
+
+impl ShardExecutor {
+    /// Executor with a fresh pool of `plan.workers` threads, no metrics.
+    pub fn new(plan: ShardPlan) -> Self {
+        ShardExecutor {
+            pool: ThreadPool::new(plan.workers),
+            plan,
+            metrics: None,
+        }
+    }
+
+    /// Executor reporting per-shard timings into `metrics`
+    /// (`shard.tile_us` histogram, `shard.*` counters).
+    pub fn with_metrics(plan: ShardPlan, metrics: Arc<MetricsRegistry>) -> Self {
+        ShardExecutor {
+            pool: ThreadPool::new(plan.workers),
+            plan,
+            metrics: Some(metrics),
+        }
+    }
+
+    /// The plan this executor runs.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Claim jobs submitted to the pool but not yet started (other GEMMs
+    /// in flight ahead of ours).
+    pub fn pending_jobs(&self) -> u64 {
+        self.pool.pending()
+    }
+
+    fn count(&self, name: &str) {
+        if let Some(m) = &self.metrics {
+            m.count(name, 1);
+        }
+    }
+
+    /// `C = A · B`. Routes to the tile plane when the plan's gates pass,
+    /// to the single-threaded blocked kernel otherwise.
+    pub fn gemm(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        if a.cols() != b.rows() {
+            return Err(Error::ShapeMismatch {
+                op: "shard gemm",
+                lhs: a.shape(),
+                rhs: b.shape(),
+            });
+        }
+        let (m, k) = a.shape();
+        let n = b.cols();
+        if !self.plan.should_parallelize(m, n, k) {
+            self.count("shard.gemm.serial");
+            return gemm_blocked(a, b);
+        }
+        self.count("shard.gemm.parallel");
+        self.mm_sharded(a, b)
+    }
+
+    /// FP8/F16 dense GEMM: both operands round-trip the storage codec
+    /// (per-tensor scale computed over the whole operand, matching the
+    /// single-threaded [`crate::fp8::quantized_matmul`] bit-for-bit), then
+    /// the f32 product runs on the tile plane.
+    pub fn quantized_matmul(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        format: StorageFormat,
+    ) -> Result<Matrix> {
+        let qa = dequantize(&quantize(a, format));
+        let qb = dequantize(&quantize(b, format));
+        self.gemm(&qa, &qb)
+    }
+
+    /// `C = Aᵀ · B` with the output row-panel-sharded (the rSVD projection
+    /// primitive). Bitwise identical to [`Matrix::matmul_tn`] at every
+    /// worker count: each output row accumulates over `t` in the same
+    /// order on both paths.
+    pub fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        if a.rows() != b.rows() {
+            return Err(Error::ShapeMismatch {
+                op: "shard matmul_tn",
+                lhs: a.shape(),
+                rhs: b.shape(),
+            });
+        }
+        let m = a.cols();
+        let n = b.cols();
+        let k = a.rows();
+        if !self.plan.should_parallelize(m, n, k) {
+            return Ok(a.matmul_tn(b));
+        }
+        // Row panels only: the projection shapes are thin on one side, so
+        // column-splitting would just shrink the per-task row sweep.
+        let tile_m = self.plan.grid.tile_m.max(1);
+        let tiles: Vec<Tile> = (0..m)
+            .step_by(tile_m)
+            .map(|r0| Tile {
+                r0,
+                r1: (r0 + tile_m).min(m),
+                c0: 0,
+                c1: n,
+            })
+            .collect();
+        let a = Arc::new(a.clone());
+        let b = Arc::new(b.clone());
+        let ntasks = tiles.len();
+        let tiles = Arc::new(tiles);
+        let work: WorkFn = Arc::new(move |i| {
+            let t = tiles[i];
+            Ok((t, tn_panel(&a, &b, t.r0, t.r1)))
+        });
+        let parts = self.run_claimed(ntasks, work)?;
+        Ok(assemble(m, n, parts))
+    }
+
+    /// Factor-chain GEMM (`C ≈ U_A Σ_A V_Aᵀ U_B Σ_B V_Bᵀ`), every dense
+    /// product routed through the tile plane. Mirrors
+    /// [`crate::lowrank::lowrank_matmul`] including its contraction-order
+    /// choice; the rank-sized inner products fall under the parallel gates
+    /// and run single-threaded, the m×n-sized reconstruction shards.
+    pub fn lowrank_matmul(&self, fa: &LowRankFactor, fb: &LowRankFactor) -> Result<Matrix> {
+        if fa.orig_shape.1 != fb.orig_shape.0 {
+            return Err(Error::ShapeMismatch {
+                op: "shard lowrank gemm",
+                lhs: fa.orig_shape,
+                rhs: fb.orig_shape,
+            });
+        }
+        let ua = fa.u_dense();
+        let vat = fa.vt_dense();
+        let ub = fb.u_dense();
+        let vbt = fb.vt_dense();
+
+        let mut t2 = self.gemm(&vat, &ub)?;
+        t2.scale_rows_in_place(&fa.s);
+        t2.scale_cols_in_place(&fb.s);
+
+        let (m, _) = fa.orig_shape;
+        let (_, n) = fb.orig_shape;
+        if m <= n {
+            let t3 = self.gemm(&ua, &t2)?;
+            self.gemm(&t3, &vbt)
+        } else {
+            let t3 = self.gemm(&t2, &vbt)?;
+            self.gemm(&ua, &t3)
+        }
+    }
+
+    /// Factor × dense GEMM (`A` factored, `B` dense) on the tile plane.
+    pub fn lowrank_matmul_dense_rhs(&self, fa: &LowRankFactor, b: &Matrix) -> Result<Matrix> {
+        if fa.orig_shape.1 != b.rows() {
+            return Err(Error::ShapeMismatch {
+                op: "shard lowrank×dense",
+                lhs: fa.orig_shape,
+                rhs: b.shape(),
+            });
+        }
+        let vat = fa.vt_dense();
+        let mut t = self.gemm(&vat, b)?;
+        t.scale_rows_in_place(&fa.s);
+        self.gemm(&fa.u_dense(), &t)
+    }
+
+    /// Dense × factor GEMM (`B` factored) on the tile plane.
+    pub fn lowrank_matmul_dense_lhs(&self, a: &Matrix, fb: &LowRankFactor) -> Result<Matrix> {
+        if a.cols() != fb.orig_shape.0 {
+            return Err(Error::ShapeMismatch {
+                op: "shard dense×lowrank",
+                lhs: a.shape(),
+                rhs: fb.orig_shape,
+            });
+        }
+        let ub = fb.u_dense();
+        let mut t = self.gemm(a, &ub)?;
+        t.scale_cols_in_place(&fb.s);
+        self.gemm(&t, &fb.vt_dense())
+    }
+
+    /// The sharded dense product: tile grid → claim jobs → assembly.
+    ///
+    /// The operands are cloned into `Arc`s so the claim jobs are
+    /// `'static` for the pool. That copy is O(m·k + k·n) against the
+    /// product's O(m·k·n) — under the FLOP gate it is < 1% of the work —
+    /// but it does hold a second transient copy of A/B; a zero-copy
+    /// scoped-execution pool is the known follow-up if memory headroom
+    /// ever matters at N ≳ 16k.
+    fn mm_sharded(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let m = a.rows();
+        let n = b.cols();
+        let tiles = self.plan.grid.tiles(m, n);
+        let ntasks = tiles.len();
+        let a = Arc::new(a.clone());
+        let b = Arc::new(b.clone());
+        let tiles = Arc::new(tiles);
+        let work: WorkFn = Arc::new(move |i| {
+            let t = tiles[i];
+            gemm_panel(&a, &b, t.r0, t.rows(), t.c0, t.cols()).map(|p| (t, p.into_vec()))
+        });
+        let parts = self.run_claimed(ntasks, work)?;
+        Ok(assemble(m, n, parts))
+    }
+
+    /// Fan `ntasks` out to `min(workers, ntasks)` claim jobs and collect
+    /// every task's result. Tasks are claimed with an atomic cursor, so
+    /// load-balancing is automatic: a worker stuck on a heavy remainder
+    /// tile simply claims fewer tiles.
+    fn run_claimed(&self, ntasks: usize, work: WorkFn) -> Result<Vec<(Tile, Vec<f32>)>> {
+        let next = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel::<Result<(Tile, Vec<f32>)>>();
+        let nworkers = self.plan.workers.clamp(1, ntasks.max(1));
+        for w in 0..nworkers {
+            let work = work.clone();
+            let next = next.clone();
+            let tx = tx.clone();
+            let metrics = self.metrics.clone();
+            self.pool.execute(move || {
+                let mut claimed = 0u64;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= ntasks {
+                        break;
+                    }
+                    let t0 = Instant::now();
+                    let res = work(i);
+                    if let Some(m) = &metrics {
+                        m.observe("shard.tile_us", t0.elapsed().as_micros() as f64);
+                    }
+                    claimed += 1;
+                    if tx.send(res).is_err() {
+                        break; // caller bailed on an earlier error
+                    }
+                }
+                if claimed > 0 {
+                    if let Some(m) = &metrics {
+                        m.count(&format!("shard.worker.{w}.tiles"), claimed);
+                    }
+                }
+            });
+        }
+        drop(tx);
+        let mut out = Vec::with_capacity(ntasks);
+        for msg in rx {
+            out.push(msg?);
+        }
+        if out.len() != ntasks {
+            return Err(Error::Service(format!(
+                "shard executor lost tiles: {}/{ntasks} arrived",
+                out.len()
+            )));
+        }
+        if let Some(m) = &self.metrics {
+            m.count("shard.tasks", ntasks as u64);
+        }
+        Ok(out)
+    }
+}
+
+/// A claimable task: tile index → (tile, row-major tile payload).
+type WorkFn = Arc<dyn Fn(usize) -> Result<(Tile, Vec<f32>)> + Send + Sync>;
+
+/// Scatter disjoint tiles into the m×n output.
+fn assemble(m: usize, n: usize, parts: Vec<(Tile, Vec<f32>)>) -> Matrix {
+    let mut c = Matrix::zeros(m, n);
+    for (t, buf) in parts {
+        let w = t.cols();
+        for (ri, r) in (t.r0..t.r1).enumerate() {
+            c.row_mut(r)[t.c0..t.c1].copy_from_slice(&buf[ri * w..(ri + 1) * w]);
+        }
+    }
+    c
+}
+
+/// One row panel of `out = Aᵀ · B`: rows `i0..i1` of the m×n output
+/// (`m = A.cols`). Per-element accumulation order (ascending `t`, with the
+/// same zero-skip) is identical to [`Matrix::matmul_tn`], so panels are
+/// bitwise-exact fragments of the single-threaded result.
+fn tn_panel(a: &Matrix, b: &Matrix, i0: usize, i1: usize) -> Vec<f32> {
+    let n = b.cols();
+    let k = a.rows();
+    let w = i1 - i0;
+    let mut out = vec![0.0f32; w * n];
+    for t in 0..k {
+        let a_row = a.row(t);
+        let b_row = b.row(t);
+        for i in i0..i1 {
+            let av = a_row[i];
+            if av == 0.0 {
+                continue;
+            }
+            let o = &mut out[(i - i0) * n..(i - i0 + 1) * n];
+            for (ov, &bv) in o.iter_mut().zip(b_row) {
+                *ov += av * bv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::quantized_matmul;
+    use crate::linalg::rng::Pcg64;
+    use crate::lowrank::factor::LowRankConfig;
+    use crate::lowrank::factorize;
+    use crate::lowrank::rank::RankStrategy;
+    use crate::shard::plan::TileGrid;
+
+    fn exec(workers: usize) -> ShardExecutor {
+        ShardExecutor::new(ShardPlan {
+            grid: TileGrid::default(),
+            workers,
+            min_parallel_n: 64,
+        })
+    }
+
+    #[test]
+    fn sharded_dense_is_bitwise_blocked_square() {
+        let mut rng = Pcg64::seeded(301);
+        let a = Matrix::gaussian(320, 320, &mut rng);
+        let b = Matrix::gaussian(320, 320, &mut rng);
+        let serial = gemm_blocked(&a, &b).unwrap();
+        let sharded = exec(3).gemm(&a, &b).unwrap();
+        assert_eq!(serial.data(), sharded.data());
+    }
+
+    #[test]
+    fn sharded_dense_is_bitwise_blocked_tall_skinny() {
+        let mut rng = Pcg64::seeded(302);
+        // Tall output with a non-divisible row remainder (648 = 2·256+136).
+        let a = Matrix::gaussian(648, 320, &mut rng);
+        let b = Matrix::gaussian(320, 96, &mut rng);
+        let serial = gemm_blocked(&a, &b).unwrap();
+        let sharded = exec(4).gemm(&a, &b).unwrap();
+        assert_eq!(serial.data(), sharded.data());
+    }
+
+    #[test]
+    fn sharded_dense_handles_remainder_tiles() {
+        let mut rng = Pcg64::seeded(303);
+        // Both dimensions off the tile grid: 300×520 output.
+        let a = Matrix::gaussian(300, 96, &mut rng);
+        let b = Matrix::gaussian(96, 520, &mut rng);
+        let serial = gemm_blocked(&a, &b).unwrap();
+        let sharded = exec(3).gemm(&a, &b).unwrap();
+        assert_eq!(serial.data(), sharded.data());
+    }
+
+    #[test]
+    fn worker_count_never_changes_bits() {
+        let mut rng = Pcg64::seeded(304);
+        let a = Matrix::gaussian(520, 200, &mut rng);
+        let b = Matrix::gaussian(200, 330, &mut rng);
+        let one = exec(1).gemm(&a, &b).unwrap();
+        for workers in [2, 3, 8] {
+            let many = exec(workers).gemm(&a, &b).unwrap();
+            assert_eq!(one.data(), many.data(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn small_requests_stay_serial() {
+        let mut rng = Pcg64::seeded(305);
+        let a = Matrix::gaussian(32, 32, &mut rng);
+        let b = Matrix::gaussian(32, 32, &mut rng);
+        let metrics = Arc::new(MetricsRegistry::new());
+        let ex = ShardExecutor::with_metrics(ShardPlan::default(), metrics.clone());
+        let c = ex.gemm(&a, &b).unwrap();
+        assert!(c.rel_frobenius_distance(&a.matmul(&b)) < 1e-6);
+        let counters = metrics.counters();
+        assert_eq!(counters.get("shard.gemm.serial"), Some(&1));
+        assert_eq!(counters.get("shard.gemm.parallel"), None);
+    }
+
+    #[test]
+    fn fp8_sharded_is_bitwise_quantized_matmul() {
+        let mut rng = Pcg64::seeded(306);
+        let a = Matrix::gaussian(256, 192, &mut rng);
+        let b = Matrix::gaussian(192, 320, &mut rng);
+        let fmt = StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3);
+        let serial = quantized_matmul(&a, &b, fmt);
+        let sharded = exec(4).quantized_matmul(&a, &b, fmt).unwrap();
+        assert_eq!(serial.data(), sharded.data());
+    }
+
+    #[test]
+    fn matmul_tn_sharded_is_bitwise_serial() {
+        let mut rng = Pcg64::seeded(307);
+        // out is 640×40 (row panels), k = 1024 — the rSVD projection shape.
+        let a = Matrix::gaussian(1024, 640, &mut rng);
+        let b = Matrix::gaussian(1024, 40, &mut rng);
+        let serial = a.matmul_tn(&b);
+        let sharded = exec(3).matmul_tn(&a, &b).unwrap();
+        assert_eq!(serial.data(), sharded.data());
+    }
+
+    #[test]
+    fn factor_chain_matches_serial_chain() {
+        let mut rng = Pcg64::seeded(308);
+        let a = Matrix::low_rank(768, 512, 16, &mut rng);
+        let b = Matrix::low_rank(512, 768, 16, &mut rng);
+        let cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(16),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let fa = factorize(&a, &cfg).unwrap();
+        let fb = factorize(&b, &cfg).unwrap();
+        let serial = crate::lowrank::lowrank_matmul(&fa, &fb);
+        // Bitwise across worker counts…
+        let c1 = exec(1).lowrank_matmul(&fa, &fb).unwrap();
+        let c4 = exec(4).lowrank_matmul(&fa, &fb).unwrap();
+        assert_eq!(c1.data(), c4.data());
+        // …and bitwise against the monolithic chain (aligned default grid,
+        // every constituent product lands on the same kernel path).
+        assert_eq!(serial.data(), c4.data());
+    }
+
+    #[test]
+    fn dense_rhs_and_lhs_paths_match_serial() {
+        let mut rng = Pcg64::seeded(309);
+        let w = Matrix::low_rank(640, 512, 12, &mut rng);
+        let x = Matrix::gaussian(512, 640, &mut rng);
+        let cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(12),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let fw = factorize(&w, &cfg).unwrap();
+        let serial_rhs = crate::lowrank::lowrank_matmul_dense_rhs(&fw, &x);
+        let sharded_rhs = exec(4).lowrank_matmul_dense_rhs(&fw, &x).unwrap();
+        assert_eq!(serial_rhs.data(), sharded_rhs.data());
+
+        let y = Matrix::gaussian(640, 640, &mut rng);
+        let fw2 = factorize(&Matrix::low_rank(640, 512, 12, &mut rng), &cfg).unwrap();
+        let serial_lhs = crate::lowrank::lowrank_matmul_dense_lhs(&y, &fw2);
+        let sharded_lhs = exec(4).lowrank_matmul_dense_lhs(&y, &fw2).unwrap();
+        assert_eq!(serial_lhs.data(), sharded_lhs.data());
+    }
+
+    #[test]
+    fn per_shard_metrics_recorded() {
+        let mut rng = Pcg64::seeded(310);
+        let a = Matrix::gaussian(512, 128, &mut rng);
+        let b = Matrix::gaussian(128, 512, &mut rng);
+        let metrics = Arc::new(MetricsRegistry::new());
+        let ex = ShardExecutor::with_metrics(
+            ShardPlan {
+                grid: TileGrid::default(),
+                workers: 4,
+                min_parallel_n: 64,
+            },
+            metrics.clone(),
+        );
+        ex.gemm(&a, &b).unwrap();
+        let counters = metrics.counters();
+        assert_eq!(counters.get("shard.gemm.parallel"), Some(&1));
+        assert_eq!(counters.get("shard.tasks"), Some(&4)); // 2×2 grid
+        let worker_tiles: u64 = counters
+            .iter()
+            .filter(|(k, _)| k.starts_with("shard.worker."))
+            .map(|(_, v)| *v)
+            .sum();
+        assert_eq!(worker_tiles, 4, "every tile attributed to a worker");
+        let hists = metrics.histogram_summaries();
+        assert_eq!(hists.get("shard.tile_us").map(|h| h.count), Some(4));
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let ex = exec(2);
+        let a = Matrix::zeros(8, 9);
+        let b = Matrix::zeros(10, 8);
+        assert!(ex.gemm(&a, &b).is_err());
+        assert!(ex.matmul_tn(&a, &b).is_err());
+    }
+
+    #[test]
+    fn pending_jobs_observable() {
+        let ex = exec(2);
+        // Nothing queued at rest.
+        assert_eq!(ex.pending_jobs(), 0);
+    }
+}

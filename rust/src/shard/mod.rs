@@ -1,0 +1,46 @@
+//! The shard execution plane: block-partitioned parallel GEMM.
+//!
+//! The paper's throughput headline comes from memory-bandwidth-aware
+//! tiling; this module is the serving-side equivalent for the CPU
+//! substrate: every large `C = A·B` is partitioned into an output tile
+//! grid, each tile becomes one dependency-free task (tiles of C are
+//! disjoint, and each task reads only its A row panel and B column
+//! panel), and the task set executes across a dedicated
+//! [`crate::exec::ThreadPool`] with atomic work-claiming.
+//!
+//! ```text
+//!              ShardPlan { grid, workers, min_parallel_n }
+//!                               │
+//!   A (m×k) ──┐      ┌──────────┴──────────┐
+//!             ├──▶   │ tile grid over C    │   claim jobs (atomic cursor)
+//!   B (k×n) ──┘      │ ┌────┬────┬────┐    │   ┌──────────┐
+//!                    │ │T0  │T1  │T2  │    ├──▶│ worker 0 │─┐
+//!                    │ ├────┼────┼────┤    │   ├──────────┤ ├─▶ assemble C
+//!                    │ │T3  │T4  │T5  │    ├──▶│ worker 1 │─┘  + shard.tile_us
+//!                    │ └────┴────┴────┘    │   └──────────┘
+//!                    └─────────────────────┘
+//! ```
+//!
+//! Covered hot paths, all behind one [`ShardExecutor`]:
+//!
+//! - **dense blocked GEMM** — per-tile [`crate::linalg::gemm::gemm_panel`]
+//!   (same packing and micro-kernel as the monolithic kernel),
+//! - **FP8 dense GEMM** — codec round-trip, then the sharded f32 product,
+//! - **the low-rank factor chain** — every constituent product routed
+//!   through the plane, including **panel-parallel randomized SVD**
+//!   ([`rsvd_sharded`]): the `A·Ω` range sketch and the `Qᵀ·A` / `Aᵀ·Q`
+//!   projections are row-panel-sharded across workers.
+//!
+//! Determinism: a tile's bits depend only on the tile, never on which
+//! worker computes it or when, so results are bitwise identical across
+//! worker counts — and, with the default MC/NC-aligned grid, bitwise
+//! identical to the single-threaded kernels. The equivalence tests assert
+//! both properties exactly.
+
+pub mod executor;
+pub mod plan;
+pub mod rsvd;
+
+pub use executor::ShardExecutor;
+pub use plan::{ShardPlan, Tile, TileGrid};
+pub use rsvd::{factorize_sharded, rsvd_sharded};

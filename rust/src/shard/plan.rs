@@ -1,0 +1,219 @@
+//! Tile grids and the sharding decision.
+//!
+//! A [`ShardPlan`] describes how the tile-execution plane partitions one
+//! GEMM: the output is cut into an MC×NC-aligned [`TileGrid`], each tile
+//! becomes one independent task, and `workers` claim jobs race over the
+//! task list. `min_parallel_n` plus a flat FLOP floor gate the plane so
+//! small requests never pay tiling overhead.
+//!
+//! The default tile (256×256) is a multiple of the blocked kernel's MC/NC
+//! cache blocks, which makes tiled execution **bitwise-equal** to the
+//! monolithic [`crate::linalg::gemm::gemm_blocked`] (see
+//! [`crate::linalg::gemm::gemm_panel`] for the argument). Changing the
+//! tile to non-multiples keeps results correct to float tolerance but
+//! gives up the bitwise guarantee against the monolithic kernel; the
+//! guarantee *between worker counts* holds for any tile shape, because the
+//! per-tile summation order never depends on who executes the tile.
+
+use crate::config::schema::ShardSettings;
+
+/// Work floor (2·m·k·n FLOPs) below which tiling is pure overhead even
+/// when the shapes clear `min_parallel_n` — roughly a millisecond of
+/// single-core GEMM.
+pub const MIN_PARALLEL_FLOPS: f64 = (1u64 << 24) as f64;
+
+/// One output tile: rows `r0..r1`, columns `c0..c1` of C.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    /// First output row.
+    pub r0: usize,
+    /// One past the last output row.
+    pub r1: usize,
+    /// First output column.
+    pub c0: usize,
+    /// One past the last output column.
+    pub c1: usize,
+}
+
+impl Tile {
+    /// Tile height.
+    pub fn rows(&self) -> usize {
+        self.r1 - self.r0
+    }
+
+    /// Tile width.
+    pub fn cols(&self) -> usize {
+        self.c1 - self.c0
+    }
+}
+
+/// Regular output tiling (last row/column of tiles absorbs remainders).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    /// Tile height (output rows per task).
+    pub tile_m: usize,
+    /// Tile width (output columns per task).
+    pub tile_n: usize,
+}
+
+impl Default for TileGrid {
+    fn default() -> Self {
+        TileGrid {
+            tile_m: 256,
+            tile_n: 256,
+        }
+    }
+}
+
+impl TileGrid {
+    /// Grid with the given tile shape (clamped to ≥ 1).
+    pub fn new(tile_m: usize, tile_n: usize) -> Self {
+        TileGrid {
+            tile_m: tile_m.max(1),
+            tile_n: tile_n.max(1),
+        }
+    }
+
+    /// Enumerate the tiles of an `m×n` output, row-major.
+    pub fn tiles(&self, m: usize, n: usize) -> Vec<Tile> {
+        let mut out = Vec::with_capacity(self.tile_count(m, n));
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + self.tile_m.max(1)).min(m);
+            let mut c0 = 0;
+            while c0 < n {
+                let c1 = (c0 + self.tile_n.max(1)).min(n);
+                out.push(Tile { r0, r1, c0, c1 });
+                c0 = c1;
+            }
+            r0 = r1;
+        }
+        out
+    }
+
+    /// Number of tiles an `m×n` output decomposes into.
+    pub fn tile_count(&self, m: usize, n: usize) -> usize {
+        m.div_ceil(self.tile_m.max(1)) * n.div_ceil(self.tile_n.max(1))
+    }
+}
+
+/// The tile-execution plan: grid shape, worker count, and the size gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Output tiling.
+    pub grid: TileGrid,
+    /// Worker threads in the shard pool.
+    pub workers: usize,
+    /// Requests with `max(m, n)` below this stay single-threaded.
+    pub min_parallel_n: usize,
+}
+
+impl Default for ShardPlan {
+    fn default() -> Self {
+        ShardPlan {
+            grid: TileGrid::default(),
+            workers: 4,
+            min_parallel_n: 512,
+        }
+    }
+}
+
+impl ShardPlan {
+    /// Should an `m_out×n_out` product over inner dimension `k` run on the
+    /// tile plane? Deliberately independent of `workers`, so the same plan
+    /// routes identically at any pool size — the worker-count bitwise
+    /// equivalence the tests assert.
+    pub fn should_parallelize(&self, m_out: usize, n_out: usize, k: usize) -> bool {
+        m_out.max(n_out) >= self.min_parallel_n
+            && 2.0 * m_out as f64 * k as f64 * n_out as f64 >= MIN_PARALLEL_FLOPS
+    }
+}
+
+impl From<&ShardSettings> for ShardPlan {
+    fn from(s: &ShardSettings) -> ShardPlan {
+        ShardPlan {
+            grid: TileGrid::new(s.tile_m, s.tile_n),
+            workers: s.workers.max(1),
+            min_parallel_n: s.min_parallel_n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_cover_exactly_with_remainders() {
+        let g = TileGrid::new(256, 256);
+        let tiles = g.tiles(300, 520);
+        assert_eq!(tiles.len(), g.tile_count(300, 520));
+        assert_eq!(tiles.len(), 2 * 3);
+        // Coverage: every cell in exactly one tile.
+        let mut hit = vec![0u8; 300 * 520];
+        for t in &tiles {
+            assert!(t.r1 <= 300 && t.c1 <= 520);
+            assert!(t.rows() > 0 && t.cols() > 0);
+            for r in t.r0..t.r1 {
+                for c in t.c0..t.c1 {
+                    hit[r * 520 + c] += 1;
+                }
+            }
+        }
+        assert!(hit.iter().all(|&h| h == 1));
+        // Remainder tiles exist.
+        assert!(tiles.iter().any(|t| t.rows() == 44));
+        assert!(tiles.iter().any(|t| t.cols() == 8));
+    }
+
+    #[test]
+    fn tile_count_empty_and_exact() {
+        let g = TileGrid::new(128, 128);
+        assert_eq!(g.tile_count(0, 256), 0);
+        assert_eq!(g.tile_count(256, 256), 4);
+        assert!(g.tiles(0, 256).is_empty());
+    }
+
+    #[test]
+    fn should_parallelize_gates() {
+        let p = ShardPlan {
+            grid: TileGrid::default(),
+            workers: 4,
+            min_parallel_n: 512,
+        };
+        // Big square: yes.
+        assert!(p.should_parallelize(1024, 1024, 1024));
+        // Below the size gate: no.
+        assert!(!p.should_parallelize(256, 256, 4096));
+        // Tall-skinny with a large side and real work: yes.
+        assert!(p.should_parallelize(4096, 64, 1024));
+        // Clears the size gate but trivial work (thin k): no.
+        assert!(!p.should_parallelize(4096, 8, 8));
+        // Degenerate: no.
+        assert!(!p.should_parallelize(0, 0, 128));
+    }
+
+    #[test]
+    fn plan_from_settings_clamps() {
+        let s = ShardSettings {
+            workers: 0,
+            tile_m: 0,
+            tile_n: 512,
+            min_parallel_n: 300,
+        };
+        let p = ShardPlan::from(&s);
+        assert_eq!(p.workers, 1);
+        assert_eq!(p.grid.tile_m, 1);
+        assert_eq!(p.grid.tile_n, 512);
+        assert_eq!(p.min_parallel_n, 300);
+    }
+
+    #[test]
+    fn default_tile_is_cache_block_aligned() {
+        // The bitwise-vs-monolithic guarantee needs tile_m % MC == 0 and
+        // tile_n % NC == 0 (MC = 128, NC = 256 in linalg::gemm).
+        let g = TileGrid::default();
+        assert_eq!(g.tile_m % 128, 0);
+        assert_eq!(g.tile_n % 256, 0);
+    }
+}

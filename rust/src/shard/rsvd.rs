@@ -1,0 +1,225 @@
+//! Panel-parallel randomized SVD and sharded factorization.
+//!
+//! The two data-parallel passes of Halko's method dominate its cost and
+//! shard cleanly by output row panels:
+//!
+//! - the range sketch `Y = A·Ω` (and its power-iteration refreshes) runs
+//!   on the tile plane's dense GEMM,
+//! - the projections `Z = Aᵀ·Q` and `B = Qᵀ·A` run on the row-panel
+//!   [`ShardExecutor::matmul_tn`] primitive.
+//!
+//! The sequential stages — thin QR re-orthonormalization and the exact
+//! SVD of the small `l×n` projection — stay on the caller thread; they
+//! are `O((m+n) l²)` against the sketches' `O(m n l)`.
+//!
+//! Structure (sketch seed, oversampling, iteration count, truncation)
+//! mirrors [`crate::linalg::rsvd::rsvd`] exactly, so with the tile plane's
+//! deterministic kernels the factorization is bitwise-reproducible at any
+//! worker count.
+
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::qr::qr_thin;
+use crate::linalg::rng::Pcg64;
+use crate::linalg::rsvd::RsvdOptions;
+use crate::linalg::svd::{jacobi_svd, Svd};
+use crate::lowrank::factor::{DecompMethod, LowRankConfig, LowRankFactor};
+use crate::lowrank::rank::{select_rank, RankStrategy};
+use crate::shard::executor::ShardExecutor;
+
+/// Randomized truncated SVD of `a` at rank `r`, with the range sketch and
+/// projections executed on the shard plane.
+pub fn rsvd_sharded(
+    exec: &ShardExecutor,
+    a: &Matrix,
+    r: usize,
+    opts: &RsvdOptions,
+) -> Result<Svd> {
+    let (m, n) = a.shape();
+    let kmax = m.min(n);
+    if r == 0 || r > kmax {
+        return Err(Error::InvalidRank {
+            requested: r,
+            max: kmax,
+        });
+    }
+    let l = (r + opts.oversample).min(kmax);
+    let mut rng = Pcg64::seeded(opts.seed);
+
+    // Stage A: range finder. Y = A Ω, Ω ∈ R^{n×l} Gaussian — the sketch is
+    // drawn on the caller thread (same seed ⇒ same Ω as the serial path);
+    // the m×l pass over A is row-panel-sharded.
+    let omega = Matrix::gaussian(n, l, &mut rng);
+    let mut y = exec.gemm(a, &omega)?;
+    let mut q = qr_thin(&y).q;
+
+    // Power iterations with re-orthonormalization each half-step.
+    for _ in 0..opts.power_iters {
+        let z = exec.matmul_tn(a, &q)?; // n×l, row-panel-sharded
+        let qz = qr_thin(&z).q;
+        y = exec.gemm(a, &qz)?;
+        q = qr_thin(&y).q;
+    }
+
+    // Stage B: B = Qᵀ A (l×n, row-panel-sharded), small exact SVD of B.
+    let b = exec.matmul_tn(&q, a)?;
+    let small = jacobi_svd(&b)?;
+
+    // U = Q · U_B, truncate to r (rank-sized product: routed serial).
+    let u = exec.gemm(&q, &small.u.take_cols(r.min(small.s.len())))?;
+    Ok(Svd {
+        u,
+        s: small.s[..r.min(small.s.len())].to_vec(),
+        vt: small.vt.take_rows(r),
+    })
+}
+
+/// Decompose a dense matrix under `cfg` with panel-parallel randomized
+/// SVD. Mirrors [`crate::lowrank::factorize`] (including the spectrum
+/// probe for the adaptive rank strategies); the exact-SVD and Lanczos
+/// methods are inherently sequential and delegate to the serial path.
+pub fn factorize_sharded(
+    exec: &ShardExecutor,
+    a: &Matrix,
+    cfg: &LowRankConfig,
+) -> Result<LowRankFactor> {
+    if cfg.method != DecompMethod::RandomizedSvd {
+        return crate::lowrank::factorize(a, cfg);
+    }
+    let (m, n) = a.shape();
+    let kmax = m.min(n);
+
+    let rank = match cfg.rank {
+        RankStrategy::Fixed(_)
+        | RankStrategy::FixedFraction(_)
+        | RankStrategy::HardwareAware { .. } => select_rank(
+            &cfg.rank,
+            m,
+            n,
+            &[],
+            &crate::gpu_sim::profile::DeviceProfile::rtx4090(),
+        ),
+        RankStrategy::EnergyFraction(_) | RankStrategy::ErrorBound(_) => {
+            let probe_rank = (kmax / 4).clamp(1, kmax.min(64).max(1));
+            let probe = rsvd_sharded(exec, a, probe_rank, &cfg.rsvd)?;
+            select_rank(
+                &cfg.rank,
+                m,
+                n,
+                &probe.s,
+                &crate::gpu_sim::profile::DeviceProfile::rtx4090(),
+            )
+        }
+    };
+    let rank = rank.clamp(1, kmax);
+
+    let svd = rsvd_sharded(exec, a, rank, &cfg.rsvd)?;
+    Ok(LowRankFactor::from_svd(
+        &svd.u,
+        svd.s,
+        &svd.vt,
+        cfg.storage,
+        a.shape(),
+        cfg.method,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::StorageFormat;
+    use crate::linalg::rsvd::rsvd;
+    use crate::shard::plan::{ShardPlan, TileGrid};
+
+    fn exec(workers: usize) -> ShardExecutor {
+        ShardExecutor::new(ShardPlan {
+            grid: TileGrid::default(),
+            workers,
+            min_parallel_n: 64,
+        })
+    }
+
+    #[test]
+    fn sharded_rsvd_is_bitwise_serial_rsvd() {
+        // Large enough that the sketch and both projections actually run
+        // on the tile plane (see the FLOP gate), on an MC/NC-aligned grid.
+        let mut rng = Pcg64::seeded(401);
+        let a = Matrix::low_rank_noisy(1536, 512, 24, 1e-4, &mut rng);
+        let opts = RsvdOptions::default();
+        let serial = rsvd(&a, 24, &opts).unwrap();
+        let sharded = rsvd_sharded(&exec(4), &a, 24, &opts).unwrap();
+        assert_eq!(serial.s, sharded.s);
+        assert_eq!(serial.u.data(), sharded.u.data());
+        assert_eq!(serial.vt.data(), sharded.vt.data());
+    }
+
+    #[test]
+    fn worker_count_invariant_factorization() {
+        let mut rng = Pcg64::seeded(402);
+        let a = Matrix::low_rank_noisy(768, 640, 12, 1e-4, &mut rng);
+        let cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(12),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let f1 = factorize_sharded(&exec(1), &a, &cfg).unwrap();
+        let f4 = factorize_sharded(&exec(4), &a, &cfg).unwrap();
+        assert_eq!(f1.s, f4.s);
+        assert_eq!(f1.u.bytes, f4.u.bytes);
+        assert_eq!(f1.vt.bytes, f4.vt.bytes);
+    }
+
+    #[test]
+    fn sharded_factorization_matches_serial_factorize() {
+        let mut rng = Pcg64::seeded(403);
+        let a = Matrix::low_rank_noisy(640, 512, 8, 1e-4, &mut rng);
+        let cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(8),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let serial = crate::lowrank::factorize(&a, &cfg).unwrap();
+        let sharded = factorize_sharded(&exec(3), &a, &cfg).unwrap();
+        assert_eq!(serial.s, sharded.s);
+        assert_eq!(serial.u.bytes, sharded.u.bytes);
+        assert_eq!(serial.vt.bytes, sharded.vt.bytes);
+        assert!(sharded.measured_error(&a) < 2e-3);
+    }
+
+    #[test]
+    fn adaptive_rank_probe_works_sharded() {
+        let mut rng = Pcg64::seeded(404);
+        let a = Matrix::low_rank_noisy(600, 600, 6, 1e-5, &mut rng);
+        let cfg = LowRankConfig {
+            rank: RankStrategy::EnergyFraction(0.99),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let f = factorize_sharded(&exec(4), &a, &cfg).unwrap();
+        assert!(f.rank() >= 1);
+        assert!(f.measured_error(&a) < 0.05);
+    }
+
+    #[test]
+    fn non_rsvd_methods_delegate() {
+        let mut rng = Pcg64::seeded(405);
+        let a = Matrix::low_rank(96, 80, 5, &mut rng);
+        let cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(5),
+            method: DecompMethod::ExactSvd,
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+        let serial = crate::lowrank::factorize(&a, &cfg).unwrap();
+        let sharded = factorize_sharded(&exec(2), &a, &cfg).unwrap();
+        assert_eq!(serial.s, sharded.s);
+    }
+
+    #[test]
+    fn rank_bounds_still_checked() {
+        let a = Matrix::eye(16);
+        let ex = exec(2);
+        assert!(rsvd_sharded(&ex, &a, 0, &RsvdOptions::default()).is_err());
+        assert!(rsvd_sharded(&ex, &a, 17, &RsvdOptions::default()).is_err());
+    }
+}

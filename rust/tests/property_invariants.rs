@@ -9,6 +9,7 @@ use std::sync::Arc;
 use lowrank_gemm::coordinator::{Batcher, BucketKey, GemmRequest, Router, RouterConfig};
 use lowrank_gemm::fp8::{dequantize, quantize, StorageFormat};
 use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::gemm::gemm_strided;
 use lowrank_gemm::linalg::{gemm_blocked, gemm_naive, Matrix, Pcg64};
 use lowrank_gemm::lowrank::{
     eckart_young_error, energy_capture, factorize, lowrank_matmul, FactorCache, LowRankConfig,
@@ -31,6 +32,52 @@ fn prop_blocked_gemm_matches_naive() {
         let c2 = gemm_blocked(&a, &b).unwrap();
         let err = c1.rel_frobenius_distance(&c2);
         assert!(err < 1e-5, "seed {seed} ({m}x{k}x{n}): err {err}");
+    }
+}
+
+/// Property: `gemm_strided` on a random sub-block of a random matmul must
+/// bit-match the corresponding slice of the `gemm_blocked` output. Shapes
+/// are kept under the blocked kernel's naive cutover, where both paths
+/// accumulate per element over ascending `t` with the same zero-skip —
+/// identical order ⇒ identical bits.
+#[test]
+fn prop_gemm_strided_bitmatches_blocked_subblocks() {
+    for seed in 0..25u64 {
+        let mut rng = Pcg64::seeded(9000 + seed);
+        let (m, k, n) = (dims(&mut rng, 2, 50), dims(&mut rng, 2, 50), dims(&mut rng, 2, 50));
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let b = Matrix::gaussian(k, n, &mut rng);
+        let full = gemm_blocked(&a, &b).unwrap();
+
+        let h = dims(&mut rng, 1, m);
+        let w = dims(&mut rng, 1, n);
+        let r0 = dims(&mut rng, 0, m - h);
+        let c0 = dims(&mut rng, 0, n - w);
+
+        let mut out = vec![0.0f32; h * w];
+        gemm_strided(
+            &a.data()[r0 * k..],
+            k,
+            &b.data()[c0..],
+            n,
+            &mut out,
+            w,
+            h,
+            w,
+            k,
+        );
+        for i in 0..h {
+            for j in 0..w {
+                let got = out[i * w + j];
+                let want = full[(r0 + i, c0 + j)];
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "seed {seed} ({m}x{k}x{n}) block {h}x{w}@({r0},{c0}) at ({i},{j}): \
+                     {got} vs {want}"
+                );
+            }
+        }
     }
 }
 

@@ -1,0 +1,137 @@
+//! End-to-end tests of the shard execution plane through the coordinator:
+//! large requests run block-partitioned across ≥ 2 workers (observable in
+//! the per-shard metrics) and reproduce the single-threaded kernels
+//! bit-for-bit; small requests never pay the tiling overhead.
+
+use lowrank_gemm::config::ShardSettings;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::fp8::quantized_matmul;
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{gemm_blocked, Matrix, Pcg64};
+
+fn sharded_service(workers: usize, min_parallel_n: usize) -> GemmService {
+    let mut cfg = ServiceConfig::default();
+    cfg.shard = ShardSettings {
+        workers,
+        tile_m: 256,
+        tile_n: 256,
+        min_parallel_n,
+    };
+    GemmService::start(cfg).expect("service boots")
+}
+
+#[test]
+fn large_dense_request_is_sharded_and_bitwise_exact() {
+    let svc = sharded_service(4, 256);
+    let mut rng = Pcg64::seeded(501);
+    let a = Matrix::gaussian(512, 512, &mut rng);
+    let b = Matrix::gaussian(512, 512, &mut rng);
+    let req = GemmRequest::new(a.clone(), b.clone()).with_kernel(KernelKind::DenseF32);
+    let resp = svc.gemm_blocking(req).unwrap();
+
+    let serial = gemm_blocked(&a, &b).unwrap();
+    assert_eq!(
+        resp.c.data(),
+        serial.data(),
+        "sharded result must match the single-threaded kernel bit-for-bit"
+    );
+
+    let counters = svc.metrics().counters();
+    assert!(
+        counters.get("shard.gemm.parallel").copied().unwrap_or(0) >= 1,
+        "large request must take the parallel path: {counters:?}"
+    );
+    assert_eq!(counters.get("shard.tasks").copied(), Some(4), "2×2 grid");
+    let hists = svc.metrics().histogram_summaries();
+    assert!(
+        hists.get("shard.tile_us").map(|h| h.count).unwrap_or(0) >= 4,
+        "per-shard latency histogram must record every tile"
+    );
+}
+
+#[test]
+fn heavy_request_engages_multiple_workers() {
+    let svc = sharded_service(4, 256);
+    let mut rng = Pcg64::seeded(502);
+    // 768² → a 3×3 tile grid: nine ~100 ms tasks, four claim jobs. Even on
+    // one core the OS timeslices the claim jobs long before a single
+    // worker could drain nine tiles.
+    let a = Matrix::gaussian(768, 768, &mut rng);
+    let b = Matrix::gaussian(768, 768, &mut rng);
+    let req = GemmRequest::new(a, b).with_kernel(KernelKind::DenseF32);
+    svc.gemm_blocking(req).unwrap();
+
+    let counters = svc.metrics().counters();
+    let engaged = counters
+        .iter()
+        .filter(|(k, v)| k.starts_with("shard.worker.") && **v > 0)
+        .count();
+    assert!(
+        engaged >= 2,
+        "expected ≥ 2 workers to claim tiles, got {engaged}: {counters:?}"
+    );
+    let tiles: u64 = counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("shard.worker."))
+        .map(|(_, v)| *v)
+        .sum();
+    assert_eq!(tiles, 9, "all nine tiles attributed to workers");
+}
+
+#[test]
+fn small_requests_stay_single_threaded() {
+    let svc = sharded_service(4, 512);
+    let mut rng = Pcg64::seeded(503);
+    let a = Matrix::gaussian(64, 64, &mut rng);
+    let b = Matrix::gaussian(64, 64, &mut rng);
+    let req = GemmRequest::new(a.clone(), b.clone()).with_kernel(KernelKind::DenseF32);
+    let resp = svc.gemm_blocking(req).unwrap();
+    assert!(resp.c.rel_frobenius_distance(&a.matmul(&b)) < 1e-6);
+
+    let counters = svc.metrics().counters();
+    assert_eq!(counters.get("shard.gemm.parallel"), None);
+    assert!(counters.get("shard.gemm.serial").copied().unwrap_or(0) >= 1);
+}
+
+#[test]
+fn fp8_request_is_sharded_and_bitwise_exact() {
+    let svc = sharded_service(3, 256);
+    let mut rng = Pcg64::seeded(504);
+    let a = Matrix::gaussian(320, 256, &mut rng);
+    let b = Matrix::gaussian(256, 320, &mut rng);
+    let req = GemmRequest::new(a.clone(), b.clone()).with_kernel(KernelKind::DenseFp8);
+    let resp = svc.gemm_blocking(req).unwrap();
+
+    let serial = quantized_matmul(
+        &a,
+        &b,
+        lowrank_gemm::fp8::StorageFormat::Fp8(lowrank_gemm::fp8::Fp8Format::E4M3),
+    );
+    assert_eq!(resp.c.data(), serial.data());
+}
+
+#[test]
+fn lowrank_request_runs_panel_parallel_factorization() {
+    let svc = sharded_service(4, 256);
+    let mut rng = Pcg64::seeded(505);
+    let w = Matrix::low_rank_noisy(640, 640, 10, 1e-4, &mut rng);
+    svc.preload_factor(1, &w).unwrap();
+    let x = Matrix::gaussian(640, 640, &mut rng);
+    let req = GemmRequest::new(x.clone(), w.clone())
+        .with_ids(None, Some(1))
+        .with_kernel(KernelKind::LowRankAuto);
+    let resp = svc.gemm_blocking(req).unwrap();
+    assert!(resp.rank >= 1);
+    let exact = x.matmul(&w);
+    assert!(
+        resp.c.rel_frobenius_distance(&exact) < 0.05,
+        "err {}",
+        resp.c.rel_frobenius_distance(&exact)
+    );
+    // The offline factorization itself ran on the tile plane.
+    let counters = svc.metrics().counters();
+    assert!(
+        counters.get("shard.gemm.parallel").copied().unwrap_or(0) >= 1,
+        "panel-parallel rSVD sketch expected: {counters:?}"
+    );
+}

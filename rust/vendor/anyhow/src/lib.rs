@@ -1,0 +1,46 @@
+//! Offline stub of `anyhow`, providing only the `Error` surface the main
+//! crate's error conversions need (`Display`, including the `{:#}`
+//! alternate chain format). The real crate is a drop-in replacement.
+
+use std::fmt;
+
+/// Opaque error value carrying a message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Wrap a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on real anyhow prints the whole cause chain; the stub has
+        // a single message either way.
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+}

@@ -1,0 +1,139 @@
+//! Offline stub of the `xla` crate (docs.rs/xla 0.1.6 API surface).
+//!
+//! The evaluation container has no PJRT/XLA shared library, so this stub
+//! keeps `lowrank_gemm::runtime` compiling while every entry point returns
+//! a descriptive error. The coordinator treats that exactly like running
+//! with `use_xla = false`: all requests fall back to the native CPU
+//! substrate, which implements every kernel the artifacts would serve.
+//! Swapping this path dependency for the real crate re-enables the PJRT
+//! path with no source changes.
+
+use std::fmt;
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "xla runtime unavailable: built against the offline stub (no PJRT plugin); \
+     run CPU-substrate-only or link the real `xla` crate";
+
+/// Error type mirroring `xla::Error`'s `Display` surface.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable() -> Error {
+        Error {
+            msg: UNAVAILABLE.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Host tensor literal.
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable())
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Synchronously transfer the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU PJRT client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable())
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation graph.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
