@@ -1,0 +1,171 @@
+//! Autotune convergence sweep: samples-to-convergence of the calibrated
+//! selector across size classes × skew factors, plus the record/lookup
+//! overhead the plane adds to the serving path.
+//!
+//! For each (N, skew) point the analytically-best kernel is given a
+//! synthetic measured slowdown of `skew`× while every other kernel
+//! behaves exactly as modeled; the sweep counts how many per-kernel
+//! sample rounds the confidence blend needs before the selector's
+//! ranking flips away from the mispredicted kernel.
+//!
+//! Prints the usual bench table plus one JSON record per sweep point
+//! (same style as `shard_scaling.rs`) so downstream tooling can diff
+//! runs:
+//!
+//! ```json
+//! {"bench":"autotune_convergence","n":4096,"size_class":12,"skew":10.0,
+//!  "alpha":0.2,"min_samples":5,"samples_to_flip":2,"converged":true,
+//!  "from":"lowrank_auto","to":"lowrank_fp8"}
+//! ```
+//!
+//! Env knobs: `LRG_BENCH_QUICK=1` shrinks the sweep;
+//! `LRG_BENCH_MAXN=<n>` caps the size axis.
+
+use std::sync::Arc;
+
+use lowrank_gemm::autotune::CalibrationTable;
+use lowrank_gemm::bench_harness::{bench, config_from_env, Table};
+use lowrank_gemm::coordinator::BucketKey;
+use lowrank_gemm::gpu_sim::DeviceProfile;
+use lowrank_gemm::kernels::{AutoKernelSelector, KernelKind, SelectorInputs};
+
+const MAX_ROUNDS: usize = 500;
+const ALPHA: f64 = 0.2;
+const MIN_SAMPLES: u64 = 5;
+
+fn inputs(n: usize) -> SelectorInputs {
+    SelectorInputs {
+        m: n,
+        k: n,
+        n,
+        error_tolerance: 0.05,
+        rank: (n / 40).max(16),
+        factors_cached: true,
+        factored_output_ok: true,
+    }
+}
+
+// The table's actual cell key (kernel-independent for square shapes), so
+// the JSON rows always describe the cells the sweep populates.
+fn size_class(n: usize) -> u32 {
+    BucketKey::of(KernelKind::DenseF32, n, n, n).size_class
+}
+
+struct FlipResult {
+    rounds: usize,
+    converged: bool,
+    from: KernelKind,
+    to: KernelKind,
+}
+
+/// Rounds of per-kernel samples until the selector abandons the skewed
+/// kernel (each round feeds one measured sample per ranked kernel, the
+/// ε-greedy policy's steady state).
+fn samples_to_flip(n: usize, skew: f64) -> FlipResult {
+    let table = Arc::new(CalibrationTable::new(ALPHA, MIN_SAMPLES));
+    let selector =
+        AutoKernelSelector::new(DeviceProfile::rtx4090()).with_calibration(table.clone());
+    let inp = inputs(n);
+    let baseline = selector.select(&inp).kind;
+    for round in 1..=MAX_ROUNDS {
+        for c in selector.ranked(&inp) {
+            let raw = c.cost.time_s / c.calibration;
+            let observed = if c.kind == baseline { raw * skew } else { raw };
+            table.record(c.kind, inp.m, inp.k, inp.n, raw, observed);
+        }
+        let now = selector.select(&inp).kind;
+        if now != baseline {
+            return FlipResult {
+                rounds: round,
+                converged: true,
+                from: baseline,
+                to: now,
+            };
+        }
+    }
+    FlipResult {
+        rounds: MAX_ROUNDS,
+        converged: false,
+        from: baseline,
+        to: baseline,
+    }
+}
+
+fn main() {
+    let cfg = config_from_env();
+    let quick = std::env::var("LRG_BENCH_QUICK").is_ok();
+    let max_n: usize = std::env::var("LRG_BENCH_MAXN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX);
+    let sizes: Vec<usize> = if quick {
+        vec![512, 1024, 2048]
+    } else {
+        vec![1024, 2048, 4096, 8192, 20480]
+    };
+    let sizes: Vec<usize> = sizes.into_iter().filter(|&n| n <= max_n).collect();
+    let skews: &[f64] = if quick {
+        &[3.0, 10.0]
+    } else {
+        &[1.5, 3.0, 10.0, 50.0]
+    };
+
+    let mut table = Table::new(
+        "Autotune convergence — sample rounds until the calibrated selector flips",
+        &["N", "class", "skew", "rounds", "converged", "from -> to"],
+    );
+
+    for &n in &sizes {
+        for &skew in skews {
+            let r = samples_to_flip(n, skew);
+            table.row(&[
+                n.to_string(),
+                size_class(n).to_string(),
+                format!("{skew:.1}x"),
+                r.rounds.to_string(),
+                r.converged.to_string(),
+                format!("{} -> {}", r.from.id(), r.to.id()),
+            ]);
+            println!(
+                "{{\"bench\":\"autotune_convergence\",\"n\":{n},\"size_class\":{},\
+                 \"skew\":{skew},\"alpha\":{ALPHA},\"min_samples\":{MIN_SAMPLES},\
+                 \"samples_to_flip\":{},\"converged\":{},\"from\":\"{}\",\"to\":\"{}\"}}",
+                size_class(n),
+                r.rounds,
+                r.converged,
+                r.from.id(),
+                r.to.id()
+            );
+        }
+    }
+    table.print();
+
+    // Serving-path overhead of the plane: one record() and one
+    // correction() per request, on a table populated across every
+    // kernel × the sweep's size classes.
+    let t = CalibrationTable::new(ALPHA, MIN_SAMPLES);
+    for &n in &sizes {
+        for kind in KernelKind::ALL {
+            t.record(kind, n, n, n, 1.0e-3, 1.5e-3);
+        }
+    }
+    let rec = bench(&cfg, || {
+        t.record(KernelKind::DenseF32, 4096, 4096, 4096, 1.0e-3, 1.2e-3);
+    });
+    let look = bench(&cfg, || {
+        std::hint::black_box(t.correction(KernelKind::DenseF32, 4096, 4096, 4096));
+    });
+    println!(
+        "{{\"bench\":\"autotune_overhead\",\"op\":\"record\",\"mean_s\":{:.6e},\"iters\":{}}}",
+        rec.mean_s, rec.iters
+    );
+    println!(
+        "{{\"bench\":\"autotune_overhead\",\"op\":\"correction\",\"mean_s\":{:.6e},\"iters\":{}}}",
+        look.mean_s, look.iters
+    );
+    println!(
+        "\n(acceptance: every skew ≥ 3x converges within tens of rounds, and \
+         record/correction overhead stays in the tens of nanoseconds — noise \
+         next to any GEMM the selector routes)"
+    );
+}

@@ -1,0 +1,46 @@
+//! The online autotuning plane: measured-latency calibration of the
+//! kernel selector.
+//!
+//! The paper's claim that the system "automatically adapts to hardware
+//! capabilities" (§3.3.2, Listing 1) needs a feedback loop, not just a
+//! frozen analytic roofline: the cost model describes the device profile
+//! it was *configured* for, while requests execute on whatever substrate
+//! is actually serving. This module closes the loop:
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────────┐
+//!             │  AutoKernelSelector::estimate                  │
+//!   request ─▶│   analytic roofline × shard speedup            │
+//!             │   × CalibrationTable::correction  ◀─────────┐  │
+//!             └───────────────┬────────────────────────────┼──┘
+//!                             ▼                             │
+//!               Router (ε-greedy ExplorePolicy)             │
+//!                             ▼                             │
+//!               Backend::execute  ──(observed exec time)──▶ │
+//!                             CalibrationTable::record ─────┘
+//!                     (EWMA of observed/predicted, per
+//!                      (kernel kind, log2 size-class))
+//! ```
+//!
+//! - [`CalibrationTable`] holds one EWMA ratio of observed/predicted wall
+//!   time per [`crate::coordinator::BucketKey`] — the same (kernel kind,
+//!   log2 size-class) key the dynamic batcher buckets by, so calibration
+//!   granularity matches batching granularity. A confidence-weighted
+//!   blend walks each cell from the analytic prior (correction 1.0)
+//!   toward the measured posterior as samples accumulate.
+//! - [`ExplorePolicy`] is the ε-greedy leg: with probability ε the router
+//!   serves a request on a non-optimal (but in-tolerance) kernel so that
+//!   rarely-chosen kernels keep receiving fresh samples instead of
+//!   starving on a stale prediction.
+//! - The table persists as JSON ([`CalibrationTable::save`] /
+//!   [`CalibrationTable::load`]) so a tuned instance warm-starts after a
+//!   restart.
+//!
+//! Everything is default-off: with `[autotune]` disabled the selector's
+//! output is bit-identical to the static analytic model.
+
+pub mod policy;
+pub mod table;
+
+pub use policy::ExplorePolicy;
+pub use table::{CalibrationEntry, CalibrationTable};

@@ -1,0 +1,111 @@
+//! ε-greedy exploration for the calibrated router.
+//!
+//! A selector that always exploits its current cost model starves the
+//! calibration loop: a kernel whose (stale) prediction says "slow" is
+//! never chosen, so no fresh samples ever correct the prediction. The
+//! classic fix is ε-greedy sampling — with small probability ε, serve a
+//! request on a deliberately non-optimal kernel. The router restricts
+//! exploration to kernels whose *predicted error* still fits the
+//! request's tolerance, so exploration trades latency, never accuracy.
+
+use std::sync::Mutex;
+
+use crate::linalg::Pcg64;
+
+/// Seeded ε-greedy chooser. Thread-safe: the RNG sits behind a mutex
+/// (one lock per routing decision, and only when autotuning is on).
+#[derive(Debug)]
+pub struct ExplorePolicy {
+    epsilon: f64,
+    rng: Mutex<Pcg64>,
+}
+
+impl ExplorePolicy {
+    /// Policy exploring with probability `epsilon` (clamped to [0, 1]).
+    /// Deterministic for a given `seed` — tests pin the sequence.
+    pub fn new(epsilon: f64, seed: u64) -> Self {
+        ExplorePolicy {
+            epsilon: epsilon.clamp(0.0, 1.0),
+            rng: Mutex::new(Pcg64::seeded(seed)),
+        }
+    }
+
+    /// The configured exploration rate.
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    /// Roll the ε dice: should this request explore? Callers roll
+    /// *before* computing the (more expensive) alternative set, so at
+    /// small ε the exploitation path pays only this one RNG draw.
+    pub fn roll(&self) -> bool {
+        if self.epsilon <= 0.0 {
+            return false;
+        }
+        self.rng.lock().unwrap().next_f64() < self.epsilon
+    }
+
+    /// Uniform choice among `alternatives` (no ε roll — pair with
+    /// [`roll`](ExplorePolicy::roll)). `None` when there is nothing to
+    /// explore.
+    pub fn choose<T: Copy>(&self, alternatives: &[T]) -> Option<T> {
+        if alternatives.is_empty() {
+            return None;
+        }
+        let i = self.rng.lock().unwrap().below(alternatives.len() as u64) as usize;
+        Some(alternatives[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_epsilon_never_rolls_true() {
+        let p = ExplorePolicy::new(0.0, 7);
+        for _ in 0..100 {
+            assert!(!p.roll());
+        }
+    }
+
+    #[test]
+    fn unit_epsilon_always_rolls_and_choose_covers_all_arms() {
+        let p = ExplorePolicy::new(1.0, 7);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            assert!(p.roll(), "ε=1 must explore");
+            let arm = p.choose(&[0usize, 1, 2]).expect("non-empty choose");
+            seen[arm] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all arms sampled: {seen:?}");
+    }
+
+    #[test]
+    fn exploration_rate_tracks_epsilon() {
+        let p = ExplorePolicy::new(0.25, 42);
+        let trials = 4000;
+        let explored = (0..trials).filter(|_| p.roll()).count();
+        let rate = explored as f64 / trials as f64;
+        assert!((rate - 0.25).abs() < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn seeded_sequences_are_deterministic() {
+        let a = ExplorePolicy::new(0.5, 99);
+        let b = ExplorePolicy::new(0.5, 99);
+        let sa: Vec<_> = (0..64)
+            .map(|_| a.roll().then(|| a.choose(&[1, 2, 3, 4])))
+            .collect();
+        let sb: Vec<_> = (0..64)
+            .map(|_| b.roll().then(|| b.choose(&[1, 2, 3, 4])))
+            .collect();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn empty_alternatives_are_safe() {
+        let p = ExplorePolicy::new(1.0, 1);
+        assert_eq!(p.choose::<u32>(&[]), None);
+    }
+}

@@ -1,0 +1,371 @@
+//! The calibration table: per-(kernel, size-class) EWMA correction factors.
+//!
+//! Each cell tracks the ratio `observed / predicted` of wall-clock
+//! execution time for one [`BucketKey`] (kernel kind × log2 size-class).
+//! The selector multiplies its analytic prediction by
+//! [`CalibrationTable::correction`], a confidence-weighted blend that
+//! starts at the analytic prior (1.0, zero samples) and approaches the
+//! measured EWMA as samples accumulate — LRAMM-style measured routing
+//! layered over the paper's roofline model.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::coordinator::batcher::BucketKey;
+use crate::error::{Error, Result};
+use crate::kernels::KernelKind;
+use crate::runtime::json::{parse_json, Json};
+
+/// Ratios outside this band are treated as degenerate measurements and
+/// clamped: wide enough to express a roofline model that is off by six
+/// orders of magnitude (a GPU profile serving on a CPU substrate), tight
+/// enough that a zero-duration or garbage sample cannot poison a cell
+/// with `inf`/`0`.
+pub const RATIO_MIN: f64 = 1e-6;
+/// Upper clamp for observed/predicted ratios (see [`RATIO_MIN`]).
+pub const RATIO_MAX: f64 = 1e6;
+
+/// One cell of the table.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalibrationEntry {
+    /// EWMA of observed/predicted wall-time ratios.
+    pub ratio: f64,
+    /// How many samples have been folded into `ratio`.
+    pub samples: u64,
+}
+
+/// Concurrent table of measured corrections to the analytic cost model.
+///
+/// Shared between the router's selector (reads on every routing decision)
+/// and the service's dispatch loop (one write per completed request), so
+/// all state sits behind a single mutex — the critical sections are a
+/// hash-map probe plus a few flops, far below the cost of the GEMMs being
+/// routed.
+#[derive(Debug)]
+pub struct CalibrationTable {
+    /// EWMA smoothing factor in (0, 1]: weight of the newest sample.
+    ewma_alpha: f64,
+    /// Prior strength of the analytic model, in samples: a cell with this
+    /// many observations sits halfway between the analytic prediction and
+    /// its measured EWMA (`min_samples` in the `[autotune]` config).
+    prior_samples: f64,
+    cells: Mutex<HashMap<BucketKey, CalibrationEntry>>,
+}
+
+impl CalibrationTable {
+    /// New empty table. `ewma_alpha` is clamped into (0, 1];
+    /// `min_samples` is the analytic prior's strength in samples.
+    pub fn new(ewma_alpha: f64, min_samples: u64) -> Self {
+        CalibrationTable {
+            ewma_alpha: ewma_alpha.clamp(f64::MIN_POSITIVE, 1.0),
+            prior_samples: min_samples as f64,
+            cells: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Fold one completed request into the table and return the cell's
+    /// updated correction factor. Non-finite or non-positive inputs are
+    /// discarded (`None`): a sub-microsecond GEMM that rounds to zero
+    /// observed time must not drive a cell toward `ratio = 0`.
+    pub fn record(
+        &self,
+        kind: KernelKind,
+        m: usize,
+        k: usize,
+        n: usize,
+        predicted_s: f64,
+        observed_s: f64,
+    ) -> Option<f64> {
+        if !predicted_s.is_finite()
+            || !observed_s.is_finite()
+            || predicted_s <= 0.0
+            || observed_s <= 0.0
+        {
+            return None;
+        }
+        let ratio = (observed_s / predicted_s).clamp(RATIO_MIN, RATIO_MAX);
+        let key = BucketKey::of(kind, m, k, n);
+        let mut cells = self.cells.lock().unwrap();
+        let e = cells.entry(key).or_insert(CalibrationEntry {
+            ratio,
+            samples: 0,
+        });
+        if e.samples > 0 {
+            e.ratio = self.ewma_alpha * ratio + (1.0 - self.ewma_alpha) * e.ratio;
+        }
+        e.samples += 1;
+        Some(self.blend(e))
+    }
+
+    /// Correction factor for one request: the confidence-weighted blend
+    /// of the analytic prior (1.0) and the cell's measured EWMA. 1.0 when
+    /// the cell has never been sampled.
+    pub fn correction(&self, kind: KernelKind, m: usize, k: usize, n: usize) -> f64 {
+        let key = BucketKey::of(kind, m, k, n);
+        self.cells
+            .lock()
+            .unwrap()
+            .get(&key)
+            .map(|e| self.blend(e))
+            .unwrap_or(1.0)
+    }
+
+    /// `prior·1.0 + samples·ratio` over `prior + samples`: with
+    /// `samples == prior_samples` the cell trusts measurements exactly as
+    /// much as the analytic model.
+    fn blend(&self, e: &CalibrationEntry) -> f64 {
+        let n = e.samples as f64;
+        (self.prior_samples + n * e.ratio) / (self.prior_samples + n)
+    }
+
+    /// Number of populated cells.
+    pub fn len(&self) -> usize {
+        self.cells.lock().unwrap().len()
+    }
+
+    /// Has any cell been populated?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point-in-time copy of every cell.
+    pub fn snapshot(&self) -> Vec<(BucketKey, CalibrationEntry)> {
+        self.cells
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (*k, *v))
+            .collect()
+    }
+
+    /// Serialize to the persistence format (deterministic cell order).
+    /// `f64` values use Rust's round-trip `Display`, so save → load
+    /// reproduces every ratio bit-exactly.
+    pub fn to_json(&self) -> String {
+        let mut entries = self.snapshot();
+        entries.sort_by_key(|(k, _)| (k.kind.id(), k.size_class));
+        let rows: Vec<String> = entries
+            .iter()
+            .map(|(k, e)| {
+                format!(
+                    "{{\"kernel\":\"{}\",\"size_class\":{},\"ratio\":{},\"samples\":{}}}",
+                    k.kind.id(),
+                    k.size_class,
+                    e.ratio,
+                    e.samples
+                )
+            })
+            .collect();
+        format!("{{\"version\":1,\"entries\":[{}]}}\n", rows.join(","))
+    }
+
+    /// Write the table to `path` atomically (temp file + rename): a
+    /// crash mid-save must never leave a truncated table behind, because
+    /// a corrupt file deliberately fails the next service start.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, self.to_json())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Replace the table's contents from a file written by [`save`].
+    /// Returns the number of cells loaded. The smoothing/prior knobs stay
+    /// as configured — only measurements persist.
+    ///
+    /// [`save`]: CalibrationTable::save
+    pub fn load(&self, path: &str) -> Result<usize> {
+        let text = std::fs::read_to_string(path)?;
+        self.load_json(&text)
+            .map_err(|e| Error::Config(format!("calibration table {path}: {e}")))
+    }
+
+    /// [`load`](CalibrationTable::load) from already-read JSON text.
+    pub fn load_json(&self, text: &str) -> Result<usize> {
+        let doc = parse_json(text)?;
+        match doc.get("version").and_then(Json::as_usize) {
+            Some(1) => {}
+            v => {
+                return Err(Error::Config(format!(
+                    "unsupported calibration version {v:?}"
+                )))
+            }
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("missing `entries` array".into()))?;
+        let mut cells = HashMap::new();
+        for e in entries {
+            let kid = e
+                .get("kernel")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Config("entry missing `kernel`".into()))?;
+            let kind = KernelKind::parse(kid)
+                .ok_or_else(|| Error::Config(format!("unknown kernel `{kid}`")))?;
+            let size_class = e
+                .get("size_class")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Config("entry missing `size_class`".into()))?
+                as u32;
+            let ratio = e
+                .get("ratio")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Config("entry missing `ratio`".into()))?;
+            if !ratio.is_finite() || ratio <= 0.0 {
+                return Err(Error::Config(format!("degenerate ratio {ratio}")));
+            }
+            let samples = e
+                .get("samples")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Config("entry missing `samples`".into()))?
+                as u64;
+            if samples == 0 {
+                // A zero-sample cell is degenerate: blend() would divide
+                // 0/0 under min_samples = 0, and record() would treat the
+                // cell as unseeded and discard its first measurement.
+                return Err(Error::Config("entry with samples = 0".into()));
+            }
+            cells.insert(
+                BucketKey { kind, size_class },
+                CalibrationEntry {
+                    ratio: ratio.clamp(RATIO_MIN, RATIO_MAX),
+                    samples,
+                },
+            );
+        }
+        let n = cells.len();
+        *self.cells.lock().unwrap() = cells;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> CalibrationTable {
+        CalibrationTable::new(0.5, 4)
+    }
+
+    #[test]
+    fn first_sample_seeds_the_ewma() {
+        let t = table();
+        t.record(KernelKind::DenseF32, 256, 256, 256, 1.0, 3.0);
+        let (_, e) = t.snapshot()[0];
+        assert_eq!(e.ratio, 3.0, "first sample must set the EWMA directly");
+        assert_eq!(e.samples, 1);
+    }
+
+    #[test]
+    fn ewma_update_math() {
+        let t = table();
+        t.record(KernelKind::DenseF32, 256, 256, 256, 1.0, 2.0);
+        t.record(KernelKind::DenseF32, 256, 256, 256, 1.0, 4.0);
+        let (_, e) = t.snapshot()[0];
+        // alpha=0.5: 0.5·4 + 0.5·2 = 3.
+        assert!((e.ratio - 3.0).abs() < 1e-12, "ratio {}", e.ratio);
+        assert_eq!(e.samples, 2);
+    }
+
+    #[test]
+    fn confidence_blend_walks_prior_to_posterior() {
+        let t = table();
+        // Unsampled: pure analytic prior.
+        assert_eq!(t.correction(KernelKind::DenseF16, 512, 512, 512), 1.0);
+        // One sample of ratio 9, prior strength 4: (4 + 1·9)/5 = 2.6.
+        t.record(KernelKind::DenseF16, 512, 512, 512, 1.0, 9.0);
+        let c1 = t.correction(KernelKind::DenseF16, 512, 512, 512);
+        assert!((c1 - 2.6).abs() < 1e-12, "c1 {c1}");
+        // More consistent samples → closer to the measured ratio.
+        for _ in 0..40 {
+            t.record(KernelKind::DenseF16, 512, 512, 512, 1.0, 9.0);
+        }
+        let c2 = t.correction(KernelKind::DenseF16, 512, 512, 512);
+        assert!(c2 > 8.0 && c2 < 9.0, "c2 {c2}");
+    }
+
+    #[test]
+    fn cells_keyed_like_the_batcher() {
+        let t = table();
+        t.record(KernelKind::DenseF32, 1024, 1024, 1024, 1.0, 5.0);
+        // Same size class (within 2x) shares the cell...
+        assert!(t.correction(KernelKind::DenseF32, 1500, 1500, 1500) > 1.0);
+        // ...a different class or kernel does not.
+        assert_eq!(t.correction(KernelKind::DenseF32, 2048, 2048, 2048), 1.0);
+        assert_eq!(t.correction(KernelKind::DenseF16, 1024, 1024, 1024), 1.0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn degenerate_samples_rejected_and_clamped() {
+        let t = table();
+        assert!(t.record(KernelKind::DenseF32, 64, 64, 64, 0.0, 1.0).is_none());
+        assert!(t.record(KernelKind::DenseF32, 64, 64, 64, 1.0, 0.0).is_none());
+        assert!(t
+            .record(KernelKind::DenseF32, 64, 64, 64, f64::NAN, 1.0)
+            .is_none());
+        assert!(t
+            .record(KernelKind::DenseF32, 64, 64, 64, 1.0, f64::INFINITY)
+            .is_none());
+        assert!(t.is_empty());
+        // An absurd-but-finite ratio lands clamped, not infinite.
+        t.record(KernelKind::DenseF32, 64, 64, 64, 1e-30, 1e30);
+        let (_, e) = t.snapshot()[0];
+        assert_eq!(e.ratio, RATIO_MAX);
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let t = table();
+        t.record(KernelKind::DenseF32, 1024, 1024, 1024, 1.0, 3.7);
+        t.record(KernelKind::LowRankAuto, 8192, 8192, 8192, 2.0, 1.0);
+        t.record(KernelKind::LowRankAuto, 8192, 8192, 8192, 2.0, 1.5);
+        let json = t.to_json();
+
+        let fresh = CalibrationTable::new(0.5, 4);
+        assert_eq!(fresh.load_json(&json).unwrap(), 2);
+        let mut a = t.snapshot();
+        let mut b = fresh.snapshot();
+        a.sort_by_key(|(k, _)| (k.kind.id(), k.size_class));
+        b.sort_by_key(|(k, _)| (k.kind.id(), k.size_class));
+        assert_eq!(a, b, "round-trip must be bit-exact");
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let path = std::env::temp_dir().join(format!(
+            "lrg-calibration-{}-{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let t = table();
+        t.record(KernelKind::DenseFp8, 4096, 4096, 4096, 0.5, 4.0);
+        t.save(&path).unwrap();
+        let fresh = CalibrationTable::new(0.2, 8);
+        assert_eq!(fresh.load(&path).unwrap(), 1);
+        assert_eq!(fresh.snapshot(), t.snapshot());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_malformed_documents() {
+        let t = table();
+        assert!(t.load_json("{}").is_err());
+        assert!(t.load_json("{\"version\":2,\"entries\":[]}").is_err());
+        assert!(t
+            .load_json("{\"version\":1,\"entries\":[{\"kernel\":\"nope\",\"size_class\":3,\"ratio\":1.0,\"samples\":1}]}")
+            .is_err());
+        assert!(t
+            .load_json("{\"version\":1,\"entries\":[{\"kernel\":\"dense_f32\",\"size_class\":3,\"ratio\":-1.0,\"samples\":1}]}")
+            .is_err());
+        assert!(t
+            .load_json("{\"version\":1,\"entries\":[{\"kernel\":\"dense_f32\",\"size_class\":3,\"ratio\":1.0,\"samples\":0}]}")
+            .is_err());
+        // A valid empty document clears the table.
+        t.record(KernelKind::DenseF32, 64, 64, 64, 1.0, 2.0);
+        assert_eq!(t.load_json("{\"version\":1,\"entries\":[]}").unwrap(), 0);
+        assert!(t.is_empty());
+    }
+}

@@ -26,6 +26,7 @@ const VALUE_KEYS: &[&str] = &[
     "config", "device", "artifacts", "n", "rank", "size", "sizes", "kernel", "strategy",
     "method", "storage", "tolerance", "requests", "workers", "batch", "window-us", "seed",
     "out", "iters", "warmup", "shard-workers", "tile-m", "tile-n", "min-parallel-n",
+    "autotune-alpha", "autotune-epsilon", "autotune-min-samples", "autotune-table",
 ];
 
 /// Parse an argv (excluding the program name).

@@ -27,6 +27,13 @@
 //! tile_m = 256                   # output tile height (keep % 128 == 0)
 //! tile_n = 256                   # output tile width  (keep % 256 == 0)
 //! min_parallel_n = 512           # below this, requests stay single-threaded
+//!
+//! [autotune]                     # online calibration plane (crate::autotune)
+//! enabled = false                # default-off: selection stays analytic
+//! ewma_alpha = 0.2               # EWMA weight of the newest sample
+//! epsilon = 0.05                 # ε-greedy exploration rate
+//! min_samples = 5                # analytic prior strength, in samples
+//! table_path = ""                # persistence path ("" = in-memory only)
 //! ```
 
 use crate::config::toml::{parse_toml, TomlDoc};
@@ -93,6 +100,68 @@ impl Default for ShardSettings {
     }
 }
 
+/// `[autotune]` section: the online autotuning plane
+/// (see [`crate::autotune`] — measured-latency calibration of the
+/// kernel selector). Default-off; when off, kernel selection is
+/// bit-identical to the static analytic cost model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutotuneSettings {
+    /// Master switch for the calibration loop.
+    pub enabled: bool,
+    /// EWMA smoothing factor in (0, 1]: weight of the newest
+    /// observed/predicted sample.
+    pub ewma_alpha: f64,
+    /// ε-greedy exploration rate in [0, 1]: fraction of auto-routed
+    /// requests served on a non-optimal (but in-tolerance) kernel to
+    /// keep its calibration cell fresh.
+    pub epsilon: f64,
+    /// Prior strength of the analytic model, in samples: a calibration
+    /// cell with this many observations is trusted exactly as much as
+    /// the analytic prediction.
+    pub min_samples: u64,
+    /// Calibration persistence path (JSON). Loaded at startup when the
+    /// file exists, saved at shutdown; `None` keeps the table in-memory
+    /// only.
+    pub table_path: Option<String>,
+    /// Seed for the exploration RNG (deterministic routing in tests and
+    /// replay runs).
+    pub explore_seed: u64,
+}
+
+impl Default for AutotuneSettings {
+    fn default() -> Self {
+        AutotuneSettings {
+            enabled: false,
+            ewma_alpha: 0.2,
+            epsilon: 0.05,
+            min_samples: 5,
+            table_path: None,
+            explore_seed: 0x0a70_7e5e,
+        }
+    }
+}
+
+impl AutotuneSettings {
+    /// Range-check the knobs. The single validator for every input path
+    /// (TOML and CLI flags): out-of-range values must fail loudly, not
+    /// be silently clamped downstream.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(Error::Config(format!(
+                "autotune ewma_alpha must be in (0, 1], got {}",
+                self.ewma_alpha
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.epsilon) {
+            return Err(Error::Config(format!(
+                "autotune epsilon must be in [0, 1], got {}",
+                self.epsilon
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Whole-app configuration.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -113,6 +182,8 @@ pub struct AppConfig {
     pub service: ServiceSettings,
     /// `[shard]` knobs.
     pub shard: ShardSettings,
+    /// `[autotune]` knobs.
+    pub autotune: AutotuneSettings,
 }
 
 impl Default for AppConfig {
@@ -126,6 +197,7 @@ impl Default for AppConfig {
             storage: StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
             service: ServiceSettings::default(),
             shard: ShardSettings::default(),
+            autotune: AutotuneSettings::default(),
         }
     }
 }
@@ -209,6 +281,35 @@ impl AppConfig {
             if let Some(v) = sh.get("min_parallel_n") {
                 s.min_parallel_n = req_usize(v, "shard.min_parallel_n")?;
             }
+        }
+        if let Some(at) = doc.get("autotune") {
+            let s = &mut cfg.autotune;
+            if let Some(v) = at.get("enabled") {
+                s.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("autotune.enabled must be bool".into()))?;
+            }
+            if let Some(v) = at.get("ewma_alpha") {
+                s.ewma_alpha = v.as_float().ok_or_else(|| {
+                    Error::Config("autotune.ewma_alpha must be a number".into())
+                })?;
+            }
+            if let Some(v) = at.get("epsilon") {
+                s.epsilon = v
+                    .as_float()
+                    .ok_or_else(|| Error::Config("autotune.epsilon must be a number".into()))?;
+            }
+            if let Some(v) = at.get("min_samples") {
+                s.min_samples = req_usize(v, "autotune.min_samples")? as u64;
+            }
+            if let Some(v) = at.get("table_path") {
+                let p = req_str(v, "autotune.table_path")?;
+                s.table_path = if p.is_empty() { None } else { Some(p) };
+            }
+            if let Some(v) = at.get("explore_seed") {
+                s.explore_seed = req_usize(v, "autotune.explore_seed")? as u64;
+            }
+            s.validate()?;
         }
         Ok(cfg)
     }
@@ -347,6 +448,53 @@ min_parallel_n = 1024
         assert!(AppConfig::from_toml("[shard]\ntile_m = 0").is_err());
         assert!(AppConfig::from_toml("[shard]\ntile_n = 0").is_err());
         assert!(AppConfig::from_toml("[shard]\nworkers = -2").is_err());
+    }
+
+    #[test]
+    fn autotune_defaults_and_full_section() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.autotune, AutotuneSettings::default());
+        assert!(!cfg.autotune.enabled, "autotune must default off");
+
+        let cfg = AppConfig::from_toml(
+            r#"
+[autotune]
+enabled = true
+ewma_alpha = 0.5
+epsilon = 0.1
+min_samples = 12
+table_path = "cal.json"
+explore_seed = 99
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.autotune,
+            AutotuneSettings {
+                enabled: true,
+                ewma_alpha: 0.5,
+                epsilon: 0.1,
+                min_samples: 12,
+                table_path: Some("cal.json".into()),
+                explore_seed: 99,
+            }
+        );
+    }
+
+    #[test]
+    fn autotune_validation() {
+        // Empty path means "no persistence", not a path named "".
+        let cfg = AppConfig::from_toml("[autotune]\ntable_path = \"\"").unwrap();
+        assert_eq!(cfg.autotune.table_path, None);
+        assert!(AppConfig::from_toml("[autotune]\newma_alpha = 0.0").is_err());
+        assert!(AppConfig::from_toml("[autotune]\newma_alpha = 1.5").is_err());
+        assert!(AppConfig::from_toml("[autotune]\nepsilon = -0.1").is_err());
+        assert!(AppConfig::from_toml("[autotune]\nepsilon = 1.1").is_err());
+        assert!(AppConfig::from_toml("[autotune]\nenabled = 1").is_err());
+        // Integer alpha/epsilon inside range parse via as_float.
+        let cfg = AppConfig::from_toml("[autotune]\newma_alpha = 1\nepsilon = 0").unwrap();
+        assert_eq!(cfg.autotune.ewma_alpha, 1.0);
+        assert_eq!(cfg.autotune.epsilon, 0.0);
     }
 
     #[test]

@@ -13,6 +13,8 @@
 
 use std::sync::Arc;
 
+use crate::autotune::{CalibrationTable, ExplorePolicy};
+use crate::config::schema::AutotuneSettings;
 use crate::gpu_sim::profile::DeviceProfile;
 use crate::kernels::{AutoKernelSelector, KernelChoice, SelectorInputs};
 use crate::lowrank::cache::FactorCache;
@@ -33,6 +35,9 @@ pub struct RoutePlan {
     pub factors_cached: bool,
     /// The effective error tolerance applied.
     pub tolerance: f32,
+    /// Did the ε-greedy autotune policy override the model's best choice
+    /// (an exploration request feeding the calibration table)?
+    pub explored: bool,
 }
 
 /// Routing configuration (a distilled view of [`crate::config::AppConfig`]).
@@ -74,6 +79,8 @@ pub struct Router {
     selector: AutoKernelSelector,
     cfg: RouterConfig,
     cache: Arc<FactorCache>,
+    /// ε-greedy exploration (autotune); `None` routes purely greedily.
+    explore: Option<ExplorePolicy>,
 }
 
 impl Router {
@@ -83,6 +90,29 @@ impl Router {
             selector: AutoKernelSelector::with_shard(cfg.device.clone(), cfg.shard),
             cfg,
             cache,
+            explore: None,
+        }
+    }
+
+    /// Build a router with the online autotuning plane attached: the
+    /// selector blends `table`'s measured corrections into its cost
+    /// model, and routing explores ε-greedily so every in-tolerance
+    /// kernel keeps receiving fresh calibration samples.
+    pub fn with_autotune(
+        cfg: RouterConfig,
+        cache: Arc<FactorCache>,
+        table: Arc<CalibrationTable>,
+        settings: &AutotuneSettings,
+    ) -> Self {
+        let selector = AutoKernelSelector::with_shard(cfg.device.clone(), cfg.shard)
+            .with_calibration(table);
+        let explore = (settings.epsilon > 0.0)
+            .then(|| ExplorePolicy::new(settings.epsilon, settings.explore_seed));
+        Router {
+            selector,
+            cfg,
+            cache,
+            explore,
         }
     }
 
@@ -122,8 +152,23 @@ impl Router {
         &self.cache
     }
 
-    /// Route one request.
+    /// Route one request deterministically (pure model-best, never
+    /// explores): the introspection surface (`GemmService::plan`) and
+    /// un-recorded paths (`execute_inline`) must not consume the
+    /// exploration RNG or return deliberately non-optimal kernels.
     pub fn route(&self, req: &GemmRequest) -> RoutePlan {
+        self.route_inner(req, false)
+    }
+
+    /// Route one request for serving: like [`route`](Router::route), but
+    /// the ε-greedy policy may override the model's best choice — only
+    /// the serving path records observed latencies, so only it should
+    /// pay for exploration.
+    pub fn route_serving(&self, req: &GemmRequest) -> RoutePlan {
+        self.route_inner(req, true)
+    }
+
+    fn route_inner(&self, req: &GemmRequest, may_explore: bool) -> RoutePlan {
         let (m, k, n) = req.shape();
         let rank = self.rank_estimate(m, k, n);
         let tolerance = req.error_tolerance.unwrap_or(self.cfg.default_tolerance);
@@ -149,9 +194,41 @@ impl Router {
             factored_output_ok: req.factored_output_ok,
         };
 
+        let mut explored = false;
+        let explore = if may_explore {
+            self.explore.as_ref()
+        } else {
+            None
+        };
         let choice = match req.kernel {
             Some(kind) => self.selector.estimate(kind, &inp),
-            None => self.selector.select(&inp),
+            None => match explore.filter(|p| p.roll()) {
+                // ε-greedy leg of the autotune loop (the roll comes
+                // first, so at small ε the common exploitation path
+                // pays one RNG draw and a single ranked() pass): serve
+                // this request on a uniformly chosen non-best kernel,
+                // restricted to kernels whose predicted error still
+                // fits the tolerance — exploration trades latency for
+                // calibration data, never accuracy.
+                Some(policy) => {
+                    let ranked = self.selector.ranked(&inp);
+                    let best = AutoKernelSelector::select_from(&ranked, &inp);
+                    let alternatives: Vec<KernelChoice> = ranked
+                        .into_iter()
+                        .filter(|c| {
+                            c.kind != best.kind && c.predicted_error <= inp.error_tolerance
+                        })
+                        .collect();
+                    match policy.choose(&alternatives) {
+                        Some(alt) => {
+                            explored = true;
+                            alt
+                        }
+                        None => best,
+                    }
+                }
+                None => self.selector.select(&inp),
+            },
         };
 
         RoutePlan {
@@ -159,6 +236,7 @@ impl Router {
             rank,
             factors_cached,
             tolerance,
+            explored,
         }
     }
 
@@ -237,5 +315,92 @@ mod tests {
         cfg.rank_strategy = RankStrategy::Fixed(12);
         let r = Router::new(cfg, Arc::new(FactorCache::new(1 << 20)));
         assert_eq!(r.rank_estimate(256, 256, 256), 12);
+    }
+
+    fn autotune_router(epsilon: f64) -> Router {
+        let settings = crate::config::schema::AutotuneSettings {
+            enabled: true,
+            epsilon,
+            ..Default::default()
+        };
+        Router::with_autotune(
+            RouterConfig::default(),
+            Arc::new(FactorCache::new(64 << 20)),
+            Arc::new(crate::autotune::CalibrationTable::new(
+                settings.ewma_alpha,
+                settings.min_samples,
+            )),
+            &settings,
+        )
+    }
+
+    #[test]
+    fn exploration_stays_within_tolerance() {
+        // ε = 1: every route explores when an in-tolerance alternative
+        // exists — and the explored kernel must itself fit the tolerance.
+        let r = autotune_router(1.0);
+        let greedy = Router::new(RouterConfig::default(), Arc::new(FactorCache::new(1 << 20)));
+        let mut explored = 0;
+        for i in 0..32 {
+            let request = req(64 + i);
+            let best = greedy.route(&request).choice;
+            let plan = r.route_serving(&request);
+            if plan.explored {
+                explored += 1;
+                assert_ne!(plan.choice.kind, best.kind);
+            }
+            assert!(
+                plan.choice.predicted_error <= plan.tolerance,
+                "explored kernel {:?} breaks tolerance",
+                plan.choice.kind
+            );
+        }
+        assert!(explored > 0, "ε=1 must explore");
+    }
+
+    #[test]
+    fn zero_epsilon_and_forced_kernels_never_explore() {
+        let r = autotune_router(0.0);
+        assert!(!r.route_serving(&req(128)).explored);
+        let r = autotune_router(1.0);
+        let plan = r.route_serving(&req(64).with_kernel(KernelKind::DenseF16));
+        assert!(!plan.explored, "explicit kernel bypasses exploration");
+        assert_eq!(plan.choice.kind, KernelKind::DenseF16);
+    }
+
+    #[test]
+    fn tight_tolerance_leaves_nothing_to_explore() {
+        // Only DenseF32 fits 1e-6; no alternative may be explored.
+        let r = autotune_router(1.0);
+        for _ in 0..8 {
+            let plan = r.route_serving(&req(128).with_tolerance(1e-6));
+            assert!(!plan.explored);
+            assert_eq!(plan.choice.kind, KernelKind::DenseF32);
+        }
+    }
+
+    #[test]
+    fn plan_introspection_never_explores_or_consumes_rng() {
+        // route() is the introspection path: deterministic even at ε=1,
+        // and it must not advance the exploration RNG — the serving
+        // sequence may not depend on how many previews interleaved.
+        let r = autotune_router(1.0);
+        let request = req(96);
+        let kind = r.route(&request).choice.kind;
+        for _ in 0..8 {
+            let plan = r.route(&request);
+            assert!(!plan.explored);
+            assert_eq!(plan.choice.kind, kind);
+        }
+        // A second router with the same seed whose RNG was untouched by
+        // previews must produce the identical serving sequence.
+        let fresh = autotune_router(1.0);
+        let a: Vec<_> = (0..8)
+            .map(|i| r.route_serving(&req(64 + i)).choice.kind)
+            .collect();
+        let b: Vec<_> = (0..8)
+            .map(|i| fresh.route_serving(&req(64 + i)).choice.kind)
+            .collect();
+        assert_eq!(a, b);
     }
 }

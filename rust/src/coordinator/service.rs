@@ -23,7 +23,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::config::schema::{AppConfig, ShardSettings};
+use crate::autotune::CalibrationTable;
+use crate::config::schema::{AppConfig, AutotuneSettings, ShardSettings};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::batcher::{Batcher, BucketKey};
 use crate::coordinator::request::{GemmRequest, GemmResponse};
@@ -60,6 +61,10 @@ pub struct ServiceConfig {
     /// the plane: `start()` derives `router.shard` from this, overriding
     /// whatever the `router` field carries.
     pub shard: ShardSettings,
+    /// Online autotuning plane (measured-latency calibration of the
+    /// kernel selector). Default-off: routing is then bit-identical to
+    /// the static analytic cost model.
+    pub autotune: AutotuneSettings,
 }
 
 impl Default for ServiceConfig {
@@ -73,6 +78,7 @@ impl Default for ServiceConfig {
             factor_cache_bytes: 256 << 20,
             artifacts_dir: None,
             shard: ShardSettings::default(),
+            autotune: AutotuneSettings::default(),
         }
     }
 }
@@ -102,6 +108,7 @@ impl ServiceConfig {
                 None
             },
             shard: app.shard.clone(),
+            autotune: app.autotune.clone(),
         })
     }
 }
@@ -142,6 +149,10 @@ pub struct GemmService {
     rejected: AtomicU64,
     completed: Arc<AtomicU64>,
     lr_cfg: crate::lowrank::LowRankConfig,
+    /// Online calibration table when `[autotune]` is enabled.
+    autotune: Option<Arc<CalibrationTable>>,
+    /// Persistence path for the calibration table (saved on shutdown).
+    autotune_path: Option<String>,
     /// Keeps the PJRT thread alive for the service lifetime.
     _xla: Option<XlaExecutor>,
 }
@@ -152,14 +163,44 @@ impl GemmService {
     /// likely to serve first traffic.
     pub fn start(cfg: ServiceConfig) -> Result<GemmService> {
         let cache = Arc::new(FactorCache::new(cfg.factor_cache_bytes));
+        let metrics = Arc::new(MetricsRegistry::new());
         let mut router_cfg = cfg.router.clone();
         // `cfg.shard` is the single source of truth for the tile plane
         // (see its doc): the router's cost model must describe the plane
         // that will actually execute, so any hand-set `router.shard` is
         // deliberately overridden here.
         router_cfg.shard = ShardPlan::from(&cfg.shard);
-        let router = Arc::new(Router::new(router_cfg, cache.clone()));
-        let metrics = Arc::new(MetricsRegistry::new());
+
+        // Autotune plane: build the calibration table (warm-started from
+        // the persisted file when one exists) and hand it to the router,
+        // whose selector then blends measured corrections into the cost
+        // model. A corrupt table file fails start() — silently serving
+        // uncalibrated after a restart would defeat the warm start.
+        let autotune = if cfg.autotune.enabled {
+            // Programmatic ServiceConfig bypasses the TOML/CLI parsers,
+            // so this is the path's validate() call — out-of-range knobs
+            // must fail start(), not be silently clamped downstream.
+            cfg.autotune.validate()?;
+            let table = Arc::new(CalibrationTable::new(
+                cfg.autotune.ewma_alpha,
+                cfg.autotune.min_samples,
+            ));
+            if let Some(path) = &cfg.autotune.table_path {
+                if std::path::Path::new(path).exists() {
+                    let loaded = table.load(path)?;
+                    metrics.count("autotune.warm_start_entries", loaded as u64);
+                }
+            }
+            Some(table)
+        } else {
+            None
+        };
+        let router = Arc::new(match &autotune {
+            Some(table) => {
+                Router::with_autotune(router_cfg, cache.clone(), table.clone(), &cfg.autotune)
+            }
+            None => Router::new(router_cfg, cache.clone()),
+        });
         let shard = Arc::new(ShardExecutor::with_metrics(
             ShardPlan::from(&cfg.shard),
             metrics.clone(),
@@ -195,13 +236,15 @@ impl GemmService {
             let metrics = metrics.clone();
             let completed = completed.clone();
             let inflight = inflight.clone();
+            let autotune = autotune.clone();
             let max_batch = cfg.max_batch;
             let window = cfg.batch_window;
             std::thread::Builder::new()
                 .name("gemm-dispatcher".into())
                 .spawn(move || {
                     Self::dispatch_loop(
-                        rx, pool, backend, metrics, completed, inflight, max_batch, window,
+                        rx, pool, backend, metrics, completed, inflight, autotune, max_batch,
+                        window,
                     )
                 })
                 .map_err(|e| Error::Service(format!("spawning dispatcher: {e}")))?
@@ -215,6 +258,8 @@ impl GemmService {
             cache,
             backend,
             metrics,
+            autotune,
+            autotune_path: cfg.autotune.table_path.clone(),
             inflight,
             queue_depth: cfg.queue_depth,
             next_id: AtomicU64::new(1),
@@ -238,6 +283,7 @@ impl GemmService {
         metrics: Arc<MetricsRegistry>,
         completed: Arc<AtomicU64>,
         inflight: Arc<AtomicUsize>,
+        autotune: Option<Arc<CalibrationTable>>,
         max_batch: usize,
         window: Duration,
     ) {
@@ -248,11 +294,16 @@ impl GemmService {
             let metrics = metrics.clone();
             let completed = completed.clone();
             let inflight = inflight.clone();
+            let autotune = autotune.clone();
             pool.execute(move || {
                 let batch_size = batch.len();
                 for p in batch {
                     let started = Instant::now();
                     let queue_us = started.duration_since(p.enqueued).as_micros() as u64;
+                    let (m, k, n) = p.req.shape();
+                    if p.plan.explored {
+                        metrics.count("autotune.explore_total", 1);
+                    }
                     let result = backend
                         .execute(p.plan.choice.kind, &p.req.a, &p.req.b, p.req.a_id, p.req.b_id)
                         .map(|out| {
@@ -264,6 +315,25 @@ impl GemmService {
                                 1,
                             );
                             metrics.count(&format!("gemm.backend.{}", out.backend.name()), 1);
+                            if let Some(table) = &autotune {
+                                // Calibrate against the *raw* analytic
+                                // prediction: the choice's time already
+                                // folds in the previous correction, and
+                                // recording against a corrected value
+                                // would compound the feedback loop
+                                // (fixed point √ratio instead of ratio).
+                                let raw_s = p.plan.choice.cost.time_s / p.plan.choice.calibration;
+                                let observed_s = started.elapsed().as_secs_f64();
+                                if let Some(corr) = table
+                                    .record(p.plan.choice.kind, m, k, n, raw_s, observed_s)
+                                {
+                                    metrics.observe("autotune.correction", corr);
+                                    metrics.observe(
+                                        "autotune.table_entries",
+                                        table.len() as f64,
+                                    );
+                                }
+                            }
                             GemmResponse {
                                 id: p.id,
                                 c: out.c,
@@ -339,7 +409,7 @@ impl GemmService {
             )));
         }
 
-        let plan = self.router.route(&req);
+        let plan = self.router.route_serving(&req);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (respond, result_rx) = channel();
         let pending = Pending {
@@ -419,6 +489,24 @@ impl GemmService {
         &self.metrics
     }
 
+    /// The online calibration table, when `[autotune]` is enabled.
+    pub fn calibration(&self) -> Option<&Arc<CalibrationTable>> {
+        self.autotune.as_ref()
+    }
+
+    /// Persist the calibration table now (also happens automatically on
+    /// shutdown). Returns `false` when autotuning is off or no
+    /// `table_path` is configured.
+    pub fn save_calibration(&self) -> Result<bool> {
+        match (&self.autotune, &self.autotune_path) {
+            (Some(table), Some(path)) => {
+                table.save(path)?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
     /// The shared factor cache.
     pub fn cache(&self) -> &Arc<FactorCache> {
         &self.cache
@@ -439,6 +527,10 @@ impl Drop for GemmService {
         if let Some(j) = self.dispatcher.take() {
             let _ = j.join();
         }
+        // Persist what the instance learned so a restart warm-starts
+        // (after the join: no more writers). Best-effort — shutdown must
+        // not fail on a read-only filesystem.
+        let _ = self.save_calibration();
     }
 }
 
@@ -542,6 +634,26 @@ mod tests {
         let exact = req.a.matmul(&req.b);
         let r1 = s.execute_inline(&req).unwrap();
         assert!(r1.c.rel_frobenius_distance(&exact) < 0.05);
+    }
+
+    #[test]
+    fn autotune_disabled_by_default_and_records_when_on() {
+        let s = svc();
+        assert!(s.calibration().is_none(), "autotune must be opt-in");
+        assert!(!s.save_calibration().unwrap());
+
+        let mut cfg = ServiceConfig::default();
+        cfg.autotune.enabled = true;
+        cfg.autotune.epsilon = 0.0;
+        let s = GemmService::start(cfg).unwrap();
+        for i in 0..4 {
+            s.gemm_blocking(rand_req(48, 400 + i)).unwrap();
+        }
+        let table = s.calibration().expect("autotune on");
+        assert!(!table.is_empty(), "completed requests must be recorded");
+        let summaries = s.metrics().histogram_summaries();
+        assert!(summaries.contains_key("autotune.correction"));
+        assert!(summaries["autotune.correction"].count >= 4);
     }
 
     #[test]

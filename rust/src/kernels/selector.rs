@@ -1,5 +1,8 @@
 //! The AutoKernelSelector (paper Listing 1 / §3.3.2).
 
+use std::sync::Arc;
+
+use crate::autotune::CalibrationTable;
 use crate::fp8::{Fp8Format, StorageFormat};
 use crate::gpu_sim::profile::{DeviceProfile, Precision};
 use crate::kernels::cost::{kernel_cost, parallel_speedup, CostEstimate};
@@ -91,11 +94,6 @@ impl KernelKind {
             _ => Precision::F16,
         }
     }
-
-    /// Deprecated alias for [`KernelKind::compute_precision`].
-    pub fn precision(self) -> Precision {
-        self.compute_precision()
-    }
 }
 
 /// Everything the selector needs to know about one request.
@@ -122,10 +120,16 @@ pub struct SelectorInputs {
 pub struct KernelChoice {
     /// Which kernel to run.
     pub kind: KernelKind,
-    /// Predicted cost on the device.
+    /// Predicted cost on the device. When a calibration table is bound,
+    /// `cost.time_s` already includes the measured correction factor.
     pub cost: CostEstimate,
     /// Predicted relative error of the chosen kernel.
     pub predicted_error: f32,
+    /// The autotune correction folded into `cost.time_s` (1.0 when no
+    /// calibration table is bound or the cell is unsampled). Dividing it
+    /// back out recovers the raw analytic prediction — the baseline the
+    /// coordinator records observed/predicted ratios against.
+    pub calibration: f64,
 }
 
 /// Hardware-aware kernel selection (paper Listing 1's `AutoKernelSelector`).
@@ -137,6 +141,10 @@ pub struct AutoKernelSelector {
     /// modeled speedup keeps the selector calibrated against the actual
     /// (parallel) execution substrate.
     pub shard: Option<ShardPlan>,
+    /// Online calibration table (the autotune plane): measured
+    /// per-(kernel, size-class) corrections blended over the analytic
+    /// model. `None` (the default) keeps the selector purely analytic.
+    pub calibration: Option<Arc<CalibrationTable>>,
 }
 
 impl AutoKernelSelector {
@@ -145,6 +153,7 @@ impl AutoKernelSelector {
         AutoKernelSelector {
             device,
             shard: None,
+            calibration: None,
         }
     }
 
@@ -153,20 +162,37 @@ impl AutoKernelSelector {
         AutoKernelSelector {
             device,
             shard: Some(plan),
+            calibration: None,
         }
     }
 
+    /// Attach an online calibration table (builder-style).
+    pub fn with_calibration(mut self, table: Arc<CalibrationTable>) -> Self {
+        self.calibration = Some(table);
+        self
+    }
+
     /// Cost + error verdict for one kernel on one request, including the
-    /// shard plane's parallel-speedup term when a plan is bound.
+    /// shard plane's parallel-speedup term when a plan is bound and the
+    /// calibration table's measured correction when autotuning is on.
     pub fn estimate(&self, kind: KernelKind, inp: &SelectorInputs) -> KernelChoice {
         let mut cost = kernel_cost(&self.device, kind, inp);
         if let Some(plan) = &self.shard {
             cost.time_s /= parallel_speedup(kind, inp, plan);
         }
+        let calibration = match &self.calibration {
+            Some(table) => {
+                let c = table.correction(kind, inp.m, inp.k, inp.n);
+                cost.time_s *= c;
+                c
+            }
+            None => 1.0,
+        };
         KernelChoice {
             kind,
             cost,
             predicted_error: self.predicted_error(kind, inp),
+            calibration,
         }
     }
 
@@ -202,14 +228,24 @@ impl AutoKernelSelector {
             })
             .map(|&kind| self.estimate(kind, inp))
             .collect();
-        out.sort_by(|a, b| a.cost.time_s.partial_cmp(&b.cost.time_s).unwrap());
+        // total_cmp: a NaN cost (e.g. a degenerate calibration ratio)
+        // sorts last instead of panicking the serving path.
+        out.sort_by(|a, b| a.cost.time_s.total_cmp(&b.cost.time_s));
         out
     }
 
     /// Pick the fastest kernel whose predicted error fits the tolerance;
     /// fall back to the most accurate one if nothing fits.
     pub fn select(&self, inp: &SelectorInputs) -> KernelChoice {
-        let ranked = self.ranked(inp);
+        Self::select_from(&self.ranked(inp), inp)
+    }
+
+    /// [`select`](AutoKernelSelector::select) over an already-[`ranked`]
+    /// list — callers that need both the list and the winner (e.g. the
+    /// router's exploration path) avoid scoring every kernel twice.
+    ///
+    /// [`ranked`]: AutoKernelSelector::ranked
+    pub fn select_from(ranked: &[KernelChoice], inp: &SelectorInputs) -> KernelChoice {
         ranked
             .iter()
             .find(|c| c.predicted_error <= inp.error_tolerance)
@@ -217,11 +253,7 @@ impl AutoKernelSelector {
             .unwrap_or_else(|| {
                 *ranked
                     .iter()
-                    .min_by(|a, b| {
-                        a.predicted_error
-                            .partial_cmp(&b.predicted_error)
-                            .unwrap()
-                    })
+                    .min_by(|a, b| a.predicted_error.total_cmp(&b.predicted_error))
                     .expect("at least one kernel")
             })
     }
@@ -366,5 +398,54 @@ mod tests {
         inp.error_tolerance = 0.0;
         let c = s.select(&inp);
         assert_eq!(c.kind, KernelKind::DenseF32);
+    }
+
+    #[test]
+    fn empty_calibration_table_is_bit_identical() {
+        // Acceptance gate: autotune bound but unsampled must not perturb
+        // a single bit of the static model's output.
+        let plain = sel();
+        let table = std::sync::Arc::new(CalibrationTable::new(0.2, 5));
+        let tuned = sel().with_calibration(table);
+        for n in [256, 1024, 4096, 20480] {
+            let inp = inputs(n, (n / 40).max(16));
+            for (a, b) in plain.ranked(&inp).iter().zip(tuned.ranked(&inp)) {
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.cost.time_s.to_bits(), b.cost.time_s.to_bits());
+                assert_eq!(b.calibration, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_skew_reprices_one_kernel() {
+        let table = std::sync::Arc::new(CalibrationTable::new(0.5, 0));
+        let s = sel().with_calibration(table.clone());
+        let inp = inputs(4096, 128);
+        let before = s.estimate(KernelKind::DenseF16, &inp);
+        assert_eq!(before.calibration, 1.0);
+        // Observed 8x slower than predicted; prior strength 0 trusts the
+        // measurement immediately.
+        let raw = before.cost.time_s;
+        table.record(KernelKind::DenseF16, 4096, 4096, 4096, raw, raw * 8.0);
+        let after = s.estimate(KernelKind::DenseF16, &inp);
+        assert!((after.calibration - 8.0).abs() < 1e-9, "{}", after.calibration);
+        assert!((after.cost.time_s - raw * 8.0).abs() < raw * 1e-9);
+        // Other kernels and size classes stay analytic.
+        assert_eq!(s.estimate(KernelKind::DenseF32, &inp).calibration, 1.0);
+        let other = inputs(1024, 64);
+        assert_eq!(s.estimate(KernelKind::DenseF16, &other).calibration, 1.0);
+    }
+
+    #[test]
+    fn nan_cost_cannot_panic_ranked_or_select() {
+        // A hostile table entry cannot produce NaN (record clamps), but
+        // the serving path must survive one anyway: total_cmp sorts NaN
+        // last instead of panicking.
+        let s = sel();
+        let mut ranked = s.ranked(&inputs(1024, 64));
+        ranked[0].cost.time_s = f64::NAN;
+        ranked.sort_by(|a, b| a.cost.time_s.total_cmp(&b.cost.time_s));
+        assert!(ranked.last().unwrap().cost.time_s.is_nan());
     }
 }

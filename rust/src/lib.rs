@@ -25,7 +25,9 @@
 //!                       ┌─────────────────────────────────────────────┐
 //!   GemmRequest ──────▶ │ coordinator: service → router → batcher     │
 //!                       │      │ (AutoKernelSelector + kernels::cost: │
-//!                       │      │  roofline × parallel-speedup term)   │
+//!                       │      │  roofline × parallel-speedup term    │
+//!                       │      │  × autotune calibration; ε-greedy    │
+//!                       │      │  exploration feeds fresh samples)    │
 //!                       │      ▼                                      │
 //!                       │   backend ──▶ runtime (XLA artifacts)       │
 //!                       │      │                                      │
@@ -47,6 +49,13 @@
 //! worker count (and, on the default MC/NC-aligned grid, identical to the
 //! single-threaded kernels). Small requests never pay the tiling overhead.
 //!
+//! When `[autotune]` is enabled, the coordinator additionally closes the
+//! prediction loop: every completed request's measured execution time is
+//! folded into a per-(kernel, size-class) [`autotune::CalibrationTable`],
+//! and the selector blends those measured corrections into its analytic
+//! cost model (see the [`autotune`] module docs). Disabled (the default),
+//! selection is bit-identical to the static roofline model.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -64,6 +73,7 @@
 //! println!("rel err = {:.3e}", c.rel_frobenius_distance(&exact));
 //! ```
 
+pub mod autotune;
 pub mod bench_harness;
 pub mod cli;
 pub mod config;
@@ -82,6 +92,7 @@ pub mod trace;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
+    pub use crate::autotune::{CalibrationTable, ExplorePolicy};
     pub use crate::coordinator::{GemmRequest, GemmResponse, GemmService, ServiceConfig};
     pub use crate::error::{Error, Result};
     pub use crate::fp8::{Fp8Format, QuantizedTensor};

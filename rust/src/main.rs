@@ -67,13 +67,19 @@ USAGE: lowrank-gemm <command> [options]
 COMMANDS:
   serve      --requests N --size N [--config F] [--workers W] [--no-xla]
              [--shard-workers W] [--tile-m M] [--tile-n N] [--min-parallel-n N]
-             start the service and replay a synthetic transformer trace
+             [--autotune] [--autotune-alpha A] [--autotune-epsilon E]
+             [--autotune-min-samples K] [--autotune-table F]
+             start the service and replay a synthetic transformer trace;
+             --autotune turns on measured-latency calibration of the
+             kernel selector (--autotune-table persists it across runs)
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
   factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
              offline decomposition; prints error + memory accounting
   route      --n N [--rank R] [--tolerance T] [--device D] [--cached]
-             print the selector's ranked decision table
+             [--autotune-table F]
+             print the selector's ranked decision table; with a saved
+             calibration table, predictions include learned corrections
   info       [--artifacts DIR]
              device profiles and the artifact manifest
 
@@ -101,6 +107,20 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
     cfg.shard.tile_m = args.get_parse("tile-m", cfg.shard.tile_m)?;
     cfg.shard.tile_n = args.get_parse("tile-n", cfg.shard.tile_n)?;
     cfg.shard.min_parallel_n = args.get_parse("min-parallel-n", cfg.shard.min_parallel_n)?;
+    // `[autotune]` overrides: the online calibration plane's knobs.
+    if args.has_flag("autotune") {
+        cfg.autotune.enabled = true;
+    }
+    cfg.autotune.ewma_alpha = args.get_parse("autotune-alpha", cfg.autotune.ewma_alpha)?;
+    cfg.autotune.epsilon = args.get_parse("autotune-epsilon", cfg.autotune.epsilon)?;
+    cfg.autotune.min_samples =
+        args.get_parse("autotune-min-samples", cfg.autotune.min_samples)?;
+    if let Some(p) = args.get("autotune-table") {
+        cfg.autotune.table_path = Some(p.to_string());
+    }
+    // Same validator the TOML path runs — an out-of-range flag must
+    // fail loudly, not be silently clamped downstream.
+    cfg.autotune.validate()?;
     Ok(cfg)
 }
 
@@ -250,7 +270,23 @@ fn cmd_route(args: &CliArgs) -> Result<()> {
     let profile = DeviceProfile::by_name(device).ok_or_else(|| {
         lowrank_gemm::error::Error::Config(format!("unknown device `{device}`"))
     })?;
-    let selector = lowrank_gemm::kernels::AutoKernelSelector::new(profile);
+    let mut selector = lowrank_gemm::kernels::AutoKernelSelector::new(profile.clone());
+    if let Some(path) = args.get("autotune-table") {
+        // A calibration table holds observed/(shard-adjusted analytic)
+        // ratios, so reproduce the serving selector exactly: same shard
+        // plan and same blend knobs, all sourced from the config/flag
+        // pipeline the service uses.
+        let app = load_config(args)?;
+        let at = &app.autotune;
+        let table = lowrank_gemm::autotune::CalibrationTable::new(at.ewma_alpha, at.min_samples);
+        let loaded = table.load(path)?;
+        println!("(applying {loaded} calibration cells from {path})");
+        selector = lowrank_gemm::kernels::AutoKernelSelector::with_shard(
+            profile,
+            lowrank_gemm::shard::ShardPlan::from(&app.shard),
+        )
+        .with_calibration(std::sync::Arc::new(table));
+    }
 
     let inp = SelectorInputs {
         m: n,

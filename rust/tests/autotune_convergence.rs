@@ -1,0 +1,218 @@
+//! End-to-end tests for the online autotuning plane: calibration
+//! convergence against a synthetically skewed backend, default-off
+//! bit-identity, exploration accounting, and save/load warm-starts
+//! through a full service restart.
+
+use std::sync::Arc;
+
+use lowrank_gemm::autotune::CalibrationTable;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::gpu_sim::DeviceProfile;
+use lowrank_gemm::kernels::{AutoKernelSelector, SelectorInputs};
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+
+fn inputs(n: usize) -> SelectorInputs {
+    SelectorInputs {
+        m: n,
+        k: n,
+        n,
+        error_tolerance: 0.05,
+        rank: (n / 40).max(16),
+        factors_cached: true,
+        factored_output_ok: true,
+    }
+}
+
+fn temp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("lrg-autotune-{tag}-{}.json", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+fn rand_req(n: usize, seed: u64) -> GemmRequest {
+    let mut rng = Pcg64::seeded(seed);
+    GemmRequest::new(
+        Matrix::gaussian(n, n, &mut rng),
+        Matrix::gaussian(n, n, &mut rng),
+    )
+}
+
+/// The headline loop: one kernel secretly runs 50x slower than the
+/// analytic model believes; every other kernel behaves exactly as
+/// modeled. Feeding measured samples back through the calibration table
+/// must flip the selector's ranking away from the mispredicted kernel.
+#[test]
+fn skewed_backend_flips_the_selectors_ranking() {
+    let table = Arc::new(CalibrationTable::new(0.2, 5));
+    let selector =
+        AutoKernelSelector::new(DeviceProfile::rtx4090()).with_calibration(table.clone());
+    let inp = inputs(4096);
+    let baseline = selector.select(&inp);
+    let skew = 50.0;
+
+    // Before any samples: the analytic prior rules, correction is 1.
+    assert_eq!(baseline.calibration, 1.0);
+
+    let mut flipped_at = None;
+    for round in 1..=200u32 {
+        // Simulate one serving round: every kernel gets a measured
+        // sample (the ε-greedy policy's job in live serving); only the
+        // baseline kernel's measurement deviates from the model.
+        for c in selector.ranked(&inp) {
+            let raw = c.cost.time_s / c.calibration;
+            let observed = if c.kind == baseline.kind {
+                raw * skew
+            } else {
+                raw
+            };
+            table.record(c.kind, inp.m, inp.k, inp.n, raw, observed);
+        }
+        if round == 1 {
+            // A single sample must NOT be trusted outright: with prior
+            // strength 5 the blended correction is (5 + 50)/6 ≈ 9.2,
+            // well short of the measured 50x.
+            let c1 = table.correction(baseline.kind, inp.m, inp.k, inp.n);
+            assert!(
+                c1 < skew / 2.0,
+                "one sample over-trusted: correction {c1}"
+            );
+        }
+        if selector.select(&inp).kind != baseline.kind {
+            flipped_at = Some(round);
+            break;
+        }
+    }
+    let flipped_at = flipped_at.expect("a 50x skew must flip the ranking within 200 samples");
+
+    let corrected = selector.select(&inp);
+    assert_ne!(corrected.kind, baseline.kind);
+    // The flip reflects reality: under the true (skewed) wall times the
+    // new choice is genuinely faster than the old one.
+    let true_baseline = (baseline.cost.time_s) * skew;
+    let raw_corrected = corrected.cost.time_s / corrected.calibration;
+    assert!(
+        raw_corrected < true_baseline,
+        "flip must pick a kernel that is actually faster \
+         ({raw_corrected} vs true {true_baseline}, flipped at {flipped_at})"
+    );
+    // And with enough consistent samples, the correction approaches the
+    // true ratio.
+    for _ in 0..100 {
+        let c = selector.estimate(baseline.kind, &inp);
+        let raw = c.cost.time_s / c.calibration;
+        table.record(baseline.kind, inp.m, inp.k, inp.n, raw, raw * skew);
+    }
+    let settled = table.correction(baseline.kind, inp.m, inp.k, inp.n);
+    assert!(
+        (settled / skew - 1.0).abs() < 0.2,
+        "correction should settle near the true skew: {settled} vs {skew}"
+    );
+}
+
+/// Acceptance gate: with autotune disabled (the default config), routing
+/// is bit-identical to the static analytic model — enabled-but-unsampled
+/// must match too.
+#[test]
+fn default_off_routing_is_bit_identical() {
+    let off = GemmService::start(ServiceConfig::default()).unwrap();
+    let mut cfg = ServiceConfig::default();
+    cfg.autotune.enabled = true;
+    cfg.autotune.epsilon = 0.0;
+    let on = GemmService::start(cfg).unwrap();
+
+    for (i, n) in [32usize, 96, 256, 1024].into_iter().enumerate() {
+        let req = rand_req(n, 900 + i as u64);
+        let a = off.plan(&req);
+        let b = on.plan(&req);
+        assert_eq!(a.choice.kind, b.choice.kind, "n={n}");
+        assert_eq!(
+            a.choice.cost.time_s.to_bits(),
+            b.choice.cost.time_s.to_bits(),
+            "n={n}: unsampled calibration must not move a single bit"
+        );
+        assert_eq!(b.choice.calibration, 1.0);
+        assert!(!a.explored && !b.explored);
+    }
+}
+
+/// ε = 1 forces every auto-routed request to explore; the service must
+/// count those explorations and keep results correct (exploration trades
+/// latency, never accuracy).
+#[test]
+fn exploration_is_counted_and_stays_correct() {
+    let mut cfg = ServiceConfig::default();
+    cfg.autotune.enabled = true;
+    cfg.autotune.epsilon = 1.0;
+    let svc = GemmService::start(cfg).unwrap();
+
+    for i in 0..6 {
+        // Low-rank-friendly operands: any in-tolerance kernel the policy
+        // explores (including the factor chain) must stay accurate.
+        let mut rng = Pcg64::seeded(700 + i);
+        let req = GemmRequest::new(
+            Matrix::low_rank_noisy(48, 48, 6, 1e-4, &mut rng),
+            Matrix::low_rank_noisy(48, 48, 6, 1e-4, &mut rng),
+        );
+        let exact = req.a.matmul(&req.b);
+        let resp = svc.gemm_blocking(req).unwrap();
+        assert!(resp.c.rel_frobenius_distance(&exact) < 0.1);
+    }
+    let counters = svc.metrics().counters();
+    let explored = counters.get("autotune.explore_total").copied().unwrap_or(0);
+    assert!(explored >= 1, "ε=1 must explore: counters {counters:?}");
+    // Exploration feeds the table: explored kernels' cells exist.
+    assert!(!svc.calibration().unwrap().is_empty());
+}
+
+/// Full restart cycle: a tuned service persists its table on shutdown
+/// and the next instance warm-starts from it bit-exactly.
+#[test]
+fn calibration_survives_a_service_restart() {
+    let path = temp_path("restart");
+    let _ = std::fs::remove_file(&path);
+    let mut cfg = ServiceConfig::default();
+    cfg.autotune.enabled = true;
+    cfg.autotune.epsilon = 0.0;
+    cfg.autotune.table_path = Some(path.clone());
+
+    let svc = GemmService::start(cfg.clone()).unwrap();
+    for i in 0..6 {
+        svc.gemm_blocking(rand_req(48, 500 + i)).unwrap();
+    }
+    let mut before = svc.calibration().unwrap().snapshot();
+    assert!(!before.is_empty(), "requests must populate the table");
+    drop(svc); // persists the table
+
+    assert!(std::path::Path::new(&path).exists(), "drop must save");
+
+    let svc2 = GemmService::start(cfg).unwrap();
+    let mut after = svc2.calibration().unwrap().snapshot();
+    before.sort_by_key(|(k, _)| (k.kind.id(), k.size_class));
+    after.sort_by_key(|(k, _)| (k.kind.id(), k.size_class));
+    assert_eq!(before, after, "warm start must reload bit-exactly");
+    assert!(
+        svc2.metrics()
+            .counters()
+            .get("autotune.warm_start_entries")
+            .copied()
+            .unwrap_or(0)
+            >= 1
+    );
+    drop(svc2);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A corrupt persisted table fails startup loudly instead of silently
+/// serving uncalibrated.
+#[test]
+fn corrupt_calibration_file_fails_start() {
+    let path = temp_path("corrupt");
+    std::fs::write(&path, "{not json").unwrap();
+    let mut cfg = ServiceConfig::default();
+    cfg.autotune.enabled = true;
+    cfg.autotune.table_path = Some(path.clone());
+    assert!(GemmService::start(cfg).is_err());
+    let _ = std::fs::remove_file(&path);
+}
