@@ -66,6 +66,7 @@ fn main() {
             rank: (sz / 40).max(16),
             factors_cached: cached,
             factored_output_ok: false,
+            decomp_amortization: 1.0,
         });
         println!(
             "selector @N={sz} ({label}): {} (predicted {:.2} ms, {:.1e} rel err)",

@@ -59,6 +59,7 @@ fn winner_map(d: &DeviceProfile) {
             rank: (n / 40).max(16),
             factors_cached: false,
             factored_output_ok: false,
+            decomp_amortization: 1.0,
         };
         let c = selector.select(&inp);
         let tflops = Roofline::achieved_flops(2.0 * (n as f64).powi(3), c.cost.time_s) / 1e12;

@@ -31,9 +31,11 @@ fn main() {
     let steps = 24; // inference steps to replay
     let rank = 16;
 
-    let mut cfg = ServiceConfig::default();
-    cfg.workers = 2;
-    cfg.max_batch = 4;
+    let mut cfg = ServiceConfig {
+        workers: 2,
+        max_batch: 4,
+        ..Default::default()
+    };
     cfg.router.rank_strategy = RankStrategy::Fixed(rank);
     cfg.router.storage = StorageFormat::F32; // isolate truncation error
     cfg.artifacts_dir = if std::path::Path::new("artifacts/manifest.json").exists() {

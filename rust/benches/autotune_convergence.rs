@@ -42,6 +42,7 @@ fn inputs(n: usize) -> SelectorInputs {
         rank: (n / 40).max(16),
         factors_cached: true,
         factored_output_ok: true,
+        decomp_amortization: 1.0,
     }
 }
 

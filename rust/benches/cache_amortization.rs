@@ -1,0 +1,116 @@
+//! Factor-cache amortization sweep — the `[cache]` plane's instrument.
+//!
+//! For each size, measures the three regimes the router's cost model
+//! prices: the **cold** low-rank path (rSVD both operands + factor
+//! chain), the **warm** path (content-cache hit + factor chain), and the
+//! **dense** baseline — plus the cache's own lookup overhead, which must
+//! stay negligible against any of them. The amortization claim is the
+//! ratio: cold pays the decomposition once, every further request runs
+//! at warm speed.
+//!
+//! Prints the usual bench table plus one JSON record per measurement:
+//!
+//! ```json
+//! {"bench":"cache_amortization","path":"warm","n":512,
+//!  "mean_s":…,"min_s":…,"max_s":…,"stddev_s":…,"iters":5,
+//!  "speedup_vs_cold":…}
+//! ```
+//!
+//! Env knobs: `LRG_BENCH_QUICK=1` shrinks sizes and iterations;
+//! `LRG_BENCH_MAXN=<n>` caps the sweep.
+
+use lowrank_gemm::bench_harness::{bench, config_from_env, Measurement, Table};
+use lowrank_gemm::cache::{ContentCache, Fingerprint};
+use lowrank_gemm::fp8::StorageFormat;
+use lowrank_gemm::linalg::{gemm_blocked, Matrix, Pcg64};
+use lowrank_gemm::lowrank::{factorize, lowrank_matmul, LowRankConfig, RankStrategy};
+
+fn json_row(path: &str, n: usize, m: &Measurement, speedup_vs_cold: f64) {
+    println!(
+        "{{\"bench\":\"cache_amortization\",\"path\":\"{path}\",\"n\":{n},\
+         \"mean_s\":{:.6e},\"min_s\":{:.6e},\"max_s\":{:.6e},\"stddev_s\":{:.6e},\
+         \"iters\":{},\"speedup_vs_cold\":{:.3}}}",
+        m.mean_s, m.min_s, m.max_s, m.stddev_s, m.iters, speedup_vs_cold
+    );
+}
+
+fn main() {
+    let cfg = config_from_env();
+    let quick = std::env::var("LRG_BENCH_QUICK").is_ok();
+    let max_n: usize = std::env::var("LRG_BENCH_MAXN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX);
+    let sizes: Vec<usize> = if quick {
+        vec![96, 128, 192]
+    } else {
+        vec![256, 384, 512, 768]
+    };
+    let sizes: Vec<usize> = sizes.into_iter().filter(|&n| n <= max_n).collect();
+
+    let mut table = Table::new(
+        "Factor-cache amortization — cold (rSVD + chain) vs warm (hit + chain) vs dense",
+        &["N", "cold ms", "warm ms", "dense ms", "cold/warm", "lookup us"],
+    );
+
+    for &n in &sizes {
+        let r = (n / 16).max(4);
+        let mut rng = Pcg64::seeded(9090);
+        let a = Matrix::low_rank_noisy(n, n, r, 1e-4, &mut rng);
+        let b = Matrix::low_rank_noisy(n, n, r, 1e-4, &mut rng);
+        let lr_cfg = LowRankConfig {
+            rank: RankStrategy::Fixed(r),
+            storage: StorageFormat::F32,
+            ..Default::default()
+        };
+
+        // Cold regime: both decompositions inside the timed region — the
+        // cost every request pays without the cache plane.
+        let cold = bench(&cfg, || {
+            let fa = factorize(&a, &lr_cfg).unwrap();
+            let fb = factorize(&b, &lr_cfg).unwrap();
+            lowrank_matmul(&fa, &fb);
+        });
+
+        // Warm regime: factors served out of the content cache, exactly
+        // the serving hot path after the first request.
+        let cache = ContentCache::new(256 << 20, 1);
+        let (fp_a, fp_b) = (Fingerprint::of(&a), Fingerprint::of(&b));
+        cache.put(fp_a, factorize(&a, &lr_cfg).unwrap());
+        cache.put(fp_b, factorize(&b, &lr_cfg).unwrap());
+        let warm = bench(&cfg, || {
+            let fa = cache.get(fp_a).unwrap();
+            let fb = cache.get(fp_b).unwrap();
+            lowrank_matmul(&fa, &fb);
+        });
+
+        // Dense baseline.
+        let dense = bench(&cfg, || {
+            gemm_blocked(&a, &b).unwrap();
+        });
+
+        // Pure lookup overhead (hit + clone, no chain).
+        let lookup = bench(&cfg, || {
+            std::hint::black_box(cache.get(fp_a));
+        });
+
+        let speedup = cold.mean_s / warm.mean_s;
+        table.row(&[
+            n.to_string(),
+            format!("{:9.2}", cold.mean_s * 1e3),
+            format!("{:9.2}", warm.mean_s * 1e3),
+            format!("{:9.2}", dense.mean_s * 1e3),
+            format!("{speedup:5.2}x"),
+            format!("{:7.1}", lookup.mean_s * 1e6),
+        ]);
+        json_row("cold", n, &cold, 1.0);
+        json_row("warm", n, &warm, speedup);
+        json_row("dense", n, &dense, cold.mean_s / dense.mean_s);
+        json_row("lookup", n, &lookup, cold.mean_s / lookup.mean_s);
+    }
+    table.print();
+    println!(
+        "\n(acceptance: warm must beat cold at every N — the gap is the \
+         per-request decomposition cost the cache plane amortizes away)"
+    );
+}

@@ -3,8 +3,13 @@
 //! Each block measures one layer-3 hot path in isolation so the
 //! optimization loop (EXPERIMENTS.md §Perf) can attribute wins/regressions:
 //! GEMM kernels, factor chain, codecs, cache, router, batcher, service.
+//!
+//! Besides the human-readable tables, every measurement also prints one
+//! JSON record (`{"bench":"hotpath_micro","case":…,"n":…,"mean_s":…}`)
+//! so CI's bench-smoke job can collect `BENCH_*.json` artifacts and
+//! downstream tooling can diff runs.
 
-use lowrank_gemm::bench_harness::{bench, config_from_env, Table};
+use lowrank_gemm::bench_harness::{bench, config_from_env, Measurement, Table};
 use lowrank_gemm::coordinator::{Batcher, BucketKey, GemmRequest, GemmService, Router, RouterConfig, ServiceConfig};
 use lowrank_gemm::fp8::{dequantize, quantize, StorageFormat};
 use lowrank_gemm::kernels::KernelKind;
@@ -12,6 +17,15 @@ use lowrank_gemm::linalg::{gemm_blocked, gemm_flops, gemm_naive, Matrix, Pcg64};
 use lowrank_gemm::lowrank::{factorize, lowrank_matmul, FactorCache, LowRankConfig, RankStrategy};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+fn json_row(case: &str, n: usize, m: &Measurement) {
+    println!(
+        "{{\"bench\":\"hotpath_micro\",\"case\":\"{case}\",\"n\":{n},\
+         \"mean_s\":{:.6e},\"min_s\":{:.6e},\"max_s\":{:.6e},\"stddev_s\":{:.6e},\
+         \"iters\":{}}}",
+        m.mean_s, m.min_s, m.max_s, m.stddev_s, m.iters
+    );
+}
 
 fn gemm_kernels() {
     let cfg = config_from_env();
@@ -36,6 +50,8 @@ fn gemm_kernels() {
             format!("{:7.2}", mb.throughput(flops) / 1e9),
             format!("{:5.2}x", mn.mean_s / mb.mean_s),
         ]);
+        json_row("gemm_naive", n, &mn);
+        json_row("gemm_blocked", n, &mb);
     }
     table.print();
     println!();
@@ -70,6 +86,8 @@ fn factor_chain() {
             format!("{:8.2}", md.mean_s * 1e3),
             format!("{:5.2}x", md.mean_s / mc.mean_s),
         ]);
+        json_row("factor_chain_warm", n, &mc);
+        json_row("factor_chain_dense_baseline", n, &md);
     }
     table.print();
     println!();
@@ -103,6 +121,8 @@ fn codecs() {
             format!("{:8.1}", mq.throughput(elems) / 1e6),
             format!("{:8.1}", md.throughput(elems) / 1e6),
         ]);
+        json_row(&format!("quantize_{}", fmt.name()), n, &mq);
+        json_row(&format!("dequantize_{}", fmt.name()), n, &md);
     }
     table.print();
     println!();
@@ -129,6 +149,7 @@ fn cache_and_router() {
         "factor cache: {:.2} M gets/s (hit, incl. clone)",
         32.0 / mhit.mean_s / 1e6
     );
+    json_row("factor_cache_get", 96, &mhit);
 
     let router = Router::new(RouterConfig::default(), cache.clone());
     let a = Matrix::zeros(1024, 1024);
@@ -140,6 +161,7 @@ fn cache_and_router() {
         }
     });
     println!("router: {:.2} M route()/s", 100.0 / mr.mean_s / 1e6);
+    json_row("router_route", 1024, &mr);
 
     let mut batcher: Batcher<u32> = Batcher::new(8, Duration::from_micros(100));
     let key = BucketKey::of(KernelKind::DenseF32, 256, 256, 256);
@@ -151,12 +173,15 @@ fn cache_and_router() {
         batcher.flush_all();
     });
     println!("batcher: {:.2} M push()/s\n", 1000.0 / mb.mean_s / 1e6);
+    json_row("batcher_push", 256, &mb);
 }
 
 fn service_request_path() {
     let cfg = config_from_env();
-    let mut svc_cfg = ServiceConfig::default();
-    svc_cfg.workers = 2;
+    let svc_cfg = ServiceConfig {
+        workers: 2,
+        ..Default::default()
+    };
     let svc = GemmService::start(svc_cfg).unwrap();
     let mut rng = Pcg64::seeded(35);
     let n = 96;
@@ -176,6 +201,7 @@ fn service_request_path() {
         "service @N={n}: {:.0} req/s pipelined (batching on), queue+exec p50 via metrics:",
         16.0 / m.mean_s
     );
+    json_row("service_pipelined_16", n, &m);
     for (name, s) in svc.metrics().histogram_summaries() {
         println!("  {name}: p50 {:.0} p99 {:.0} (n={})", s.p50, s.p99, s.count);
     }

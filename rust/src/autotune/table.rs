@@ -9,6 +9,7 @@
 //! layered over the paper's roofline model.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::coordinator::batcher::BucketKey;
@@ -50,6 +51,18 @@ pub struct CalibrationTable {
     /// its measured EWMA (`min_samples` in the `[autotune]` config).
     prior_samples: f64,
     cells: Mutex<HashMap<BucketKey, CalibrationEntry>>,
+    /// Periodic persistence: `(path, every)` flushes the table after each
+    /// `every`-th recorded sample, so an abrupt kill loses at most
+    /// `every - 1` samples of a long calibration run instead of all of
+    /// them (the shutdown save on `GemmService::drop` stays the final
+    /// word). `None` = save only when explicitly asked.
+    autosave: Option<(String, u64)>,
+    /// Samples recorded since construction (drives the autosave cadence).
+    recorded: AtomicU64,
+    /// Serializes concurrent [`save`](CalibrationTable::save) calls: the
+    /// tmp+rename dance is atomic per writer, but two workers autosaving
+    /// at once must not interleave writes to the same tmp file.
+    io_lock: Mutex<()>,
 }
 
 impl CalibrationTable {
@@ -60,7 +73,19 @@ impl CalibrationTable {
             ewma_alpha: ewma_alpha.clamp(f64::MIN_POSITIVE, 1.0),
             prior_samples: min_samples as f64,
             cells: Mutex::new(HashMap::new()),
+            autosave: None,
+            recorded: AtomicU64::new(0),
+            io_lock: Mutex::new(()),
         }
+    }
+
+    /// Enable periodic persistence: flush to `path` after every
+    /// `every`-th recorded sample (clamped to ≥ 1), through the same
+    /// atomic tmp+rename path as [`save`](CalibrationTable::save).
+    /// Flush failures are swallowed, like the shutdown save — losing a
+    /// periodic checkpoint must never fail the serving path.
+    pub fn set_autosave(&mut self, path: &str, every: u64) {
+        self.autosave = Some((path.to_string(), every.max(1)));
     }
 
     /// Fold one completed request into the table and return the cell's
@@ -85,16 +110,30 @@ impl CalibrationTable {
         }
         let ratio = (observed_s / predicted_s).clamp(RATIO_MIN, RATIO_MAX);
         let key = BucketKey::of(kind, m, k, n);
-        let mut cells = self.cells.lock().unwrap();
-        let e = cells.entry(key).or_insert(CalibrationEntry {
-            ratio,
-            samples: 0,
-        });
-        if e.samples > 0 {
-            e.ratio = self.ewma_alpha * ratio + (1.0 - self.ewma_alpha) * e.ratio;
+        let blended = {
+            let mut cells = self.cells.lock().unwrap();
+            let e = cells.entry(key).or_insert(CalibrationEntry {
+                ratio,
+                samples: 0,
+            });
+            if e.samples > 0 {
+                e.ratio = self.ewma_alpha * ratio + (1.0 - self.ewma_alpha) * e.ratio;
+            }
+            e.samples += 1;
+            self.blend(e)
+        };
+        if let Some((path, every)) = &self.autosave {
+            // Cells lock released above: the flush re-acquires it only
+            // for the snapshot. try_lock keeps the cadence best-effort —
+            // if another worker is mid-flush, this sample's checkpoint is
+            // simply skipped rather than stalling the recording thread.
+            if (self.recorded.fetch_add(1, Ordering::Relaxed) + 1) % every == 0 {
+                if let Ok(_io) = self.io_lock.try_lock() {
+                    let _ = self.write_to(path);
+                }
+            }
         }
-        e.samples += 1;
-        Some(self.blend(e))
+        Some(blended)
     }
 
     /// Correction factor for one request: the confidence-weighted blend
@@ -162,7 +201,16 @@ impl CalibrationTable {
     /// Write the table to `path` atomically (temp file + rename): a
     /// crash mid-save must never leave a truncated table behind, because
     /// a corrupt file deliberately fails the next service start.
+    /// Concurrent savers (periodic autosave from worker threads, the
+    /// shutdown save) are serialized on an internal lock.
     pub fn save(&self, path: &str) -> Result<()> {
+        let _io = self.io_lock.lock().unwrap();
+        self.write_to(path)
+    }
+
+    /// The tmp+rename write itself; callers hold (or deliberately
+    /// skipped) the io_lock.
+    fn write_to(&self, path: &str) -> Result<()> {
         let tmp = format!("{path}.tmp");
         std::fs::write(&tmp, self.to_json())?;
         std::fs::rename(&tmp, path)?;
@@ -346,6 +394,60 @@ mod tests {
         let fresh = CalibrationTable::new(0.2, 8);
         assert_eq!(fresh.load(&path).unwrap(), 1);
         assert_eq!(fresh.snapshot(), t.snapshot());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn autosave_flushes_every_nth_record_without_drop() {
+        let path = std::env::temp_dir().join(format!(
+            "lrg-autosave-{}-{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut t = CalibrationTable::new(0.5, 4);
+        t.set_autosave(&path, 3);
+        t.record(KernelKind::DenseF32, 256, 256, 256, 1.0, 2.0);
+        t.record(KernelKind::DenseF32, 256, 256, 256, 1.0, 2.0);
+        assert!(
+            !std::path::Path::new(&path).exists(),
+            "no flush before the cadence"
+        );
+        t.record(KernelKind::DenseF32, 256, 256, 256, 1.0, 2.0);
+        assert!(
+            std::path::Path::new(&path).exists(),
+            "3rd record must flush (abrupt-kill durability)"
+        );
+
+        // The flushed file is a valid warm-start image of the table.
+        let fresh = CalibrationTable::new(0.5, 4);
+        assert_eq!(fresh.load(&path).unwrap(), 1);
+        assert_eq!(fresh.snapshot(), t.snapshot());
+
+        // Rejected (degenerate) samples do not advance the cadence.
+        let _ = std::fs::remove_file(&path);
+        for _ in 0..5 {
+            assert!(t.record(KernelKind::DenseF32, 64, 64, 64, 0.0, 1.0).is_none());
+        }
+        assert!(!std::path::Path::new(&path).exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn autosave_cadence_clamped_to_one() {
+        let path = std::env::temp_dir().join(format!(
+            "lrg-autosave-min-{}-{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let mut t = CalibrationTable::new(0.5, 0);
+        t.set_autosave(&path, 0); // min_samples = 0 must still flush
+        t.record(KernelKind::DenseF16, 128, 128, 128, 1.0, 3.0);
+        assert!(std::path::Path::new(&path).exists());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,132 @@
+//! Content-addressed matrix identity.
+//!
+//! The id-keyed [`crate::lowrank::FactorCache`] needs the caller to name
+//! its weights; a serving front that only sees raw operands cannot. A
+//! [`Fingerprint`] derives the identity from the matrix itself: the shape
+//! plus a deterministic 128-bit digest of every element's exact bit
+//! pattern (row-major `f32::to_bits` words) — `-0.0` vs `0.0`, NaN
+//! payloads and all. Every content bit feeds the digest, so same-shape
+//! matrices with different content alias only on a 128-bit hash
+//! collision.
+//!
+//! Caveat on the digest: FNV-1a is fast and statistically well-spread
+//! but **not collision-resistant against adversarial inputs** — an
+//! attacker who controls operand bytes can construct colliding matrices,
+//! and on a collision the cache would serve another matrix's factors as
+//! a silently wrong result. The plane therefore assumes operands come
+//! from the deployment itself (model weights, trusted callers), which is
+//! the paper's serving setting; swap in a keyed cryptographic hash here
+//! before exposing content-addressed caching to untrusted tenants.
+
+use crate::linalg::matrix::Matrix;
+
+/// 128-bit FNV-1a offset basis.
+const FNV_OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+/// 128-bit FNV-1a prime.
+const FNV_PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+
+/// Content-addressed identity of a dense matrix: shape + content digest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint {
+    /// Row count of the fingerprinted matrix.
+    pub rows: u32,
+    /// Column count of the fingerprinted matrix.
+    pub cols: u32,
+    /// FNV-1a-128 digest over the row-major `f32` bit patterns.
+    pub digest: u128,
+}
+
+impl Fingerprint {
+    /// Fingerprint a matrix: one linear pass over the data (word-wise
+    /// FNV-1a, ~O(mn)) — trivial next to the O(mnr) decomposition it
+    /// stands in for, but not free: the router only computes it when the
+    /// content cache is enabled and the operand clears the size gate.
+    pub fn of(m: &Matrix) -> Fingerprint {
+        let mut h = FNV_OFFSET;
+        h = (h ^ m.rows() as u128).wrapping_mul(FNV_PRIME);
+        h = (h ^ m.cols() as u128).wrapping_mul(FNV_PRIME);
+        for &x in m.data() {
+            h = (h ^ x.to_bits() as u128).wrapping_mul(FNV_PRIME);
+        }
+        Fingerprint {
+            rows: m.rows() as u32,
+            cols: m.cols() as u32,
+            digest: h,
+        }
+    }
+
+    /// The fingerprinted shape.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows as usize, self.cols as usize)
+    }
+}
+
+/// Routing-time fingerprints for one request's operands, computed once by
+/// the router and handed to the backend through the plan so the execution
+/// path never hashes an operand twice. `None` = not content-addressable
+/// (identified operand, cache disabled, or below the size gate).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FactorHints {
+    /// Fingerprint of the left operand, when content-addressable.
+    pub a: Option<Fingerprint>,
+    /// Fingerprint of the right operand, when content-addressable.
+    pub b: Option<Fingerprint>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let mut rng = Pcg64::seeded(11);
+        let a = Matrix::gaussian(17, 23, &mut rng);
+        assert_eq!(Fingerprint::of(&a), Fingerprint::of(&a));
+        assert_eq!(Fingerprint::of(&a), Fingerprint::of(&a.clone()));
+    }
+
+    #[test]
+    fn same_shape_different_content_gets_distinct_digests() {
+        // Every bit of content is digested, so same-shape matrices
+        // differing anywhere get distinct keys (up to a 128-bit hash
+        // collision — see the module docs' adversarial caveat).
+        let mut rng = Pcg64::seeded(12);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..64 {
+            let m = Matrix::gaussian(16, 16, &mut rng);
+            assert!(seen.insert(Fingerprint::of(&m)), "collision");
+        }
+        // A single-ulp flip in one element changes the digest.
+        let a = Matrix::gaussian(16, 16, &mut rng);
+        let mut b = a.clone();
+        let flipped = f32::from_bits(b.data()[7].to_bits() ^ 1);
+        b.data_mut()[7] = flipped;
+        assert_ne!(Fingerprint::of(&a), Fingerprint::of(&b));
+    }
+
+    #[test]
+    fn shape_is_part_of_the_key() {
+        // Same data vector, different shape → different fingerprint even
+        // if the flat contents agree.
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let a = Matrix::from_vec(3, 4, data.clone()).unwrap();
+        let b = Matrix::from_vec(4, 3, data).unwrap();
+        assert_ne!(Fingerprint::of(&a), Fingerprint::of(&b));
+        assert_eq!(Fingerprint::of(&a).shape(), (3, 4));
+    }
+
+    #[test]
+    fn sign_of_zero_and_nan_bits_distinguish() {
+        let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]).unwrap();
+        let b = Matrix::from_vec(1, 2, vec![-0.0, 1.0]).unwrap();
+        assert_ne!(Fingerprint::of(&a), Fingerprint::of(&b));
+    }
+
+    #[test]
+    fn transpose_differs() {
+        let mut rng = Pcg64::seeded(13);
+        let a = Matrix::gaussian(8, 8, &mut rng);
+        assert_ne!(Fingerprint::of(&a), Fingerprint::of(&a.transpose()));
+    }
+}

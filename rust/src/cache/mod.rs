@@ -1,0 +1,59 @@
+//! The factor-cache plane: content-addressed reuse of SVD/rSVD factors
+//! across requests.
+//!
+//! The paper's speedup case rests on amortization — once a matrix is
+//! decomposed, the factor chain `U·(Σ·(Vᵀ·B))` is far cheaper than a
+//! dense GEMM — and §6.5 says the decomposition is "ideally computed in
+//! advance". The id-keyed [`crate::lowrank::FactorCache`] covers callers
+//! who can name their weights; this plane covers the serving reality
+//! where repeated operands arrive *anonymous*: a [`Fingerprint`]
+//! (shape + 128-bit content digest over exact f32 bit patterns) derives
+//! a stable identity from the bytes themselves, and the [`ContentCache`]
+//! holds the `(U, Σ, Vᵀ)` factors behind a byte-budgeted LRU.
+//!
+//! ```text
+//!   route():  fp = Fingerprint::of(A)       — once, stashed in the plan
+//!             factors_cached = cache.contains(fp)
+//!             cost model amortizes the decomposition charge over
+//!             [cache].amortize_over expected reuses
+//!   execute(): cache.get_or_insert_with(fp, || rSVD on the shard plane)
+//!              → factor chain through the panel-parallel paths
+//! ```
+//!
+//! Interactions with the other planes:
+//!
+//! - **selector/cost** — a resident fingerprint flips `factors_cached`,
+//!   pricing the request at factor-chain cost only; a *missing* one still
+//!   divides the decomposition charge by the `[cache].amortize_over`
+//!   knob (the amortized-decomposition term), which moves the low-rank
+//!   crossover well below the paper's cold N ≥ 10240.
+//! - **shard** — cold fills factorize via
+//!   [`crate::shard::factorize_sharded`] and hits execute the chain
+//!   through the same panel-parallel paths, so cached and cold results
+//!   are bitwise identical.
+//! - **fp8** — `[cache].fp8 = true` stores factors through the existing
+//!   [`crate::fp8`] codecs (~75% resident-memory saving vs f32 factors);
+//!   both the fill and every hit use the same storage, so hit/cold
+//!   bit-identity is preserved.
+//!
+//! Default-off: with `[cache].enabled = false` nothing is fingerprinted,
+//! the amortization term stays 1.0, and routing/execution are
+//! bit-identical to a build without this module.
+//!
+//! Known limitations (deliberate, documented trade-offs):
+//!
+//! - **One-shot operands churn the LRU.** Every admitted anonymous miss
+//!   is inserted, so a stream of never-repeating activations fills the
+//!   budget and can evict reusable weights; `min_dim` and `budget_mb`
+//!   are the levers today (a second-sighting doorkeeper would fix it but
+//!   conflicts with "decompose each distinct matrix exactly once").
+//!   The static `amortize_over` credit is likewise optimistic for
+//!   operands that never recur.
+//! - **The digest is not adversarial-grade** — see
+//!   [`fingerprint`]'s module docs.
+
+pub mod fingerprint;
+pub mod store;
+
+pub use fingerprint::{FactorHints, Fingerprint};
+pub use store::ContentCache;

@@ -1,0 +1,343 @@
+//! The content-addressed factor store: a byte-budgeted LRU over
+//! [`Fingerprint`]-keyed [`LowRankFactor`]s, with live hit/miss/evict
+//! metrics.
+//!
+//! Shape mirrors [`crate::lowrank::FactorCache`] (the id-keyed plane):
+//! byte-budgeted rather than entry-budgeted because factor size varies
+//! with rank, single mutex because the critical sections are a hash probe
+//! next to millisecond GEMMs. What's new here is the admission gate
+//! (operands below `min_dim` are never worth hashing or caching — their
+//! decomposition is cheaper than the bookkeeping) and the metrics hookup:
+//! every lookup/insert/eviction lands in the shared [`MetricsRegistry`]
+//! as `cache.hit` / `cache.miss` / `cache.insert` / `cache.evict`
+//! counters plus a `cache.resident_bytes` gauge-style histogram, so the
+//! serving report shows the plane's behavior without polling.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cache::fingerprint::Fingerprint;
+use crate::linalg::matrix::Matrix;
+use crate::lowrank::cache::CacheStats;
+use crate::lowrank::factor::LowRankFactor;
+use crate::metrics::MetricsRegistry;
+
+struct Entry {
+    factor: LowRankFactor,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<Fingerprint, Entry>,
+    clock: u64,
+    resident: usize,
+    stats: CacheStats,
+}
+
+/// Thread-safe, byte-budgeted, content-addressed LRU factor cache.
+pub struct ContentCache {
+    budget_bytes: usize,
+    min_dim: usize,
+    metrics: Option<Arc<MetricsRegistry>>,
+    inner: Mutex<Inner>,
+}
+
+impl ContentCache {
+    /// Create a cache with a byte budget and an admission gate: only
+    /// matrices with `min(rows, cols) >= min_dim` are fingerprinted and
+    /// cached.
+    pub fn new(budget_bytes: usize, min_dim: usize) -> Self {
+        ContentCache {
+            budget_bytes,
+            min_dim,
+            metrics: None,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+                resident: 0,
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    /// Like [`new`](ContentCache::new), wired to a metrics registry.
+    pub fn with_metrics(
+        budget_bytes: usize,
+        min_dim: usize,
+        metrics: Arc<MetricsRegistry>,
+    ) -> Self {
+        let mut c = Self::new(budget_bytes, min_dim);
+        c.metrics = Some(metrics);
+        c
+    }
+
+    /// Does the admission gate let this operand into the cache?
+    pub fn admits(&self, m: &Matrix) -> bool {
+        m.rows().min(m.cols()) >= self.min_dim
+    }
+
+    /// The admission gate's dimension floor.
+    pub fn min_dim(&self) -> usize {
+        self.min_dim
+    }
+
+    fn count(&self, name: &str) {
+        if let Some(m) = &self.metrics {
+            m.count(name, 1);
+        }
+    }
+
+    /// Look up a factor; clones on hit (the payload must cross the worker
+    /// boundary anyway).
+    pub fn get(&self, fp: Fingerprint) -> Option<LowRankFactor> {
+        let out = {
+            let mut g = self.inner.lock().unwrap();
+            g.clock += 1;
+            let clock = g.clock;
+            match g.map.get_mut(&fp) {
+                Some(e) => {
+                    e.last_used = clock;
+                    let f = e.factor.clone();
+                    g.stats.hits += 1;
+                    Some(f)
+                }
+                None => {
+                    g.stats.misses += 1;
+                    None
+                }
+            }
+        };
+        self.count(if out.is_some() {
+            "cache.hit"
+        } else {
+            "cache.miss"
+        });
+        out
+    }
+
+    /// Presence probe that neither clones nor perturbs LRU order or
+    /// hit/miss accounting (the router only *plans*).
+    pub fn contains(&self, fp: Fingerprint) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&fp)
+    }
+
+    /// Insert (or replace) a factor, evicting LRU entries until it fits.
+    /// Factors larger than the whole budget are rejected (returns false).
+    pub fn put(&self, fp: Fingerprint, factor: LowRankFactor) -> bool {
+        let bytes = factor.storage_bytes();
+        if bytes > self.budget_bytes {
+            return false;
+        }
+        let (evicted, resident) = {
+            let mut g = self.inner.lock().unwrap();
+            g.clock += 1;
+            let clock = g.clock;
+            if let Some(old) = g.map.remove(&fp) {
+                g.resident -= old.bytes;
+            }
+            let mut evicted = 0u64;
+            while g.resident + bytes > self.budget_bytes {
+                let victim = g
+                    .map
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(&k, _)| k);
+                match victim {
+                    Some(k) => {
+                        let e = g.map.remove(&k).unwrap();
+                        g.resident -= e.bytes;
+                        g.stats.evictions += 1;
+                        evicted += 1;
+                    }
+                    None => break,
+                }
+            }
+            g.resident += bytes;
+            g.map.insert(
+                fp,
+                Entry {
+                    factor,
+                    bytes,
+                    last_used: clock,
+                },
+            );
+            g.stats.resident_bytes = g.resident as u64;
+            g.stats.entries = g.map.len() as u64;
+            (evicted, g.resident)
+        };
+        if let Some(m) = &self.metrics {
+            m.count("cache.insert", 1);
+            m.count("cache.evict", evicted);
+            m.observe("cache.resident_bytes", resident as f64);
+        }
+        true
+    }
+
+    /// Fetch-or-compute. Single-flight is deliberately omitted (same call
+    /// as the id-keyed cache): duplicate computes under concurrency are
+    /// benign and both produce bit-identical factors.
+    pub fn get_or_insert_with(
+        &self,
+        fp: Fingerprint,
+        make: impl FnOnce() -> crate::error::Result<LowRankFactor>,
+    ) -> crate::error::Result<LowRankFactor> {
+        if let Some(f) = self.get(fp) {
+            return Ok(f);
+        }
+        let f = make()?;
+        self.put(fp, f.clone());
+        Ok(f)
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let mut g = self.inner.lock().unwrap();
+        g.stats.resident_bytes = g.resident as u64;
+        g.stats.entries = g.map.len() as u64;
+        g.stats
+    }
+
+    /// Drop everything (tests / reconfiguration).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.resident = 0;
+        g.stats.resident_bytes = 0;
+        g.stats.entries = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::StorageFormat;
+    use crate::linalg::rng::Pcg64;
+    use crate::lowrank::factor::{DecompMethod, LowRankConfig};
+    use crate::lowrank::gemm::factorize;
+    use crate::lowrank::rank::RankStrategy;
+
+    fn factor_and_fp(seed: u64, n: usize, r: usize) -> (Fingerprint, LowRankFactor) {
+        let mut rng = Pcg64::seeded(seed);
+        let a = Matrix::low_rank(n, n, r, &mut rng);
+        let f = factorize(
+            &a,
+            &LowRankConfig {
+                rank: RankStrategy::Fixed(r),
+                method: DecompMethod::RandomizedSvd,
+                storage: StorageFormat::F32,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        (Fingerprint::of(&a), f)
+    }
+
+    #[test]
+    fn hit_after_put_and_stats() {
+        let c = ContentCache::new(1 << 20, 1);
+        let (fp, f) = factor_and_fp(1, 16, 2);
+        assert!(c.get(fp).is_none());
+        assert!(c.put(fp, f));
+        assert!(c.get(fp).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_strictly_by_byte_budget() {
+        let (fp1, f) = factor_and_fp(2, 16, 2);
+        let (fp2, _) = factor_and_fp(3, 16, 2);
+        let (fp3, _) = factor_and_fp(4, 16, 2);
+        let bytes = f.storage_bytes();
+        // Budget for exactly two entries.
+        let c = ContentCache::new(2 * bytes + bytes / 2, 1);
+        c.put(fp1, f.clone());
+        c.put(fp2, f.clone());
+        assert_eq!(c.stats().resident_bytes, 2 * bytes as u64);
+        c.get(fp1); // fp2 becomes LRU
+        c.put(fp3, f.clone());
+        assert!(c.contains(fp1), "recently used survives");
+        assert!(!c.contains(fp2), "LRU evicted");
+        assert!(c.contains(fp3));
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(
+            s.resident_bytes <= 2 * bytes as u64 + bytes as u64 / 2,
+            "budget respected: {} resident",
+            s.resident_bytes
+        );
+    }
+
+    #[test]
+    fn oversized_factor_rejected() {
+        let (fp, f) = factor_and_fp(5, 32, 4);
+        let c = ContentCache::new(f.storage_bytes() - 1, 1);
+        assert!(!c.put(fp, f));
+        assert_eq!(c.stats().entries, 0);
+    }
+
+    #[test]
+    fn admission_gate() {
+        let c = ContentCache::new(1 << 20, 64);
+        let mut rng = Pcg64::seeded(6);
+        assert!(!c.admits(&Matrix::gaussian(63, 512, &mut rng)));
+        assert!(c.admits(&Matrix::gaussian(64, 64, &mut rng)));
+    }
+
+    #[test]
+    fn contains_does_not_perturb_stats_or_lru() {
+        let c = ContentCache::new(1 << 20, 1);
+        let (fp, f) = factor_and_fp(7, 16, 2);
+        c.put(fp, f);
+        for _ in 0..5 {
+            assert!(c.contains(fp));
+        }
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0));
+    }
+
+    #[test]
+    fn metrics_counters_emitted() {
+        let m = Arc::new(MetricsRegistry::new());
+        let c = ContentCache::with_metrics(1 << 20, 1, m.clone());
+        let (fp, f) = factor_and_fp(8, 16, 2);
+        c.get(fp);
+        c.put(fp, f);
+        c.get(fp);
+        let counters = m.counters();
+        assert_eq!(counters["cache.miss"], 1);
+        assert_eq!(counters["cache.hit"], 1);
+        assert_eq!(counters["cache.insert"], 1);
+        assert!(m
+            .histogram_summaries()
+            .contains_key("cache.resident_bytes"));
+    }
+
+    #[test]
+    fn get_or_insert_computes_once() {
+        let c = ContentCache::new(1 << 20, 1);
+        let (fp, f) = factor_and_fp(9, 16, 2);
+        let mut computed = 0;
+        for _ in 0..3 {
+            c.get_or_insert_with(fp, || {
+                computed += 1;
+                Ok(f.clone())
+            })
+            .unwrap();
+        }
+        assert_eq!(computed, 1);
+        assert_eq!(c.stats().hits, 2);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let c = ContentCache::new(1 << 20, 1);
+        let (fp, f) = factor_and_fp(10, 16, 2);
+        c.put(fp, f);
+        c.clear();
+        assert_eq!(c.stats().entries, 0);
+        assert_eq!(c.stats().resident_bytes, 0);
+        assert!(!c.contains(fp));
+    }
+}

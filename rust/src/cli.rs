@@ -27,6 +27,7 @@ const VALUE_KEYS: &[&str] = &[
     "method", "storage", "tolerance", "requests", "workers", "batch", "window-us", "seed",
     "out", "iters", "warmup", "shard-workers", "tile-m", "tile-n", "min-parallel-n",
     "autotune-alpha", "autotune-epsilon", "autotune-min-samples", "autotune-table",
+    "cache-budget-mb", "cache-min-dim", "cache-amortize", "amortize",
 ];
 
 /// Parse an argv (excluding the program name).

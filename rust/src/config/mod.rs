@@ -8,5 +8,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{AppConfig, AutotuneSettings, ServiceSettings, ShardSettings};
+pub use schema::{AppConfig, AutotuneSettings, CacheSettings, ServiceSettings, ShardSettings};
 pub use toml::{parse_toml, TomlValue};

@@ -34,6 +34,13 @@
 //! epsilon = 0.05                 # ε-greedy exploration rate
 //! min_samples = 5                # analytic prior strength, in samples
 //! table_path = ""                # persistence path ("" = in-memory only)
+//!
+//! [cache]                        # factor-cache plane (crate::cache)
+//! enabled = false                # default-off: routing stays bit-identical
+//! budget_mb = 256                # content-cache byte budget (MiB, LRU)
+//! min_dim = 128                  # admission gate on min(rows, cols)
+//! fp8 = false                    # store cached factors FP8-encoded
+//! amortize_over = 8              # expected reuses amortizing a cold rSVD
 //! ```
 
 use crate::config::toml::{parse_toml, TomlDoc};
@@ -162,6 +169,68 @@ impl AutotuneSettings {
     }
 }
 
+/// `[cache]` section: the factor-cache plane
+/// (see [`crate::cache`] — content-addressed reuse of SVD/rSVD factors
+/// across requests). Default-off; when off, routing and results are
+/// bit-identical to a build without the plane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheSettings {
+    /// Master switch for content-addressed factor caching.
+    pub enabled: bool,
+    /// Byte budget of the content cache, in MiB.
+    pub budget_mb: usize,
+    /// Admission gate: operands with `min(rows, cols)` below this are
+    /// neither fingerprinted nor cached (their decomposition is cheaper
+    /// than the bookkeeping).
+    pub min_dim: usize,
+    /// Store cached factors FP8-encoded through the existing codecs
+    /// (~75% resident-memory saving vs f32 factors). Both the cache fill
+    /// and every hit use the same storage, so hit/cold bit-identity is
+    /// preserved.
+    pub fp8: bool,
+    /// Amortized-decomposition term: on a cache miss the cost model
+    /// divides the decomposition charge by this expected reuse count
+    /// (the decomposition is paid once, the factors serve many
+    /// requests). 1 = charge the full cold cost every time.
+    pub amortize_over: u64,
+}
+
+impl Default for CacheSettings {
+    fn default() -> Self {
+        CacheSettings {
+            enabled: false,
+            budget_mb: 256,
+            min_dim: 128,
+            fp8: false,
+            amortize_over: 8,
+        }
+    }
+}
+
+impl CacheSettings {
+    /// Resolved byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_mb << 20
+    }
+
+    /// Range-check the knobs — the single validator for every input path
+    /// (TOML, CLI flags, programmatic [`crate::coordinator::ServiceConfig`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.budget_mb == 0 {
+            return Err(Error::Config("cache budget_mb must be positive".into()));
+        }
+        if self.min_dim == 0 {
+            return Err(Error::Config("cache min_dim must be positive".into()));
+        }
+        if self.amortize_over == 0 {
+            return Err(Error::Config(
+                "cache amortize_over must be at least 1".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Whole-app configuration.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -184,6 +253,8 @@ pub struct AppConfig {
     pub shard: ShardSettings,
     /// `[autotune]` knobs.
     pub autotune: AutotuneSettings,
+    /// `[cache]` knobs.
+    pub cache: CacheSettings,
 }
 
 impl Default for AppConfig {
@@ -198,6 +269,7 @@ impl Default for AppConfig {
             service: ServiceSettings::default(),
             shard: ShardSettings::default(),
             autotune: AutotuneSettings::default(),
+            cache: CacheSettings::default(),
         }
     }
 }
@@ -308,6 +380,29 @@ impl AppConfig {
             }
             if let Some(v) = at.get("explore_seed") {
                 s.explore_seed = req_usize(v, "autotune.explore_seed")? as u64;
+            }
+            s.validate()?;
+        }
+        if let Some(ca) = doc.get("cache") {
+            let s = &mut cfg.cache;
+            if let Some(v) = ca.get("enabled") {
+                s.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("cache.enabled must be bool".into()))?;
+            }
+            if let Some(v) = ca.get("budget_mb") {
+                s.budget_mb = req_nonzero(v, "cache.budget_mb")?;
+            }
+            if let Some(v) = ca.get("min_dim") {
+                s.min_dim = req_nonzero(v, "cache.min_dim")?;
+            }
+            if let Some(v) = ca.get("fp8") {
+                s.fp8 = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("cache.fp8 must be bool".into()))?;
+            }
+            if let Some(v) = ca.get("amortize_over") {
+                s.amortize_over = req_nonzero(v, "cache.amortize_over")? as u64;
             }
             s.validate()?;
         }
@@ -495,6 +590,45 @@ explore_seed = 99
         let cfg = AppConfig::from_toml("[autotune]\newma_alpha = 1\nepsilon = 0").unwrap();
         assert_eq!(cfg.autotune.ewma_alpha, 1.0);
         assert_eq!(cfg.autotune.epsilon, 0.0);
+    }
+
+    #[test]
+    fn cache_defaults_and_full_section() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.cache, CacheSettings::default());
+        assert!(!cfg.cache.enabled, "factor cache must default off");
+        assert_eq!(cfg.cache.budget_bytes(), 256 << 20);
+
+        let cfg = AppConfig::from_toml(
+            r#"
+[cache]
+enabled = true
+budget_mb = 64
+min_dim = 256
+fp8 = true
+amortize_over = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.cache,
+            CacheSettings {
+                enabled: true,
+                budget_mb: 64,
+                min_dim: 256,
+                fp8: true,
+                amortize_over: 16,
+            }
+        );
+    }
+
+    #[test]
+    fn cache_validation() {
+        assert!(AppConfig::from_toml("[cache]\nbudget_mb = 0").is_err());
+        assert!(AppConfig::from_toml("[cache]\nmin_dim = 0").is_err());
+        assert!(AppConfig::from_toml("[cache]\namortize_over = 0").is_err());
+        assert!(AppConfig::from_toml("[cache]\nenabled = 1").is_err());
+        assert!(AppConfig::from_toml("[cache]\nfp8 = \"yes\"").is_err());
     }
 
     #[test]

@@ -13,6 +13,8 @@
 
 use std::sync::Arc;
 
+use crate::cache::{ContentCache, FactorHints, Fingerprint};
+use crate::config::schema::CacheSettings;
 use crate::error::{Error, Result};
 use crate::fp8::StorageFormat;
 use crate::kernels::KernelKind;
@@ -48,6 +50,14 @@ pub struct Backend {
     /// it, sharding across workers when the plan's gates pass and falling
     /// back to the single-threaded kernels otherwise.
     shard: Arc<ShardExecutor>,
+    /// Content-addressed factor cache (the `[cache]` plane) for
+    /// anonymous operands; `None` = cold-factorize every anonymous
+    /// operand, exactly the pre-cache behavior.
+    content: Option<Arc<ContentCache>>,
+    /// Factorization config for the content-cache path — `lr_cfg` with
+    /// the storage optionally forced to FP8 (`[cache].fp8`). Fills and
+    /// hits share it, so cached and cold results stay bit-identical.
+    content_cfg: LowRankConfig,
 }
 
 impl Backend {
@@ -77,9 +87,28 @@ impl Backend {
         Backend {
             xla,
             cache,
+            content: None,
+            content_cfg: lr_cfg.clone(),
             lr_cfg,
             shard,
         }
+    }
+
+    /// Attach the content-addressed factor cache (builder-style): every
+    /// anonymous low-rank operand that clears the admission gate is then
+    /// fetched-or-factorized through it. With `settings.fp8`, cached
+    /// factors are stored FP8-encoded via the existing codecs.
+    pub fn with_content_cache(
+        mut self,
+        content: Arc<ContentCache>,
+        settings: &CacheSettings,
+    ) -> Self {
+        self.content_cfg = self.lr_cfg.clone();
+        if settings.fp8 {
+            self.content_cfg.storage = StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3);
+        }
+        self.content = Some(content);
+        self
     }
 
     /// The tile executor this backend runs CPU-substrate products on.
@@ -87,7 +116,9 @@ impl Backend {
         &self.shard
     }
 
-    /// Execute `kind` on (a, b). `a_id`/`b_id` enable factor caching.
+    /// Execute `kind` on (a, b). `a_id`/`b_id` enable id-keyed factor
+    /// caching; content-addressed caching (when attached) fingerprints
+    /// anonymous operands itself.
     pub fn execute(
         &self,
         kind: KernelKind,
@@ -95,6 +126,21 @@ impl Backend {
         b: &Matrix,
         a_id: Option<MatrixId>,
         b_id: Option<MatrixId>,
+    ) -> Result<ExecOutcome> {
+        self.execute_hinted(kind, a, b, a_id, b_id, FactorHints::default())
+    }
+
+    /// [`execute`](Backend::execute) with routing-time fingerprints: the
+    /// serving path hands the plan's hints through so operands hashed by
+    /// the router are never hashed again here.
+    pub fn execute_hinted(
+        &self,
+        kind: KernelKind,
+        a: &Matrix,
+        b: &Matrix,
+        a_id: Option<MatrixId>,
+        b_id: Option<MatrixId>,
+        hints: FactorHints,
     ) -> Result<ExecOutcome> {
         if a.cols() != b.rows() {
             return Err(Error::ShapeMismatch {
@@ -113,7 +159,7 @@ impl Backend {
                 StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
             ),
             KernelKind::LowRankFp8 | KernelKind::LowRankAuto => {
-                self.lowrank(kind, a, b, a_id, b_id)
+                self.lowrank(kind, a, b, a_id, b_id, hints)
             }
         }
     }
@@ -162,17 +208,33 @@ impl Backend {
         })
     }
 
-    /// Fetch a factor from the cache or factorize now (charging the cold
+    /// Fetch a factor from a cache or factorize now (charging the cold
     /// path — this is the miss cost the router's cost model anticipated).
-    /// Cold decompositions run the panel-parallel randomized SVD on the
-    /// tile plane.
-    fn factor_of(&self, m: &Matrix, id: Option<MatrixId>) -> Result<LowRankFactor> {
-        match id {
-            Some(id) => self
+    /// Identified operands resolve through the id-keyed cache; anonymous
+    /// ones through the content cache when one is attached and the
+    /// operand clears its admission gate. Cold decompositions run the
+    /// panel-parallel randomized SVD on the tile plane either way.
+    fn factor_of(
+        &self,
+        m: &Matrix,
+        id: Option<MatrixId>,
+        fp: Option<Fingerprint>,
+    ) -> Result<LowRankFactor> {
+        if let Some(id) = id {
+            return self
                 .cache
-                .get_or_insert_with(id, || factorize_sharded(&self.shard, m, &self.lr_cfg)),
-            None => factorize_sharded(&self.shard, m, &self.lr_cfg),
+                .get_or_insert_with(id, || factorize_sharded(&self.shard, m, &self.lr_cfg));
         }
+        if let Some(cc) = &self.content {
+            if cc.admits(m) {
+                // Reuse the router's fingerprint; hash here only when the
+                // call arrived without a plan (direct `execute`).
+                let fp = fp.unwrap_or_else(|| Fingerprint::of(m));
+                return cc
+                    .get_or_insert_with(fp, || factorize_sharded(&self.shard, m, &self.content_cfg));
+            }
+        }
+        factorize_sharded(&self.shard, m, &self.lr_cfg)
     }
 
     fn lowrank(
@@ -182,6 +244,7 @@ impl Backend {
         b: &Matrix,
         a_id: Option<MatrixId>,
         b_id: Option<MatrixId>,
+        hints: FactorHints,
     ) -> Result<ExecOutcome> {
         // Mixed factored×dense serving paths: when exactly one operand is
         // an identified (weight) matrix, keep the other dense — never pay
@@ -190,7 +253,7 @@ impl Backend {
         // is the cost the router's cold path charges).
         match (a_id, b_id) {
             (Some(_), None) => {
-                let fa = self.factor_of(a, a_id)?;
+                let fa = self.factor_of(a, a_id, None)?;
                 let rank = fa.rank();
                 let c = self.shard.lowrank_matmul_dense_rhs(&fa, b)?;
                 return Ok(ExecOutcome {
@@ -200,7 +263,7 @@ impl Backend {
                 });
             }
             (None, Some(_)) => {
-                let fb = self.factor_of(b, b_id)?;
+                let fb = self.factor_of(b, b_id, None)?;
                 let rank = fb.rank();
                 let c = self.shard.lowrank_matmul_dense_lhs(a, &fb)?;
                 return Ok(ExecOutcome {
@@ -212,8 +275,8 @@ impl Backend {
             _ => {}
         }
 
-        let fa = self.factor_of(a, a_id)?;
-        let fb = self.factor_of(b, b_id)?;
+        let fa = self.factor_of(a, a_id, hints.a)?;
+        let fb = self.factor_of(b, b_id, hints.b)?;
         let rank = fa.rank().max(fb.rank());
 
         // XLA path needs equal ranks on the lattice (artifacts are lowered
@@ -306,6 +369,50 @@ mod tests {
             .execute(KernelKind::LowRankAuto, &a, &b, Some(11), Some(12))
             .unwrap();
         assert!(be.cache.stats().hits >= 2);
+    }
+
+    #[test]
+    fn content_cache_hit_is_bitwise_identical_to_cold() {
+        let cc = Arc::new(ContentCache::new(64 << 20, 32));
+        let be = Backend::new(
+            None,
+            Arc::new(FactorCache::new(64 << 20)),
+            LowRankConfig::default(),
+        )
+        .with_content_cache(cc.clone(), &CacheSettings::default());
+
+        let mut rng = Pcg64::seeded(6);
+        let a = Matrix::low_rank_noisy(96, 96, 6, 1e-5, &mut rng);
+        let b = Matrix::low_rank_noisy(96, 96, 6, 1e-5, &mut rng);
+        // Anonymous operands: the cold call decomposes and fills the
+        // content cache, the second call serves off it — bit-for-bit.
+        let cold = be
+            .execute(KernelKind::LowRankFp8, &a, &b, None, None)
+            .unwrap();
+        assert_eq!(cc.stats().entries, 2);
+        let warm = be
+            .execute(KernelKind::LowRankFp8, &a, &b, None, None)
+            .unwrap();
+        assert_eq!(cold.c.data(), warm.c.data(), "hit must replay the cold bits");
+        assert_eq!(cc.stats().hits, 2);
+        assert_eq!(cc.stats().misses, 2);
+    }
+
+    #[test]
+    fn content_cache_gate_keeps_small_operands_out() {
+        let cc = Arc::new(ContentCache::new(64 << 20, 512));
+        let be = Backend::new(
+            None,
+            Arc::new(FactorCache::new(64 << 20)),
+            LowRankConfig::default(),
+        )
+        .with_content_cache(cc.clone(), &CacheSettings::default());
+        let mut rng = Pcg64::seeded(7);
+        let a = Matrix::low_rank_noisy(64, 64, 4, 1e-5, &mut rng);
+        let b = Matrix::low_rank_noisy(64, 64, 4, 1e-5, &mut rng);
+        be.execute(KernelKind::LowRankFp8, &a, &b, None, None)
+            .unwrap();
+        assert_eq!(cc.stats().entries, 0, "below min_dim nothing is cached");
     }
 
     #[test]

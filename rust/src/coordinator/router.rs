@@ -14,7 +14,8 @@
 use std::sync::Arc;
 
 use crate::autotune::{CalibrationTable, ExplorePolicy};
-use crate::config::schema::AutotuneSettings;
+use crate::cache::{ContentCache, FactorHints, Fingerprint};
+use crate::config::schema::{AutotuneSettings, CacheSettings};
 use crate::gpu_sim::profile::DeviceProfile;
 use crate::kernels::{AutoKernelSelector, KernelChoice, SelectorInputs};
 use crate::lowrank::cache::FactorCache;
@@ -38,6 +39,16 @@ pub struct RoutePlan {
     /// Did the ε-greedy autotune policy override the model's best choice
     /// (an exploration request feeding the calibration table)?
     pub explored: bool,
+    /// Content-addressed fingerprints of anonymous operands (factor-cache
+    /// plane), computed once here so the backend never re-hashes. Both
+    /// `None` whenever the plane is off or the operands are identified.
+    pub hints: FactorHints,
+    /// Was the decomposition charge amortized (`decomp_amortization > 1`)
+    /// in this plan's cost inputs? Amortized predictions deliberately
+    /// under-state the *this-request* cost of a miss, so the autotune
+    /// plane must not fold such requests into its observed/predicted
+    /// calibration — the service checks this flag before recording.
+    pub amortized: bool,
 }
 
 /// Routing configuration (a distilled view of [`crate::config::AppConfig`]).
@@ -81,6 +92,9 @@ pub struct Router {
     cache: Arc<FactorCache>,
     /// ε-greedy exploration (autotune); `None` routes purely greedily.
     explore: Option<ExplorePolicy>,
+    /// Content-addressed factor cache (the `[cache]` plane); `None` keeps
+    /// routing bit-identical to the id-only world.
+    content: Option<(Arc<ContentCache>, CacheSettings)>,
 }
 
 impl Router {
@@ -91,6 +105,7 @@ impl Router {
             cfg,
             cache,
             explore: None,
+            content: None,
         }
     }
 
@@ -113,7 +128,22 @@ impl Router {
             cfg,
             cache,
             explore,
+            content: None,
         }
+    }
+
+    /// Attach the content-addressed factor cache (builder-style): routing
+    /// then fingerprints anonymous operands that clear the admission
+    /// gate, treats resident fingerprints as cached factors, and
+    /// amortizes the decomposition charge of cacheable misses over the
+    /// plane's expected reuse count.
+    pub fn with_content_cache(
+        mut self,
+        content: Arc<ContentCache>,
+        settings: CacheSettings,
+    ) -> Self {
+        self.content = Some((content, settings));
+        self
     }
 
     /// The routing-time rank estimate for an (m, k, n) GEMM.
@@ -173,15 +203,64 @@ impl Router {
         let rank = self.rank_estimate(m, k, n);
         let tolerance = req.error_tolerance.unwrap_or(self.cfg.default_tolerance);
 
+        // Factor-cache plane: fingerprint fully-anonymous operands that
+        // clear the admission gate (once — the backend reuses the hints).
+        // Mixed requests (one identified operand) keep the anonymous side
+        // dense on the execution path, so hashing it would buy nothing.
+        let mut hints = FactorHints::default();
+        if req.a_id.is_none() && req.b_id.is_none() {
+            if let Some((cc, _)) = &self.content {
+                if cc.admits(&req.a) {
+                    hints.a = Some(Fingerprint::of(&req.a));
+                }
+                if cc.admits(&req.b) {
+                    hints.b = Some(Fingerprint::of(&req.b));
+                }
+            }
+        }
+
         // "Cached" means: no factorization will be charged at execution
-        // time. Identified operands must be resident; anonymous operands
-        // paired with an identified one stay dense (the mixed
-        // factored×dense serving path) and cost nothing to decompose.
+        // time. Identified operands must be resident in the id cache;
+        // anonymous operands paired with an identified one stay dense
+        // (the mixed factored×dense serving path) and cost nothing to
+        // decompose; fully-anonymous pairs count as cached when both
+        // fingerprints are resident in the content cache.
         let factors_cached = match (req.a_id, req.b_id) {
             (Some(a), Some(b)) => self.cache.contains(a) && self.cache.contains(b),
             (Some(a), None) => self.cache.contains(a),
             (None, Some(b)) => self.cache.contains(b),
-            (None, None) => false,
+            (None, None) => match (&self.content, hints.a, hints.b) {
+                (Some((cc, _)), Some(af), Some(bf)) => cc.contains(af) && cc.contains(bf),
+                _ => false,
+            },
+        };
+
+        // Amortized-decomposition term: a miss whose factors will land in
+        // a cache (the id cache for identified operands, the content
+        // cache for fingerprinted ones) is priced at cold-cost /
+        // amortize_over — the workload decomposes once and serves many
+        // requests off the factors. One cacheable operand is enough to
+        // engage the credit: for the asymmetric serving shape (large
+        // reusable weight × below-gate activation) the weight dominates
+        // the decomposition charge, and refusing all credit until *both*
+        // operands qualify would keep the plane from ever flipping the
+        // selector there. The term is coarse — it divides both operands'
+        // charges — but over-crediting a below-gate operand's (cheap)
+        // decomposition distorts far less than full cold pricing of the
+        // resident-side one.
+        let decomp_amortization = match &self.content {
+            Some((_, set)) if !factors_cached => {
+                let cacheable = match (req.a_id, req.b_id) {
+                    (None, None) => hints.a.is_some() || hints.b.is_some(),
+                    _ => true,
+                };
+                if cacheable {
+                    set.amortize_over as f64
+                } else {
+                    1.0
+                }
+            }
+            _ => 1.0,
         };
 
         let inp = SelectorInputs {
@@ -192,6 +271,7 @@ impl Router {
             rank,
             factors_cached,
             factored_output_ok: req.factored_output_ok,
+            decomp_amortization,
         };
 
         let mut explored = false;
@@ -237,7 +317,14 @@ impl Router {
             factors_cached,
             tolerance,
             explored,
+            hints,
+            amortized: decomp_amortization > 1.0,
         }
+    }
+
+    /// The content-addressed factor cache, when the `[cache]` plane is on.
+    pub fn content_cache(&self) -> Option<&Arc<ContentCache>> {
+        self.content.as_ref().map(|(cc, _)| cc)
     }
 
     /// Expose the selector (benchmarks want `ranked()`).
@@ -311,10 +398,127 @@ mod tests {
 
     #[test]
     fn rank_estimate_spectrum_free_strategies() {
-        let mut cfg = RouterConfig::default();
-        cfg.rank_strategy = RankStrategy::Fixed(12);
+        let cfg = RouterConfig {
+            rank_strategy: RankStrategy::Fixed(12),
+            ..Default::default()
+        };
         let r = Router::new(cfg, Arc::new(FactorCache::new(1 << 20)));
         assert_eq!(r.rank_estimate(256, 256, 256), 12);
+    }
+
+    fn content_router(settings: CacheSettings) -> (Router, Arc<ContentCache>) {
+        let cc = Arc::new(ContentCache::new(settings.budget_bytes(), settings.min_dim));
+        let r = Router::new(RouterConfig::default(), Arc::new(FactorCache::new(1 << 20)))
+            .with_content_cache(cc.clone(), settings);
+        (r, cc)
+    }
+
+    fn small_settings() -> CacheSettings {
+        CacheSettings {
+            enabled: true,
+            min_dim: 32,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn content_cached_anonymous_operands_flip_routing() {
+        // Anonymous operands whose fingerprints are resident route like
+        // preloaded weights: no decomposition charged, low-rank wins at
+        // sizes where the cold path would not.
+        let (r, cc) = content_router(small_settings());
+        let n = 4096;
+        let mut request = req(64);
+        request.a = Matrix::zeros(n, n);
+        request.b = Matrix::zeros(n, n);
+
+        let before = r.route(&request);
+        assert!(!before.factors_cached);
+        assert_eq!(before.hints.a.map(|f| f.shape()), Some((n, n)));
+
+        // Pin (small) factors under the operands' fingerprints — routing
+        // only consults presence, never the payload.
+        let mut rng = Pcg64::seeded(21);
+        let w = Matrix::low_rank(64, 64, 8, &mut rng);
+        let f = crate::lowrank::factorize(&w, &r.lowrank_config()).unwrap();
+        cc.put(Fingerprint::of(&request.a), f.clone());
+        cc.put(Fingerprint::of(&request.b), f);
+
+        let plan = r.route(&request);
+        assert!(plan.factors_cached);
+        assert!(plan.choice.kind.is_lowrank(), "got {:?}", plan.choice.kind);
+    }
+
+    #[test]
+    fn admission_gate_skips_fingerprinting() {
+        let (r, _) = content_router(CacheSettings {
+            enabled: true,
+            min_dim: 512,
+            ..Default::default()
+        });
+        let plan = r.route(&req(128));
+        assert_eq!(plan.hints, crate::cache::FactorHints::default());
+        assert!(!plan.factors_cached);
+    }
+
+    #[test]
+    fn mixed_requests_skip_fingerprinting() {
+        // One identified operand ⇒ the anonymous side stays dense on the
+        // execution path, so the router must not pay to hash it.
+        let (r, _) = content_router(small_settings());
+        let plan = r.route(&req(64).with_ids(Some(9), None));
+        assert_eq!(plan.hints, crate::cache::FactorHints::default());
+    }
+
+    #[test]
+    fn cacheable_miss_prices_amortized_decomposition() {
+        // Forced low-rank kernel on an anonymous, admissible, not-yet-
+        // resident pair: the content router divides the decomposition
+        // charge by amortize_over, the plain router charges it in full.
+        let settings = CacheSettings {
+            amortize_over: 16,
+            ..small_settings()
+        };
+        let (r, _) = content_router(settings);
+        let plain = router();
+        let request = req(512).with_kernel(KernelKind::LowRankFp8);
+        let plan = r.route(&request);
+        let full = plain.route(&request);
+        assert!(plan.amortized, "cacheable miss must be flagged amortized");
+        assert!(!full.amortized);
+        assert!(
+            plan.choice.cost.time_s < full.choice.cost.time_s,
+            "amortized {} must undercut cold {}",
+            plan.choice.cost.time_s,
+            full.choice.cost.time_s
+        );
+    }
+
+    #[test]
+    fn one_cacheable_operand_is_enough_for_amortization() {
+        // Asymmetric serving shape: admitted weight × below-gate
+        // activation. The weight's decomposition dominates; the credit
+        // must engage even though the activation never caches.
+        let (r, _) = content_router(CacheSettings {
+            enabled: true,
+            min_dim: 256,
+            ..Default::default()
+        });
+        let mut rng = Pcg64::seeded(31);
+        let mut request = req(64).with_kernel(KernelKind::LowRankFp8);
+        request.a = Matrix::gaussian(512, 512, &mut rng); // admitted
+        request.b = Matrix::gaussian(512, 64, &mut rng); // below min_dim
+        let plan = r.route(&request);
+        assert!(plan.hints.a.is_some());
+        assert!(plan.hints.b.is_none());
+        assert!(plan.amortized, "one admitted operand must engage the credit");
+    }
+
+    #[test]
+    fn no_content_cache_leaves_plans_hint_free() {
+        let r = router();
+        let plan = r.route(&req(256));
+        assert_eq!(plan.hints, crate::cache::FactorHints::default());
     }
 
     fn autotune_router(epsilon: f64) -> Router {

@@ -24,7 +24,8 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::autotune::CalibrationTable;
-use crate::config::schema::{AppConfig, AutotuneSettings, ShardSettings};
+use crate::cache::ContentCache;
+use crate::config::schema::{AppConfig, AutotuneSettings, CacheSettings, ShardSettings};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::batcher::{Batcher, BucketKey};
 use crate::coordinator::request::{GemmRequest, GemmResponse};
@@ -65,6 +66,10 @@ pub struct ServiceConfig {
     /// kernel selector). Default-off: routing is then bit-identical to
     /// the static analytic cost model.
     pub autotune: AutotuneSettings,
+    /// Factor-cache plane (content-addressed reuse of decompositions
+    /// across requests). Default-off: routing and results are then
+    /// bit-identical to a build without the plane.
+    pub cache: CacheSettings,
 }
 
 impl Default for ServiceConfig {
@@ -79,6 +84,7 @@ impl Default for ServiceConfig {
             artifacts_dir: None,
             shard: ShardSettings::default(),
             autotune: AutotuneSettings::default(),
+            cache: CacheSettings::default(),
         }
     }
 }
@@ -109,6 +115,7 @@ impl ServiceConfig {
             },
             shard: app.shard.clone(),
             autotune: app.autotune.clone(),
+            cache: app.cache.clone(),
         })
     }
 }
@@ -130,8 +137,11 @@ pub struct ServiceStats {
     pub completed: u64,
     /// Requests rejected by backpressure.
     pub rejected: u64,
-    /// Factor-cache counters.
+    /// Id-keyed factor-cache counters (offline decomposition).
     pub cache: CacheStats,
+    /// Content-addressed factor-cache counters (the `[cache]` plane);
+    /// all-zero when the plane is disabled.
+    pub content_cache: CacheStats,
 }
 
 /// The serving coordinator. See module docs for the dataflow.
@@ -140,6 +150,8 @@ pub struct GemmService {
     dispatcher: Option<JoinHandle<()>>,
     router: Arc<Router>,
     cache: Arc<FactorCache>,
+    /// Content-addressed factor cache when the `[cache]` plane is on.
+    content: Option<Arc<ContentCache>>,
     backend: Arc<Backend>,
     metrics: Arc<MetricsRegistry>,
     inflight: Arc<AtomicUsize>,
@@ -181,10 +193,15 @@ impl GemmService {
             // so this is the path's validate() call — out-of-range knobs
             // must fail start(), not be silently clamped downstream.
             cfg.autotune.validate()?;
-            let table = Arc::new(CalibrationTable::new(
-                cfg.autotune.ewma_alpha,
-                cfg.autotune.min_samples,
-            ));
+            let mut table =
+                CalibrationTable::new(cfg.autotune.ewma_alpha, cfg.autotune.min_samples);
+            if let Some(path) = &cfg.autotune.table_path {
+                // Periodic flush every min_samples-th recorded sample: an
+                // abrupt kill then loses at most a flush window of a long
+                // calibration run, not all of it (Drop still saves last).
+                table.set_autosave(path, cfg.autotune.min_samples.max(1));
+            }
+            let table = Arc::new(table);
             if let Some(path) = &cfg.autotune.table_path {
                 if std::path::Path::new(path).exists() {
                     let loaded = table.load(path)?;
@@ -195,12 +212,34 @@ impl GemmService {
         } else {
             None
         };
-        let router = Arc::new(match &autotune {
+        // Factor-cache plane: one content-addressed store shared by the
+        // router (plans against it) and the backend (fills and serves
+        // from it), metrics-wired so hits/misses/evictions surface as
+        // `cache.*`. Disabled (the default) nothing is fingerprinted and
+        // routing is bit-identical to the id-only world.
+        let content = if cfg.cache.enabled {
+            // Programmatic ServiceConfig bypasses the TOML/CLI parsers,
+            // so this is the path's validate() call.
+            cfg.cache.validate()?;
+            Some(Arc::new(ContentCache::with_metrics(
+                cfg.cache.budget_bytes(),
+                cfg.cache.min_dim,
+                metrics.clone(),
+            )))
+        } else {
+            None
+        };
+
+        let mut router = match &autotune {
             Some(table) => {
                 Router::with_autotune(router_cfg, cache.clone(), table.clone(), &cfg.autotune)
             }
             None => Router::new(router_cfg, cache.clone()),
-        });
+        };
+        if let Some(cc) = &content {
+            router = router.with_content_cache(cc.clone(), cfg.cache.clone());
+        }
+        let router = Arc::new(router);
         let shard = Arc::new(ShardExecutor::with_metrics(
             ShardPlan::from(&cfg.shard),
             metrics.clone(),
@@ -219,12 +258,11 @@ impl GemmService {
             )
         });
 
-        let backend = Arc::new(Backend::with_shard(
-            xla_pair,
-            cache.clone(),
-            router.lowrank_config(),
-            shard,
-        ));
+        let mut backend = Backend::with_shard(xla_pair, cache.clone(), router.lowrank_config(), shard);
+        if let Some(cc) = &content {
+            backend = backend.with_content_cache(cc.clone(), &cfg.cache);
+        }
+        let backend = Arc::new(backend);
 
         let pool = ThreadPool::new(cfg.workers.max(1));
         let (tx, rx) = channel::<Pending>();
@@ -256,6 +294,7 @@ impl GemmService {
             lr_cfg: router.lowrank_config(),
             router,
             cache,
+            content,
             backend,
             metrics,
             autotune,
@@ -305,7 +344,14 @@ impl GemmService {
                         metrics.count("autotune.explore_total", 1);
                     }
                     let result = backend
-                        .execute(p.plan.choice.kind, &p.req.a, &p.req.b, p.req.a_id, p.req.b_id)
+                        .execute_hinted(
+                            p.plan.choice.kind,
+                            &p.req.a,
+                            &p.req.b,
+                            p.req.a_id,
+                            p.req.b_id,
+                            p.plan.hints,
+                        )
                         .map(|out| {
                             let exec_us = started.elapsed().as_micros() as u64;
                             metrics.observe("gemm.exec_us", exec_us as f64);
@@ -322,16 +368,28 @@ impl GemmService {
                                 // recording against a corrected value
                                 // would compound the feedback loop
                                 // (fixed point √ratio instead of ratio).
-                                let raw_s = p.plan.choice.cost.time_s / p.plan.choice.calibration;
-                                let observed_s = started.elapsed().as_secs_f64();
-                                if let Some(corr) = table
-                                    .record(p.plan.choice.kind, m, k, n, raw_s, observed_s)
-                                {
-                                    metrics.observe("autotune.correction", corr);
-                                    metrics.observe(
-                                        "autotune.table_entries",
-                                        table.len() as f64,
-                                    );
+                                //
+                                // Amortized low-rank plans are excluded:
+                                // their prediction deliberately divides
+                                // the decomposition charge across future
+                                // reuses, while this request's observed
+                                // time pays it in full — folding that
+                                // ratio into the table would overprice
+                                // every warm request sharing the
+                                // size-class cell.
+                                if !(p.plan.amortized && p.plan.choice.kind.is_lowrank()) {
+                                    let raw_s =
+                                        p.plan.choice.cost.time_s / p.plan.choice.calibration;
+                                    let observed_s = started.elapsed().as_secs_f64();
+                                    if let Some(corr) = table
+                                        .record(p.plan.choice.kind, m, k, n, raw_s, observed_s)
+                                    {
+                                        metrics.observe("autotune.correction", corr);
+                                        metrics.observe(
+                                            "autotune.table_entries",
+                                            table.len() as f64,
+                                        );
+                                    }
                                 }
                             }
                             GemmResponse {
@@ -453,9 +511,14 @@ impl GemmService {
     pub fn execute_inline(&self, req: &GemmRequest) -> Result<GemmResponse> {
         let plan = self.router.route(req);
         let started = Instant::now();
-        let out = self
-            .backend
-            .execute(plan.choice.kind, &req.a, &req.b, req.a_id, req.b_id)?;
+        let out = self.backend.execute_hinted(
+            plan.choice.kind,
+            &req.a,
+            &req.b,
+            req.a_id,
+            req.b_id,
+            plan.hints,
+        )?;
         Ok(GemmResponse {
             id: 0,
             c: out.c,
@@ -481,6 +544,11 @@ impl GemmService {
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             cache: self.cache.stats(),
+            content_cache: self
+                .content
+                .as_ref()
+                .map(|c| c.stats())
+                .unwrap_or_default(),
         }
     }
 
@@ -507,9 +575,14 @@ impl GemmService {
         }
     }
 
-    /// The shared factor cache.
+    /// The shared id-keyed factor cache.
     pub fn cache(&self) -> &Arc<FactorCache> {
         &self.cache
+    }
+
+    /// The content-addressed factor cache, when the `[cache]` plane is on.
+    pub fn content_cache(&self) -> Option<&Arc<ContentCache>> {
+        self.content.as_ref()
     }
 
     /// Block until every accepted request has completed.
@@ -541,10 +614,12 @@ mod tests {
     use crate::linalg::Pcg64;
 
     fn svc() -> GemmService {
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 2;
-        cfg.max_batch = 4;
-        cfg.batch_window = Duration::from_micros(100);
+        let cfg = ServiceConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_window: Duration::from_micros(100),
+            ..Default::default()
+        };
         GemmService::start(cfg).unwrap()
     }
 
@@ -606,11 +681,13 @@ mod tests {
 
     #[test]
     fn backpressure_rejects_when_full() {
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.queue_depth = 2;
-        cfg.max_batch = 64;
-        cfg.batch_window = Duration::from_millis(200); // hold batches
+        let cfg = ServiceConfig {
+            workers: 1,
+            queue_depth: 2,
+            max_batch: 64,
+            batch_window: Duration::from_millis(200), // hold batches
+            ..Default::default()
+        };
         let s = GemmService::start(cfg).unwrap();
 
         let mut rejected = 0;
@@ -642,9 +719,14 @@ mod tests {
         assert!(s.calibration().is_none(), "autotune must be opt-in");
         assert!(!s.save_calibration().unwrap());
 
-        let mut cfg = ServiceConfig::default();
-        cfg.autotune.enabled = true;
-        cfg.autotune.epsilon = 0.0;
+        let cfg = ServiceConfig {
+            autotune: AutotuneSettings {
+                enabled: true,
+                epsilon: 0.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
         let s = GemmService::start(cfg).unwrap();
         for i in 0..4 {
             s.gemm_blocking(rand_req(48, 400 + i)).unwrap();
@@ -654,6 +736,92 @@ mod tests {
         let summaries = s.metrics().histogram_summaries();
         assert!(summaries.contains_key("autotune.correction"));
         assert!(summaries["autotune.correction"].count >= 4);
+    }
+
+    #[test]
+    fn content_cache_disabled_by_default_and_serves_when_on() {
+        let s = svc();
+        assert!(s.content_cache().is_none(), "cache plane must be opt-in");
+        assert_eq!(s.stats().content_cache, CacheStats::default());
+
+        let cfg = ServiceConfig {
+            cache: CacheSettings {
+                enabled: true,
+                min_dim: 32,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = GemmService::start(cfg).unwrap();
+        let mut rng = Pcg64::seeded(91);
+        let w = Matrix::low_rank_noisy(64, 64, 4, 1e-5, &mut rng);
+        let x = Matrix::low_rank_noisy(64, 64, 4, 1e-5, &mut rng);
+        let req = || {
+            GemmRequest::new(w.clone(), x.clone()).with_kernel(KernelKind::LowRankFp8)
+        };
+        let r1 = s.gemm_blocking(req()).unwrap();
+        let r2 = s.gemm_blocking(req()).unwrap();
+        assert_eq!(r1.c.data(), r2.c.data(), "hit must replay the cold bits");
+        let cs = s.stats().content_cache;
+        assert_eq!(cs.misses, 2, "two distinct operands, two cold fills");
+        assert_eq!(cs.hits, 2, "second request serves both from cache");
+        assert_eq!(s.metrics().counters()["cache.hit"], 2);
+    }
+
+    #[test]
+    fn amortized_misses_are_excluded_from_calibration() {
+        // Autotune × cache interaction: an amortized low-rank miss's
+        // prediction understates this request's cost by design, so it
+        // must not seed the calibration table — only the warm (hit)
+        // request, whose prediction and observation both cover just the
+        // factor chain, may record.
+        let cfg = ServiceConfig {
+            autotune: AutotuneSettings {
+                enabled: true,
+                epsilon: 0.0,
+                ..Default::default()
+            },
+            cache: CacheSettings {
+                enabled: true,
+                min_dim: 32,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = GemmService::start(cfg).unwrap();
+        let mut rng = Pcg64::seeded(93);
+        let w = Matrix::low_rank_noisy(64, 64, 4, 1e-5, &mut rng);
+        let x = Matrix::low_rank_noisy(64, 64, 4, 1e-5, &mut rng);
+        let req = || {
+            GemmRequest::new(w.clone(), x.clone()).with_kernel(KernelKind::LowRankFp8)
+        };
+
+        s.gemm_blocking(req()).unwrap();
+        let table = s.calibration().expect("autotune on");
+        assert!(
+            table.is_empty(),
+            "the amortized cold miss must not fold into the table"
+        );
+
+        s.gemm_blocking(req()).unwrap();
+        assert_eq!(
+            table.len(),
+            1,
+            "the warm hit (un-amortized plan) must record normally"
+        );
+    }
+
+    #[test]
+    fn invalid_cache_settings_fail_start() {
+        let cfg = ServiceConfig {
+            cache: CacheSettings {
+                enabled: true,
+                budget_mb: 0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert!(GemmService::start(cfg).is_err());
     }
 
     #[test]

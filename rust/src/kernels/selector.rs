@@ -113,6 +113,13 @@ pub struct SelectorInputs {
     pub factors_cached: bool,
     /// Will the consumer accept a factored (non-materialized) result?
     pub factored_output_ok: bool,
+    /// Amortized-decomposition term (factor-cache plane): the expected
+    /// number of requests a cold decomposition's factors will serve. The
+    /// cost model divides the factorization charge by it, so a cacheable
+    /// miss is priced at its amortized cost instead of the full cold
+    /// cost. 1.0 (the default everywhere the cache plane is off) charges
+    /// the full cold cost and is bit-identical to the pre-cache model.
+    pub decomp_amortization: f64,
 }
 
 /// The selector's verdict for one request.
@@ -272,6 +279,7 @@ mod tests {
             rank,
             factors_cached: true,
             factored_output_ok: true,
+            decomp_amortization: 1.0,
         }
     }
 
@@ -354,6 +362,40 @@ mod tests {
         let x = crossover.expect("lowrank should win eventually");
         // Paper says ~10240; accept a generous band around it.
         assert!((4096..=20480).contains(&x), "crossover at {x}");
+    }
+
+    #[test]
+    fn amortization_flips_the_crossover_earlier() {
+        // The factor-cache plane's routing claim: amortizing a cold
+        // decomposition over its expected reuses moves the low-rank
+        // crossover to smaller N than the paper's cold regime.
+        let s = sel();
+        let crossover_at = |amort: f64| {
+            for exp in 0..14 {
+                let n = (1024.0 * (2.0f64).powf(exp as f64 / 2.0)).round() as usize;
+                let mut inp = inputs(n, (n / 40).max(16));
+                inp.factors_cached = false;
+                inp.decomp_amortization = amort;
+                if s.select(&inp).kind.is_lowrank() {
+                    return n;
+                }
+            }
+            usize::MAX
+        };
+        let cold = crossover_at(1.0);
+        let amortized = crossover_at(16.0);
+        // Amortization only ever cheapens low-rank kernels, so the
+        // crossover can't move later…
+        assert!(
+            amortized <= cold,
+            "amortized crossover {amortized} must not exceed cold {cold}"
+        );
+        // …and at 16 expected reuses it sits near the warm regime, well
+        // below the paper's cold N ≥ 10240 operating point.
+        assert!(
+            amortized <= 4096,
+            "amortized crossover {amortized} should be warm-adjacent"
+        );
     }
 
     #[test]

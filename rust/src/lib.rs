@@ -56,6 +56,16 @@
 //! cost model (see the [`autotune`] module docs). Disabled (the default),
 //! selection is bit-identical to the static roofline model.
 //!
+//! When `[cache]` is enabled, the coordinator additionally reuses
+//! decompositions across requests *without* caller-supplied ids: operands
+//! are content-addressed by a [`cache::Fingerprint`] (shape + digest of
+//! the exact bit patterns), the [`cache::ContentCache`] holds their
+//! `(U, Σ, Vᵀ)` factors behind a byte-budgeted LRU, and the cost model
+//! amortizes the decomposition charge over the expected reuse count so
+//! low-rank kernels win well below the paper's cold crossover. Disabled
+//! (the default), routing and results are bit-identical to a build
+//! without the plane.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -75,6 +85,7 @@
 
 pub mod autotune;
 pub mod bench_harness;
+pub mod cache;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -93,6 +104,7 @@ pub mod trace;
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
     pub use crate::autotune::{CalibrationTable, ExplorePolicy};
+    pub use crate::cache::{ContentCache, Fingerprint};
     pub use crate::coordinator::{GemmRequest, GemmResponse, GemmService, ServiceConfig};
     pub use crate::error::{Error, Result};
     pub use crate::fp8::{Fp8Format, QuantizedTensor};

@@ -69,17 +69,23 @@ COMMANDS:
              [--shard-workers W] [--tile-m M] [--tile-n N] [--min-parallel-n N]
              [--autotune] [--autotune-alpha A] [--autotune-epsilon E]
              [--autotune-min-samples K] [--autotune-table F]
+             [--cache] [--cache-budget-mb M] [--cache-min-dim D]
+             [--cache-fp8] [--cache-amortize R]
              start the service and replay a synthetic transformer trace;
              --autotune turns on measured-latency calibration of the
-             kernel selector (--autotune-table persists it across runs)
+             kernel selector (--autotune-table persists it across runs);
+             --cache turns on content-addressed factor caching (anonymous
+             repeated operands decompose once, LRU within --cache-budget-mb)
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
   factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
              offline decomposition; prints error + memory accounting
   route      --n N [--rank R] [--tolerance T] [--device D] [--cached]
-             [--autotune-table F]
+             [--autotune-table F] [--amortize R]
              print the selector's ranked decision table; with a saved
-             calibration table, predictions include learned corrections
+             calibration table, predictions include learned corrections;
+             --amortize R prices cold decompositions amortized over R
+             expected reuses (the factor-cache plane's routing view)
   info       [--artifacts DIR]
              device profiles and the artifact manifest
 
@@ -118,9 +124,20 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
     if let Some(p) = args.get("autotune-table") {
         cfg.autotune.table_path = Some(p.to_string());
     }
-    // Same validator the TOML path runs — an out-of-range flag must
+    // `[cache]` overrides: the factor-cache plane's knobs.
+    if args.has_flag("cache") {
+        cfg.cache.enabled = true;
+    }
+    if args.has_flag("cache-fp8") {
+        cfg.cache.fp8 = true;
+    }
+    cfg.cache.budget_mb = args.get_parse("cache-budget-mb", cfg.cache.budget_mb)?;
+    cfg.cache.min_dim = args.get_parse("cache-min-dim", cfg.cache.min_dim)?;
+    cfg.cache.amortize_over = args.get_parse("cache-amortize", cfg.cache.amortize_over)?;
+    // Same validators the TOML path runs — an out-of-range flag must
     // fail loudly, not be silently clamped downstream.
     cfg.autotune.validate()?;
+    cfg.cache.validate()?;
     Ok(cfg)
 }
 
@@ -170,9 +187,20 @@ fn cmd_serve(args: &CliArgs) -> Result<()> {
         requests as f64 / dt.as_secs_f64()
     );
     println!(
-        "cache: {} hits / {} misses / {} entries",
+        "id cache: {} hits / {} misses / {} entries",
         stats.cache.hits, stats.cache.misses, stats.cache.entries
     );
+    if svc.content_cache().is_some() {
+        let cs = stats.content_cache;
+        println!(
+            "content cache: {} hits / {} misses / {} evictions / {} entries / {} KiB resident",
+            cs.hits,
+            cs.misses,
+            cs.evictions,
+            cs.entries,
+            cs.resident_bytes / 1024
+        );
+    }
     println!("{}", svc.metrics().render());
     Ok(())
 }
@@ -296,10 +324,11 @@ fn cmd_route(args: &CliArgs) -> Result<()> {
         rank,
         factors_cached: args.has_flag("cached"),
         factored_output_ok: args.has_flag("factored-ok"),
+        decomp_amortization: args.get_parse("amortize", 1.0)?,
     };
     println!(
-        "decision table for N={n}, r={rank}, tol={tolerance}, cached={}:",
-        inp.factors_cached
+        "decision table for N={n}, r={rank}, tol={tolerance}, cached={}, amortize={}:",
+        inp.factors_cached, inp.decomp_amortization
     );
     println!(
         "{:<22} {:>12} {:>14} {:>12}",

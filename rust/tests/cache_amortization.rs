@@ -1,0 +1,214 @@
+//! End-to-end tests for the factor-cache plane: a repeated-operand
+//! serving workload decomposes each distinct matrix exactly once, hits
+//! replay the cold path bit-for-bit, the LRU respects its byte budget
+//! strictly, fingerprints cannot collide across same-shape different
+//! content, and the default-off config leaves routing bit-identical to
+//! the id-only world.
+
+use std::sync::Arc;
+
+use lowrank_gemm::cache::{ContentCache, Fingerprint};
+use lowrank_gemm::config::CacheSettings;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, Router, ServiceConfig};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::lowrank::{factorize, FactorCache, LowRankConfig, RankStrategy};
+
+fn cached_service() -> GemmService {
+    let cfg = ServiceConfig {
+        cache: CacheSettings {
+            enabled: true,
+            min_dim: 32,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    GemmService::start(cfg).unwrap()
+}
+
+fn weight(n: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::seeded(seed);
+    Matrix::low_rank_noisy(n, n, (n / 16).max(2), 1e-5, &mut rng)
+}
+
+/// The acceptance workload: anonymous repeated operands (the serving
+/// pattern the id cache cannot see) decompose exactly once per distinct
+/// matrix, asserted through the `cache.hit` / `cache.miss` metrics.
+#[test]
+fn repeated_workload_decomposes_each_distinct_matrix_once() {
+    let svc = cached_service();
+    let weights: Vec<Matrix> = (0..3).map(|i| weight(64, 40 + i)).collect();
+    let x = weight(64, 50);
+
+    let rounds = 4;
+    for round in 0..rounds {
+        for w in &weights {
+            let req = GemmRequest::new(w.clone(), x.clone())
+                .with_kernel(KernelKind::LowRankFp8);
+            let resp = svc.gemm_blocking(req).unwrap();
+            assert!(resp.rank >= 1, "round {round} must run the factor chain");
+        }
+    }
+
+    // 4 distinct matrices (3 weights + 1 activation), 2 lookups per
+    // request, 12 requests: 4 misses (one cold decomposition each), the
+    // remaining 20 lookups are hits.
+    let counters = svc.metrics().counters();
+    assert_eq!(counters["cache.miss"], 4, "one decomposition per matrix");
+    assert_eq!(counters["cache.hit"], 20);
+    assert_eq!(counters["cache.insert"], 4);
+    let cs = svc.stats().content_cache;
+    assert_eq!(cs.entries, 4);
+    assert_eq!(cs.misses, 4);
+    assert_eq!(cs.hits, 20);
+}
+
+/// A cache hit must be indistinguishable from a cold decomposition at
+/// the bit level: same factors, same chain, same product bits — both
+/// within one service and against a fresh (all-cold) instance.
+#[test]
+fn hit_is_bitwise_identical_to_cold() {
+    let a = weight(96, 60);
+    let b = weight(96, 61);
+    let req = || GemmRequest::new(a.clone(), b.clone()).with_kernel(KernelKind::LowRankFp8);
+
+    let svc = cached_service();
+    let cold = svc.gemm_blocking(req()).unwrap();
+    let hit = svc.gemm_blocking(req()).unwrap();
+    assert_eq!(
+        cold.c.data(),
+        hit.c.data(),
+        "hit must replay the cold bits exactly"
+    );
+    assert!(svc.stats().content_cache.hits >= 2);
+
+    // A fresh service's cold path lands on the same bits, so cache state
+    // can never be observed through results.
+    let fresh = cached_service();
+    let fresh_cold = fresh.gemm_blocking(req()).unwrap();
+    assert_eq!(cold.c.data(), fresh_cold.c.data());
+}
+
+/// LRU eviction is strictly byte-budget-driven: inserts evict least-
+/// recently-used entries until the new factor fits, and resident bytes
+/// never exceed the budget.
+#[test]
+fn lru_evicts_strictly_by_byte_budget() {
+    let lr_cfg = LowRankConfig {
+        rank: RankStrategy::Fixed(4),
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seeded(70);
+    let mats: Vec<Matrix> = (0..4).map(|_| Matrix::low_rank(48, 48, 4, &mut rng)).collect();
+    let factors: Vec<_> = mats.iter().map(|m| factorize(m, &lr_cfg).unwrap()).collect();
+    let fps: Vec<_> = mats.iter().map(Fingerprint::of).collect();
+    let bytes = factors[0].storage_bytes();
+    assert!(factors.iter().all(|f| f.storage_bytes() == bytes));
+
+    // Budget for exactly three entries.
+    let budget = 3 * bytes + bytes / 2;
+    let cc = ContentCache::new(budget, 1);
+    for (fp, f) in fps.iter().zip(&factors).take(3) {
+        assert!(cc.put(*fp, f.clone()));
+        assert!(cc.stats().resident_bytes as usize <= budget);
+    }
+    // Touch 0 and 2; 1 becomes the LRU and must be the one evicted.
+    cc.get(fps[0]);
+    cc.get(fps[2]);
+    assert!(cc.put(fps[3], factors[3].clone()));
+    assert!(cc.stats().resident_bytes as usize <= budget, "budget is a hard cap");
+    assert!(cc.contains(fps[0]));
+    assert!(!cc.contains(fps[1]), "strict LRU victim");
+    assert!(cc.contains(fps[2]));
+    assert!(cc.contains(fps[3]));
+    assert_eq!(cc.stats().evictions, 1);
+}
+
+/// Same-shape, different-content matrices get distinct cache entries:
+/// the fingerprint digests every element's exact bit pattern, so aliasing
+/// would need a 128-bit hash collision (see `cache::fingerprint` docs for
+/// the non-adversarial assumption).
+#[test]
+fn same_shape_different_content_gets_distinct_fingerprints() {
+    let mut rng = Pcg64::seeded(80);
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..128 {
+        let m = Matrix::gaussian(24, 24, &mut rng);
+        assert!(
+            seen.insert(Fingerprint::of(&m)),
+            "two same-shape matrices produced one fingerprint"
+        );
+    }
+    // Structured near-misses: equal except one element, one ulp apart.
+    let a = Matrix::gaussian(24, 24, &mut rng);
+    let mut b = a.clone();
+    let nudged = f32::from_bits(b.data()[0].to_bits() ^ 1);
+    b.data_mut()[0] = nudged;
+    assert_ne!(Fingerprint::of(&a), Fingerprint::of(&b));
+}
+
+/// Acceptance gate: with `[cache]` disabled (the default), every routing
+/// decision is bit-identical to a plain id-only router, plans carry no
+/// fingerprints, and no content-cache state exists to consult.
+#[test]
+fn default_off_routing_is_bit_identical() {
+    let svc = GemmService::start(ServiceConfig::default()).unwrap();
+    assert!(svc.content_cache().is_none());
+
+    let plain = Router::new(
+        ServiceConfig::default().router,
+        Arc::new(FactorCache::new(ServiceConfig::default().factor_cache_bytes)),
+    );
+    for (i, n) in [48usize, 96, 256, 512].into_iter().enumerate() {
+        let mut rng = Pcg64::seeded(900 + i as u64);
+        let req = GemmRequest::new(
+            Matrix::gaussian(n, n, &mut rng),
+            Matrix::gaussian(n, n, &mut rng),
+        );
+        let a = svc.plan(&req);
+        let b = plain.route(&req);
+        assert_eq!(a.choice.kind, b.choice.kind, "n={n}");
+        assert_eq!(
+            a.choice.cost.time_s.to_bits(),
+            b.choice.cost.time_s.to_bits(),
+            "n={n}: disabled cache must not perturb a single cost bit"
+        );
+        assert_eq!(a.factors_cached, b.factors_cached);
+        assert_eq!(a.hints, lowrank_gemm::cache::FactorHints::default());
+    }
+    assert_eq!(svc.stats().content_cache.entries, 0);
+}
+
+/// `[cache].fp8` stores factors through the FP8 codecs: resident memory
+/// shrinks ~4x vs f32 factors while hits still replay the (FP8) cold
+/// path bit-for-bit.
+#[test]
+fn fp8_storage_shrinks_resident_bytes_and_stays_bit_stable() {
+    let mut cfg = ServiceConfig {
+        cache: CacheSettings {
+            enabled: true,
+            min_dim: 32,
+            fp8: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    cfg.router.storage = lowrank_gemm::fp8::StorageFormat::F32;
+    let svc = GemmService::start(cfg).unwrap();
+
+    let a = weight(64, 62);
+    let b = weight(64, 63);
+    let req = || GemmRequest::new(a.clone(), b.clone()).with_kernel(KernelKind::LowRankFp8);
+    let cold = svc.gemm_blocking(req()).unwrap();
+    let hit = svc.gemm_blocking(req()).unwrap();
+    assert_eq!(cold.c.data(), hit.c.data());
+
+    let cc = svc.content_cache().unwrap();
+    let cached = cc.get(Fingerprint::of(&a)).expect("factor resident");
+    assert_eq!(
+        cached.u.format.bytes_per_element(),
+        1,
+        "factors must be stored FP8-encoded"
+    );
+    assert!(cached.memory_saving() > 0.5);
+}

@@ -14,12 +14,13 @@ fn with_artifacts() -> Option<ServiceConfig> {
         eprintln!("skipping service e2e test: run `make artifacts` first");
         return None;
     }
-    let mut cfg = ServiceConfig::default();
-    cfg.artifacts_dir = Some("artifacts".into());
-    cfg.workers = 2;
-    cfg.max_batch = 4;
-    cfg.batch_window = Duration::from_micros(150);
-    Some(cfg)
+    Some(ServiceConfig {
+        artifacts_dir: Some("artifacts".into()),
+        workers: 2,
+        max_batch: 4,
+        batch_window: Duration::from_micros(150),
+        ..Default::default()
+    })
 }
 
 #[test]

@@ -10,12 +10,14 @@ use lowrank_gemm::kernels::KernelKind;
 use lowrank_gemm::linalg::{gemm_blocked, Matrix, Pcg64};
 
 fn sharded_service(workers: usize, min_parallel_n: usize) -> GemmService {
-    let mut cfg = ServiceConfig::default();
-    cfg.shard = ShardSettings {
-        workers,
-        tile_m: 256,
-        tile_n: 256,
-        min_parallel_n,
+    let cfg = ServiceConfig {
+        shard: ShardSettings {
+            workers,
+            tile_m: 256,
+            tile_n: 256,
+            min_parallel_n,
+        },
+        ..Default::default()
     };
     GemmService::start(cfg).expect("service boots")
 }
