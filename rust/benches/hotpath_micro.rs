@@ -11,10 +11,14 @@
 
 use lowrank_gemm::bench_harness::{bench, config_from_env, Measurement, Table};
 use lowrank_gemm::coordinator::{Batcher, BucketKey, GemmRequest, GemmService, Router, RouterConfig, ServiceConfig};
-use lowrank_gemm::fp8::{dequantize, quantize, StorageFormat};
+use lowrank_gemm::fp8::{dequantize, quantize, quantized_matmul, quantized_matmul_fused, StorageFormat};
 use lowrank_gemm::kernels::KernelKind;
-use lowrank_gemm::linalg::{gemm_blocked, gemm_flops, gemm_naive, Matrix, Pcg64};
+use lowrank_gemm::linalg::{
+    gemm_blocked, gemm_blocked_unpacked, gemm_flops, gemm_naive, Matrix, Pcg64,
+};
 use lowrank_gemm::lowrank::{factorize, lowrank_matmul, FactorCache, LowRankConfig, RankStrategy};
+use lowrank_gemm::metrics::MetricsRegistry;
+use lowrank_gemm::shard::{ShardExecutor, ShardPlan};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -54,6 +58,68 @@ fn gemm_kernels() {
         json_row("gemm_blocked", n, &mb);
     }
     table.print();
+    println!();
+}
+
+fn packed_paths() {
+    // Tentpole instrument (PR 5): packed vs unpacked dense kernels, and
+    // fused decode-into-pack vs decode-then-pack on the FP8 path. The
+    // pairs are bitwise-identical — only the memory traffic differs.
+    let cfg = config_from_env();
+    let mut rng = Pcg64::seeded(36);
+    let mut table = Table::new(
+        "Packed-operand hot path [GFLOPS]",
+        &["N", "unpacked", "packed", "fp8 unfused", "fp8 fused"],
+    );
+    let fmt = StorageFormat::Fp8(lowrank_gemm::fp8::Fp8Format::E4M3);
+    for n in [256usize, 512] {
+        let a = Matrix::gaussian(n, n, &mut rng);
+        let b = Matrix::gaussian(n, n, &mut rng);
+        let flops = gemm_flops(n, n, n);
+        let mu = bench(&cfg, || {
+            gemm_blocked_unpacked(&a, &b).unwrap();
+        });
+        let mp = bench(&cfg, || {
+            gemm_blocked(&a, &b).unwrap();
+        });
+        let mqu = bench(&cfg, || {
+            quantized_matmul(&a, &b, fmt);
+        });
+        let mqf = bench(&cfg, || {
+            quantized_matmul_fused(&a, &b, fmt);
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:7.2}", mu.throughput(flops) / 1e9),
+            format!("{:7.2}", mp.throughput(flops) / 1e9),
+            format!("{:7.2}", mqu.throughput(flops) / 1e9),
+            format!("{:7.2}", mqf.throughput(flops) / 1e9),
+        ]);
+        json_row("gemm_blocked_unpacked", n, &mu);
+        json_row("gemm_blocked_packed", n, &mp);
+        json_row("fp8_decode_then_pack", n, &mqu);
+        json_row("fp8_fused_decode_pack", n, &mqf);
+    }
+    table.print();
+
+    // Pack-once/reuse-many on the shard plane: one multi-tile run, then
+    // report how many per-tile re-packs the shared panels saved. CI's
+    // bench-smoke job fails when this ever reads zero.
+    let n = 768;
+    let a = Matrix::gaussian(n, n, &mut rng);
+    let b = Matrix::gaussian(n, n, &mut rng);
+    let metrics = Arc::new(MetricsRegistry::new());
+    let ex = ShardExecutor::with_metrics(ShardPlan::default(), metrics.clone());
+    ex.gemm(&a, &b).unwrap();
+    let counters = metrics.counters();
+    let reuse = counters.get("pack.reuse").copied().unwrap_or(0);
+    let panels = counters.get("pack.panels").copied().unwrap_or(0);
+    println!("shard pack reuse @N={n}: {panels} panels packed, {reuse} re-packs saved");
+    println!(
+        "{{\"bench\":\"hotpath_micro\",\"case\":\"pack_reuse_events\",\"n\":{n},\
+         \"mean_s\":0.0,\"min_s\":0.0,\"max_s\":0.0,\"stddev_s\":0.0,\
+         \"iters\":1,\"reuse\":{reuse},\"panels\":{panels}}}"
+    );
     println!();
 }
 
@@ -209,6 +275,7 @@ fn service_request_path() {
 
 fn main() {
     gemm_kernels();
+    packed_paths();
     factor_chain();
     codecs();
     cache_and_router();

@@ -35,6 +35,11 @@
 //!   [`crate::fp8`] codecs (~75% resident-memory saving vs f32 factors);
 //!   both the fill and every hit use the same storage, so hit/cold
 //!   bit-identity is preserved.
+//! - **pack** — `[cache].prepack = true` additionally stores each
+//!   factor's `Vᵀ` pre-packed into the kernel panel layout
+//!   ([`crate::linalg::pack::PackedB`]), so a hit's reconstruction
+//!   product reads cached panels directly: no decode, no pack. Cold
+//!   fills hand back the same shared panels, keeping hit ≡ cold bitwise.
 //!
 //! Default-off: with `[cache].enabled = false` nothing is fingerprinted,
 //! the amortization term stays 1.0, and routing/execution are
@@ -56,4 +61,4 @@ pub mod fingerprint;
 pub mod store;
 
 pub use fingerprint::{FactorHints, Fingerprint};
-pub use store::ContentCache;
+pub use store::{CachedFactor, ContentCache};

@@ -17,15 +17,31 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::cache::fingerprint::Fingerprint;
+use crate::linalg::gemm::kernel_params;
 use crate::linalg::matrix::Matrix;
+use crate::linalg::pack::PackedB;
 use crate::lowrank::cache::CacheStats;
 use crate::lowrank::factor::LowRankFactor;
 use crate::metrics::MetricsRegistry;
 
 struct Entry {
     factor: LowRankFactor,
+    /// `Vᵀ` pre-packed into the kernel's panel layout (the `[cache]
+    /// prepack` option): a hit hands the factor chain ready-to-multiply
+    /// panels, skipping both the decode and the pack of the
+    /// reconstruction operand.
+    packed_vt: Option<Arc<PackedB>>,
     bytes: usize,
     last_used: u64,
+}
+
+/// A cache lookup result: the factor plus its pre-packed `Vᵀ` panels when
+/// the store keeps them (see [`ContentCache::with_prepack`]).
+pub struct CachedFactor {
+    /// The low-rank factor (cloned out of the store).
+    pub factor: LowRankFactor,
+    /// Shared pre-packed `Vᵀ_B` panels, `None` when prepacking is off.
+    pub packed_vt: Option<Arc<PackedB>>,
 }
 
 struct Inner {
@@ -39,6 +55,7 @@ struct Inner {
 pub struct ContentCache {
     budget_bytes: usize,
     min_dim: usize,
+    prepack: bool,
     metrics: Option<Arc<MetricsRegistry>>,
     inner: Mutex<Inner>,
 }
@@ -51,6 +68,7 @@ impl ContentCache {
         ContentCache {
             budget_bytes,
             min_dim,
+            prepack: false,
             metrics: None,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
@@ -72,6 +90,16 @@ impl ContentCache {
         c
     }
 
+    /// Builder: also store each factor's `Vᵀ` pre-packed into the current
+    /// kernel panel layout (`[cache] prepack`), so a hit skips the
+    /// reconstruction operand's decode-and-pack entirely. The packed
+    /// panels are charged against the byte budget (f32 panels: `r·n·4`
+    /// bytes on top of the factor's own storage).
+    pub fn with_prepack(mut self, prepack: bool) -> Self {
+        self.prepack = prepack;
+        self
+    }
+
     /// Does the admission gate let this operand into the cache?
     pub fn admits(&self, m: &Matrix) -> bool {
         m.rows().min(m.cols()) >= self.min_dim
@@ -91,6 +119,20 @@ impl ContentCache {
     /// Look up a factor; clones on hit (the payload must cross the worker
     /// boundary anyway).
     pub fn get(&self, fp: Fingerprint) -> Option<LowRankFactor> {
+        self.lookup(fp, false).map(|c| c.factor)
+    }
+
+    /// [`get`](ContentCache::get) returning the pre-packed `Vᵀ` panels as
+    /// well (shared `Arc` — no payload copy) when the store keeps them.
+    pub fn get_cached(&self, fp: Fingerprint) -> Option<CachedFactor> {
+        self.lookup(fp, true)
+    }
+
+    /// Shared lookup. `want_packed` gates both the panel hand-out and the
+    /// `pack.prepacked_hit` counter: callers that immediately drop the
+    /// panels (A-side factor fetches) must not inflate the metric an
+    /// operator compares against `pack.prepacked_use`.
+    fn lookup(&self, fp: Fingerprint, want_packed: bool) -> Option<CachedFactor> {
         let out = {
             let mut g = self.inner.lock().unwrap();
             g.clock += 1;
@@ -98,7 +140,14 @@ impl ContentCache {
             match g.map.get_mut(&fp) {
                 Some(e) => {
                     e.last_used = clock;
-                    let f = e.factor.clone();
+                    let f = CachedFactor {
+                        factor: e.factor.clone(),
+                        packed_vt: if want_packed {
+                            e.packed_vt.clone()
+                        } else {
+                            None
+                        },
+                    };
                     g.stats.hits += 1;
                     Some(f)
                 }
@@ -108,11 +157,15 @@ impl ContentCache {
                 }
             }
         };
-        self.count(if out.is_some() {
-            "cache.hit"
-        } else {
-            "cache.miss"
-        });
+        match &out {
+            Some(c) => {
+                self.count("cache.hit");
+                if c.packed_vt.is_some() {
+                    self.count("pack.prepacked_hit");
+                }
+            }
+            None => self.count("cache.miss"),
+        }
         out
     }
 
@@ -124,11 +177,33 @@ impl ContentCache {
 
     /// Insert (or replace) a factor, evicting LRU entries until it fits.
     /// Factors larger than the whole budget are rejected (returns false).
+    /// With prepacking on, `Vᵀ` is decoded into the kernel panel layout
+    /// once here (fill time), and its f32 panels count against the budget.
     pub fn put(&self, fp: Fingerprint, factor: LowRankFactor) -> bool {
-        let bytes = factor.storage_bytes();
+        // Size the entry (factor + f32 panels) *before* doing any packing
+        // work: an oversized factor must be rejected without paying the
+        // r·n decode-and-pack pass it would throw away.
+        let (vt_rows, vt_cols) = factor.vt.shape;
+        let packed_bytes = if self.prepack {
+            vt_rows * vt_cols * std::mem::size_of::<f32>()
+        } else {
+            0
+        };
+        let bytes = factor.storage_bytes() + packed_bytes;
         if bytes > self.budget_bytes {
             return false;
         }
+        let packed_vt = if self.prepack {
+            let p = kernel_params();
+            let mut pb = PackedB::pack_quantized(&factor.vt, p.kc, p.nc);
+            // The pack buffer is an arena checkout whose capacity may
+            // exceed r·n; a resident entry is charged r·n·4 bytes and
+            // must not pin the slack.
+            pb.shrink_to_fit();
+            Some(Arc::new(pb))
+        } else {
+            None
+        };
         let (evicted, resident) = {
             let mut g = self.inner.lock().unwrap();
             g.clock += 1;
@@ -158,6 +233,7 @@ impl ContentCache {
                 fp,
                 Entry {
                     factor,
+                    packed_vt,
                     bytes,
                     last_used: clock,
                 },
@@ -182,12 +258,44 @@ impl ContentCache {
         fp: Fingerprint,
         make: impl FnOnce() -> crate::error::Result<LowRankFactor>,
     ) -> crate::error::Result<LowRankFactor> {
-        if let Some(f) = self.get(fp) {
-            return Ok(f);
+        // Deliberately the non-packed lookup: this path's callers drop
+        // the panels, so it must not count `pack.prepacked_hit`.
+        if let Some(c) = self.lookup(fp, false) {
+            return Ok(c.factor);
         }
         let f = make()?;
         self.put(fp, f.clone());
         Ok(f)
+    }
+
+    /// [`get_or_insert_with`](ContentCache::get_or_insert_with) that also
+    /// returns the pre-packed `Vᵀ` panels. A cold fill hands back the
+    /// panels it just built, so miss and hit requests run the exact same
+    /// (prepacked) reconstruction path — hit ≡ cold stays bitwise.
+    pub fn get_or_insert_with_packed(
+        &self,
+        fp: Fingerprint,
+        make: impl FnOnce() -> crate::error::Result<LowRankFactor>,
+    ) -> crate::error::Result<CachedFactor> {
+        if let Some(c) = self.get_cached(fp) {
+            return Ok(c);
+        }
+        let f = make()?;
+        self.put(fp, f.clone());
+        // Re-read so the cold fill serves the same shared panels a later
+        // hit will (put may also have been rejected as oversized — then
+        // there are simply no panels to share).
+        let packed_vt = self
+            .inner
+            .lock()
+            .unwrap()
+            .map
+            .get(&fp)
+            .and_then(|e| e.packed_vt.clone());
+        Ok(CachedFactor {
+            factor: f,
+            packed_vt,
+        })
     }
 
     /// Counter snapshot.
@@ -328,6 +436,39 @@ mod tests {
         }
         assert_eq!(computed, 1);
         assert_eq!(c.stats().hits, 2);
+    }
+
+    #[test]
+    fn prepack_stores_and_serves_shared_panels() {
+        let c = ContentCache::new(1 << 20, 1).with_prepack(true);
+        let (fp, f) = factor_and_fp(11, 32, 4);
+        assert!(c.put(fp, f.clone()));
+        let hit = c.get_cached(fp).expect("hit");
+        let pb = hit.packed_vt.expect("prepacked panels stored");
+        assert_eq!((pb.k(), pb.n()), f.vt.shape);
+        // Panels hold exactly the decoded Vᵀ values.
+        let vt = f.vt_dense();
+        let unfused = crate::linalg::pack::PackedB::pack(&vt, pb.kc(), pb.nc());
+        assert_eq!(pb.panel(0, 0), unfused.panel(0, 0));
+        // Packed panels are charged against the budget.
+        let extra = pb.k() * pb.n() * 4;
+        assert_eq!(
+            c.stats().resident_bytes,
+            (f.storage_bytes() + extra) as u64
+        );
+        // Cold fills hand back the same shared panels.
+        let (fp2, f2) = factor_and_fp(12, 32, 4);
+        let cold = c.get_or_insert_with_packed(fp2, || Ok(f2)).unwrap();
+        assert!(cold.packed_vt.is_some());
+    }
+
+    #[test]
+    fn prepack_off_keeps_entries_panel_free() {
+        let c = ContentCache::new(1 << 20, 1);
+        let (fp, f) = factor_and_fp(13, 16, 2);
+        c.put(fp, f.clone());
+        assert!(c.get_cached(fp).unwrap().packed_vt.is_none());
+        assert_eq!(c.stats().resident_bytes, f.storage_bytes() as u64);
     }
 
     #[test]

@@ -28,6 +28,7 @@ const VALUE_KEYS: &[&str] = &[
     "out", "iters", "warmup", "shard-workers", "tile-m", "tile-n", "min-parallel-n",
     "autotune-alpha", "autotune-epsilon", "autotune-min-samples", "autotune-table",
     "cache-budget-mb", "cache-min-dim", "cache-amortize", "amortize",
+    "kernel-mc", "kernel-kc", "kernel-nc", "naive-cutover",
 ];
 
 /// Parse an argv (excluding the program name).

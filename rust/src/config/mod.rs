@@ -8,5 +8,7 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{AppConfig, AutotuneSettings, CacheSettings, ServiceSettings, ShardSettings};
+pub use schema::{
+    AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ServiceSettings, ShardSettings,
+};
 pub use toml::{parse_toml, TomlValue};

@@ -22,10 +22,16 @@
 //! default_tolerance = 0.05
 //! factor_cache_mb = 256
 //!
+//! [kernel]                       # blocked-GEMM geometry (linalg::gemm)
+//! mc = 128                       # packed A block height
+//! kc = 256                       # shared inner blocking depth
+//! nc = 256                       # packed B panel width
+//! naive_cutover = 512000         # m·n·k at/below which the naive loop runs
+//!
 //! [shard]                        # tile-execution plane (crate::shard)
 //! workers = 4                    # intra-GEMM worker threads
-//! tile_m = 256                   # output tile height (keep % 128 == 0)
-//! tile_n = 256                   # output tile width  (keep % 256 == 0)
+//! tile_m = 256                   # output tile height (keep % [kernel].mc == 0)
+//! tile_n = 256                   # output tile width  (keep % [kernel].nc == 0)
 //! min_parallel_n = 512           # below this, requests stay single-threaded
 //!
 //! [autotune]                     # online calibration plane (crate::autotune)
@@ -40,6 +46,7 @@
 //! budget_mb = 256                # content-cache byte budget (MiB, LRU)
 //! min_dim = 128                  # admission gate on min(rows, cols)
 //! fp8 = false                    # store cached factors FP8-encoded
+//! prepack = false                # store Vᵀ pre-packed in kernel panel layout
 //! amortize_over = 8              # expected reuses amortizing a cold rSVD
 //! ```
 
@@ -76,6 +83,56 @@ impl Default for ServiceSettings {
             batch_window_us: 200,
             default_tolerance: 0.05,
             factor_cache_bytes: 256 << 20,
+        }
+    }
+}
+
+/// `[kernel]` section: the blocked-GEMM geometry
+/// (see [`crate::linalg::gemm::KernelParams`], installed process-wide at
+/// service boot so the autotune plane can calibrate the blocking per
+/// host). Defaults reproduce the historical constants bit-for-bit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelSettings {
+    /// Packed A block height (rows per block). Keep `[shard].tile_m` a
+    /// multiple of this to preserve the shard plane's bitwise equality
+    /// with single-threaded execution.
+    pub mc: usize,
+    /// Shared inner blocking depth of A blocks and B panels. Changes the
+    /// summation grouping: different `kc` ⇒ different (equally valid)
+    /// result bits.
+    pub kc: usize,
+    /// Packed B panel width. Keep `[shard].tile_n` a multiple of this.
+    pub nc: usize,
+    /// `m·n·k` at/below which the naive loop runs (0 = always blocked).
+    pub naive_cutover: usize,
+}
+
+impl Default for KernelSettings {
+    fn default() -> Self {
+        let p = crate::linalg::gemm::KernelParams::default();
+        KernelSettings {
+            mc: p.mc,
+            kc: p.kc,
+            nc: p.nc,
+            naive_cutover: p.naive_cutover,
+        }
+    }
+}
+
+impl KernelSettings {
+    /// Range-check the knobs (delegates to the kernel plane's single
+    /// validator, [`crate::linalg::gemm::KernelParams::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        self.params().validate()
+    }
+
+    /// The kernel-plane view of these settings.
+    pub fn params(&self) -> crate::linalg::gemm::KernelParams {
+        crate::linalg::gemm::KernelParams {
+            mc: self.mc,
+            kc: self.kc,
+            nc: self.nc,
+            naive_cutover: self.naive_cutover,
         }
     }
 }
@@ -188,6 +245,12 @@ pub struct CacheSettings {
     /// and every hit use the same storage, so hit/cold bit-identity is
     /// preserved.
     pub fp8: bool,
+    /// Additionally store each factor's `Vᵀ` pre-packed into the kernel
+    /// panel layout, so a cache hit's reconstruction product skips the
+    /// decode-and-pack entirely (f32 panels: `r·n·4` extra resident
+    /// bytes per entry, charged against the budget). Hit ≡ cold stays
+    /// bitwise: cold fills use the same panels they just built.
+    pub prepack: bool,
     /// Amortized-decomposition term: on a cache miss the cost model
     /// divides the decomposition charge by this expected reuse count
     /// (the decomposition is paid once, the factors serve many
@@ -202,6 +265,7 @@ impl Default for CacheSettings {
             budget_mb: 256,
             min_dim: 128,
             fp8: false,
+            prepack: false,
             amortize_over: 8,
         }
     }
@@ -249,6 +313,8 @@ pub struct AppConfig {
     pub storage: StorageFormat,
     /// `[service]` knobs.
     pub service: ServiceSettings,
+    /// `[kernel]` knobs.
+    pub kernel: KernelSettings,
     /// `[shard]` knobs.
     pub shard: ShardSettings,
     /// `[autotune]` knobs.
@@ -267,6 +333,7 @@ impl Default for AppConfig {
             decomp: DecompMethod::RandomizedSvd,
             storage: StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
             service: ServiceSettings::default(),
+            kernel: KernelSettings::default(),
             shard: ShardSettings::default(),
             autotune: AutotuneSettings::default(),
             cache: CacheSettings::default(),
@@ -339,6 +406,22 @@ impl AppConfig {
                 s.factor_cache_bytes = req_usize(v, "service.factor_cache_mb")? << 20;
             }
         }
+        if let Some(ke) = doc.get("kernel") {
+            let s = &mut cfg.kernel;
+            if let Some(v) = ke.get("mc") {
+                s.mc = req_nonzero(v, "kernel.mc")?;
+            }
+            if let Some(v) = ke.get("kc") {
+                s.kc = req_nonzero(v, "kernel.kc")?;
+            }
+            if let Some(v) = ke.get("nc") {
+                s.nc = req_nonzero(v, "kernel.nc")?;
+            }
+            if let Some(v) = ke.get("naive_cutover") {
+                s.naive_cutover = req_usize(v, "kernel.naive_cutover")?;
+            }
+            s.validate()?;
+        }
         if let Some(sh) = doc.get("shard") {
             let s = &mut cfg.shard;
             if let Some(v) = sh.get("workers") {
@@ -400,6 +483,11 @@ impl AppConfig {
                 s.fp8 = v
                     .as_bool()
                     .ok_or_else(|| Error::Config("cache.fp8 must be bool".into()))?;
+            }
+            if let Some(v) = ca.get("prepack") {
+                s.prepack = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("cache.prepack must be bool".into()))?;
             }
             if let Some(v) = ca.get("amortize_over") {
                 s.amortize_over = req_nonzero(v, "cache.amortize_over")? as u64;
@@ -606,6 +694,7 @@ enabled = true
 budget_mb = 64
 min_dim = 256
 fp8 = true
+prepack = true
 amortize_over = 16
 "#,
         )
@@ -617,9 +706,45 @@ amortize_over = 16
                 budget_mb: 64,
                 min_dim: 256,
                 fp8: true,
+                prepack: true,
                 amortize_over: 16,
             }
         );
+    }
+
+    #[test]
+    fn kernel_defaults_full_section_and_validation() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.kernel, KernelSettings::default());
+        assert_eq!(
+            cfg.kernel.params(),
+            crate::linalg::gemm::KernelParams::default(),
+            "defaults must reproduce the built-in kernel geometry"
+        );
+
+        let cfg = AppConfig::from_toml(
+            r#"
+[kernel]
+mc = 64
+kc = 128
+nc = 512
+naive_cutover = 0
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.kernel,
+            KernelSettings {
+                mc: 64,
+                kc: 128,
+                nc: 512,
+                naive_cutover: 0,
+            }
+        );
+        assert!(AppConfig::from_toml("[kernel]\nmc = 0").is_err());
+        assert!(AppConfig::from_toml("[kernel]\nkc = 0").is_err());
+        assert!(AppConfig::from_toml("[kernel]\nnc = 0").is_err());
+        assert!(AppConfig::from_toml("[kernel]\nnaive_cutover = -1").is_err());
     }
 
     #[test]
@@ -629,6 +754,7 @@ amortize_over = 16
         assert!(AppConfig::from_toml("[cache]\namortize_over = 0").is_err());
         assert!(AppConfig::from_toml("[cache]\nenabled = 1").is_err());
         assert!(AppConfig::from_toml("[cache]\nfp8 = \"yes\"").is_err());
+        assert!(AppConfig::from_toml("[cache]\nprepack = 1").is_err());
     }
 
     #[test]

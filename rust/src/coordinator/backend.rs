@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use crate::cache::{ContentCache, FactorHints, Fingerprint};
+use crate::cache::{CachedFactor, ContentCache, FactorHints, Fingerprint};
 use crate::config::schema::CacheSettings;
 use crate::error::{Error, Result};
 use crate::fp8::StorageFormat;
@@ -227,14 +227,51 @@ impl Backend {
         }
         if let Some(cc) = &self.content {
             if cc.admits(m) {
-                // Reuse the router's fingerprint; hash here only when the
-                // call arrived without a plan (direct `execute`).
                 let fp = fp.unwrap_or_else(|| Fingerprint::of(m));
-                return cc
-                    .get_or_insert_with(fp, || factorize_sharded(&self.shard, m, &self.content_cfg));
+                // Non-packed lookup: A-side factors never consume the
+                // pre-packed Vᵀ panels, so this path must not count
+                // `pack.prepacked_hit`.
+                return cc.get_or_insert_with(fp, || {
+                    factorize_sharded(&self.shard, m, &self.content_cfg)
+                });
             }
         }
         factorize_sharded(&self.shard, m, &self.lr_cfg)
+    }
+
+    /// [`factor_of`](Backend::factor_of) keeping the content cache's
+    /// pre-packed `Vᵀ` panels (when `[cache] prepack` stores them) so the
+    /// B side of a factor chain can skip the reconstruction operand's
+    /// decode-and-pack. Id-keyed and cold-path factors carry no panels.
+    fn factor_of_packed(
+        &self,
+        m: &Matrix,
+        id: Option<MatrixId>,
+        fp: Option<Fingerprint>,
+    ) -> Result<CachedFactor> {
+        if let Some(id) = id {
+            let factor = self
+                .cache
+                .get_or_insert_with(id, || factorize_sharded(&self.shard, m, &self.lr_cfg))?;
+            return Ok(CachedFactor {
+                factor,
+                packed_vt: None,
+            });
+        }
+        if let Some(cc) = &self.content {
+            if cc.admits(m) {
+                // Reuse the router's fingerprint; hash here only when the
+                // call arrived without a plan (direct `execute`).
+                let fp = fp.unwrap_or_else(|| Fingerprint::of(m));
+                return cc.get_or_insert_with_packed(fp, || {
+                    factorize_sharded(&self.shard, m, &self.content_cfg)
+                });
+            }
+        }
+        Ok(CachedFactor {
+            factor: factorize_sharded(&self.shard, m, &self.lr_cfg)?,
+            packed_vt: None,
+        })
     }
 
     fn lowrank(
@@ -276,7 +313,10 @@ impl Backend {
         }
 
         let fa = self.factor_of(a, a_id, hints.a)?;
-        let fb = self.factor_of(b, b_id, hints.b)?;
+        let CachedFactor {
+            factor: fb,
+            packed_vt: fb_packed,
+        } = self.factor_of_packed(b, b_id, hints.b)?;
         let rank = fa.rank().max(fb.rank());
 
         // XLA path needs equal ranks on the lattice (artifacts are lowered
@@ -302,7 +342,9 @@ impl Backend {
             }
         }
 
-        let c = self.shard.lowrank_matmul(&fa, &fb)?;
+        let c = self
+            .shard
+            .lowrank_matmul_prepacked(&fa, &fb, fb_packed.as_ref())?;
         Ok(ExecOutcome {
             c,
             backend: BackendKind::CpuSubstrate,
@@ -396,6 +438,48 @@ mod tests {
         assert_eq!(cold.c.data(), warm.c.data(), "hit must replay the cold bits");
         assert_eq!(cc.stats().hits, 2);
         assert_eq!(cc.stats().misses, 2);
+    }
+
+    #[test]
+    fn prepacked_content_cache_hit_is_bitwise_identical() {
+        // `[cache] prepack`: the hit serves Vᵀ as ready-made kernel
+        // panels. Results must match both the cold fill and a cache
+        // without prepacking, bit for bit.
+        let cc = Arc::new(ContentCache::new(64 << 20, 32).with_prepack(true));
+        let be = Backend::new(
+            None,
+            Arc::new(FactorCache::new(64 << 20)),
+            LowRankConfig::default(),
+        )
+        .with_content_cache(cc.clone(), &CacheSettings::default());
+
+        let mut rng = Pcg64::seeded(8);
+        // Large enough that the reconstruction product clears the naive
+        // cutover, so the prepacked panels are actually consumed.
+        let a = Matrix::low_rank_noisy(384, 384, 8, 1e-5, &mut rng);
+        let b = Matrix::low_rank_noisy(384, 384, 8, 1e-5, &mut rng);
+        let cold = be
+            .execute(KernelKind::LowRankFp8, &a, &b, None, None)
+            .unwrap();
+        let warm = be
+            .execute(KernelKind::LowRankFp8, &a, &b, None, None)
+            .unwrap();
+        assert_eq!(cold.c.data(), warm.c.data(), "hit must replay cold bits");
+
+        let plain_cc = Arc::new(ContentCache::new(64 << 20, 32));
+        let plain = Backend::new(
+            None,
+            Arc::new(FactorCache::new(64 << 20)),
+            LowRankConfig::default(),
+        )
+        .with_content_cache(plain_cc, &CacheSettings::default())
+        .execute(KernelKind::LowRankFp8, &a, &b, None, None)
+        .unwrap();
+        assert_eq!(
+            plain.c.data(),
+            cold.c.data(),
+            "prepacked panels must not change the chain's bits"
+        );
     }
 
     #[test]

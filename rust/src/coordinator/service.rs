@@ -25,7 +25,9 @@ use std::time::{Duration, Instant};
 
 use crate::autotune::CalibrationTable;
 use crate::cache::ContentCache;
-use crate::config::schema::{AppConfig, AutotuneSettings, CacheSettings, ShardSettings};
+use crate::config::schema::{
+    AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ShardSettings,
+};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::batcher::{Batcher, BucketKey};
 use crate::coordinator::request::{GemmRequest, GemmResponse};
@@ -57,6 +59,12 @@ pub struct ServiceConfig {
     pub factor_cache_bytes: usize,
     /// AOT artifact directory; `None` runs CPU-substrate-only.
     pub artifacts_dir: Option<String>,
+    /// Blocked-kernel geometry (`[kernel]`): installed process-wide at
+    /// `start()` when it differs from the built-in defaults, so the
+    /// autotune plane can calibrate MC/KC/NC and the naive cutover per
+    /// host. Note the kernel params are a process-global — two services
+    /// in one process share them.
+    pub kernel: KernelSettings,
     /// Tile-execution plane settings (intra-GEMM parallelism; `workers`
     /// above is request-level concurrency). Single source of truth for
     /// the plane: `start()` derives `router.shard` from this, overriding
@@ -82,6 +90,7 @@ impl Default for ServiceConfig {
             batch_window: Duration::from_micros(200),
             factor_cache_bytes: 256 << 20,
             artifacts_dir: None,
+            kernel: KernelSettings::default(),
             shard: ShardSettings::default(),
             autotune: AutotuneSettings::default(),
             cache: CacheSettings::default(),
@@ -113,6 +122,7 @@ impl ServiceConfig {
             } else {
                 None
             },
+            kernel: app.kernel.clone(),
             shard: app.shard.clone(),
             autotune: app.autotune.clone(),
             cache: app.cache.clone(),
@@ -174,6 +184,27 @@ impl GemmService {
     /// configured) the XLA executor thread, then warms the artifact most
     /// likely to serve first traffic.
     pub fn start(cfg: ServiceConfig) -> Result<GemmService> {
+        // Kernel plane: install the `[kernel]` geometry process-wide, but
+        // only when it deviates from the defaults — services booted with
+        // default settings (the overwhelmingly common case, and every
+        // test fixture) must not touch the global and cannot perturb a
+        // concurrently-tuned sibling. (set_kernel_params validates.)
+        if cfg.kernel != KernelSettings::default() {
+            crate::linalg::gemm::set_kernel_params(&cfg.kernel.params())?;
+        }
+        // A tile grid off the kernel blocking is legal (results stay
+        // correct via the per-tile fallback) but silently loses both the
+        // shared-packed fast path and the bitwise-equal-to-monolithic
+        // guarantee — surface it at boot instead of only as a runtime
+        // `pack.unaligned_fallback` counter.
+        if cfg.shard.tile_m % cfg.kernel.mc != 0 || cfg.shard.tile_n % cfg.kernel.nc != 0 {
+            eprintln!(
+                "warning: [shard] tile {}x{} is not a multiple of [kernel] mc/nc {}x{}; \
+                 sharded GEMMs will re-pack per tile (pack.unaligned_fallback) and lose \
+                 bitwise equality with the monolithic kernel",
+                cfg.shard.tile_m, cfg.shard.tile_n, cfg.kernel.mc, cfg.kernel.nc
+            );
+        }
         let cache = Arc::new(FactorCache::new(cfg.factor_cache_bytes));
         let metrics = Arc::new(MetricsRegistry::new());
         let mut router_cfg = cfg.router.clone();
@@ -221,11 +252,14 @@ impl GemmService {
             // Programmatic ServiceConfig bypasses the TOML/CLI parsers,
             // so this is the path's validate() call.
             cfg.cache.validate()?;
-            Some(Arc::new(ContentCache::with_metrics(
-                cfg.cache.budget_bytes(),
-                cfg.cache.min_dim,
-                metrics.clone(),
-            )))
+            Some(Arc::new(
+                ContentCache::with_metrics(
+                    cfg.cache.budget_bytes(),
+                    cfg.cache.min_dim,
+                    metrics.clone(),
+                )
+                .with_prepack(cfg.cache.prepack),
+            ))
         } else {
             None
         };

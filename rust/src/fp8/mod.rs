@@ -17,6 +17,6 @@ pub use codec::{
     f16_encode, Fp8Format,
 };
 pub use quantize::{
-    dequantize, quant_stats, quantize, quantized_matmul, QuantStats, QuantizedTensor,
-    StorageFormat,
+    decode_row_segment, dequantize, dequantize_into, quant_stats, quantize, quantized_matmul,
+    quantized_matmul_fused, QuantStats, QuantizedTensor, StorageFormat,
 };

@@ -132,33 +132,60 @@ pub fn quantize(m: &Matrix, format: StorageFormat) -> QuantizedTensor {
 /// Dequantize back to a dense f32 matrix.
 pub fn dequantize(q: &QuantizedTensor) -> Matrix {
     let (rows, cols) = q.shape;
-    let n = rows * cols;
-    let mut data = Vec::with_capacity(n);
+    let mut data = vec![0.0f32; rows * cols];
+    dequantize_into(q, &mut data);
+    Matrix::from_vec(rows, cols, data).expect("quantized payload length")
+}
+
+/// Decode a contiguous element range `[e0, e0 + out.len())` of `q`'s
+/// payload into `out`, applying the tensor scale. The single scalar
+/// decode site every dequantization path shares, so fused and unfused
+/// consumers are bit-identical per element by construction.
+fn decode_range(q: &QuantizedTensor, e0: usize, out: &mut [f32]) {
     match q.format {
         StorageFormat::Fp8(f) => {
-            for &b in &q.bytes {
-                data.push(f.decode(b) * q.scale);
+            for (o, &b) in out.iter_mut().zip(&q.bytes[e0..e0 + out.len()]) {
+                *o = f.decode(b) * q.scale;
             }
         }
         StorageFormat::F16 => {
-            for ch in q.bytes.chunks_exact(2) {
-                data.push(f16_decode(u16::from_le_bytes([ch[0], ch[1]])) * q.scale);
+            let src = &q.bytes[2 * e0..2 * (e0 + out.len())];
+            for (o, ch) in out.iter_mut().zip(src.chunks_exact(2)) {
+                *o = f16_decode(u16::from_le_bytes([ch[0], ch[1]])) * q.scale;
             }
         }
         StorageFormat::Bf16 => {
-            for ch in q.bytes.chunks_exact(2) {
-                data.push(
-                    crate::fp8::codec::bf16_decode(u16::from_le_bytes([ch[0], ch[1]])) * q.scale,
-                );
+            let src = &q.bytes[2 * e0..2 * (e0 + out.len())];
+            for (o, ch) in out.iter_mut().zip(src.chunks_exact(2)) {
+                *o = crate::fp8::codec::bf16_decode(u16::from_le_bytes([ch[0], ch[1]])) * q.scale;
             }
         }
         StorageFormat::F32 => {
-            for ch in q.bytes.chunks_exact(4) {
-                data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]) * q.scale);
+            let src = &q.bytes[4 * e0..4 * (e0 + out.len())];
+            for (o, ch) in out.iter_mut().zip(src.chunks_exact(4)) {
+                *o = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]) * q.scale;
             }
         }
     }
-    Matrix::from_vec(rows, cols, data).expect("quantized payload length")
+}
+
+/// Dequantize the whole tensor into a caller-provided buffer (row-major,
+/// `rows·cols` elements) — the arena-friendly variant of [`dequantize`].
+pub fn dequantize_into(q: &QuantizedTensor, out: &mut [f32]) {
+    let (rows, cols) = q.shape;
+    assert_eq!(out.len(), rows * cols, "dequantize_into buffer length");
+    decode_range(q, 0, out);
+}
+
+/// Decode the row segment `q[row][c0 .. c0 + out.len()]` into `out` — the
+/// fused decode-into-pack primitive ([`crate::linalg::pack`] decodes
+/// codec bytes straight into packed panel layout through this, one pass,
+/// no full-matrix f32 intermediate). Values are bit-identical to the same
+/// elements of [`dequantize`].
+pub fn decode_row_segment(q: &QuantizedTensor, row: usize, c0: usize, out: &mut [f32]) {
+    let (rows, cols) = q.shape;
+    debug_assert!(row < rows && c0 + out.len() <= cols, "segment in range");
+    decode_range(q, row * cols + c0, out);
 }
 
 /// Quantization error statistics (feeds the §5.4 error analysis).
@@ -202,6 +229,34 @@ pub fn quantized_matmul(a: &Matrix, b: &Matrix, format: StorageFormat) -> Matrix
     let qa = dequantize(&quantize(a, format));
     let qb = dequantize(&quantize(b, format));
     qa.matmul(&qb)
+}
+
+/// [`quantized_matmul`] on the fused hot path: the decode side of the
+/// codec round-trip lands **directly in the packed panel layout** (one
+/// pass over the codec bytes; the dense f32 intermediates of the unfused
+/// path are never materialized). Bit-identical to [`quantized_matmul`]:
+/// the decoded values are the same and the packed kernel reproduces the
+/// blocked kernel's summation order exactly.
+pub fn quantized_matmul_fused(a: &Matrix, b: &Matrix, format: StorageFormat) -> Matrix {
+    use crate::linalg::gemm::{gemm_packed, kernel_params};
+    use crate::linalg::pack::{PackedA, PackedB};
+
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let p = kernel_params();
+    // Below the blocked cutover the unfused path never packs (naive
+    // loop); mirror it exactly to keep bit-parity.
+    if m * n * k <= p.naive_cutover {
+        return quantized_matmul(a, b, format);
+    }
+    let qa = quantize(a, format);
+    let qb = quantize(b, format);
+    let pa = PackedA::pack_quantized(&qa, p.mc, p.kc);
+    let pb = PackedB::pack_quantized(&qb, p.kc, p.nc);
+    let c = gemm_packed(&pa, &pb).expect("quantized_matmul_fused: inner dimensions must agree");
+    pa.recycle();
+    pb.recycle();
+    c
 }
 
 #[cfg(test)]
@@ -297,6 +352,53 @@ mod tests {
             assert_eq!(StorageFormat::parse(f.name()), Some(f));
         }
         assert_eq!(StorageFormat::parse("int4"), None);
+    }
+
+    #[test]
+    fn fused_quantized_matmul_is_bitwise_identical() {
+        let mut rng = Pcg64::seeded(9);
+        // Above the blocked cutover so the fused pack path actually runs.
+        let a = Matrix::gaussian(130, 140, &mut rng);
+        let b = Matrix::gaussian(140, 150, &mut rng);
+        for fmt in [
+            StorageFormat::Fp8(Fp8Format::E4M3),
+            StorageFormat::Fp8(Fp8Format::E5M2),
+            StorageFormat::F16,
+            StorageFormat::Bf16,
+            StorageFormat::F32,
+        ] {
+            let fused = quantized_matmul_fused(&a, &b, fmt);
+            let unfused = quantized_matmul(&a, &b, fmt);
+            assert_eq!(fused.data(), unfused.data(), "{}", fmt.name());
+        }
+        // Below the cutover both take the naive path.
+        let a = Matrix::gaussian(24, 24, &mut rng);
+        let b = Matrix::gaussian(24, 24, &mut rng);
+        let fmt = StorageFormat::Fp8(Fp8Format::E4M3);
+        assert_eq!(
+            quantized_matmul_fused(&a, &b, fmt).data(),
+            quantized_matmul(&a, &b, fmt).data()
+        );
+    }
+
+    #[test]
+    fn row_segment_decode_matches_dequantize() {
+        let m = mat(11);
+        for fmt in [
+            StorageFormat::Fp8(Fp8Format::E4M3),
+            StorageFormat::F16,
+            StorageFormat::Bf16,
+            StorageFormat::F32,
+        ] {
+            let q = quantize(&m, fmt);
+            let dense = dequantize(&q);
+            let mut seg = vec![0.0f32; 7];
+            decode_row_segment(&q, 5, 3, &mut seg);
+            assert_eq!(&seg, &dense.row(5)[3..10], "{}", fmt.name());
+            let mut all = vec![0.0f32; m.rows() * m.cols()];
+            dequantize_into(&q, &mut all);
+            assert_eq!(&all, dense.data(), "{}", fmt.name());
+        }
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! factorization charge when factors are not cached. Square-shape costs
 //! delegate to the same code paths the benchmarks use, so the selector's
 //! view of the world and the reported numbers can never diverge.
+//!
+//! Since the packed-operand hot path (PR 5), the dense f32 kernel carries
+//! an explicit packing-bandwidth term (one f32 write per operand element,
+//! paid once per GEMM thanks to pack-once/reuse-many) — and the f16/FP8
+//! and factor-chain kernels, whose codec decode is fused into that same
+//! write, don't, which is how the selector and the autotune plane see the
+//! fused paths' bandwidth advantage.
 
 use crate::gpu_sim::profile::{DeviceProfile, Precision};
 use crate::gpu_sim::roofline::{OpCost, Roofline};
@@ -40,9 +47,26 @@ pub fn kernel_cost(device: &DeviceProfile, kind: KernelKind, inp: &SelectorInput
     let (time_s, cost) = match kind {
         KernelKind::DenseF32 | KernelKind::DenseF16 | KernelKind::DenseFp8 => {
             let quant_passes = if kind == KernelKind::DenseFp8 { 1.0 } else { 0.0 };
+            // Packed-operand term (PR 5): both operands are packed once
+            // into panel layout — a 4-byte (f32) write per element,
+            // amortized across the whole tile grid by pack-once/reuse-
+            // many. Every reduced-precision dense kernel (f16 and fp8
+            // alike — both run `ShardExecutor::quantized_matmul`'s fused
+            // branch) *fuses* the codec decode into that same write
+            // (decode-into-pack), so only the f32 kernel, whose operands
+            // arrive already dense, pays a separate pack pass — which is
+            // exactly why the model now prices the fused paths (and,
+            // below, the factor chain) relatively cheaper than dense f32.
+            let pack_bytes = if kind == KernelKind::DenseF32 {
+                (m * k + k * n) * 4.0
+            } else {
+                0.0
+            };
             let c = OpCost {
                 flops: 2.0 * m * k * n + quant_passes * (m * k + k * n),
-                bytes: (m * k + k * n + m * n) * be + quant_passes * (m * k + k * n) * (4.0 + be),
+                bytes: (m * k + k * n + m * n) * be
+                    + quant_passes * (m * k + k * n) * (4.0 + be)
+                    + pack_bytes,
                 launches: 1.0 + 2.0 * quant_passes,
             };
             (rl.time(&c, p), c)
@@ -51,13 +75,23 @@ pub fn kernel_cost(device: &DeviceProfile, kind: KernelKind, inp: &SelectorInput
             // Factor-chain flops (see lowrank::gemm::lowrank_flops).
             let chain_full = 2.0 * r * k * r + 2.0 * r * r + 2.0 * r * r * n + 2.0 * m * r * n;
             let (flops, bytes) = if kind == KernelKind::LowRankAuto && inp.factored_output_ok {
-                // Factored output: skip the m×n materialization.
+                // Factored output: skip the m×n materialization — its
+                // rank-domain products sit below the packing cutover, so
+                // no pack pass is charged either.
                 (
                     2.0 * r * k * r + 2.0 * r * r + 2.0 * r * r * n + 2.0 * m * r * r,
                     ((m + k) * r + (k + n) * r + (m + n) * r) * be,
                 )
             } else {
-                (chain_full, ((m + k) * r + (k + n) * r) * be + m * n * be)
+                // Materializing chain: charge the pack pass of the m×n
+                // reconstruction's operands (U_A and Vᵀ_B panels, f32
+                // writes). Pre-packed cache hits (`[cache] prepack`) skip
+                // the Vᵀ_B share at run time; the model keeps the
+                // conservative full charge.
+                (
+                    chain_full,
+                    ((m + k) * r + (k + n) * r) * be + m * n * be + (m * r + r * n) * 4.0,
+                )
             };
             let chain = OpCost {
                 flops,
@@ -217,6 +251,25 @@ mod tests {
         warm_inp.decomp_amortization = 8.0;
         let warm8 = kernel_cost(&d, KernelKind::LowRankFp8, &warm_inp);
         assert_eq!(warm8.time_s.to_bits(), warm.time_s.to_bits());
+    }
+
+    #[test]
+    fn packing_term_charges_only_the_unfused_f32_kernel() {
+        let d = DeviceProfile::rtx4090();
+        let n = 4096.0f64;
+        let i = inp(4096, 0, true);
+        let f32c = kernel_cost(&d, KernelKind::DenseF32, &i);
+        // Dense f32: 3 operand passes at 4 B plus the 2-operand pack pass.
+        assert_eq!(f32c.bytes, 3.0 * n * n * 4.0 + 2.0 * n * n * 4.0);
+        // FP8: decode fused into the pack write — no separate pack term;
+        // bytes are exactly the operand traffic + the encode round-trip.
+        let fp8c = kernel_cost(&d, KernelKind::DenseFp8, &i);
+        assert_eq!(fp8c.bytes, 3.0 * n * n + 2.0 * n * n * 5.0);
+        assert!(fp8c.bytes < f32c.bytes);
+        // F16 runs the same fused decode-into-pack branch at runtime, so
+        // it pays no separate pack pass either.
+        let f16c = kernel_cost(&d, KernelKind::DenseF16, &i);
+        assert_eq!(f16c.bytes, 3.0 * n * n * 2.0);
     }
 
     #[test]

@@ -1,50 +1,164 @@
 //! Dense GEMM kernels — the CPU substrate's "cuBLAS".
 //!
-//! Three implementations with identical semantics (`C = A · B`):
+//! Implementations with identical semantics (`C = A · B`):
 //!
 //! - [`gemm_naive`] — textbook triple loop in ikj order; the correctness
 //!   oracle and the deliberately-slow baseline for the benchmark suite.
-//! - [`gemm_blocked`] — cache-blocked with a register-tiled 4×4 micro-kernel
-//!   and a packed B panel; the hot path used by everything else.
+//! - [`gemm_blocked`] — the hot path: cache-blocked over **packed
+//!   operands** ([`crate::linalg::pack`]) with register-tiled 8×NR / 4×NR
+//!   micro-kernels.
+//! - [`gemm_blocked_unpacked`] — the legacy blocked kernel (per-panel B
+//!   pack, strided A reads); kept as the bitwise reference the packed path
+//!   is asserted against, and as the `hotpath_micro` baseline.
 //! - [`gemm_strided`] — operates on sub-blocks without copies; used by the
 //!   batcher when slicing fused batches.
-//! - [`gemm_panel`] — one output tile of the blocked GEMM, with a
-//!   tile-local (order-deterministic) summation schedule; the per-task
-//!   kernel of the shard execution plane ([`crate::shard`]).
+//! - [`gemm_panel`] / [`gemm_panel_packed`] — one output tile of the
+//!   blocked GEMM, with a tile-local (order-deterministic) summation
+//!   schedule; the per-task kernels of the shard execution plane
+//!   ([`crate::shard`]). The packed variant reads shared [`PackedA`] /
+//!   [`PackedB`] operands so the panels are packed once per GEMM instead
+//!   of once per tile.
+//!
+//! # Packed layouts (the hot path's memory shape)
+//!
+//! ```text
+//!   A (m×k, row-major)                PackedA block (MC×KC, micro-panel-major)
+//!   ┌──────────────┐                  ┌ t→                                  ┐
+//!   │ row 0  ────▶ │   pack           │ a00 a10 .. a70 │ a01 a11 .. a71 │ … │  8-row
+//!   │ row 1  ────▶ │  ─────▶          │ (8 rows interleaved per k-step)     │  micro-panels
+//!   │   ⋮          │                  ├─────────────────────────────────────┤
+//!   └──────────────┘                  │ 4-row panel │ then <4 scalar rows   │
+//!                                     └─────────────────────────────────────┘
+//!   B (k×n, row-major)                PackedB panel (KC×NC, row-major)
+//!   — packed once per GEMM, each panel byte-identical to the legacy
+//!   per-tile `pack_b`, shared read-only across tiles and shard workers.
+//! ```
+//!
+//! The micro-kernel keeps a full R×NR accumulator tile in registers across
+//! the entire KC loop and touches C exactly once per column strip. A C
+//! element's additions therefore depend only on (its coordinates, the KC
+//! grouping, the NR strip schedule) — never on which micro-tile width
+//! covers its row or whether the operands were packed — which is why the
+//! packed, unpacked, 8-row and 4-row paths are all **bitwise identical**
+//! (asserted exhaustively by `rust/tests/pack_equivalence.rs`).
+//!
+//! Geometry (MC/KC/NC and the naive cutover) is runtime-tunable via
+//! [`set_kernel_params`] (the `[kernel]` config section), so the autotune
+//! plane can calibrate the blocking per host. The defaults reproduce the
+//! historical constants bit-for-bit.
 //!
 //! The micro-kernel mirrors, at CPU scale, the structure the paper's CUDA
 //! kernels have on the GPU: an outer HBM→shared (here L2→L1) tiling plus an
 //! inner register-resident accumulator tile — see DESIGN.md §3 for the
 //! TPU/Pallas mapping of the same idea.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::error::{Error, Result};
 use crate::linalg::matrix::Matrix;
+use crate::linalg::pack::{self, PackedA, PackedB, MR, MR_WIDE};
 
 /// Selectable dense algorithm (benchmarks sweep this).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GemmAlgo {
     /// Textbook ikj triple loop.
     Naive,
-    /// Cache-blocked + 4×4 register micro-kernel (default).
+    /// Cache-blocked + register micro-kernel over packed operands (default).
     Blocked,
 }
 
-/// Cache-block sizes: MC×KC panel of A (L2), KC×NC panel of B (L1-ish).
-/// Tuned on the 1-core eval machine; see EXPERIMENTS.md §Perf.
+/// Default cache-block sizes: MC×KC panel of A (L2), KC×NC panel of B
+/// (L1-ish). Tuned on the 1-core eval machine; see EXPERIMENTS.md §Perf.
 const MC: usize = 128;
 const KC: usize = 256;
 const NC: usize = 256;
+
+/// Default naive cutover: `m·n·k` at/below this runs the naive loop
+/// (measured in §Perf iteration 4 — naive wins at 64³, blocked from ~96³).
+const NAIVE_CUTOVER: usize = 80 * 80 * 80;
+
+/// Runtime-tunable blocked-kernel geometry (the `[kernel]` config plane).
+///
+/// `kc`/`nc` participate in the summation *grouping*, so two runs only
+/// produce identical bits when they use identical params — the shard
+/// plane's bitwise guarantees additionally need its tile grid aligned to
+/// `mc`/`nc` (see `[shard]` docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelParams {
+    /// A-block height (rows per packed A block).
+    pub mc: usize,
+    /// Shared inner blocking depth of PackedA blocks and PackedB panels.
+    pub kc: usize,
+    /// B-panel width.
+    pub nc: usize,
+    /// `m·n·k` at/below which the naive loop runs (0 = never).
+    pub naive_cutover: usize,
+}
+
+impl Default for KernelParams {
+    fn default() -> Self {
+        KernelParams {
+            mc: MC,
+            kc: KC,
+            nc: NC,
+            naive_cutover: NAIVE_CUTOVER,
+        }
+    }
+}
+
+impl KernelParams {
+    /// Range-check the geometry — the single validator shared by every
+    /// input path (TOML, CLI, programmatic [`set_kernel_params`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.mc == 0 || self.kc == 0 || self.nc == 0 {
+            return Err(Error::Config(format!(
+                "kernel mc/kc/nc must be positive (got {}/{}/{})",
+                self.mc, self.kc, self.nc
+            )));
+        }
+        Ok(())
+    }
+}
+
+static PARAM_MC: AtomicUsize = AtomicUsize::new(MC);
+static PARAM_KC: AtomicUsize = AtomicUsize::new(KC);
+static PARAM_NC: AtomicUsize = AtomicUsize::new(NC);
+static PARAM_CUTOVER: AtomicUsize = AtomicUsize::new(NAIVE_CUTOVER);
+
+/// The process-wide kernel geometry (set once at service boot).
+pub fn kernel_params() -> KernelParams {
+    KernelParams {
+        mc: PARAM_MC.load(Ordering::Relaxed),
+        kc: PARAM_KC.load(Ordering::Relaxed),
+        nc: PARAM_NC.load(Ordering::Relaxed),
+        naive_cutover: PARAM_CUTOVER.load(Ordering::Relaxed),
+    }
+}
+
+/// Install process-wide kernel geometry. Intended to be called once at
+/// boot from the `[kernel]` config section; changing params mid-flight is
+/// safe but changes result bits of concurrent GEMMs (the grouping moves).
+pub fn set_kernel_params(p: &KernelParams) -> Result<()> {
+    p.validate()?;
+    PARAM_MC.store(p.mc, Ordering::Relaxed);
+    PARAM_KC.store(p.kc, Ordering::Relaxed);
+    PARAM_NC.store(p.nc, Ordering::Relaxed);
+    PARAM_CUTOVER.store(p.naive_cutover, Ordering::Relaxed);
+    Ok(())
+}
 
 /// `C = A · B`, naive ikj order (row-major friendly, no blocking).
 pub fn gemm_naive(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     check(a, b)?;
     let (m, k) = a.shape();
     let n = b.cols();
-    let mut c = Matrix::zeros(m, n);
+    // Output from the arena: the rank-sized factor-chain products land
+    // here, and recycling them is what makes the chain allocation-free.
+    let mut data = pack::checkout_zeroed(m * n);
     let bd = b.data();
     for i in 0..m {
         let arow = a.row(i);
-        let crow = c.row_mut(i);
+        let crow = &mut data[i * n..(i + 1) * n];
         for (t, &av) in arow.iter().enumerate().take(k) {
             if av == 0.0 {
                 continue;
@@ -55,36 +169,67 @@ pub fn gemm_naive(a: &Matrix, b: &Matrix) -> Result<Matrix> {
             }
         }
     }
-    Ok(c)
+    Matrix::from_vec(m, n, data)
 }
 
-/// `C = A · B` with cache blocking and a register-tiled micro-kernel.
+/// `C = A · B` on the packed hot path: both operands are packed once
+/// (A into micro-panel-major blocks, B into row-major panels), then the
+/// register-tiled micro-kernels run entirely from the packed buffers.
+/// Bitwise identical to [`gemm_blocked_unpacked`] at equal [`KernelParams`].
 pub fn gemm_blocked(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    gemm_blocked_with(a, b, &kernel_params())
+}
+
+/// [`gemm_blocked`] with explicit geometry (tests / calibration sweeps).
+pub fn gemm_blocked_with(a: &Matrix, b: &Matrix, p: &KernelParams) -> Result<Matrix> {
     check(a, b)?;
     let (m, k) = a.shape();
     let n = b.cols();
     // Small problems: blocking/packing overhead dominates; use the naive
-    // loop. Cutover measured in §Perf iteration 4 (naive wins at 64³,
-    // blocked wins from ~96³ up).
-    if m * n * k <= 80 * 80 * 80 {
+    // loop.
+    if m * n * k <= p.naive_cutover {
+        return gemm_naive(a, b);
+    }
+    let pa = PackedA::pack(a, p.mc, p.kc);
+    let pb = PackedB::pack(b, p.kc, p.nc);
+    let mut data = pack::checkout_zeroed(m * n);
+    packed_region(&pa, &pb, 0, m, 0, n, &mut data, n);
+    pa.recycle();
+    pb.recycle();
+    Matrix::from_vec(m, n, data)
+}
+
+/// Legacy blocked GEMM (per-panel B pack, strided A reads) — the bitwise
+/// reference for the packed hot path and the `hotpath_micro` baseline.
+pub fn gemm_blocked_unpacked(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    gemm_blocked_unpacked_with(a, b, &kernel_params())
+}
+
+/// [`gemm_blocked_unpacked`] with explicit geometry.
+pub fn gemm_blocked_unpacked_with(a: &Matrix, b: &Matrix, p: &KernelParams) -> Result<Matrix> {
+    check(a, b)?;
+    let (m, k) = a.shape();
+    let n = b.cols();
+    if m * n * k <= p.naive_cutover {
         return gemm_naive(a, b);
     }
     let mut c = Matrix::zeros(m, n);
-    blocked_region(a, b, 0, m, 0, n, c.data_mut(), n);
+    blocked_region(a, b, 0, m, 0, n, c.data_mut(), n, p);
     Ok(c)
 }
 
 /// One output region `C[r0..r0+rows, c0..c0+cols] = A[r0.., :] · B[:, c0..]`
 /// of the blocked GEMM, materialized as a contiguous rows×cols matrix.
 ///
-/// This is the per-tile kernel of the shard execution plane
-/// ([`crate::shard`]). It always runs the blocked/packed path (no naive
-/// cutover), so a tile's summation order is a function of the tile alone:
-/// executing a tile grid in *any* order — or concurrently — reproduces the
-/// same bits. When `r0`/`rows` are multiples of [`MC`] (or `r0 + rows`
-/// hits `m`) and `c0`/`cols` are multiples of [`NC`] (or `c0 + cols` hits
-/// `n`), the per-element order also matches a full-matrix [`gemm_blocked`]
-/// exactly, so tiled execution is bitwise-equal to the monolithic kernel.
+/// This is the per-tile kernel of the shard execution plane's *fallback*
+/// path (unaligned grids): it re-packs the B panels it needs per tile. It
+/// always runs the blocked path (no naive cutover), so a tile's summation
+/// order is a function of the tile alone: executing a tile grid in *any*
+/// order — or concurrently — reproduces the same bits. When `r0`/`rows`
+/// are multiples of MC (or `r0 + rows` hits `m`) and `c0`/`cols` are
+/// multiples of NC (or `c0 + cols` hits `n`), the per-element order also
+/// matches a full-matrix [`gemm_blocked`] exactly, so tiled execution is
+/// bitwise-equal to the monolithic kernel.
 pub fn gemm_panel(
     a: &Matrix,
     b: &Matrix,
@@ -101,17 +246,96 @@ pub fn gemm_panel(
             rhs: (a.rows(), b.cols()),
         });
     }
-    let mut c = Matrix::zeros(rows, cols);
+    let mut data = pack::checkout_zeroed(rows * cols);
     if rows > 0 && cols > 0 {
-        blocked_region(a, b, r0, rows, c0, cols, c.data_mut(), cols);
+        blocked_region(a, b, r0, rows, c0, cols, &mut data, cols, &kernel_params());
     }
-    Ok(c)
+    Matrix::from_vec(rows, cols, data)
 }
 
-/// Shared blocked core: `C_region = A[r0..r0+rows, :] · B[:, c0..c0+cols]`
+/// [`gemm_panel`] over pre-packed operands: the shard plane's hot path.
+/// The shared [`PackedA`]/[`PackedB`] are packed once per GEMM and read
+/// concurrently by every worker, so per-tile re-packing disappears.
+///
+/// The region must be pack-aligned (`r0 % mc == 0`, `c0 % nc == 0`, and
+/// each extent either a block multiple or flush with the matrix edge) so
+/// region-local panels coincide with the globally packed ones; unaligned
+/// regions are rejected — callers fall back to [`gemm_panel`].
+pub fn gemm_panel_packed(
+    pa: &PackedA,
+    pb: &PackedB,
+    r0: usize,
+    rows: usize,
+    c0: usize,
+    cols: usize,
+) -> Result<Matrix> {
+    if pa.k() != pb.k() || pa.kc() != pb.kc() {
+        return Err(Error::ShapeMismatch {
+            op: "gemm_panel_packed",
+            lhs: (pa.k(), pa.kc()),
+            rhs: (pb.k(), pb.kc()),
+        });
+    }
+    let aligned = r0 % pa.mc() == 0
+        && c0 % pb.nc() == 0
+        && (rows % pa.mc() == 0 || r0 + rows == pa.m())
+        && (cols % pb.nc() == 0 || c0 + cols == pb.n());
+    if r0 + rows > pa.m() || c0 + cols > pb.n() || !aligned {
+        return Err(Error::ShapeMismatch {
+            op: "gemm_panel_packed",
+            lhs: (r0 + rows, c0 + cols),
+            rhs: (pa.m(), pb.n()),
+        });
+    }
+    let mut data = pack::checkout_zeroed(rows * cols);
+    if rows > 0 && cols > 0 {
+        packed_region(pa, pb, r0, rows, c0, cols, &mut data, cols);
+    }
+    Matrix::from_vec(rows, cols, data)
+}
+
+/// Full-range product over pre-packed operands (no naive cutover — the
+/// caller decides; see [`gemm_blocked_with`] for the cutover rule).
+pub fn gemm_packed(pa: &PackedA, pb: &PackedB) -> Result<Matrix> {
+    gemm_panel_packed(pa, pb, 0, pa.m(), 0, pb.n())
+}
+
+/// Shared packed core: `C_region = A[r0..r0+rows, :] · B[:, c0..c0+cols]`
 /// written into `cd` (row-major, row stride `c_stride`, region-local
-/// indexing). `gemm_blocked` calls this over the full matrix; `gemm_panel`
-/// over one tile.
+/// indexing), reading both operands from their packed layouts.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn packed_region(
+    pa: &PackedA,
+    pb: &PackedB,
+    r0: usize,
+    rows: usize,
+    c0: usize,
+    cols: usize,
+    cd: &mut [f32],
+    c_stride: usize,
+) {
+    debug_assert_eq!(pa.k(), pb.k(), "packed operands share k");
+    debug_assert_eq!(pa.kc(), pb.kc(), "packed operands share kc");
+    let k = pa.k();
+    let (mc, kc, nc) = (pa.mc(), pa.kc(), pb.nc());
+    for pc in (0..k).step_by(kc) {
+        let kcur = kc.min(k - pc);
+        for jc in (0..cols).step_by(nc) {
+            let ncur = nc.min(cols - jc);
+            let bpanel = pb.panel(pc, c0 + jc);
+            debug_assert_eq!(bpanel.len(), kcur * ncur, "region/panel agree");
+            for ic in (0..rows).step_by(mc) {
+                let mcur = mc.min(rows - ic);
+                let ablock = pa.block(r0 + ic, pc);
+                debug_assert_eq!(ablock.len(), mcur * kcur, "region/block agree");
+                macro_kernel_packed(ablock, bpanel, cd, c_stride, ic, jc, mcur, ncur, kcur);
+            }
+        }
+    }
+}
+
+/// Shared legacy blocked core (strided A, per-call B panel scratch).
+#[allow(clippy::too_many_arguments)]
 fn blocked_region(
     a: &Matrix,
     b: &Matrix,
@@ -121,20 +345,24 @@ fn blocked_region(
     cols: usize,
     cd: &mut [f32],
     c_stride: usize,
+    p: &KernelParams,
 ) {
     let k = a.cols();
-    let mut bpack = vec![0.0f32; KC * NC];
-    for pc in (0..k).step_by(KC) {
-        let kc = KC.min(k - pc);
-        for jc in (0..cols).step_by(NC) {
-            let nc = NC.min(cols - jc);
-            pack_b(b, pc, c0 + jc, kc, nc, &mut bpack);
-            for ic in (0..rows).step_by(MC) {
-                let mc = MC.min(rows - ic);
-                macro_kernel(a, &bpack, cd, c_stride, r0 + ic, ic, jc, mc, nc, kc, pc);
+    let (mc, kc, nc) = (p.mc, p.kc, p.nc);
+    // Arena scratch: fully (re)written by `pack_b` before every read.
+    let mut bpack = pack::checkout_stale(kc * nc);
+    for pc in (0..k).step_by(kc) {
+        let kcur = kc.min(k - pc);
+        for jc in (0..cols).step_by(nc) {
+            let ncur = nc.min(cols - jc);
+            pack_b(b, pc, c0 + jc, kcur, ncur, &mut bpack);
+            for ic in (0..rows).step_by(mc) {
+                let mcur = mc.min(rows - ic);
+                macro_kernel(a, &bpack, cd, c_stride, r0 + ic, ic, jc, mcur, ncur, kcur, pc);
             }
         }
     }
+    pack::recycle(bpack);
 }
 
 /// Pack `B[pc..pc+kc, jc..jc+nc]` row-major into a contiguous panel.
@@ -148,7 +376,56 @@ fn pack_b(b: &Matrix, pc: usize, jc: usize, kc: usize, nc: usize, out: &mut [f32
     }
 }
 
-/// Multiply one MC×KC block of A with the packed KC×NC panel of B.
+/// Multiply one packed MC×KC block of A with one packed KC×NC panel of B,
+/// region-local C rows (`c_row0`, stride `c_stride`). Zone traversal
+/// mirrors the packed block layout exactly: wide micro-panels, then at
+/// most one narrow one, then the `< MR` scalar remainder rows.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn macro_kernel_packed(
+    ablock: &[f32],
+    bpanel: &[f32],
+    cd: &mut [f32],
+    c_stride: usize,
+    c_row0: usize,
+    jc: usize,
+    mc: usize,
+    nc: usize,
+    kc: usize,
+) {
+    let mut i = 0;
+    while i + MR_WIDE <= mc {
+        let ap = &ablock[i * kc..(i + MR_WIDE) * kc];
+        let mut rows = split_rows_mut::<MR_WIDE>(cd, c_row0 + i, c_stride, jc, nc);
+        micro_rxn::<MR_WIDE>(ap, bpanel, kc, nc, &mut rows);
+        i += MR_WIDE;
+    }
+    if i + MR <= mc {
+        let ap = &ablock[i * kc..(i + MR) * kc];
+        let mut rows = split_rows_mut::<MR>(cd, c_row0 + i, c_stride, jc, nc);
+        micro_rxn::<MR>(ap, bpanel, kc, nc, &mut rows);
+        i += MR;
+    }
+    while i < mc {
+        // Scalar remainder rows (< MR): same direct-accumulation order and
+        // zero-skip as the legacy remainder path.
+        let arow = &ablock[i * kc..i * kc + kc];
+        let crow = &mut cd[(c_row0 + i) * c_stride + jc..(c_row0 + i) * c_stride + jc + nc];
+        for (t, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bpanel[t * nc..t * nc + nc];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Multiply one MC×KC block of A with the packed KC×NC panel of B
+/// (legacy strided-A path).
 ///
 /// A rows are addressed globally (`a_row0`); C rows region-locally
 /// (`c_row0`, stride `c_stride`) so the same kernel serves both the
@@ -205,7 +482,8 @@ fn macro_kernel(
     }
 }
 
-/// Helper giving simultaneous mutable access to 4 consecutive C rows.
+/// Helper giving simultaneous mutable access to 4 consecutive C rows
+/// (legacy micro-kernel).
 struct SplitRows<'a> {
     r0: &'a mut [f32],
     r1: &'a mut [f32],
@@ -228,19 +506,90 @@ impl<'a> SplitRows<'a> {
     }
 }
 
-/// Register-tile width of the inner micro-kernel (4×8 f32 accumulators =
-/// 4 AVX ymm registers of payload — fits x86-64's register file with room
-/// for the A broadcasts and B row).
+/// Simultaneous mutable access to `R` consecutive C rows, each trimmed to
+/// the `width`-column window at `jc` (the packed micro-kernels' C view).
+fn split_rows_mut<'a, const R: usize>(
+    cd: &'a mut [f32],
+    row0: usize,
+    stride: usize,
+    jc: usize,
+    width: usize,
+) -> [&'a mut [f32]; R] {
+    let mut rest: &'a mut [f32] = cd.split_at_mut(row0 * stride).1;
+    std::array::from_fn(|_| {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(stride);
+        rest = tail;
+        &mut head[jc..jc + width]
+    })
+}
+
+/// Register-tile width of the inner micro-kernels (NR-wide f32 column
+/// strips; with the 8-row wide tile this is an 8×16 accumulator block —
+/// 8 AVX-512 zmm registers of payload, or a spill-free 4×16 on AVX2 via
+/// the narrow tile).
 const NR: usize = 16;
 
-/// 4×nc micro-kernel: 4 A rows against the packed B panel.
+/// R×nc micro-kernel over a packed A micro-panel (`ap[t·R + j]`) and a
+/// packed B panel.
 ///
-/// §Perf iteration 1 (EXPERIMENTS.md): the original version accumulated
-/// straight into the C rows each k-step — ~9 L1 accesses per 8 flops —
-/// plateauing at ~15 GFLOPS. This version walks `nc` in NR-wide column
-/// strips and keeps a full 4×NR accumulator tile in registers across the
-/// entire kc loop, touching C exactly once per strip: arithmetic-bound
-/// instead of L1-bound.
+/// §Perf iteration 1 (EXPERIMENTS.md): accumulating straight into C each
+/// k-step was L1-bound (~9 accesses per 8 flops); this walks `nc` in
+/// NR-wide column strips and keeps a full R×NR accumulator tile in
+/// registers across the entire kc loop, touching C exactly once per strip.
+/// The packed-operand iteration (PR 5) additionally makes every A load
+/// come from the contiguous micro-panel instead of R strided rows.
+#[inline]
+fn micro_rxn<const R: usize>(
+    ap: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    nc: usize,
+    c: &mut [&mut [f32]; R],
+) {
+    // Exact pre-slice lets LLVM hoist the bounds checks out of the kc loop.
+    let ap = &ap[..kc * R];
+    let mut j0 = 0;
+    // Full NR-wide strips: register accumulation over all of kc.
+    while j0 + NR <= nc {
+        let mut acc = [[0.0f32; NR]; R];
+        let mut boff = j0;
+        for t in 0..kc {
+            let brow: &[f32; NR] = bpack[boff..boff + NR].try_into().expect("NR strip");
+            let avals = &ap[t * R..t * R + R];
+            for (accj, &av) in acc.iter_mut().zip(avals) {
+                for (acv, &bv) in accj.iter_mut().zip(brow) {
+                    *acv += av * bv;
+                }
+            }
+            boff += nc;
+        }
+        for (cj, accj) in c.iter_mut().zip(&acc) {
+            for (cv, &av) in cj[j0..j0 + NR].iter_mut().zip(accj) {
+                *cv += av;
+            }
+        }
+        j0 += NR;
+    }
+    // Remainder columns (< NR): scalar accumulators per column.
+    while j0 < nc {
+        let mut s = [0.0f32; R];
+        for t in 0..kc {
+            let b = bpack[t * nc + j0];
+            let avals = &ap[t * R..t * R + R];
+            for (sj, &av) in s.iter_mut().zip(avals) {
+                *sj += av * b;
+            }
+        }
+        for (cj, &sj) in c.iter_mut().zip(&s) {
+            cj[j0] += sj;
+        }
+        j0 += 1;
+    }
+}
+
+/// 4×nc micro-kernel over strided A rows (legacy unpacked path; see
+/// [`micro_rxn`] for the strip scheme — the per-element arithmetic order
+/// is identical).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn micro_4xn(
@@ -397,6 +746,58 @@ mod tests {
     }
 
     #[test]
+    fn packed_is_bitwise_identical_to_unpacked() {
+        // The tentpole invariant: the packed hot path reproduces the
+        // legacy kernel's bits exactly — odd shapes, every micro-tile
+        // zone (8/4/scalar rows), remainder columns, 1×N / N×1 edges.
+        let mut rng = Pcg64::seeded(41);
+        for (m, k, n) in [
+            (97, 83, 101),
+            (130, 257, 259),
+            (256, 96, 520),
+            (129, 300, 17),
+            (1, 300, 257),
+            (300, 257, 1),
+            (83, 1, 83),
+        ] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            let packed = gemm_blocked(&a, &b).unwrap();
+            let unpacked = gemm_blocked_unpacked(&a, &b).unwrap();
+            assert_eq!(packed.data(), unpacked.data(), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_matches_unpacked_with_custom_params() {
+        // Explicit-params variants: geometry changes change bits, but the
+        // packed/unpacked pair must stay bit-identical at any geometry.
+        let mut rng = Pcg64::seeded(42);
+        let a = Matrix::gaussian(150, 170, &mut rng);
+        let b = Matrix::gaussian(170, 190, &mut rng);
+        for p in [
+            KernelParams { mc: 64, kc: 96, nc: 112, naive_cutover: 0 },
+            KernelParams { mc: 32, kc: 512, nc: 48, naive_cutover: 0 },
+            KernelParams::default(),
+        ] {
+            let packed = gemm_blocked_with(&a, &b, &p).unwrap();
+            let unpacked = gemm_blocked_unpacked_with(&a, &b, &p).unwrap();
+            assert_eq!(packed.data(), unpacked.data(), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn kernel_params_validate_and_default() {
+        assert_eq!(kernel_params(), KernelParams::default());
+        assert!(set_kernel_params(&KernelParams { mc: 0, ..Default::default() }).is_err());
+        assert!(set_kernel_params(&KernelParams { kc: 0, ..Default::default() }).is_err());
+        assert!(set_kernel_params(&KernelParams { nc: 0, ..Default::default() }).is_err());
+        // A failed set must not have mutated the installed params.
+        assert_eq!(kernel_params(), KernelParams::default());
+        set_kernel_params(&KernelParams::default()).unwrap();
+    }
+
+    #[test]
     fn identity_is_noop() {
         let mut rng = Pcg64::seeded(7);
         let a = Matrix::gaussian(40, 40, &mut rng);
@@ -422,6 +823,7 @@ mod tests {
         let b = Matrix::zeros(4, 2);
         assert!(gemm_blocked(&a, &b).is_err());
         assert!(gemm_naive(&a, &b).is_err());
+        assert!(gemm_blocked_unpacked(&a, &b).is_err());
     }
 
     #[test]
@@ -449,7 +851,7 @@ mod tests {
     #[test]
     fn panel_full_range_is_bitwise_blocked() {
         // Above the naive cutover, gemm_panel over the full output range
-        // must reproduce gemm_blocked exactly (same code path).
+        // must reproduce gemm_blocked exactly.
         let mut rng = Pcg64::seeded(21);
         let (m, k, n) = (130, 140, 150);
         let a = Matrix::gaussian(m, k, &mut rng);
@@ -460,27 +862,53 @@ mod tests {
     }
 
     #[test]
+    fn packed_panel_full_range_is_bitwise_blocked() {
+        let mut rng = Pcg64::seeded(24);
+        let (m, k, n) = (130, 140, 150);
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let b = Matrix::gaussian(k, n, &mut rng);
+        let p = kernel_params();
+        let pa = PackedA::pack(&a, p.mc, p.kc);
+        let pb = PackedB::pack(&b, p.kc, p.nc);
+        let full = gemm_blocked(&a, &b).unwrap();
+        let panel = gemm_panel_packed(&pa, &pb, 0, m, 0, n).unwrap();
+        assert_eq!(full.data(), panel.data());
+        let whole = gemm_packed(&pa, &pb).unwrap();
+        assert_eq!(full.data(), whole.data());
+    }
+
+    #[test]
     fn aligned_panels_tile_bitwise_into_blocked() {
         // MC/NC-aligned tiles assembled into the full matrix are bitwise
         // identical to the monolithic blocked GEMM — the invariant the
-        // shard plane's equivalence tests rely on.
+        // shard plane's equivalence tests rely on — on both the unpacked
+        // fallback and the shared-packed tile kernels.
         let mut rng = Pcg64::seeded(22);
         let (m, k, n) = (300, 96, 520);
         let a = Matrix::gaussian(m, k, &mut rng);
         let b = Matrix::gaussian(k, n, &mut rng);
         let full = gemm_blocked(&a, &b).unwrap();
-        let mut tiled = Matrix::zeros(m, n);
-        for r0 in (0..m).step_by(MC) {
-            let rows = MC.min(m - r0);
-            for c0 in (0..n).step_by(NC) {
-                let cols = NC.min(n - c0);
-                let tile = gemm_panel(&a, &b, r0, rows, c0, cols).unwrap();
-                for i in 0..rows {
-                    tiled.row_mut(r0 + i)[c0..c0 + cols].copy_from_slice(tile.row(i));
+        let p = kernel_params();
+        let pa = PackedA::pack(&a, p.mc, p.kc);
+        let pb = PackedB::pack(&b, p.kc, p.nc);
+        for packed in [false, true] {
+            let mut tiled = Matrix::zeros(m, n);
+            for r0 in (0..m).step_by(MC) {
+                let rows = MC.min(m - r0);
+                for c0 in (0..n).step_by(NC) {
+                    let cols = NC.min(n - c0);
+                    let tile = if packed {
+                        gemm_panel_packed(&pa, &pb, r0, rows, c0, cols).unwrap()
+                    } else {
+                        gemm_panel(&a, &b, r0, rows, c0, cols).unwrap()
+                    };
+                    for i in 0..rows {
+                        tiled.row_mut(r0 + i)[c0..c0 + cols].copy_from_slice(tile.row(i));
+                    }
                 }
             }
+            assert_eq!(full.data(), tiled.data(), "packed={packed}");
         }
-        assert_eq!(full.data(), tiled.data());
     }
 
     #[test]
@@ -501,5 +929,23 @@ mod tests {
         let b = Matrix::zeros(8, 8);
         assert!(gemm_panel(&a, &b, 4, 8, 0, 4).is_err());
         assert!(gemm_panel(&a, &b, 0, 4, 4, 8).is_err());
+    }
+
+    #[test]
+    fn packed_panel_rejects_unaligned_regions() {
+        let mut rng = Pcg64::seeded(25);
+        let a = Matrix::gaussian(300, 64, &mut rng);
+        let b = Matrix::gaussian(64, 300, &mut rng);
+        let p = kernel_params();
+        let pa = PackedA::pack(&a, p.mc, p.kc);
+        let pb = PackedB::pack(&b, p.kc, p.nc);
+        // Unaligned offset / interior non-multiple extents are refused.
+        assert!(gemm_panel_packed(&pa, &pb, 64, 128, 0, 256).is_err());
+        assert!(gemm_panel_packed(&pa, &pb, 0, 100, 0, 256).is_err());
+        assert!(gemm_panel_packed(&pa, &pb, 0, 128, 0, 100).is_err());
+        // Flush-with-edge remainders are fine.
+        assert!(gemm_panel_packed(&pa, &pb, 128, 172, 256, 44).is_ok());
+        // Out of range rejected.
+        assert!(gemm_panel_packed(&pa, &pb, 256, 128, 0, 256).is_err());
     }
 }

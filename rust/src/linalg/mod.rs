@@ -10,6 +10,9 @@
 //! - [`gemm`]: naive, blocked and register-blocked GEMM (the "cuBLAS"
 //!   comparator and the CPU hot path for shapes not covered by AOT
 //!   artifacts),
+//! - [`pack`]: the packed-operand plane — BLIS-style micro-panel packing
+//!   of A/B (with fused FP8 decode-into-pack) plus the per-thread scratch
+//!   arena the hot path allocates from,
 //! - [`qr`]: Householder QR (used by randomized SVD's orthonormalization),
 //! - [`svd`]: one-sided Jacobi SVD (the exact truncated-SVD reference),
 //! - [`rsvd`]: Halko–Martinsson–Tropp randomized SVD with power iterations,
@@ -20,12 +23,17 @@ pub mod gemm;
 pub mod lanczos;
 pub mod matrix;
 pub mod norms;
+pub mod pack;
 pub mod qr;
 pub mod rng;
 pub mod rsvd;
 pub mod svd;
 
-pub use gemm::{gemm_blocked, gemm_flops, gemm_naive, GemmAlgo};
+pub use gemm::{
+    gemm_blocked, gemm_blocked_unpacked, gemm_flops, gemm_naive, kernel_params,
+    set_kernel_params, GemmAlgo, KernelParams,
+};
+pub use pack::{PackedA, PackedB};
 pub use lanczos::lanczos_svd;
 pub use matrix::Matrix;
 pub use qr::{qr_thin, QrFactors};

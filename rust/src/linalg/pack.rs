@@ -1,0 +1,570 @@
+//! Packed-operand plane: BLIS-style panel packing + a per-thread scratch
+//! arena — the memory side of the blocked GEMM hot path.
+//!
+//! Three pieces:
+//!
+//! - [`PackedA`]: the whole A operand re-laid-out into MC×KC blocks whose
+//!   interior is *micro-panel-major* — for each k-step `t`, the MR values
+//!   `A[i..i+MR][t]` sit contiguously, so the micro-kernel's row broadcasts
+//!   all come from one cache line instead of MR strided ones.
+//! - [`PackedB`]: the whole B operand as KC×NC row-major panels (byte-wise
+//!   the layout the legacy per-call `pack_b` produced), packed **once** and
+//!   then shared read-only — across the K loop, across output tiles, and
+//!   across shard workers ([`crate::shard`]). Reuse is observable via
+//!   [`PackedB::reuse`] and surfaces as the `pack.reuse` metric.
+//! - the **arena** (`checkout_zeroed` / `checkout_stale` / `recycle`): a
+//!   per-thread recycling pool of `f32` buffers so steady-state serving
+//!   re-uses pack buffers, factor-chain intermediates and kernel outputs
+//!   instead of allocating on every request. [`stats`] exposes per-thread
+//!   counters for the allocation-free tests.
+//!
+//! Both packed types also have `pack_quantized` constructors that decode
+//! FP8/F16/BF16 payloads **directly into the packed layout** (fused
+//! decode-into-pack): one pass over the codec bytes, no full-matrix f32
+//! materialization in between. The decoded values are bit-identical to
+//! [`crate::fp8::dequantize`]'s, so fused and unfused paths produce the
+//! same product bits.
+//!
+//! Packing is a pure re-layout: the kernels read identical values in an
+//! identical order from the packed buffers, so every packed path is
+//! bitwise-equal to its unpacked counterpart by construction (asserted by
+//! `rust/tests/pack_equivalence.rs`).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::fp8::quantize::{decode_row_segment, QuantizedTensor};
+use crate::linalg::matrix::Matrix;
+
+/// Rows per narrow micro-panel (the legacy 4-row register tile).
+pub const MR: usize = 4;
+
+/// Rows per wide micro-panel (the widened 8×NR register tile; see
+/// [`crate::linalg::gemm`] for why widening preserves bitwise results).
+pub const MR_WIDE: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Per-thread scratch arena
+// ---------------------------------------------------------------------------
+
+/// Per-thread arena counters (see [`stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Checkouts served by growing or freshly allocating a buffer.
+    pub fresh_allocs: u64,
+    /// Total checkouts (zeroed + stale).
+    pub checkouts: u64,
+    /// Buffers returned via [`recycle`].
+    pub recycled: u64,
+}
+
+struct Arena {
+    free: Vec<Vec<f32>>,
+    stats: ArenaStats,
+}
+
+impl Arena {
+    /// Pop the best-fitting free buffer (smallest capacity ≥ `len`), or a
+    /// fresh one. Growing an undersized buffer counts as a fresh alloc.
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        self.stats.checkouts += 1;
+        let mut best: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            if b.capacity() >= len && best.is_none_or(|j| b.capacity() < self.free[j].capacity()) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => self.free.swap_remove(i),
+            None => {
+                self.stats.fresh_allocs += 1;
+                // Grow a free buffer's storage if one exists (growing
+                // beats leaking it), else start fresh. `reserve` is
+                // relative to `len()`, so clear first to guarantee the
+                // resulting capacity covers the request.
+                match self.free.pop() {
+                    Some(mut b) => {
+                        b.clear();
+                        b.reserve(len);
+                        b
+                    }
+                    None => Vec::with_capacity(len),
+                }
+            }
+        }
+    }
+}
+
+thread_local! {
+    static ARENA: RefCell<Arena> = RefCell::new(Arena {
+        free: Vec::new(),
+        stats: ArenaStats::default(),
+    });
+}
+
+/// Check out a buffer of exactly `len` zeros. Allocation-free when a
+/// recycled buffer with enough capacity exists (the zero-fill is a memset,
+/// not an allocation).
+pub fn checkout_zeroed(len: usize) -> Vec<f32> {
+    let mut b = ARENA.with(|a| a.borrow_mut().take(len));
+    b.clear();
+    b.resize(len, 0.0);
+    b
+}
+
+/// Check out a buffer of exactly `len` **unspecified** (stale) contents.
+/// Only for outputs that are provably fully written before being read —
+/// in debug builds the buffer is poisoned with NaN so a violated contract
+/// shows up in the equivalence tests instead of silently reusing stale
+/// data.
+pub fn checkout_stale(len: usize) -> Vec<f32> {
+    let mut b = ARENA.with(|a| a.borrow_mut().take(len));
+    // Stale contents are *initialized* memory from a previous checkout —
+    // safe to expose; only its values are unspecified.
+    if b.len() > len {
+        b.truncate(len);
+    } else {
+        b.resize(len, 0.0);
+    }
+    if cfg!(debug_assertions) {
+        b.fill(f32::NAN);
+    }
+    b
+}
+
+/// Max buffers a thread's arena retains (burst-of-odd-shapes bound).
+const ARENA_MAX_BUFFERS: usize = 16;
+
+/// Max total capacity a thread's arena retains, in f32 elements (256 MiB).
+/// Idle scratch beyond this is released largest-first: a thread that once
+/// served huge GEMMs must not pin their buffers forever after traffic
+/// shifts to small shapes. Under *sustained* large traffic the big
+/// buffers are checked out (not in the free list) most of the time, so
+/// steady-state reuse is unaffected.
+const ARENA_MAX_ELEMS: usize = 64 << 20;
+
+/// Return a buffer to this thread's arena for reuse.
+pub fn recycle(buf: Vec<f32>) {
+    ARENA.with(|a| {
+        let mut a = a.borrow_mut();
+        a.stats.recycled += 1;
+        a.free.push(buf);
+        // Count bound: drop the smallest buffers beyond the cap (they are
+        // the cheapest to re-create).
+        if a.free.len() > ARENA_MAX_BUFFERS {
+            a.free.sort_by_key(|b| b.capacity());
+            let excess = a.free.len() - ARENA_MAX_BUFFERS;
+            a.free.drain(..excess);
+        }
+        // Byte bound: release largest-first until under the cap.
+        let mut total: usize = a.free.iter().map(|b| b.capacity()).sum();
+        while total > ARENA_MAX_ELEMS {
+            let largest = a
+                .free
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i)
+                .expect("non-empty while over budget");
+            total -= a.free.swap_remove(largest).capacity();
+        }
+    });
+}
+
+/// Snapshot this thread's arena counters.
+pub fn stats() -> ArenaStats {
+    ARENA.with(|a| a.borrow().stats)
+}
+
+// ---------------------------------------------------------------------------
+// PackedB: KC×NC panels, packed once, shared read-only
+// ---------------------------------------------------------------------------
+
+/// The B operand packed into KC×NC row-major panels (pack-once/reuse-many).
+///
+/// Panel `(pc, jc)` (element offsets, multiples of `kc`/`nc`) lives at
+/// buffer offset `pc·n + kc_actual·jc` and holds `kc_actual × nc_actual`
+/// values row-major — byte-identical to what the legacy per-tile `pack_b`
+/// produced for the same panel, which is what makes packed and unpacked
+/// kernels bitwise-equal.
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    kc: usize,
+    nc: usize,
+    buf: Vec<f32>,
+    uses: AtomicU64,
+}
+
+impl PackedB {
+    /// Pack all of `b` (one pass). The buffer comes from the arena.
+    pub fn pack(b: &Matrix, kc: usize, nc: usize) -> PackedB {
+        let (k, n) = b.shape();
+        let mut out = Self::shell(k, n, kc, nc);
+        let bd = b.data();
+        for pc in (0..k).step_by(kc) {
+            let kcur = kc.min(k - pc);
+            for jc in (0..n).step_by(nc) {
+                let ncur = nc.min(n - jc);
+                let off = pc * n + kcur * jc;
+                for t in 0..kcur {
+                    let src = &bd[(pc + t) * n + jc..(pc + t) * n + jc + ncur];
+                    out.buf[off + t * ncur..off + t * ncur + ncur].copy_from_slice(src);
+                }
+            }
+        }
+        out
+    }
+
+    /// Fused decode-into-pack: decode `q`'s codec bytes straight into the
+    /// panel layout (one pass, no dense f32 intermediate). Panel values
+    /// are bit-identical to `pack(&dequantize(q), kc, nc)`.
+    pub fn pack_quantized(q: &QuantizedTensor, kc: usize, nc: usize) -> PackedB {
+        let (k, n) = q.shape;
+        let mut out = Self::shell(k, n, kc, nc);
+        for pc in (0..k).step_by(kc) {
+            let kcur = kc.min(k - pc);
+            for jc in (0..n).step_by(nc) {
+                let ncur = nc.min(n - jc);
+                let off = pc * n + kcur * jc;
+                for t in 0..kcur {
+                    decode_row_segment(q, pc + t, jc, &mut out.buf[off + t * ncur..off + t * ncur + ncur]);
+                }
+            }
+        }
+        out
+    }
+
+    fn shell(k: usize, n: usize, kc: usize, nc: usize) -> PackedB {
+        assert!(kc > 0 && nc > 0, "PackedB: kc/nc must be positive");
+        PackedB {
+            k,
+            n,
+            kc,
+            nc,
+            buf: checkout_stale(k * n),
+            uses: AtomicU64::new(0),
+        }
+    }
+
+    /// Inner dimension (B rows).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// B columns.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Panel height (the KC cache block).
+    pub fn kc(&self) -> usize {
+        self.kc
+    }
+
+    /// Panel width (the NC cache block).
+    pub fn nc(&self) -> usize {
+        self.nc
+    }
+
+    /// Number of packed panels.
+    pub fn panels(&self) -> usize {
+        self.k.div_ceil(self.kc) * self.n.div_ceil(self.nc)
+    }
+
+    /// Borrow panel `(pc, jc)` (element offsets; `pc % kc == 0`,
+    /// `jc % nc == 0`). Counts one use for reuse accounting.
+    pub fn panel(&self, pc: usize, jc: usize) -> &[f32] {
+        debug_assert!(pc % self.kc == 0 && jc % self.nc == 0, "unaligned panel");
+        debug_assert!(pc < self.k && jc < self.n, "panel out of range");
+        self.uses.fetch_add(1, Ordering::Relaxed);
+        let kcur = self.kc.min(self.k - pc);
+        let ncur = self.nc.min(self.n - jc);
+        let off = pc * self.n + kcur * jc;
+        &self.buf[off..off + kcur * ncur]
+    }
+
+    /// Panel fetches so far.
+    pub fn uses(&self) -> u64 {
+        self.uses.load(Ordering::Relaxed)
+    }
+
+    /// Panel fetches beyond the first per panel — the packs a repacking
+    /// implementation would have paid again (the `pack.reuse` metric).
+    pub fn reuse(&self) -> u64 {
+        self.uses().saturating_sub(self.panels() as u64)
+    }
+
+    /// Give the buffer back to this thread's arena (optional; dropping is
+    /// also fine, the memory is just not reused then).
+    pub fn recycle(self) {
+        recycle(self.buf);
+    }
+
+    /// Trim the backing buffer to exactly `k·n` elements. Call before
+    /// storing a packed operand long-term (e.g. a cache entry): the
+    /// arena hands out best-fit buffers whose *capacity* can exceed the
+    /// panels' size, and a resident entry must not pin that slack.
+    pub fn shrink_to_fit(&mut self) {
+        self.buf.shrink_to_fit();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PackedA: MC×KC blocks, micro-panel-major
+// ---------------------------------------------------------------------------
+
+/// The A operand packed into MC×KC blocks, micro-panel-major.
+///
+/// Block `(r, pc)` lives at buffer offset `r·k + mc_actual·pc`. Its rows
+/// decompose into zones mirroring the macro-kernel's traversal — as many
+/// [`MR_WIDE`]-row micro-panels as fit, then at most one [`MR`]-row panel,
+/// then the `< MR` remainder rows stored row-major. Micro-panel layout is
+/// `panel[t·R + j] = A[row0 + j][pc + t]`; the uniform arithmetic makes
+/// every zone addressable as `block[i·kc_actual ..]` for local row `i`.
+pub struct PackedA {
+    m: usize,
+    k: usize,
+    mc: usize,
+    kc: usize,
+    buf: Vec<f32>,
+    uses: AtomicU64,
+}
+
+impl PackedA {
+    /// Pack all of `a` (one pass). The buffer comes from the arena.
+    pub fn pack(a: &Matrix, mc: usize, kc: usize) -> PackedA {
+        let (m, k) = a.shape();
+        let mut out = Self::shell(m, k, mc, kc);
+        let ad = a.data();
+        for r0 in (0..m).step_by(mc) {
+            let mcur = mc.min(m - r0);
+            for pc in (0..k).step_by(kc) {
+                let kcur = kc.min(k - pc);
+                let off = r0 * k + mcur * pc;
+                let block = &mut out.buf[off..off + mcur * kcur];
+                pack_a_block(block, mcur, kcur, |i, dest| {
+                    let row = &ad[(r0 + i) * k + pc..(r0 + i) * k + pc + kcur];
+                    dest.copy_from_slice(row);
+                });
+            }
+        }
+        out
+    }
+
+    /// Fused decode-into-pack for a quantized A (see
+    /// [`PackedB::pack_quantized`]).
+    pub fn pack_quantized(q: &QuantizedTensor, mc: usize, kc: usize) -> PackedA {
+        let (m, k) = q.shape;
+        let mut out = Self::shell(m, k, mc, kc);
+        for r0 in (0..m).step_by(mc) {
+            let mcur = mc.min(m - r0);
+            for pc in (0..k).step_by(kc) {
+                let kcur = kc.min(k - pc);
+                let off = r0 * k + mcur * pc;
+                let block = &mut out.buf[off..off + mcur * kcur];
+                pack_a_block(block, mcur, kcur, |i, dest| {
+                    decode_row_segment(q, r0 + i, pc, dest);
+                });
+            }
+        }
+        out
+    }
+
+    fn shell(m: usize, k: usize, mc: usize, kc: usize) -> PackedA {
+        assert!(mc > 0 && kc > 0, "PackedA: mc/kc must be positive");
+        PackedA {
+            m,
+            k,
+            mc,
+            kc,
+            buf: checkout_stale(m * k),
+            uses: AtomicU64::new(0),
+        }
+    }
+
+    /// A rows.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Inner dimension (A columns).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Block height (the MC cache block).
+    pub fn mc(&self) -> usize {
+        self.mc
+    }
+
+    /// Block depth (the KC cache block).
+    pub fn kc(&self) -> usize {
+        self.kc
+    }
+
+    /// Number of packed blocks.
+    pub fn blocks(&self) -> usize {
+        self.m.div_ceil(self.mc) * self.k.div_ceil(self.kc)
+    }
+
+    /// Borrow block `(r, pc)` (element offsets; `r % mc == 0`,
+    /// `pc % kc == 0`). Counts one use for reuse accounting.
+    pub fn block(&self, r: usize, pc: usize) -> &[f32] {
+        debug_assert!(r % self.mc == 0 && pc % self.kc == 0, "unaligned block");
+        debug_assert!(r < self.m && pc < self.k, "block out of range");
+        self.uses.fetch_add(1, Ordering::Relaxed);
+        let mcur = self.mc.min(self.m - r);
+        let kcur = self.kc.min(self.k - pc);
+        let off = r * self.k + mcur * pc;
+        &self.buf[off..off + mcur * kcur]
+    }
+
+    /// Block fetches so far.
+    pub fn uses(&self) -> u64 {
+        self.uses.load(Ordering::Relaxed)
+    }
+
+    /// Block fetches beyond the first per block.
+    pub fn reuse(&self) -> u64 {
+        self.uses().saturating_sub(self.blocks() as u64)
+    }
+
+    /// Give the buffer back to this thread's arena.
+    pub fn recycle(self) {
+        recycle(self.buf);
+    }
+}
+
+/// Write one MC×KC block in the zoned micro-panel-major layout. `fetch`
+/// copies `A[row0 + i][pc .. pc + kcur]` into its destination; the scalar
+/// remainder zone writes rows in place, the micro zones scatter through a
+/// stack row buffer.
+fn pack_a_block(block: &mut [f32], mcur: usize, kcur: usize, mut fetch: impl FnMut(usize, &mut [f32])) {
+    let mut rowbuf = checkout_stale(kcur);
+    let mut scatter = |block: &mut [f32], i0: usize, r: usize, rowbuf: &mut [f32]| {
+        for j in 0..r {
+            fetch(i0 + j, rowbuf);
+            for (t, &v) in rowbuf.iter().enumerate() {
+                block[i0 * kcur + t * r + j] = v;
+            }
+        }
+    };
+    let mut i = 0;
+    while i + MR_WIDE <= mcur {
+        scatter(block, i, MR_WIDE, &mut rowbuf);
+        i += MR_WIDE;
+    }
+    if i + MR <= mcur {
+        scatter(block, i, MR, &mut rowbuf);
+        i += MR;
+    }
+    while i < mcur {
+        fetch(i, &mut block[i * kcur..(i + 1) * kcur]);
+        i += 1;
+    }
+    recycle(rowbuf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::{dequantize, quantize, StorageFormat};
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn arena_recycles_buffers() {
+        let before = stats();
+        let b = checkout_zeroed(1000);
+        assert!(b.iter().all(|&v| v == 0.0));
+        recycle(b);
+        let b2 = checkout_zeroed(900);
+        assert!(b2.capacity() >= 1000, "recycled buffer reused");
+        assert!(b2.iter().all(|&v| v == 0.0));
+        recycle(b2);
+        let after = stats();
+        assert_eq!(after.checkouts - before.checkouts, 2);
+        assert_eq!(after.recycled - before.recycled, 2);
+        // The second checkout was served from the free list.
+        assert_eq!(after.fresh_allocs - before.fresh_allocs, 1);
+    }
+
+    #[test]
+    fn stale_checkout_has_exact_len() {
+        let b = checkout_stale(123);
+        assert_eq!(b.len(), 123);
+        recycle(b);
+        let b = checkout_stale(7);
+        assert_eq!(b.len(), 7);
+        recycle(b);
+    }
+
+    #[test]
+    fn packed_b_panels_match_source_rows() {
+        let mut rng = Pcg64::seeded(11);
+        let b = Matrix::gaussian(70, 90, &mut rng);
+        let (kc, nc) = (32, 48);
+        let pb = PackedB::pack(&b, kc, nc);
+        assert_eq!(pb.panels(), 3 * 2);
+        for pc in (0..70).step_by(kc) {
+            let kcur = kc.min(70 - pc);
+            for jc in (0..90).step_by(nc) {
+                let ncur = nc.min(90 - jc);
+                let panel = pb.panel(pc, jc);
+                for t in 0..kcur {
+                    assert_eq!(
+                        &panel[t * ncur..t * ncur + ncur],
+                        &b.row(pc + t)[jc..jc + ncur],
+                        "panel ({pc},{jc}) row {t}"
+                    );
+                }
+            }
+        }
+        assert_eq!(pb.uses(), 6);
+        assert_eq!(pb.reuse(), 0);
+        let _ = pb.panel(0, 0);
+        assert_eq!(pb.reuse(), 1);
+        pb.recycle();
+    }
+
+    #[test]
+    fn packed_a_blocks_are_micro_panel_major() {
+        let mut rng = Pcg64::seeded(12);
+        // 23 rows: two 8-panels, one 4-panel, 3 scalar rows.
+        let a = Matrix::gaussian(23, 40, &mut rng);
+        let (mc, kc) = (23, 16);
+        let pa = PackedA::pack(&a, mc, kc);
+        let block = pa.block(0, 16);
+        let kcur = 16; // min(kc, 40 - 16)
+        // 8-panel 1, row 9, t=2:
+        assert_eq!(block[8 * kcur + 2 * 8 + 1], a[(9, 18)]);
+        // 4-panel (rows 16..20), row 17, t=0:
+        assert_eq!(block[16 * kcur + 4 * 0 + 1], a[(17, 16)]);
+        // scalar zone (rows 20..23), row 21, t=5:
+        assert_eq!(block[21 * kcur + 5], a[(21, 21)]);
+        assert_eq!(pa.blocks(), 3);
+        pa.recycle();
+    }
+
+    #[test]
+    fn fused_quantized_pack_matches_dequantize_then_pack() {
+        let mut rng = Pcg64::seeded(13);
+        let b = Matrix::gaussian(67, 53, &mut rng);
+        for fmt in [
+            StorageFormat::Fp8(crate::fp8::Fp8Format::E4M3),
+            StorageFormat::Fp8(crate::fp8::Fp8Format::E5M2),
+            StorageFormat::F16,
+            StorageFormat::Bf16,
+            StorageFormat::F32,
+        ] {
+            let q = quantize(&b, fmt);
+            let dense = dequantize(&q);
+            let fused = PackedB::pack_quantized(&q, 32, 32);
+            let unfused = PackedB::pack(&dense, 32, 32);
+            assert_eq!(fused.buf, unfused.buf, "{fmt:?} B");
+            let fa = PackedA::pack_quantized(&q, 32, 32);
+            let ua = PackedA::pack(&dense, 32, 32);
+            assert_eq!(fa.buf, ua.buf, "{fmt:?} A");
+        }
+    }
+}

@@ -67,15 +67,19 @@ USAGE: lowrank-gemm <command> [options]
 COMMANDS:
   serve      --requests N --size N [--config F] [--workers W] [--no-xla]
              [--shard-workers W] [--tile-m M] [--tile-n N] [--min-parallel-n N]
+             [--kernel-mc M] [--kernel-kc K] [--kernel-nc N] [--naive-cutover F]
              [--autotune] [--autotune-alpha A] [--autotune-epsilon E]
              [--autotune-min-samples K] [--autotune-table F]
              [--cache] [--cache-budget-mb M] [--cache-min-dim D]
-             [--cache-fp8] [--cache-amortize R]
+             [--cache-fp8] [--cache-prepack] [--cache-amortize R]
              start the service and replay a synthetic transformer trace;
+             --kernel-* tune the blocked GEMM's packing geometry
+             (MC/KC/NC cache blocks + naive cutover) per host;
              --autotune turns on measured-latency calibration of the
              kernel selector (--autotune-table persists it across runs);
              --cache turns on content-addressed factor caching (anonymous
-             repeated operands decompose once, LRU within --cache-budget-mb)
+             repeated operands decompose once, LRU within --cache-budget-mb;
+             --cache-prepack also stores Vᵀ pre-packed in panel layout)
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
   factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
@@ -108,6 +112,12 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
         cfg.use_xla = false;
     }
     cfg.service.workers = args.get_parse("workers", cfg.service.workers)?;
+    // `[kernel]` overrides: blocked-GEMM geometry + naive cutover (the
+    // knobs the autotune plane calibrates per host).
+    cfg.kernel.mc = args.get_parse("kernel-mc", cfg.kernel.mc)?;
+    cfg.kernel.kc = args.get_parse("kernel-kc", cfg.kernel.kc)?;
+    cfg.kernel.nc = args.get_parse("kernel-nc", cfg.kernel.nc)?;
+    cfg.kernel.naive_cutover = args.get_parse("naive-cutover", cfg.kernel.naive_cutover)?;
     // `[shard]` overrides: the tile-execution plane's knobs.
     cfg.shard.workers = args.get_parse("shard-workers", cfg.shard.workers)?;
     cfg.shard.tile_m = args.get_parse("tile-m", cfg.shard.tile_m)?;
@@ -134,8 +144,12 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
     cfg.cache.budget_mb = args.get_parse("cache-budget-mb", cfg.cache.budget_mb)?;
     cfg.cache.min_dim = args.get_parse("cache-min-dim", cfg.cache.min_dim)?;
     cfg.cache.amortize_over = args.get_parse("cache-amortize", cfg.cache.amortize_over)?;
+    if args.has_flag("cache-prepack") {
+        cfg.cache.prepack = true;
+    }
     // Same validators the TOML path runs — an out-of-range flag must
     // fail loudly, not be silently clamped downstream.
+    cfg.kernel.validate()?;
     cfg.autotune.validate()?;
     cfg.cache.validate()?;
     Ok(cfg)

@@ -23,13 +23,20 @@
 //!
 //! Covered hot paths, all behind one [`ShardExecutor`]:
 //!
-//! - **dense blocked GEMM** — per-tile [`crate::linalg::gemm::gemm_panel`]
-//!   (same packing and micro-kernel as the monolithic kernel),
-//! - **FP8 dense GEMM** — codec round-trip, then the sharded f32 product,
+//! - **dense blocked GEMM** — operands packed **once**
+//!   ([`crate::linalg::pack`]) and shared read-only across workers; each
+//!   tile runs [`crate::linalg::gemm::gemm_panel_packed`] (same
+//!   micro-kernel and summation order as the monolithic kernel; grids
+//!   not aligned to the kernel blocking fall back to per-tile
+//!   [`crate::linalg::gemm::gemm_panel`] re-packing),
+//! - **FP8 dense GEMM** — fused decode-into-pack: quantize once, decode
+//!   the codec bytes straight into the shared packed panels, shard the
+//!   product (no full-matrix f32 intermediates),
 //! - **the low-rank factor chain** — every constituent product routed
-//!   through the plane, including **panel-parallel randomized SVD**
-//!   ([`rsvd_sharded`]): the `A·Ω` range sketch and the `Qᵀ·A` / `Aᵀ·Q`
-//!   projections are row-panel-sharded across workers.
+//!   through the plane with arena-recycled intermediates (and optionally
+//!   a pre-packed cached `Vᵀ_B`), including **panel-parallel randomized
+//!   SVD** ([`rsvd_sharded`]): the `A·Ω` range sketch and the `Qᵀ·A` /
+//!   `Aᵀ·Q` projections are row-panel-sharded across workers.
 //!
 //! Determinism: a tile's bits depend only on the tile, never on which
 //! worker computes it or when, so results are bitwise identical across
