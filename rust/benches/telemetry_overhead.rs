@@ -1,0 +1,219 @@
+//! Telemetry overhead — the observability-plane instrument.
+//!
+//! Two questions, answered with numbers:
+//!
+//! 1. What does one metric update cost? Compares the pre-rewrite design
+//!    (a mutex-guarded name→value map, re-locked and re-hashed on every
+//!    update) against the string API (read-lock + hash at steady state)
+//!    and pre-registered interned handles (plain atomics) — both
+//!    single-threaded and under 4-way contention, where the mutex
+//!    registry serializes and the striped handles don't.
+//! 2. What does tracing cost a request? End-to-end `gemm_blocking`
+//!    latency with `[trace]` off (the default) vs on.
+//!
+//! Every measurement prints one JSON record
+//! (`{"bench":"telemetry_overhead","case":…}`) for CI's bench-smoke
+//! artifact collection, same shape as `hotpath_micro`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use lowrank_gemm::bench_harness::{bench, config_from_env, Measurement, Table};
+use lowrank_gemm::config::TraceSettings;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::metrics::{Histogram, MetricsRegistry};
+
+fn json_row(case: &str, n: usize, m: &Measurement) {
+    println!(
+        "{{\"bench\":\"telemetry_overhead\",\"case\":\"{case}\",\"n\":{n},\
+         \"mean_s\":{:.6e},\"min_s\":{:.6e},\"max_s\":{:.6e},\"stddev_s\":{:.6e},\
+         \"iters\":{}}}",
+        m.mean_s, m.min_s, m.max_s, m.stddev_s, m.iters
+    );
+}
+
+/// The pre-rewrite metrics design, reconstructed inline for comparison:
+/// every update takes one global mutex and hashes the metric name.
+#[derive(Default)]
+struct LegacyRegistry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl LegacyRegistry {
+    fn count(&self, name: &str, v: u64) {
+        let mut g = self.counters.lock().unwrap();
+        match g.get_mut(name) {
+            Some(c) => *c += v,
+            None => {
+                g.insert(name.to_string(), v);
+            }
+        }
+    }
+
+    fn observe(&self, name: &str, v: f64) {
+        let mut g = self.histograms.lock().unwrap();
+        match g.get_mut(name) {
+            Some(h) => h.record(v),
+            None => {
+                let mut h = Histogram::new();
+                h.record(v);
+                g.insert(name.to_string(), h);
+            }
+        }
+    }
+}
+
+const OPS: usize = 10_000;
+
+fn metrics_hot_path() {
+    let cfg = config_from_env();
+    let mut table = Table::new(
+        "Metric update cost [ns/op, count+observe pair]",
+        &["variant", "1 thread", "4 threads"],
+    );
+
+    // One "op" is a counter bump plus a histogram sample — the shape of
+    // every instrumented site on the serving path.
+    let legacy = Arc::new(LegacyRegistry::default());
+    legacy.count("bench.ops", 0);
+    legacy.observe("bench.lat_us", 1.0);
+    let registry = Arc::new(MetricsRegistry::new());
+    let counter = registry.counter("bench.ops");
+    let hist = registry.histogram("bench.lat_us");
+    registry.count("bench.ops", 0);
+    registry.observe("bench.lat_us", 1.0);
+
+    let contended = |op: Arc<dyn Fn() + Send + Sync>| {
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let op = op.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..OPS {
+                        op();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    };
+
+    let mut results: Vec<(&str, Measurement, Measurement)> = Vec::new();
+    {
+        let l = legacy.clone();
+        let serial = bench(&cfg, || {
+            for i in 0..OPS {
+                l.count("bench.ops", 1);
+                l.observe("bench.lat_us", i as f64 + 1.0);
+            }
+        });
+        let l = legacy.clone();
+        let par = bench(&cfg, || {
+            let l = l.clone();
+            contended(Arc::new(move || {
+                l.count("bench.ops", 1);
+                l.observe("bench.lat_us", 1.5);
+            }));
+        });
+        results.push(("legacy_mutex", serial, par));
+    }
+    {
+        let r = registry.clone();
+        let serial = bench(&cfg, || {
+            for i in 0..OPS {
+                r.count("bench.ops", 1);
+                r.observe("bench.lat_us", i as f64 + 1.0);
+            }
+        });
+        let r = registry.clone();
+        let par = bench(&cfg, || {
+            let r = r.clone();
+            contended(Arc::new(move || {
+                r.count("bench.ops", 1);
+                r.observe("bench.lat_us", 1.5);
+            }));
+        });
+        results.push(("string_api", serial, par));
+    }
+    {
+        let (c, h) = (counter.clone(), hist.clone());
+        let serial = bench(&cfg, || {
+            for i in 0..OPS {
+                c.inc();
+                h.observe(i as f64 + 1.0);
+            }
+        });
+        let (c, h) = (counter.clone(), hist.clone());
+        let par = bench(&cfg, || {
+            let (c, h) = (c.clone(), h.clone());
+            contended(Arc::new(move || {
+                c.inc();
+                h.observe(1.5);
+            }));
+        });
+        results.push(("interned_handles", serial, par));
+    }
+
+    for (name, serial, par) in &results {
+        table.row(&[
+            name.to_string(),
+            format!("{:8.1}", serial.mean_s / OPS as f64 * 1e9),
+            format!("{:8.1}", par.mean_s / (4 * OPS) as f64 * 1e9),
+        ]);
+        json_row(&format!("metrics_{name}_1t"), OPS, serial);
+        json_row(&format!("metrics_{name}_4t"), 4 * OPS, par);
+    }
+    table.print();
+    println!();
+}
+
+fn traced_request_latency() {
+    let cfg = config_from_env();
+    let n = 256;
+    let mut rng = Pcg64::seeded(71);
+    let a = Matrix::gaussian(n, n, &mut rng);
+    let b = Matrix::gaussian(n, n, &mut rng);
+
+    let run = |enabled: bool| {
+        let svc = GemmService::start(ServiceConfig {
+            trace: TraceSettings {
+                enabled,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        bench(&cfg, || {
+            svc.gemm_blocking(
+                GemmRequest::new(a.clone(), b.clone()).with_kernel(KernelKind::DenseF32),
+            )
+            .unwrap();
+        })
+    };
+    let off = run(false);
+    let on = run(true);
+
+    let mut table = Table::new(
+        "Request latency, tracing off vs on [us]",
+        &["N", "untraced", "traced", "overhead"],
+    );
+    table.row(&[
+        n.to_string(),
+        format!("{:8.1}", off.mean_s * 1e6),
+        format!("{:8.1}", on.mean_s * 1e6),
+        format!("{:+6.2}%", (on.mean_s / off.mean_s - 1.0) * 100.0),
+    ]);
+    table.print();
+    println!();
+    json_row("request_untraced", n, &off);
+    json_row("request_traced", n, &on);
+}
+
+fn main() {
+    metrics_hot_path();
+    traced_request_latency();
+}

@@ -22,7 +22,31 @@ use crate::linalg::matrix::Matrix;
 use crate::linalg::pack::PackedB;
 use crate::lowrank::cache::CacheStats;
 use crate::lowrank::factor::LowRankFactor;
-use crate::metrics::MetricsRegistry;
+use crate::metrics::{Counter, HistogramHandle, MetricsRegistry};
+
+/// Interned handles for the plane's metrics, resolved once at cache
+/// construction so lookups never hash a metric name.
+struct CacheMetrics {
+    hit: Arc<Counter>,
+    miss: Arc<Counter>,
+    insert: Arc<Counter>,
+    evict: Arc<Counter>,
+    prepacked_hit: Arc<Counter>,
+    resident_bytes: Arc<HistogramHandle>,
+}
+
+impl CacheMetrics {
+    fn new(registry: &MetricsRegistry) -> Self {
+        CacheMetrics {
+            hit: registry.counter("cache.hit"),
+            miss: registry.counter("cache.miss"),
+            insert: registry.counter("cache.insert"),
+            evict: registry.counter("cache.evict"),
+            prepacked_hit: registry.counter("pack.prepacked_hit"),
+            resident_bytes: registry.histogram("cache.resident_bytes"),
+        }
+    }
+}
 
 struct Entry {
     factor: LowRankFactor,
@@ -56,7 +80,7 @@ pub struct ContentCache {
     budget_bytes: usize,
     min_dim: usize,
     prepack: bool,
-    metrics: Option<Arc<MetricsRegistry>>,
+    metrics: Option<CacheMetrics>,
     inner: Mutex<Inner>,
 }
 
@@ -86,7 +110,7 @@ impl ContentCache {
         metrics: Arc<MetricsRegistry>,
     ) -> Self {
         let mut c = Self::new(budget_bytes, min_dim);
-        c.metrics = Some(metrics);
+        c.metrics = Some(CacheMetrics::new(&metrics));
         c
     }
 
@@ -108,12 +132,6 @@ impl ContentCache {
     /// The admission gate's dimension floor.
     pub fn min_dim(&self) -> usize {
         self.min_dim
-    }
-
-    fn count(&self, name: &str) {
-        if let Some(m) = &self.metrics {
-            m.count(name, 1);
-        }
     }
 
     /// Look up a factor; clones on hit (the payload must cross the worker
@@ -157,14 +175,16 @@ impl ContentCache {
                 }
             }
         };
-        match &out {
-            Some(c) => {
-                self.count("cache.hit");
-                if c.packed_vt.is_some() {
-                    self.count("pack.prepacked_hit");
+        if let Some(m) = &self.metrics {
+            match &out {
+                Some(c) => {
+                    m.hit.inc();
+                    if c.packed_vt.is_some() {
+                        m.prepacked_hit.inc();
+                    }
                 }
+                None => m.miss.inc(),
             }
-            None => self.count("cache.miss"),
         }
         out
     }
@@ -243,9 +263,9 @@ impl ContentCache {
             (evicted, g.resident)
         };
         if let Some(m) = &self.metrics {
-            m.count("cache.insert", 1);
-            m.count("cache.evict", evicted);
-            m.observe("cache.resident_bytes", resident as f64);
+            m.insert.inc();
+            m.evict.add(evicted);
+            m.resident_bytes.observe(resident as f64);
         }
         true
     }

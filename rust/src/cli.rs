@@ -29,6 +29,8 @@ const VALUE_KEYS: &[&str] = &[
     "autotune-alpha", "autotune-epsilon", "autotune-min-samples", "autotune-table",
     "cache-budget-mb", "cache-min-dim", "cache-amortize", "amortize",
     "kernel-mc", "kernel-kc", "kernel-nc", "naive-cutover",
+    "trace-ring", "trace-slowest", "trace-max-spans", "trace-export",
+    "last", "chrome-out", "prom-out", "json-out",
 ];
 
 /// Parse an argv (excluding the program name).

@@ -10,5 +10,6 @@ pub mod toml;
 
 pub use schema::{
     AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ServiceSettings, ShardSettings,
+    TraceSettings,
 };
 pub use toml::{parse_toml, TomlValue};

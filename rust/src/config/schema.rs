@@ -48,6 +48,13 @@
 //! fp8 = false                    # store cached factors FP8-encoded
 //! prepack = false                # store Vᵀ pre-packed in kernel panel layout
 //! amortize_over = 8              # expected reuses amortizing a cold rSVD
+//!
+//! [trace]                        # tracing plane (crate::trace_plane)
+//! enabled = false                # default-off: requests stay span-free
+//! ring_capacity = 64             # flight recorder keeps the last N traces
+//! slowest_k = 8                  # ... plus the K slowest ever seen
+//! max_spans = 256                # per-request span arena (overflow drops)
+//! export_path = ""               # chrome-trace JSON written at shutdown ("" = off)
 //! ```
 
 use crate::config::toml::{parse_toml, TomlDoc};
@@ -295,6 +302,54 @@ impl CacheSettings {
     }
 }
 
+/// `[trace]` section: the tracing plane
+/// (see [`crate::trace_plane`] — request-scoped span trees retained in a
+/// flight recorder). Default-off; when off, requests carry no span arena
+/// and results are bit-identical to a build without the plane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceSettings {
+    /// Master switch for span capture.
+    pub enabled: bool,
+    /// Flight-recorder ring size: the last N completed request traces.
+    pub ring_capacity: usize,
+    /// Also retain the K slowest traces ever recorded (they survive ring
+    /// eviction, so a latency spike stays inspectable).
+    pub slowest_k: usize,
+    /// Per-request span arena size; spans past this are dropped and
+    /// counted, never blocking the request.
+    pub max_spans: usize,
+    /// Chrome-trace JSON written at service shutdown (`None` = no export).
+    pub export_path: Option<String>,
+}
+
+impl Default for TraceSettings {
+    fn default() -> Self {
+        TraceSettings {
+            enabled: false,
+            ring_capacity: 64,
+            slowest_k: 8,
+            max_spans: 256,
+            export_path: None,
+        }
+    }
+}
+
+impl TraceSettings {
+    /// Range-check the knobs — the single validator for every input path
+    /// (TOML, CLI flags, programmatic [`crate::coordinator::ServiceConfig`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.ring_capacity == 0 {
+            return Err(Error::Config("trace ring_capacity must be positive".into()));
+        }
+        if self.max_spans < 2 {
+            return Err(Error::Config(
+                "trace max_spans must be at least 2 (root + one stage)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Whole-app configuration.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -321,6 +376,8 @@ pub struct AppConfig {
     pub autotune: AutotuneSettings,
     /// `[cache]` knobs.
     pub cache: CacheSettings,
+    /// `[trace]` knobs.
+    pub trace: TraceSettings,
 }
 
 impl Default for AppConfig {
@@ -337,6 +394,7 @@ impl Default for AppConfig {
             shard: ShardSettings::default(),
             autotune: AutotuneSettings::default(),
             cache: CacheSettings::default(),
+            trace: TraceSettings::default(),
         }
     }
 }
@@ -491,6 +549,28 @@ impl AppConfig {
             }
             if let Some(v) = ca.get("amortize_over") {
                 s.amortize_over = req_nonzero(v, "cache.amortize_over")? as u64;
+            }
+            s.validate()?;
+        }
+        if let Some(tr) = doc.get("trace") {
+            let s = &mut cfg.trace;
+            if let Some(v) = tr.get("enabled") {
+                s.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("trace.enabled must be bool".into()))?;
+            }
+            if let Some(v) = tr.get("ring_capacity") {
+                s.ring_capacity = req_nonzero(v, "trace.ring_capacity")?;
+            }
+            if let Some(v) = tr.get("slowest_k") {
+                s.slowest_k = req_usize(v, "trace.slowest_k")?;
+            }
+            if let Some(v) = tr.get("max_spans") {
+                s.max_spans = req_nonzero(v, "trace.max_spans")?;
+            }
+            if let Some(v) = tr.get("export_path") {
+                let p = req_str(v, "trace.export_path")?;
+                s.export_path = if p.is_empty() { None } else { Some(p) };
             }
             s.validate()?;
         }
@@ -755,6 +835,49 @@ naive_cutover = 0
         assert!(AppConfig::from_toml("[cache]\nenabled = 1").is_err());
         assert!(AppConfig::from_toml("[cache]\nfp8 = \"yes\"").is_err());
         assert!(AppConfig::from_toml("[cache]\nprepack = 1").is_err());
+    }
+
+    #[test]
+    fn trace_defaults_and_full_section() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.trace, TraceSettings::default());
+        assert!(!cfg.trace.enabled, "tracing must default off");
+
+        let cfg = AppConfig::from_toml(
+            r#"
+[trace]
+enabled = true
+ring_capacity = 16
+slowest_k = 4
+max_spans = 64
+export_path = "trace.json"
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.trace,
+            TraceSettings {
+                enabled: true,
+                ring_capacity: 16,
+                slowest_k: 4,
+                max_spans: 64,
+                export_path: Some("trace.json".into()),
+            }
+        );
+    }
+
+    #[test]
+    fn trace_validation() {
+        // Empty path means "no export", not a file named "".
+        let cfg = AppConfig::from_toml("[trace]\nexport_path = \"\"").unwrap();
+        assert_eq!(cfg.trace.export_path, None);
+        assert!(AppConfig::from_toml("[trace]\nring_capacity = 0").is_err());
+        assert!(AppConfig::from_toml("[trace]\nmax_spans = 1").is_err());
+        assert!(AppConfig::from_toml("[trace]\nmax_spans = 0").is_err());
+        assert!(AppConfig::from_toml("[trace]\nenabled = 1").is_err());
+        // slowest_k = 0 is legal: ring only, no slow-path retention.
+        let cfg = AppConfig::from_toml("[trace]\nslowest_k = 0").unwrap();
+        assert_eq!(cfg.trace.slowest_k, 0);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::coordinator::request::BackendKind;
 use crate::runtime::XlaHandle;
 use crate::runtime::Manifest;
 use crate::shard::{factorize_sharded, ShardExecutor, ShardPlan};
+use crate::trace_plane;
 
 /// Execution outcome details for one kernel run.
 #[derive(Clone, Debug)]
@@ -220,10 +221,14 @@ impl Backend {
         id: Option<MatrixId>,
         fp: Option<Fingerprint>,
     ) -> Result<LowRankFactor> {
+        let mut sp = trace_plane::span("factor");
+        sp.attr_u64("rows", m.rows() as u64);
+        sp.attr_u64("cols", m.cols() as u64);
         if let Some(id) = id {
-            return self
-                .cache
-                .get_or_insert_with(id, || factorize_sharded(&self.shard, m, &self.lr_cfg));
+            return self.cache.get_or_insert_with(id, || {
+                let _d = trace_plane::span("decompose");
+                factorize_sharded(&self.shard, m, &self.lr_cfg)
+            });
         }
         if let Some(cc) = &self.content {
             if cc.admits(m) {
@@ -232,10 +237,12 @@ impl Backend {
                 // pre-packed Vᵀ panels, so this path must not count
                 // `pack.prepacked_hit`.
                 return cc.get_or_insert_with(fp, || {
+                    let _d = trace_plane::span("decompose");
                     factorize_sharded(&self.shard, m, &self.content_cfg)
                 });
             }
         }
+        let _d = trace_plane::span("decompose");
         factorize_sharded(&self.shard, m, &self.lr_cfg)
     }
 
@@ -249,10 +256,14 @@ impl Backend {
         id: Option<MatrixId>,
         fp: Option<Fingerprint>,
     ) -> Result<CachedFactor> {
+        let mut sp = trace_plane::span("factor");
+        sp.attr_u64("rows", m.rows() as u64);
+        sp.attr_u64("cols", m.cols() as u64);
         if let Some(id) = id {
-            let factor = self
-                .cache
-                .get_or_insert_with(id, || factorize_sharded(&self.shard, m, &self.lr_cfg))?;
+            let factor = self.cache.get_or_insert_with(id, || {
+                let _d = trace_plane::span("decompose");
+                factorize_sharded(&self.shard, m, &self.lr_cfg)
+            })?;
             return Ok(CachedFactor {
                 factor,
                 packed_vt: None,
@@ -264,10 +275,12 @@ impl Backend {
                 // call arrived without a plan (direct `execute`).
                 let fp = fp.unwrap_or_else(|| Fingerprint::of(m));
                 return cc.get_or_insert_with_packed(fp, || {
+                    let _d = trace_plane::span("decompose");
                     factorize_sharded(&self.shard, m, &self.content_cfg)
                 });
             }
         }
+        let _d = trace_plane::span("decompose");
         Ok(CachedFactor {
             factor: factorize_sharded(&self.shard, m, &self.lr_cfg)?,
             packed_vt: None,

@@ -210,12 +210,14 @@ impl Router {
         let mut hints = FactorHints::default();
         if req.a_id.is_none() && req.b_id.is_none() {
             if let Some((cc, _)) = &self.content {
+                let mut sp = crate::trace_plane::span("fingerprint");
                 if cc.admits(&req.a) {
                     hints.a = Some(Fingerprint::of(&req.a));
                 }
                 if cc.admits(&req.b) {
                     hints.b = Some(Fingerprint::of(&req.b));
                 }
+                sp.attr_u64("hashed", hints.a.is_some() as u64 + hints.b.is_some() as u64);
             }
         }
 

@@ -26,21 +26,23 @@ use std::time::{Duration, Instant};
 use crate::autotune::CalibrationTable;
 use crate::cache::ContentCache;
 use crate::config::schema::{
-    AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ShardSettings,
+    AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ShardSettings, TraceSettings,
 };
 use crate::coordinator::backend::Backend;
 use crate::coordinator::batcher::{Batcher, BucketKey};
-use crate::coordinator::request::{GemmRequest, GemmResponse};
+use crate::coordinator::request::{BackendKind, GemmRequest, GemmResponse};
 use crate::coordinator::router::{Router, RouterConfig, RoutePlan};
 use crate::error::{Error, Result};
 use crate::exec::ThreadPool;
+use crate::kernels::KernelKind;
 use crate::linalg::Matrix;
 use crate::lowrank::cache::{CacheStats, MatrixId};
 use crate::lowrank::FactorCache;
 use crate::shard::factorize_sharded;
-use crate::metrics::MetricsRegistry;
+use crate::metrics::{Counter, HistogramHandle, MetricsRegistry, MetricsSnapshot};
 use crate::runtime::{Manifest, XlaExecutor};
 use crate::shard::{ShardExecutor, ShardPlan};
+use crate::trace_plane::{self, Attr, RequestTrace, Tracer};
 
 /// Service configuration (distilled from [`AppConfig`]).
 #[derive(Clone, Debug)]
@@ -78,6 +80,10 @@ pub struct ServiceConfig {
     /// across requests). Default-off: routing and results are then
     /// bit-identical to a build without the plane.
     pub cache: CacheSettings,
+    /// Tracing plane (request-scoped span trees + flight recorder).
+    /// Default-off: requests then carry no span state and results are
+    /// bit-identical to a build without the plane.
+    pub trace: TraceSettings,
 }
 
 impl Default for ServiceConfig {
@@ -94,6 +100,7 @@ impl Default for ServiceConfig {
             shard: ShardSettings::default(),
             autotune: AutotuneSettings::default(),
             cache: CacheSettings::default(),
+            trace: TraceSettings::default(),
         }
     }
 }
@@ -126,6 +133,7 @@ impl ServiceConfig {
             shard: app.shard.clone(),
             autotune: app.autotune.clone(),
             cache: app.cache.clone(),
+            trace: app.trace.clone(),
         })
     }
 }
@@ -136,6 +144,57 @@ struct Pending {
     plan: RoutePlan,
     respond: Sender<Result<GemmResponse>>,
     enqueued: Instant,
+    /// Span arena when the tracing plane is on (`None` otherwise).
+    trace: Option<Arc<RequestTrace>>,
+}
+
+/// Pre-registered handles for every dispatch-path metric, interned once
+/// at boot — no string formatting, hashing or locking per request.
+struct ServiceMetrics {
+    exec_us: Arc<HistogramHandle>,
+    queue_us: Arc<HistogramHandle>,
+    errors: Arc<Counter>,
+    explore_total: Arc<Counter>,
+    autotune_correction: Arc<HistogramHandle>,
+    autotune_table_entries: Arc<HistogramHandle>,
+    /// Indexed parallel to [`KernelKind::ALL`].
+    kernels: Vec<Arc<Counter>>,
+    backend_xla: Arc<Counter>,
+    backend_cpu: Arc<Counter>,
+}
+
+impl ServiceMetrics {
+    fn new(registry: &MetricsRegistry) -> Self {
+        ServiceMetrics {
+            exec_us: registry.histogram("gemm.exec_us"),
+            queue_us: registry.histogram("gemm.queue_us"),
+            errors: registry.counter("gemm.errors"),
+            explore_total: registry.counter("autotune.explore_total"),
+            autotune_correction: registry.histogram("autotune.correction"),
+            autotune_table_entries: registry.histogram("autotune.table_entries"),
+            kernels: KernelKind::ALL
+                .iter()
+                .map(|k| registry.counter(&format!("gemm.kernel.{}", k.id())))
+                .collect(),
+            backend_xla: registry.counter("gemm.backend.xla"),
+            backend_cpu: registry.counter("gemm.backend.cpu"),
+        }
+    }
+
+    fn kernel(&self, kind: KernelKind) -> &Counter {
+        let idx = KernelKind::ALL
+            .iter()
+            .position(|k| *k == kind)
+            .expect("every KernelKind is in ALL");
+        &self.kernels[idx]
+    }
+
+    fn backend(&self, kind: BackendKind) -> &Counter {
+        match kind {
+            BackendKind::Xla => &self.backend_xla,
+            BackendKind::CpuSubstrate => &self.backend_cpu,
+        }
+    }
 }
 
 /// Point-in-time service statistics.
@@ -152,6 +211,9 @@ pub struct ServiceStats {
     /// Content-addressed factor-cache counters (the `[cache]` plane);
     /// all-zero when the plane is disabled.
     pub content_cache: CacheStats,
+    /// Structured registry snapshot (counters + histogram summaries) —
+    /// the same data `metrics().render()` prints, machine-readable.
+    pub metrics: MetricsSnapshot,
 }
 
 /// The serving coordinator. See module docs for the dataflow.
@@ -175,6 +237,11 @@ pub struct GemmService {
     autotune: Option<Arc<CalibrationTable>>,
     /// Persistence path for the calibration table (saved on shutdown).
     autotune_path: Option<String>,
+    /// Tracing plane: span arenas + flight recorder (inert when off).
+    tracer: Arc<Tracer>,
+    /// Interned submit-path counters.
+    submitted_h: Arc<Counter>,
+    rejected_h: Arc<Counter>,
     /// Keeps the PJRT thread alive for the service lifetime.
     _xla: Option<XlaExecutor>,
 }
@@ -207,6 +274,13 @@ impl GemmService {
         }
         let cache = Arc::new(FactorCache::new(cfg.factor_cache_bytes));
         let metrics = Arc::new(MetricsRegistry::new());
+        // Tracing plane: programmatic ServiceConfig bypasses the TOML/CLI
+        // parsers, so this is the path's validate() call.
+        if cfg.trace.enabled {
+            cfg.trace.validate()?;
+        }
+        let tracer = Arc::new(Tracer::new(&cfg.trace));
+        let handles = Arc::new(ServiceMetrics::new(&metrics));
         let mut router_cfg = cfg.router.clone();
         // `cfg.shard` is the single source of truth for the tile plane
         // (see its doc): the router's cost model must describe the plane
@@ -305,7 +379,8 @@ impl GemmService {
 
         let dispatcher = {
             let backend = backend.clone();
-            let metrics = metrics.clone();
+            let handles = handles.clone();
+            let tracer = tracer.clone();
             let completed = completed.clone();
             let inflight = inflight.clone();
             let autotune = autotune.clone();
@@ -315,13 +390,15 @@ impl GemmService {
                 .name("gemm-dispatcher".into())
                 .spawn(move || {
                     Self::dispatch_loop(
-                        rx, pool, backend, metrics, completed, inflight, autotune, max_batch,
-                        window,
+                        rx, pool, backend, handles, tracer, completed, inflight, autotune,
+                        max_batch, window,
                     )
                 })
                 .map_err(|e| Error::Service(format!("spawning dispatcher: {e}")))?
         };
 
+        let submitted_h = metrics.counter("gemm.submitted");
+        let rejected_h = metrics.counter("gemm.rejected");
         Ok(GemmService {
             tx: Some(tx),
             dispatcher: Some(dispatcher),
@@ -333,6 +410,9 @@ impl GemmService {
             metrics,
             autotune,
             autotune_path: cfg.autotune.table_path.clone(),
+            tracer,
+            submitted_h,
+            rejected_h,
             inflight,
             queue_depth: cfg.queue_depth,
             next_id: AtomicU64::new(1),
@@ -353,7 +433,8 @@ impl GemmService {
         rx: Receiver<Pending>,
         pool: ThreadPool,
         backend: Arc<Backend>,
-        metrics: Arc<MetricsRegistry>,
+        handles: Arc<ServiceMetrics>,
+        tracer: Arc<Tracer>,
         completed: Arc<AtomicU64>,
         inflight: Arc<AtomicUsize>,
         autotune: Option<Arc<CalibrationTable>>,
@@ -364,7 +445,8 @@ impl GemmService {
 
         let dispatch = |batch: Vec<Pending>| {
             let backend = backend.clone();
-            let metrics = metrics.clone();
+            let handles = handles.clone();
+            let tracer = tracer.clone();
             let completed = completed.clone();
             let inflight = inflight.clone();
             let autotune = autotune.clone();
@@ -372,13 +454,27 @@ impl GemmService {
                 let batch_size = batch.len();
                 for p in batch {
                     let started = Instant::now();
-                    let queue_us = started.duration_since(p.enqueued).as_micros() as u64;
+                    let queue_wait = started.duration_since(p.enqueued);
+                    let queue_us = queue_wait.as_micros() as u64;
                     let (m, k, n) = p.req.shape();
                     if p.plan.explored {
-                        metrics.count("autotune.explore_total", 1);
+                        handles.explore_total.inc();
                     }
-                    let result = backend
-                        .execute_hinted(
+                    let exec_result = {
+                        // Scope the trace to this worker thread for the
+                        // execute call, so every span opened downstream
+                        // (factor/decompose/pack/tile/assemble) attaches
+                        // under this request's exec span.
+                        let _scope = p
+                            .trace
+                            .as_ref()
+                            .map(|t| trace_plane::scope(t.clone(), trace_plane::ROOT_SPAN));
+                        let mut sp = trace_plane::span("exec");
+                        sp.attr_u64("m", m as u64);
+                        sp.attr_u64("k", k as u64);
+                        sp.attr_u64("n", n as u64);
+                        sp.attr_str("kernel", p.plan.choice.kind.id());
+                        backend.execute_hinted(
                             p.plan.choice.kind,
                             &p.req.a,
                             &p.req.b,
@@ -386,15 +482,17 @@ impl GemmService {
                             p.req.b_id,
                             p.plan.hints,
                         )
-                        .map(|out| {
-                            let exec_us = started.elapsed().as_micros() as u64;
-                            metrics.observe("gemm.exec_us", exec_us as f64);
-                            metrics.observe("gemm.queue_us", queue_us as f64);
-                            metrics.count(
-                                &format!("gemm.kernel.{}", p.plan.choice.kind.id()),
-                                1,
-                            );
-                            metrics.count(&format!("gemm.backend.{}", out.backend.name()), 1);
+                    };
+                    let result = exec_result.map(|out| {
+                            let elapsed = started.elapsed();
+                            let exec_us = elapsed.as_micros() as u64;
+                            // Float microseconds: the histogram drops
+                            // non-positive samples, and sub-µs executions
+                            // truncated through as_micros() would read 0.
+                            handles.exec_us.observe(elapsed.as_secs_f64() * 1e6);
+                            handles.queue_us.observe(queue_wait.as_secs_f64() * 1e6);
+                            handles.kernel(p.plan.choice.kind).inc();
+                            handles.backend(out.backend).inc();
                             if let Some(table) = &autotune {
                                 // Calibrate against the *raw* analytic
                                 // prediction: the choice's time already
@@ -414,15 +512,14 @@ impl GemmService {
                                 if !(p.plan.amortized && p.plan.choice.kind.is_lowrank()) {
                                     let raw_s =
                                         p.plan.choice.cost.time_s / p.plan.choice.calibration;
-                                    let observed_s = started.elapsed().as_secs_f64();
+                                    let observed_s = elapsed.as_secs_f64();
                                     if let Some(corr) = table
                                         .record(p.plan.choice.kind, m, k, n, raw_s, observed_s)
                                     {
-                                        metrics.observe("autotune.correction", corr);
-                                        metrics.observe(
-                                            "autotune.table_entries",
-                                            table.len() as f64,
-                                        );
+                                        handles.autotune_correction.observe(corr);
+                                        handles
+                                            .autotune_table_entries
+                                            .observe(table.len() as f64);
                                     }
                                 }
                             }
@@ -439,7 +536,27 @@ impl GemmService {
                             }
                         });
                     if result.is_err() {
-                        metrics.count("gemm.errors", 1);
+                        handles.errors.inc();
+                    }
+                    // Seal the trace before waking the caller, so a
+                    // blocked gemm() observes its own trace retained.
+                    if let Some(t) = &p.trace {
+                        t.record_span(
+                            "queue",
+                            trace_plane::ROOT_SPAN,
+                            t.ns_of(p.enqueued),
+                            t.ns_of(started),
+                            &[Attr::u64("batch_size", batch_size as u64)],
+                        );
+                        tracer.finish(
+                            t,
+                            &[
+                                Attr::str("kernel", p.plan.choice.kind.id()),
+                                Attr::u64("m", m as u64),
+                                Attr::u64("k", k as u64),
+                                Attr::u64("n", n as u64),
+                            ],
+                        );
                     }
                     completed.fetch_add(1, Ordering::Relaxed);
                     inflight.fetch_sub(1, Ordering::Relaxed);
@@ -494,14 +611,27 @@ impl GemmService {
         let inflight = self.inflight.load(Ordering::Relaxed);
         if inflight >= self.queue_depth {
             self.rejected.fetch_add(1, Ordering::Relaxed);
-            self.metrics.count("gemm.rejected", 1);
+            self.rejected_h.inc();
             return Err(Error::Service(format!(
                 "queue full ({inflight} in flight ≥ depth {})",
                 self.queue_depth
             )));
         }
 
-        let plan = self.router.route_serving(&req);
+        let trace = self.tracer.begin();
+        let plan = {
+            // Route on the caller's thread under a "route" span (the
+            // router adds "fingerprint" children when the cache plane
+            // hashes anonymous operands).
+            let _scope = trace
+                .as_ref()
+                .map(|t| trace_plane::scope(t.clone(), trace_plane::ROOT_SPAN));
+            let mut sp = trace_plane::span("route");
+            let plan = self.router.route_serving(&req);
+            sp.attr_str("kernel", plan.choice.kind.id());
+            sp.attr_u64("rank", plan.rank as u64);
+            plan
+        };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (respond, result_rx) = channel();
         let pending = Pending {
@@ -510,11 +640,12 @@ impl GemmService {
             plan,
             respond,
             enqueued: Instant::now(),
+            trace,
         };
 
         self.inflight.fetch_add(1, Ordering::Relaxed);
         self.submitted.fetch_add(1, Ordering::Relaxed);
-        self.metrics.count("gemm.submitted", 1);
+        self.submitted_h.inc();
         self.tx
             .as_ref()
             .expect("tx lives until drop")
@@ -583,12 +714,19 @@ impl GemmService {
                 .as_ref()
                 .map(|c| c.stats())
                 .unwrap_or_default(),
+            metrics: self.metrics.snapshot(),
         }
     }
 
     /// The metrics registry (latency histograms, kernel counters).
     pub fn metrics(&self) -> &Arc<MetricsRegistry> {
         &self.metrics
+    }
+
+    /// The tracing plane (flight recorder access; inert when `[trace]`
+    /// is disabled).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     /// The online calibration table, when `[autotune]` is enabled.
@@ -856,6 +994,39 @@ mod tests {
             ..Default::default()
         };
         assert!(GemmService::start(cfg).is_err());
+    }
+
+    #[test]
+    fn traced_request_reaches_flight_recorder() {
+        let s = svc();
+        assert!(!s.tracer().enabled(), "tracing must be opt-in");
+        s.gemm_blocking(rand_req(32, 640)).unwrap();
+        assert!(s.tracer().recorder().recent().is_empty());
+
+        let cfg = ServiceConfig {
+            trace: TraceSettings {
+                enabled: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = GemmService::start(cfg).unwrap();
+        s.gemm_blocking(rand_req(48, 641)).unwrap();
+        let rec = s.tracer().recorder().recent();
+        assert_eq!(rec.len(), 1);
+        let names: Vec<&str> = rec[0].spans.iter().map(|sp| sp.name).collect();
+        for required in ["request", "route", "queue", "exec"] {
+            assert!(names.contains(&required), "missing span `{required}`");
+        }
+    }
+
+    #[test]
+    fn stats_carry_metrics_snapshot() {
+        let s = svc();
+        s.gemm_blocking(rand_req(24, 642)).unwrap();
+        let stats = s.stats();
+        assert_eq!(stats.metrics.counters["gemm.submitted"], 1);
+        assert_eq!(stats.metrics.histograms["gemm.exec_us"].count, 1);
     }
 
     #[test]

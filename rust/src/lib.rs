@@ -66,6 +66,13 @@
 //! (the default), routing and results are bit-identical to a build
 //! without the plane.
 //!
+//! When `[trace]` is enabled, every completed request additionally yields
+//! a span tree (route → decompose/cache → pack → per-worker tiles →
+//! assemble) retained in the [`trace_plane::FlightRecorder`] and
+//! exportable as `chrome://tracing` JSON; counters and histograms are
+//! always on (they're lock-free interned handles — see [`metrics`]), and
+//! with tracing disabled requests carry no span state at all.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -100,6 +107,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod shard;
 pub mod trace;
+pub mod trace_plane;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
@@ -115,5 +123,7 @@ pub mod prelude {
         factorize, lowrank_matmul, DecompMethod, FactorCache, LowRankConfig, LowRankFactor,
         RankStrategy,
     };
+    pub use crate::metrics::{MetricsRegistry, MetricsSnapshot};
     pub use crate::shard::{ShardExecutor, ShardPlan, TileGrid};
+    pub use crate::trace_plane::{FlightRecorder, Tracer};
 }

@@ -7,6 +7,7 @@
 //! - `factorize` offline decomposition of a synthetic matrix; prints
 //!               rank/error/memory accounting
 //! - `route`     show the AutoKernelSelector's decision table for a size
+//! - `trace`     run a few traced requests and dump span trees / exports
 //! - `info`      device profiles, artifact manifest, build info
 //!
 //! Run `lowrank-gemm help` for flags.
@@ -38,6 +39,7 @@ fn main() -> ExitCode {
         "gemm" => cmd_gemm(&args),
         "factorize" => cmd_factorize(&args),
         "route" => cmd_route(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -79,7 +81,10 @@ COMMANDS:
              kernel selector (--autotune-table persists it across runs);
              --cache turns on content-addressed factor caching (anonymous
              repeated operands decompose once, LRU within --cache-budget-mb;
-             --cache-prepack also stores Vᵀ pre-packed in panel layout)
+             --cache-prepack also stores Vᵀ pre-packed in panel layout);
+             --trace turns on request-scoped span capture ([trace] in TOML:
+             --trace-ring N --trace-slowest K --trace-max-spans N
+             --trace-export FILE write the retained traces at exit)
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
   factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
@@ -90,6 +95,12 @@ COMMANDS:
              calibration table, predictions include learned corrections;
              --amortize R prices cold decompositions amortized over R
              expected reuses (the factor-cache plane's routing view)
+  trace      [--requests N] [--size N] [--kernel K] [--last N] [--slowest]
+             [--no-xla] [--chrome-out FILE] [--prom-out FILE] [--json-out FILE]
+             run a short traced workload and print span trees (route →
+             decompose/cache → pack → per-worker tiles → assemble);
+             --chrome-out writes chrome://tracing JSON, --prom-out the
+             Prometheus text exposition, --json-out the metrics snapshot
   info       [--artifacts DIR]
              device profiles and the artifact manifest
 
@@ -147,11 +158,22 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
     if args.has_flag("cache-prepack") {
         cfg.cache.prepack = true;
     }
+    // `[trace]` overrides: the tracing plane's knobs.
+    if args.has_flag("trace") {
+        cfg.trace.enabled = true;
+    }
+    cfg.trace.ring_capacity = args.get_parse("trace-ring", cfg.trace.ring_capacity)?;
+    cfg.trace.slowest_k = args.get_parse("trace-slowest", cfg.trace.slowest_k)?;
+    cfg.trace.max_spans = args.get_parse("trace-max-spans", cfg.trace.max_spans)?;
+    if let Some(p) = args.get("trace-export") {
+        cfg.trace.export_path = Some(p.to_string());
+    }
     // Same validators the TOML path runs — an out-of-range flag must
     // fail loudly, not be silently clamped downstream.
     cfg.kernel.validate()?;
     cfg.autotune.validate()?;
     cfg.cache.validate()?;
+    cfg.trace.validate()?;
     Ok(cfg)
 }
 
@@ -216,6 +238,89 @@ fn cmd_serve(args: &CliArgs) -> Result<()> {
         );
     }
     println!("{}", svc.metrics().render());
+    if svc.tracer().enabled() {
+        let recorder = svc.tracer().recorder();
+        println!(
+            "flight recorder: {} traces recorded, {} retained",
+            recorder.total_recorded(),
+            recorder.recent().len()
+        );
+        if let Some(slowest) = recorder.slowest().first() {
+            println!("slowest request:");
+            print!("{}", lowrank_gemm::trace_plane::export::text_tree(slowest));
+        }
+        if let Some(path) = &app.trace.export_path {
+            let json = lowrank_gemm::trace_plane::export::chrome_trace_json(&recorder.recent());
+            std::fs::write(path, json)
+                .map_err(|e| lowrank_gemm::error::Error::Config(format!("{path}: {e}")))?;
+            println!("wrote chrome trace to {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &CliArgs) -> Result<()> {
+    let mut app = load_config(args)?;
+    app.trace.enabled = true;
+    let requests: usize = args.get_parse("requests", 3)?;
+    let size: usize = args.get_parse("size", 512)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+    let last: usize = args.get_parse("last", requests.max(1))?;
+
+    let kernel = match args.get("kernel") {
+        Some(k) => Some(KernelKind::parse(k).ok_or_else(|| {
+            lowrank_gemm::error::Error::Config(format!("unknown kernel `{k}`"))
+        })?),
+        None => None,
+    };
+
+    let svc = GemmService::start(ServiceConfig::from_app(&app)?)?;
+    let mut rng = Pcg64::seeded(seed);
+    for _ in 0..requests {
+        let a = Matrix::low_rank_noisy(size, size, (size / 16).max(2), 1e-4, &mut rng);
+        let b = Matrix::low_rank_noisy(size, size, (size / 16).max(2), 1e-4, &mut rng);
+        let mut req = GemmRequest::new(a, b);
+        if let Some(k) = kernel {
+            req = req.with_kernel(k);
+        }
+        svc.gemm_blocking(req)?;
+    }
+
+    let recorder = svc.tracer().recorder();
+    let traces = if args.has_flag("slowest") {
+        recorder.slowest()
+    } else {
+        recorder.recent()
+    };
+    let skip = traces.len().saturating_sub(last);
+    for t in traces.iter().skip(if args.has_flag("slowest") { 0 } else { skip }).take(last) {
+        print!("{}", lowrank_gemm::trace_plane::export::text_tree(t));
+    }
+
+    let write = |path: &str, payload: String| -> Result<()> {
+        std::fs::write(path, payload)
+            .map_err(|e| lowrank_gemm::error::Error::Config(format!("{path}: {e}")))
+    };
+    let chrome_out = args
+        .get("chrome-out")
+        .map(str::to_string)
+        .or_else(|| app.trace.export_path.clone());
+    if let Some(path) = chrome_out {
+        write(
+            &path,
+            lowrank_gemm::trace_plane::export::chrome_trace_json(&recorder.recent()),
+        )?;
+        println!("wrote chrome trace to {path}");
+    }
+    let stats = svc.stats();
+    if let Some(path) = args.get("prom-out") {
+        write(path, stats.metrics.to_prometheus())?;
+        println!("wrote prometheus exposition to {path}");
+    }
+    if let Some(path) = args.get("json-out") {
+        write(path, stats.metrics.to_json())?;
+        println!("wrote metrics snapshot to {path}");
+    }
     Ok(())
 }
 

@@ -9,13 +9,14 @@ const BUCKET_FACTOR: f64 = 1.0905077326652577;
 /// Smallest representable sample.
 const MIN_SAMPLE: f64 = 1e-9;
 /// Number of buckets (covers up to ~3.5e6 × MIN_SAMPLE^-1).
-const NBUCKETS: usize = 512;
+pub(crate) const NBUCKETS: usize = 512;
 
 /// A fixed-size log-bucketed histogram.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     buckets: Vec<u64>,
     count: u64,
+    dropped: u64,
     sum: f64,
     min: f64,
     max: f64,
@@ -33,13 +34,14 @@ impl Histogram {
         Histogram {
             buckets: vec![0; NBUCKETS],
             count: 0,
+            dropped: 0,
             sum: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
         }
     }
 
-    fn bucket_of(v: f64) -> usize {
+    pub(crate) fn bucket_of(v: f64) -> usize {
         let v = v.max(MIN_SAMPLE);
         let idx = (v / MIN_SAMPLE).ln() / BUCKET_FACTOR.ln();
         (idx as usize).min(NBUCKETS - 1)
@@ -49,9 +51,13 @@ impl Histogram {
         MIN_SAMPLE * BUCKET_FACTOR.powi(idx as i32)
     }
 
-    /// Record one sample (non-finite samples are dropped).
+    /// Record one sample. Non-finite **and non-positive** samples are
+    /// dropped (and counted in [`Histogram::dropped`]): the log buckets
+    /// only represent positive magnitudes, and admitting `v <= 0` used to
+    /// skew `sum`/`mean`/`min` while the bucket index silently clamped to 0.
     pub fn record(&mut self, v: f64) {
-        if !v.is_finite() {
+        if !v.is_finite() || v <= 0.0 {
+            self.dropped += 1;
             return;
         }
         self.buckets[Self::bucket_of(v)] += 1;
@@ -61,9 +67,38 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Fold a raw bucket shard (e.g. one thread-striped atomic shard) into
+    /// this histogram. `buckets` shorter than [`NBUCKETS`] is allowed; the
+    /// tail is treated as zero.
+    pub(crate) fn absorb_raw(
+        &mut self,
+        buckets: &[u64],
+        count: u64,
+        dropped: u64,
+        sum: f64,
+        min: f64,
+        max: f64,
+    ) {
+        for (dst, &src) in self.buckets.iter_mut().zip(buckets) {
+            *dst += src;
+        }
+        self.count += count;
+        self.dropped += dropped;
+        self.sum += sum;
+        if count > 0 {
+            self.min = self.min.min(min);
+            self.max = self.max.max(max);
+        }
+    }
+
     /// Sample count.
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    /// Samples rejected by [`Histogram::record`] (non-finite or ≤ 0).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
     }
 
     /// Mean of recorded samples (0 when empty).
@@ -97,7 +132,9 @@ impl Histogram {
     pub fn summary(&self) -> crate::metrics::HistogramSummary {
         crate::metrics::HistogramSummary {
             count: self.count,
+            dropped: self.dropped,
             mean: self.mean(),
+            p10: self.quantile(0.10),
             p50: self.quantile(0.50),
             p90: self.quantile(0.90),
             p99: self.quantile(0.99),
@@ -153,6 +190,53 @@ mod tests {
         h.record(f64::NAN);
         h.record(f64::INFINITY);
         assert_eq!(h.count(), 0);
+        assert_eq!(h.dropped(), 2);
+    }
+
+    #[test]
+    fn drops_and_counts_non_positive() {
+        let mut h = Histogram::new();
+        h.record(-1.0);
+        h.record(0.0);
+        h.record(2.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.dropped(), 2);
+        // The rejected samples must not skew the moments.
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(h.quantile(0.0), 2.0);
+        let s = h.summary();
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.count, 1);
+    }
+
+    #[test]
+    fn p10_tracks_distribution_tail() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0); // uniform on (0, 1]
+        }
+        let s = h.summary();
+        assert!((s.p10 - 0.10).abs() < 0.02, "p10 {}", s.p10);
+        assert!(s.p10 < s.p50 && s.p50 < s.p99);
+    }
+
+    #[test]
+    fn absorb_raw_merges_shards() {
+        let mut a = Histogram::new();
+        a.record(1.0);
+        let mut shard = vec![0u64; NBUCKETS];
+        shard[Histogram::bucket_of(4.0)] = 2;
+        a.absorb_raw(&shard, 2, 1, 8.0, 4.0, 4.0);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.dropped(), 1);
+        assert!((a.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(a.summary().max, 4.0);
+        // Empty shard merge is a no-op on min/max.
+        let before = a.summary();
+        a.absorb_raw(&[0u64; NBUCKETS], 0, 0, 0.0, f64::INFINITY, f64::NEG_INFINITY);
+        let after = a.summary();
+        assert_eq!(before.count, after.count);
+        assert_eq!(before.max, after.max);
     }
 
     #[test]

@@ -1,16 +1,32 @@
-//! Metrics substrate: counters, latency histograms, timers.
+//! Metrics substrate: lock-free counters, striped atomic histograms,
+//! interned handles, and snapshot exporters.
 //!
 //! No external metrics crate offline, so this is a minimal but real
-//! implementation: lock-free counters, a log-bucketed histogram with
-//! p50/p90/p99 estimation, and a scoped timer. The coordinator exposes a
-//! [`MetricsRegistry`] snapshot through the CLI `stats` output and the
-//! serving example's final report.
+//! implementation. Two layers:
+//!
+//! - **Handles** ([`Counter`], [`HistogramHandle`]): pre-registered via
+//!   [`MetricsRegistry::counter`] / [`MetricsRegistry::histogram`], then
+//!   recorded into with plain atomic ops — no lock, no allocation, no
+//!   string hashing on the hot path. Histograms stripe their buckets
+//!   across [`HIST_SHARDS`] shards selected by a per-thread ordinal, so
+//!   concurrent `observe` calls from the shard pool don't contend on one
+//!   cache line; shards are merged at snapshot time.
+//! - **String API** ([`MetricsRegistry::count`] / `observe` / `time`):
+//!   kept for cold paths and tests. After first registration it is a
+//!   read-lock + hash lookup — still allocation-free at steady state —
+//!   but hot paths should hold a handle instead.
+//!
+//! [`MetricsRegistry::snapshot`] clones and merges everything **once**
+//! into a [`MetricsSnapshot`], which renders as a human report block,
+//! Prometheus text exposition, or a JSON document. The coordinator
+//! exposes it through the CLI `stats`/`trace` output and the serving
+//! example's final report.
 
 pub mod histogram;
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 pub use histogram::Histogram;
@@ -36,11 +52,148 @@ impl Counter {
     }
 }
 
-/// Registry of counters and histograms, keyed by name.
+/// Histogram stripe count. 8 shards is enough to decorrelate the default
+/// 4-worker shard pool plus the dispatcher without bloating snapshots.
+const HIST_SHARDS: usize = 8;
+
+/// Stable small ordinal for the calling thread, assigned on first use from
+/// a global counter. Used to pick a histogram stripe (and by the trace
+/// plane to label spans) without allocating thread-local state.
+pub(crate) fn thread_ordinal() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    std::thread_local! {
+        static ORDINAL: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    ORDINAL.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT.fetch_add(1, Ordering::Relaxed);
+        c.set(v);
+        v
+    })
+}
+
+/// CAS-add `delta` into an f64 stored as bits in an `AtomicU64`.
+fn atomic_f64_add(cell: &AtomicU64, delta: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + delta).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// CAS-min/max an f64 stored as bits in an `AtomicU64`.
+fn atomic_f64_extreme(cell: &AtomicU64, v: f64, want_min: bool) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let seen = f64::from_bits(cur);
+        let better = if want_min { v < seen } else { v > seen };
+        if !better {
+            return;
+        }
+        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// One histogram stripe: atomic log buckets plus exact moments.
+struct HistShard {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    dropped: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl HistShard {
+    fn new() -> Self {
+        HistShard {
+            buckets: (0..histogram::NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+}
+
+/// A pre-registered histogram handle: thread-striped atomic buckets,
+/// merged into a plain [`Histogram`] at snapshot time. `observe` is
+/// lock-free and allocation-free.
+pub struct HistogramHandle {
+    shards: Vec<HistShard>,
+}
+
+impl Default for HistogramHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistogramHandle {
+    /// New empty handle.
+    pub fn new() -> Self {
+        HistogramHandle {
+            shards: (0..HIST_SHARDS).map(|_| HistShard::new()).collect(),
+        }
+    }
+
+    /// Record one sample. Same admission rule as [`Histogram::record`]:
+    /// non-finite and non-positive samples are dropped and counted.
+    pub fn observe(&self, v: f64) {
+        let shard = &self.shards[thread_ordinal() % HIST_SHARDS];
+        if !v.is_finite() || v <= 0.0 {
+            shard.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        shard.buckets[Histogram::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        shard.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&shard.sum_bits, v);
+        atomic_f64_extreme(&shard.min_bits, v, true);
+        atomic_f64_extreme(&shard.max_bits, v, false);
+    }
+
+    /// Merge all stripes into a plain histogram (snapshot path only).
+    pub fn merged(&self) -> Histogram {
+        let mut out = Histogram::new();
+        let mut scratch = vec![0u64; histogram::NBUCKETS];
+        for shard in &self.shards {
+            for (dst, src) in scratch.iter_mut().zip(shard.buckets.iter()) {
+                *dst = src.load(Ordering::Relaxed);
+            }
+            out.absorb_raw(
+                &scratch,
+                shard.count.load(Ordering::Relaxed),
+                shard.dropped.load(Ordering::Relaxed),
+                f64::from_bits(shard.sum_bits.load(Ordering::Relaxed)),
+                f64::from_bits(shard.min_bits.load(Ordering::Relaxed)),
+                f64::from_bits(shard.max_bits.load(Ordering::Relaxed)),
+            );
+        }
+        out
+    }
+
+    /// Summary of the merged stripes.
+    pub fn summary(&self) -> HistogramSummary {
+        self.merged().summary()
+    }
+}
+
+/// Registry of counters and histograms, keyed by name. Names are interned
+/// once on registration; handles record through atomics afterwards.
 #[derive(Default)]
 pub struct MetricsRegistry {
-    counters: Mutex<BTreeMap<String, u64>>,
-    histograms: Mutex<BTreeMap<String, Histogram>>,
+    counters: RwLock<HashMap<String, Arc<Counter>>>,
+    histograms: RwLock<HashMap<String, Arc<HistogramHandle>>>,
 }
 
 impl MetricsRegistry {
@@ -49,24 +202,50 @@ impl MetricsRegistry {
         Self::default()
     }
 
-    /// Add `v` to the named counter (creating it at 0).
-    pub fn count(&self, name: &str, v: u64) {
-        *self
-            .counters
-            .lock()
+    /// Intern (or fetch) the named counter handle. Hot paths should call
+    /// this once at setup and keep the `Arc`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return c.clone();
+        }
+        self.counters
+            .write()
             .unwrap()
             .entry(name.to_string())
-            .or_insert(0) += v;
+            .or_default()
+            .clone()
+    }
+
+    /// Intern (or fetch) the named histogram handle.
+    pub fn histogram(&self, name: &str) -> Arc<HistogramHandle> {
+        if let Some(h) = self.histograms.read().unwrap().get(name) {
+            return h.clone();
+        }
+        self.histograms
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Add `v` to the named counter (creating it at 0). Steady state is a
+    /// read-lock + hash lookup — no allocation after first registration.
+    pub fn count(&self, name: &str, v: u64) {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            c.add(v);
+            return;
+        }
+        self.counter(name).add(v);
     }
 
     /// Record a sample (e.g. seconds) into the named histogram.
     pub fn observe(&self, name: &str, v: f64) {
-        self.histograms
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_insert_with(Histogram::new)
-            .record(v);
+        if let Some(h) = self.histograms.read().unwrap().get(name) {
+            h.observe(v);
+            return;
+        }
+        self.histogram(name).observe(v);
     }
 
     /// Time a closure into the named histogram.
@@ -77,34 +256,43 @@ impl MetricsRegistry {
         out
     }
 
-    /// Snapshot counter values.
-    pub fn counters(&self) -> BTreeMap<String, u64> {
-        self.counters.lock().unwrap().clone()
-    }
-
-    /// Snapshot histogram summaries as `(count, mean, p50, p90, p99, max)`.
-    pub fn histogram_summaries(&self) -> BTreeMap<String, HistogramSummary> {
-        self.histograms
-            .lock()
+    /// One-pass snapshot: clone the handle tables under their read locks,
+    /// then merge stripes handle by handle. This replaces the old
+    /// lock-per-metric summaries path.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .read()
             .unwrap()
             .iter()
             .map(|(k, h)| (k.clone(), h.summary()))
-            .collect()
+            .collect();
+        MetricsSnapshot {
+            counters,
+            histograms,
+        }
+    }
+
+    /// Snapshot counter values.
+    pub fn counters(&self) -> BTreeMap<String, u64> {
+        self.snapshot().counters
+    }
+
+    /// Snapshot histogram summaries.
+    pub fn histogram_summaries(&self) -> BTreeMap<String, HistogramSummary> {
+        self.snapshot().histograms
     }
 
     /// Render a human-readable report block.
     pub fn render(&self) -> String {
-        let mut out = String::new();
-        for (k, v) in self.counters() {
-            out.push_str(&format!("counter {k} = {v}\n"));
-        }
-        for (k, s) in self.histogram_summaries() {
-            out.push_str(&format!(
-                "hist {k}: n={} mean={:.3e} p50={:.3e} p90={:.3e} p99={:.3e} max={:.3e}\n",
-                s.count, s.mean, s.p50, s.p90, s.p99, s.max
-            ));
-        }
-        out
+        self.snapshot().render()
     }
 }
 
@@ -113,8 +301,12 @@ impl MetricsRegistry {
 pub struct HistogramSummary {
     /// Sample count.
     pub count: u64,
+    /// Samples rejected at record time (non-finite or ≤ 0).
+    pub dropped: u64,
     /// Arithmetic mean.
     pub mean: f64,
+    /// 10th percentile estimate (queueing-analysis floor).
+    pub p10: f64,
     /// Median estimate.
     pub p50: f64,
     /// 90th percentile estimate.
@@ -123,6 +315,118 @@ pub struct HistogramSummary {
     pub p99: f64,
     /// Largest sample.
     pub max: f64,
+}
+
+/// Immutable point-in-time view of a registry, with exporters.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: BTreeMap<String, u64>,
+    /// Histogram summaries by name.
+    pub histograms: BTreeMap<String, HistogramSummary>,
+}
+
+/// Metric names use dots; Prometheus wants `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+fn prometheus_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    out.push_str("lrg_");
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl MetricsSnapshot {
+    /// Render a human-readable report block (same shape as the historical
+    /// `MetricsRegistry::render`, plus p10).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, s) in &self.histograms {
+            out.push_str(&format!(
+                "hist {k}: n={} mean={:.3e} p50={:.3e} p90={:.3e} p99={:.3e} max={:.3e}\n",
+                s.count, s.mean, s.p50, s.p90, s.p99, s.max
+            ));
+        }
+        out
+    }
+
+    /// Prometheus text exposition (format 0.0.4): counters as `counter`,
+    /// histograms as `summary` with quantile labels plus `_sum`/`_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let name = prometheus_name(k);
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (k, s) in &self.histograms {
+            let name = prometheus_name(k);
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for (q, v) in [
+                ("0.1", s.p10),
+                ("0.5", s.p50),
+                ("0.9", s.p90),
+                ("0.99", s.p99),
+                ("1", s.max),
+            ] {
+                out.push_str(&format!("{name}{{quantile=\"{q}\"}} {v:e}\n"));
+            }
+            out.push_str(&format!("{name}_sum {:e}\n", s.mean * s.count as f64));
+            out.push_str(&format!("{name}_count {}\n", s.count));
+        }
+        out
+    }
+
+    /// JSON document: `{"counters": {...}, "histograms": {name: {...}}}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"counters\":{");
+        for (i, (k, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{v}", json_escape(k)));
+        }
+        out.push_str("},\"histograms\":{");
+        for (i, (k, s)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"dropped\":{},\"mean\":{:e},\"p10\":{:e},\
+                 \"p50\":{:e},\"p90\":{:e},\"p99\":{:e},\"max\":{:e}}}",
+                json_escape(k),
+                s.count,
+                s.dropped,
+                s.mean,
+                s.p10,
+                s.p50,
+                s.p90,
+                s.p99,
+                s.max
+            ));
+        }
+        out.push_str("}}");
+        out
+    }
 }
 
 #[cfg(test)]
@@ -166,5 +470,101 @@ mod tests {
         let s = r.render();
         assert!(s.contains("counter a = 1"));
         assert!(s.contains("hist b"));
+    }
+
+    #[test]
+    fn handles_alias_string_api() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("x");
+        c.add(2);
+        r.count("x", 3);
+        assert_eq!(r.counters()["x"], 5);
+        let h = r.histogram("lat");
+        h.observe(1.0);
+        r.observe("lat", 3.0);
+        let s = r.histogram_summaries()["lat"];
+        assert_eq!(s.count, 2);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_handle_drops_non_positive() {
+        let h = HistogramHandle::new();
+        h.observe(-3.0);
+        h.observe(f64::NAN);
+        h.observe(2.0);
+        let s = h.summary();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.dropped, 2);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn striped_histogram_merges_across_threads() {
+        let h = Arc::new(HistogramHandle::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        h.observe((t * 1000 + i + 1) as f64);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 8000);
+        // Sum of 1..=8000 — CAS adds are exact per stripe; merging eight
+        // partial sums of like-magnitude positives is accurate to ulps.
+        let expect = 8000.0 * 8001.0 / 2.0 / 8000.0;
+        assert!((s.mean - expect).abs() / expect < 1e-12, "mean {}", s.mean);
+        assert_eq!(s.max, 8000.0);
+    }
+
+    #[test]
+    fn snapshot_is_one_consistent_pass() {
+        let r = MetricsRegistry::new();
+        r.count("a", 1);
+        r.observe("b", 2.0);
+        let snap = r.snapshot();
+        assert_eq!(snap.counters["a"], 1);
+        assert_eq!(snap.histograms["b"].count, 1);
+        assert!(snap.histograms["b"].p10 <= snap.histograms["b"].p50);
+    }
+
+    #[test]
+    fn prometheus_exposition_well_formed() {
+        let r = MetricsRegistry::new();
+        r.count("gemm.submitted", 4);
+        r.observe("gemm.exec_us", 120.0);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE lrg_gemm_submitted counter"));
+        assert!(text.contains("lrg_gemm_submitted 4"));
+        assert!(text.contains("# TYPE lrg_gemm_exec_us summary"));
+        assert!(text.contains("quantile=\"0.1\""));
+        assert!(text.contains("lrg_gemm_exec_us_count 1"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_by_eye() {
+        let r = MetricsRegistry::new();
+        r.count("a.b", 2);
+        r.observe("c", 1.0);
+        let j = r.snapshot().to_json();
+        assert!(j.starts_with("{\"counters\":{"));
+        assert!(j.contains("\"a.b\":2"));
+        assert!(j.contains("\"count\":1"));
+        assert!(j.ends_with("}}"));
+    }
+
+    #[test]
+    fn thread_ordinals_are_stable_and_distinct() {
+        let a = thread_ordinal();
+        assert_eq!(a, thread_ordinal());
+        let b = std::thread::spawn(thread_ordinal).join().unwrap();
+        assert_ne!(a, b);
     }
 }

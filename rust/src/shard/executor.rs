@@ -50,14 +50,51 @@ use crate::linalg::gemm::{
 use crate::linalg::matrix::Matrix;
 use crate::linalg::pack::{self, PackedA, PackedB};
 use crate::lowrank::factor::LowRankFactor;
-use crate::metrics::MetricsRegistry;
+use crate::metrics::{Counter, HistogramHandle, MetricsRegistry};
 use crate::shard::plan::{ShardPlan, Tile};
+use crate::trace_plane;
+
+/// Interned handles for every metric the tile plane emits, resolved once
+/// at executor construction — the claim loop and pack paths never touch
+/// the registry's name map again.
+struct ShardMetrics {
+    gemm_serial: Arc<Counter>,
+    gemm_parallel: Arc<Counter>,
+    tasks: Arc<Counter>,
+    tile_us: Arc<HistogramHandle>,
+    pack_panels: Arc<Counter>,
+    pack_reuse: Arc<Counter>,
+    pack_fused_decode: Arc<Counter>,
+    pack_unaligned_fallback: Arc<Counter>,
+    pack_prepacked_use: Arc<Counter>,
+    /// `shard.worker.{w}.tiles`, indexed by claim-job ordinal.
+    worker_tiles: Vec<Arc<Counter>>,
+}
+
+impl ShardMetrics {
+    fn new(registry: &MetricsRegistry, workers: usize) -> Self {
+        ShardMetrics {
+            gemm_serial: registry.counter("shard.gemm.serial"),
+            gemm_parallel: registry.counter("shard.gemm.parallel"),
+            tasks: registry.counter("shard.tasks"),
+            tile_us: registry.histogram("shard.tile_us"),
+            pack_panels: registry.counter("pack.panels"),
+            pack_reuse: registry.counter("pack.reuse"),
+            pack_fused_decode: registry.counter("pack.fused_decode"),
+            pack_unaligned_fallback: registry.counter("pack.unaligned_fallback"),
+            pack_prepacked_use: registry.counter("pack.prepacked_use"),
+            worker_tiles: (0..workers.max(1))
+                .map(|w| registry.counter(&format!("shard.worker.{w}.tiles")))
+                .collect(),
+        }
+    }
+}
 
 /// Executes GEMM-shaped work over a tile grid on a dedicated worker pool.
 pub struct ShardExecutor {
     plan: ShardPlan,
     pool: ThreadPool,
-    metrics: Option<Arc<MetricsRegistry>>,
+    metrics: Option<Arc<ShardMetrics>>,
 }
 
 impl ShardExecutor {
@@ -65,8 +102,8 @@ impl ShardExecutor {
     pub fn new(plan: ShardPlan) -> Self {
         ShardExecutor {
             pool: ThreadPool::new(plan.workers),
-            plan,
             metrics: None,
+            plan,
         }
     }
 
@@ -75,8 +112,8 @@ impl ShardExecutor {
     pub fn with_metrics(plan: ShardPlan, metrics: Arc<MetricsRegistry>) -> Self {
         ShardExecutor {
             pool: ThreadPool::new(plan.workers),
+            metrics: Some(Arc::new(ShardMetrics::new(&metrics, plan.workers))),
             plan,
-            metrics: Some(metrics),
         }
     }
 
@@ -89,12 +126,6 @@ impl ShardExecutor {
     /// in flight ahead of ours).
     pub fn pending_jobs(&self) -> u64 {
         self.pool.pending()
-    }
-
-    fn count(&self, name: &str) {
-        if let Some(m) = &self.metrics {
-            m.count(name, 1);
-        }
     }
 
     /// Is the tile grid aligned to the kernel blocking, so tiles can read
@@ -112,8 +143,8 @@ impl ShardExecutor {
     /// would inflate the metric quadratically.
     fn note_pack_stats(&self, pa: &PackedA, pb: &PackedB) {
         if let Some(m) = &self.metrics {
-            m.count("pack.panels", (pa.blocks() + pb.panels()) as u64);
-            m.count("pack.reuse", pa.reuse() + pb.reuse());
+            m.pack_panels.add((pa.blocks() + pb.panels()) as u64);
+            m.pack_reuse.add(pa.reuse() + pb.reuse());
         }
     }
 
@@ -123,8 +154,8 @@ impl ShardExecutor {
     /// prepacked entry saved.
     fn note_prepacked_stats(&self, pa: &PackedA, pb_fetches: u64) {
         if let Some(m) = &self.metrics {
-            m.count("pack.panels", pa.blocks() as u64);
-            m.count("pack.reuse", pa.reuse() + pb_fetches);
+            m.pack_panels.add(pa.blocks() as u64);
+            m.pack_reuse.add(pa.reuse() + pb_fetches);
         }
     }
 
@@ -153,10 +184,14 @@ impl ShardExecutor {
         let (m, k) = a.shape();
         let n = b.cols();
         if !self.plan.should_parallelize(m, n, k) {
-            self.count("shard.gemm.serial");
+            if let Some(sm) = &self.metrics {
+                sm.gemm_serial.inc();
+            }
             return gemm_blocked(a, b);
         }
-        self.count("shard.gemm.parallel");
+        if let Some(sm) = &self.metrics {
+            sm.gemm_parallel.inc();
+        }
         self.mm_sharded(a, b)
     }
 
@@ -183,12 +218,20 @@ impl ShardExecutor {
         let n = b.cols();
         let p = kernel_params();
         if self.plan.should_parallelize(m, n, k) && self.grid_aligned(&p) {
-            self.count("shard.gemm.parallel");
-            self.count("pack.fused_decode");
-            let qa = quantize(a, format);
-            let qb = quantize(b, format);
-            let pa = Arc::new(PackedA::pack_quantized(&qa, p.mc, p.kc));
-            let pb = Arc::new(PackedB::pack_quantized(&qb, p.kc, p.nc));
+            if let Some(sm) = &self.metrics {
+                sm.gemm_parallel.inc();
+                sm.pack_fused_decode.inc();
+            }
+            let (pa, pb) = {
+                let mut sp = trace_plane::span("pack");
+                sp.attr_str("mode", "fused_decode");
+                let qa = quantize(a, format);
+                let qb = quantize(b, format);
+                (
+                    Arc::new(PackedA::pack_quantized(&qa, p.mc, p.kc)),
+                    Arc::new(PackedB::pack_quantized(&qb, p.kc, p.nc)),
+                )
+            };
             let c = self.mm_sharded_packed(m, n, pa.clone(), pb.clone())?;
             self.note_pack_stats(&pa, &pb);
             Self::recycle_packed(pa, pb);
@@ -198,9 +241,11 @@ impl ShardExecutor {
             // Serial: the single-threaded fused path (falls back to the
             // naive round-trip itself below the blocked cutover) — bitwise
             // identical to the legacy dequantize-then-multiply pipeline.
-            self.count("shard.gemm.serial");
-            if m * n * k > p.naive_cutover {
-                self.count("pack.fused_decode");
+            if let Some(sm) = &self.metrics {
+                sm.gemm_serial.inc();
+                if m * n * k > p.naive_cutover {
+                    sm.pack_fused_decode.inc();
+                }
             }
             return Ok(quantized_matmul_fused(a, b, format));
         }
@@ -250,8 +295,7 @@ impl ShardExecutor {
             let t = tiles[i];
             Ok((t, tn_panel(&a, &b, t.r0, t.r1)))
         });
-        let parts = self.run_claimed(ntasks, work)?;
-        Ok(assemble(m, n, parts))
+        self.run_and_assemble(m, n, ntasks, work)
     }
 
     /// Factor-chain GEMM (`C ≈ U_A Σ_A V_Aᵀ U_B Σ_B V_Bᵀ`), every dense
@@ -384,7 +428,9 @@ impl ShardExecutor {
                 && m * n * k > p.naive_cutover
                 && (!parallel || self.grid_aligned(&p));
             if usable {
-                self.count("pack.prepacked_use");
+                if let Some(sm) = &self.metrics {
+                    sm.pack_prepacked_use.inc();
+                }
                 // Delta, not lifetime: pb's uses counter spans every
                 // request that ever hit this cache entry. Concurrent
                 // requests sharing the entry can land fetches inside each
@@ -394,8 +440,14 @@ impl ShardExecutor {
                 // stays linear in traffic either way.
                 let pb_uses_before = pb.uses();
                 if parallel {
-                    self.count("shard.gemm.parallel");
-                    let pa = Arc::new(PackedA::pack(a, p.mc, p.kc));
+                    if let Some(sm) = &self.metrics {
+                        sm.gemm_parallel.inc();
+                    }
+                    let pa = {
+                        let mut sp = trace_plane::span("pack");
+                        sp.attr_str("mode", "prepacked_b");
+                        Arc::new(PackedA::pack(a, p.mc, p.kc))
+                    };
                     let c = self.mm_sharded_packed(m, n, pa.clone(), pb.clone())?;
                     self.note_prepacked_stats(&pa, pb.uses() - pb_uses_before);
                     if let Ok(pa) = Arc::try_unwrap(pa) {
@@ -403,7 +455,9 @@ impl ShardExecutor {
                     }
                     return Ok(c);
                 }
-                self.count("shard.gemm.serial");
+                if let Some(sm) = &self.metrics {
+                    sm.gemm_serial.inc();
+                }
                 let pa = PackedA::pack(a, p.mc, p.kc);
                 let c = gemm_packed(&pa, pb)?;
                 self.note_prepacked_stats(&pa, pb.uses() - pb_uses_before);
@@ -424,13 +478,21 @@ impl ShardExecutor {
     fn mm_sharded(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
         let p = kernel_params();
         if !self.grid_aligned(&p) {
-            self.count("pack.unaligned_fallback");
+            if let Some(sm) = &self.metrics {
+                sm.pack_unaligned_fallback.inc();
+            }
             return self.mm_sharded_unpacked(a, b);
         }
         let m = a.rows();
         let n = b.cols();
-        let pa = Arc::new(PackedA::pack(a, p.mc, p.kc));
-        let pb = Arc::new(PackedB::pack(b, p.kc, p.nc));
+        let (pa, pb) = {
+            let mut sp = trace_plane::span("pack");
+            sp.attr_str("mode", "shared");
+            (
+                Arc::new(PackedA::pack(a, p.mc, p.kc)),
+                Arc::new(PackedB::pack(b, p.kc, p.nc)),
+            )
+        };
         let c = self.mm_sharded_packed(m, n, pa.clone(), pb.clone())?;
         self.note_pack_stats(&pa, &pb);
         Self::recycle_packed(pa, pb);
@@ -453,8 +515,7 @@ impl ShardExecutor {
             gemm_panel_packed(&pa, &pb, t.r0, t.rows(), t.c0, t.cols())
                 .map(|p| (t, p.into_vec()))
         });
-        let parts = self.run_claimed(ntasks, work)?;
-        Ok(assemble(m, n, parts))
+        self.run_and_assemble(m, n, ntasks, work)
     }
 
     /// Legacy sharded product (per-tile B re-pack inside [`gemm_panel`]) —
@@ -478,8 +539,7 @@ impl ShardExecutor {
             let t = tiles[i];
             gemm_panel(&a, &b, t.r0, t.rows(), t.c0, t.cols()).map(|p| (t, p.into_vec()))
         });
-        let parts = self.run_claimed(ntasks, work)?;
-        Ok(assemble(m, n, parts))
+        self.run_and_assemble(m, n, ntasks, work)
     }
 
     /// Fan `ntasks` out to `min(workers, ntasks)` claim jobs and collect
@@ -490,11 +550,16 @@ impl ShardExecutor {
         let next = Arc::new(AtomicUsize::new(0));
         let (tx, rx) = mpsc::channel::<Result<(Tile, Vec<f32>)>>();
         let nworkers = self.plan.workers.clamp(1, ntasks.max(1));
+        // Pool threads never entered the request's trace scope; capture
+        // the caller's context here so each claimed tile can attach a
+        // `tile` span to the correct parent via `span_in`.
+        let ctx = trace_plane::current();
         for w in 0..nworkers {
             let work = work.clone();
             let next = next.clone();
             let tx = tx.clone();
             let metrics = self.metrics.clone();
+            let ctx = ctx.clone();
             self.pool.execute(move || {
                 let mut claimed = 0u64;
                 loop {
@@ -503,9 +568,17 @@ impl ShardExecutor {
                         break;
                     }
                     let t0 = Instant::now();
-                    let res = work(i);
+                    let res = match &ctx {
+                        Some(c) => {
+                            let mut sp = trace_plane::span_in(c, "tile");
+                            sp.attr_u64("tile", i as u64);
+                            sp.attr_u64("worker", w as u64);
+                            work(i)
+                        }
+                        None => work(i),
+                    };
                     if let Some(m) = &metrics {
-                        m.observe("shard.tile_us", t0.elapsed().as_micros() as f64);
+                        m.tile_us.observe(t0.elapsed().as_secs_f64() * 1e6);
                     }
                     claimed += 1;
                     if tx.send(res).is_err() {
@@ -514,7 +587,7 @@ impl ShardExecutor {
                 }
                 if claimed > 0 {
                     if let Some(m) = &metrics {
-                        m.count(&format!("shard.worker.{w}.tiles"), claimed);
+                        m.worker_tiles[w].add(claimed);
                     }
                 }
             });
@@ -531,9 +604,18 @@ impl ShardExecutor {
             )));
         }
         if let Some(m) = &self.metrics {
-            m.count("shard.tasks", ntasks as u64);
+            m.tasks.add(ntasks as u64);
         }
         Ok(out)
+    }
+
+    /// [`run_claimed`](Self::run_claimed) followed by tile assembly, the
+    /// latter under an `assemble` span.
+    fn run_and_assemble(&self, m: usize, n: usize, ntasks: usize, work: WorkFn) -> Result<Matrix> {
+        let parts = self.run_claimed(ntasks, work)?;
+        let mut sp = trace_plane::span("assemble");
+        sp.attr_u64("tiles", ntasks as u64);
+        Ok(assemble(m, n, parts))
     }
 }
 
@@ -681,7 +763,8 @@ mod tests {
         assert!(c.rel_frobenius_distance(&a.matmul(&b)) < 1e-6);
         let counters = metrics.counters();
         assert_eq!(counters.get("shard.gemm.serial"), Some(&1));
-        assert_eq!(counters.get("shard.gemm.parallel"), None);
+        // Handles are pre-registered, so the parallel counter exists at 0.
+        assert_eq!(counters.get("shard.gemm.parallel"), Some(&0));
     }
 
     #[test]
@@ -830,7 +913,7 @@ mod tests {
             counters.get("pack.reuse").copied().unwrap_or(0) > 0,
             "multi-tile run must reuse shared panels: {counters:?}"
         );
-        assert_eq!(counters.get("pack.unaligned_fallback"), None);
+        assert_eq!(counters.get("pack.unaligned_fallback"), Some(&0));
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Trace exporters: `chrome://tracing` JSON and indented text trees.
+//!
+//! Chrome trace-event format: one complete event (`"ph":"X"`) per span,
+//! timestamps/durations in microseconds, `pid` fixed at 1, `tid` set to
+//! the worker-thread ordinal so tile spans land on their worker's row.
+//! Span attributes (plus trace/span/parent ids) go into `args`. Within a
+//! trace, events are emitted in start-time order.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use super::recorder::FinishedTrace;
+use super::span::{AttrValue, SpanRecord, NO_PARENT};
+
+fn write_args(out: &mut String, trace_id: u64, s: &SpanRecord) {
+    let _ = write!(
+        out,
+        "{{\"trace_id\":{trace_id},\"span_id\":{},\"parent_id\":{}",
+        s.span_id, s.parent_id
+    );
+    for a in s.attrs() {
+        match a.value {
+            AttrValue::U64(v) => {
+                let _ = write!(out, ",\"{}\":{v}", a.key);
+            }
+            AttrValue::F64(v) => {
+                let _ = write!(out, ",\"{}\":{v:e}", a.key);
+            }
+            AttrValue::Str(v) => {
+                let _ = write!(out, ",\"{}\":\"{v}\"", a.key);
+            }
+        }
+    }
+    out.push('}');
+}
+
+/// Render traces as a chrome trace-event JSON document
+/// (`{"traceEvents": [...]}`), loadable in `chrome://tracing` or Perfetto.
+pub fn chrome_trace_json(traces: &[Arc<FinishedTrace>]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for t in traces {
+        for s in &t.spans {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"lowrank_gemm\",\"ph\":\"X\",\
+                 \"ts\":{:.3},\"dur\":{:.3},\"pid\":1,\"tid\":{},\"args\":",
+                s.name,
+                s.start_ns as f64 / 1e3,
+                s.duration_ns() as f64 / 1e3,
+                s.worker
+            );
+            write_args(&mut out, t.trace_id, s);
+            out.push('}');
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Render one trace as an indented text tree: stage name, duration, and
+/// attributes, children ordered by start time.
+pub fn text_tree(t: &FinishedTrace) -> String {
+    let mut out = format!(
+        "trace {} — {:.3} ms, {} spans{}\n",
+        t.trace_id,
+        t.duration_ns as f64 / 1e6,
+        t.spans.len(),
+        if t.dropped_spans > 0 {
+            format!(" ({} dropped)", t.dropped_spans)
+        } else {
+            String::new()
+        }
+    );
+    fn children<'a>(t: &'a FinishedTrace, parent: u32) -> Vec<&'a SpanRecord> {
+        // spans are already start-ordered, so this preserves start order.
+        t.spans.iter().filter(|s| s.parent_id == parent).collect()
+    }
+    fn emit(out: &mut String, t: &FinishedTrace, s: &SpanRecord, depth: usize) {
+        let _ = write!(
+            out,
+            "{:indent$}{} {:.3} ms [w{}]",
+            "",
+            s.name,
+            s.duration_ns() as f64 / 1e6,
+            s.worker,
+            indent = depth * 2
+        );
+        for a in s.attrs() {
+            match a.value {
+                AttrValue::U64(v) => {
+                    let _ = write!(out, " {}={v}", a.key);
+                }
+                AttrValue::F64(v) => {
+                    let _ = write!(out, " {}={v:.3e}", a.key);
+                }
+                AttrValue::Str(v) => {
+                    let _ = write!(out, " {}={v}", a.key);
+                }
+            }
+        }
+        out.push('\n');
+        for c in children(t, s.span_id) {
+            emit(out, t, c, depth + 1);
+        }
+    }
+    for root in children(t, NO_PARENT) {
+        emit(&mut out, t, root, 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace_plane::span::{Attr, MAX_ATTRS};
+
+    fn record(
+        span_id: u32,
+        parent_id: u32,
+        name: &'static str,
+        start_ns: u64,
+        end_ns: u64,
+    ) -> SpanRecord {
+        let mut attrs = [None; MAX_ATTRS];
+        attrs[0] = Some(Attr::u64("n", 64));
+        SpanRecord {
+            span_id,
+            parent_id,
+            name,
+            start_ns,
+            end_ns,
+            worker: 2,
+            attrs,
+        }
+    }
+
+    fn sample() -> FinishedTrace {
+        FinishedTrace {
+            trace_id: 9,
+            duration_ns: 5000,
+            dropped_spans: 0,
+            spans: vec![
+                record(1, 0, "request", 0, 5000),
+                record(2, 1, "route", 100, 400),
+                record(3, 1, "exec", 500, 4500),
+                record(4, 3, "tile", 600, 2000),
+            ],
+        }
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let j = chrome_trace_json(&[Arc::new(sample())]);
+        assert!(j.starts_with("{\"traceEvents\":["));
+        assert!(j.ends_with("]}"));
+        assert!(j.contains("\"name\":\"route\""));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"tid\":2"));
+        assert!(j.contains("\"trace_id\":9"));
+        assert!(j.contains("\"n\":64"));
+        // µs conversion: the exec span starts at 0.5 µs.
+        assert!(j.contains("\"ts\":0.500"));
+    }
+
+    #[test]
+    fn empty_export_is_valid() {
+        assert_eq!(chrome_trace_json(&[]), "{\"traceEvents\":[]}");
+    }
+
+    #[test]
+    fn text_tree_indents_by_depth() {
+        let txt = text_tree(&sample());
+        assert!(txt.contains("trace 9"));
+        assert!(txt.contains("\n  request"));
+        assert!(txt.contains("\n    route"));
+        assert!(txt.contains("\n      tile"));
+    }
+}

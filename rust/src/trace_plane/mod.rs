@@ -1,0 +1,374 @@
+//! Request-scoped tracing: span trees, a flight recorder, and exporters.
+//!
+//! Layered on the serving path as follows:
+//!
+//! - [`Tracer::begin`] allocates one [`RequestTrace`] span arena per
+//!   admitted request (or `None` when `[trace].enabled = false` — the
+//!   disabled path allocates nothing and touches no numerics, preserving
+//!   bitwise-identical results).
+//! - [`scope`] pins the trace to the executing thread; [`span`] opens a
+//!   child of the innermost live span via that thread-local context, and
+//!   [`span_in`] opens a child from an explicitly captured [`ActiveCtx`]
+//!   on threads that never saw the scope (the shard pool's tile workers).
+//! - Finishing a span publishes its [`SpanRecord`] into the arena with a
+//!   single release store — per-thread buffers flush at span end, and the
+//!   hot path never takes a global lock. The only lock in the plane is
+//!   one [`FlightRecorder`] mutex acquisition per *completed request*.
+//! - [`export`] renders retained traces as an indented text tree or
+//!   `chrome://tracing` JSON.
+//!
+//! Stage names emitted by the serving path: `request` (root), `route`,
+//! `fingerprint`, `queue`, `exec`, `factor`, `decompose`, `pack`, `tile`
+//! (one per claimed tile, labeled with its worker), `assemble`.
+
+pub mod export;
+mod recorder;
+mod span;
+
+pub use recorder::{FinishedTrace, FlightRecorder};
+pub use span::{Attr, AttrValue, RequestTrace, SpanRecord, MAX_ATTRS, NO_PARENT, ROOT_SPAN};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::schema::TraceSettings;
+use crate::metrics::thread_ordinal;
+
+/// Per-service tracer: hands out span arenas and owns the flight recorder.
+pub struct Tracer {
+    enabled: bool,
+    max_spans: usize,
+    epoch: Instant,
+    next_trace_id: AtomicU64,
+    recorder: FlightRecorder,
+}
+
+impl Tracer {
+    /// Tracer configured from the `[trace]` settings.
+    pub fn new(settings: &TraceSettings) -> Self {
+        Tracer {
+            enabled: settings.enabled,
+            max_spans: settings.max_spans,
+            epoch: Instant::now(),
+            next_trace_id: AtomicU64::new(1),
+            recorder: FlightRecorder::new(settings.ring_capacity, settings.slowest_k),
+        }
+    }
+
+    /// A tracer that records nothing (`begin` always returns `None`).
+    pub fn disabled() -> Self {
+        Self::new(&TraceSettings::default())
+    }
+
+    /// Is span capture on?
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a trace for one admitted request. `None` when disabled — the
+    /// caller threads the `Option` through and every span site no-ops.
+    pub fn begin(&self) -> Option<Arc<RequestTrace>> {
+        if !self.enabled {
+            return None;
+        }
+        let id = self.next_trace_id.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::new(RequestTrace::new(id, self.epoch, self.max_spans)))
+    }
+
+    /// Seal a trace: write the root `request` span spanning admission to
+    /// now, collect the span tree, and hand it to the flight recorder.
+    pub fn finish(&self, trace: &Arc<RequestTrace>, attrs: &[Attr]) {
+        let end_ns = trace.now_ns();
+        let mut root = SpanRecord {
+            span_id: ROOT_SPAN,
+            parent_id: NO_PARENT,
+            name: "request",
+            start_ns: trace.start_ns(),
+            end_ns,
+            worker: thread_ordinal() as u32,
+            attrs: [None; MAX_ATTRS],
+        };
+        for (dst, a) in root.attrs.iter_mut().zip(attrs) {
+            *dst = Some(*a);
+        }
+        trace.store(0, root);
+        self.recorder.record(FinishedTrace {
+            trace_id: trace.trace_id(),
+            duration_ns: end_ns.saturating_sub(trace.start_ns()),
+            dropped_spans: trace.dropped(),
+            spans: trace.collect(),
+        });
+    }
+
+    /// The retained traces.
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+}
+
+/// A trace pinned to a point in its span tree — what tile workers capture
+/// before fanning out.
+#[derive(Clone)]
+pub struct ActiveCtx {
+    /// The request's span arena.
+    pub trace: Arc<RequestTrace>,
+    /// Span id new children attach under.
+    pub parent: u32,
+}
+
+std::thread_local! {
+    static CURRENT: RefCell<Option<ActiveCtx>> = const { RefCell::new(None) };
+}
+
+/// The calling thread's active trace context, if any. Cheap (one `Arc`
+/// clone), allocation-free.
+pub fn current() -> Option<ActiveCtx> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Pins `trace` (at `parent`) to this thread until the guard drops,
+/// restoring whatever context was active before.
+#[must_use = "the scope ends when this guard drops"]
+pub struct ScopeGuard {
+    prev: Option<ActiveCtx>,
+}
+
+/// Enter a trace scope on the calling thread.
+pub fn scope(trace: Arc<RequestTrace>, parent: u32) -> ScopeGuard {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(ActiveCtx { trace, parent }));
+    ScopeGuard { prev }
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+struct SpanInner {
+    trace: Arc<RequestTrace>,
+    slot: usize,
+    span_id: u32,
+    parent_id: u32,
+    name: &'static str,
+    start_ns: u64,
+    attrs: [Option<Attr>; MAX_ATTRS],
+    nattrs: usize,
+    pop_tls: bool,
+}
+
+/// An open span; publishes its record when dropped. Inert (and
+/// allocation-free) when no trace is active.
+#[must_use = "the span ends when this guard drops"]
+pub struct SpanGuard {
+    inner: Option<SpanInner>,
+}
+
+/// Open a child of the innermost live span on this thread. No-op when the
+/// thread has no active trace context or the span arena is full.
+pub fn span(name: &'static str) -> SpanGuard {
+    CURRENT.with(|cur| {
+        let mut cur = cur.borrow_mut();
+        let Some(ctx) = cur.as_mut() else {
+            return SpanGuard { inner: None };
+        };
+        let Some((slot, span_id)) = ctx.trace.claim() else {
+            return SpanGuard { inner: None };
+        };
+        let parent_id = ctx.parent;
+        ctx.parent = span_id;
+        SpanGuard {
+            inner: Some(SpanInner {
+                trace: ctx.trace.clone(),
+                slot,
+                span_id,
+                parent_id,
+                name,
+                start_ns: ctx.trace.now_ns(),
+                attrs: [None; MAX_ATTRS],
+                nattrs: 0,
+                pop_tls: true,
+            }),
+        }
+    })
+}
+
+/// Open a child under an explicitly captured context — for pool threads
+/// that never entered the scope. Does not touch thread-local state.
+pub fn span_in(ctx: &ActiveCtx, name: &'static str) -> SpanGuard {
+    let Some((slot, span_id)) = ctx.trace.claim() else {
+        return SpanGuard { inner: None };
+    };
+    SpanGuard {
+        inner: Some(SpanInner {
+            trace: ctx.trace.clone(),
+            slot,
+            span_id,
+            parent_id: ctx.parent,
+            name,
+            start_ns: ctx.trace.now_ns(),
+            attrs: [None; MAX_ATTRS],
+            nattrs: 0,
+            pop_tls: false,
+        }),
+    }
+}
+
+impl SpanGuard {
+    fn push(&mut self, attr: Attr) {
+        if let Some(inner) = self.inner.as_mut() {
+            if inner.nattrs < MAX_ATTRS {
+                inner.attrs[inner.nattrs] = Some(attr);
+                inner.nattrs += 1;
+            }
+        }
+    }
+
+    /// Attach an integer attribute (first [`MAX_ATTRS`] stick).
+    pub fn attr_u64(&mut self, key: &'static str, v: u64) {
+        self.push(Attr::u64(key, v));
+    }
+
+    /// Attach a float attribute.
+    pub fn attr_f64(&mut self, key: &'static str, v: f64) {
+        self.push(Attr::f64(key, v));
+    }
+
+    /// Attach a static-string attribute.
+    pub fn attr_str(&mut self, key: &'static str, v: &'static str) {
+        self.push(Attr::str(key, v));
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else {
+            return;
+        };
+        let end_ns = inner.trace.now_ns();
+        inner.trace.store(
+            inner.slot,
+            SpanRecord {
+                span_id: inner.span_id,
+                parent_id: inner.parent_id,
+                name: inner.name,
+                start_ns: inner.start_ns,
+                end_ns,
+                worker: thread_ordinal() as u32,
+                attrs: inner.attrs,
+            },
+        );
+        if inner.pop_tls {
+            CURRENT.with(|cur| {
+                if let Some(ctx) = cur.borrow_mut().as_mut() {
+                    if ctx.parent == inner.span_id {
+                        ctx.parent = inner.parent_id;
+                    }
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_tracer() -> Tracer {
+        Tracer::new(&TraceSettings {
+            enabled: true,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn disabled_tracer_begins_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        assert!(t.begin().is_none());
+        // Span sites are inert without a scope.
+        let g = span("orphan");
+        drop(g);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn span_tree_nests_and_restores_parent() {
+        let tracer = enabled_tracer();
+        let trace = tracer.begin().unwrap();
+        {
+            let _scope = scope(trace.clone(), ROOT_SPAN);
+            {
+                let mut a = span("a");
+                a.attr_u64("n", 7);
+                {
+                    let _b = span("b");
+                }
+                let _c = span("c");
+            }
+            let _d = span("d");
+        }
+        tracer.finish(&trace, &[Attr::str("kernel", "dense_f32")]);
+        let rec = tracer.recorder().recent();
+        assert_eq!(rec.len(), 1);
+        let spans = &rec[0].spans;
+        let by_name = |n: &str| spans.iter().find(|s| s.name == n).unwrap();
+        let (root, a, b, c, d) = (
+            by_name("request"),
+            by_name("a"),
+            by_name("b"),
+            by_name("c"),
+            by_name("d"),
+        );
+        assert_eq!(root.parent_id, NO_PARENT);
+        assert_eq!(a.parent_id, root.span_id);
+        assert_eq!(b.parent_id, a.span_id);
+        assert_eq!(c.parent_id, a.span_id, "parent restored after b drops");
+        assert_eq!(d.parent_id, root.span_id, "parent restored after a drops");
+        assert_eq!(a.attrs().next().unwrap().value, AttrValue::U64(7));
+        assert!(root.start_ns <= a.start_ns && a.end_ns <= root.end_ns);
+        assert_eq!(rec[0].dropped_spans, 0);
+    }
+
+    #[test]
+    fn span_in_attaches_from_foreign_thread() {
+        let tracer = enabled_tracer();
+        let trace = tracer.begin().unwrap();
+        let ctx = ActiveCtx {
+            trace: trace.clone(),
+            parent: ROOT_SPAN,
+        };
+        let handle = std::thread::spawn(move || {
+            let mut g = span_in(&ctx, "tile");
+            g.attr_u64("worker", 3);
+        });
+        handle.join().unwrap();
+        tracer.finish(&trace, &[]);
+        let rec = tracer.recorder().recent();
+        let tile = rec[0].spans.iter().find(|s| s.name == "tile").unwrap();
+        assert_eq!(tile.parent_id, ROOT_SPAN);
+    }
+
+    #[test]
+    fn arena_overflow_drops_and_counts() {
+        let tracer = Tracer::new(&TraceSettings {
+            enabled: true,
+            max_spans: 4,
+            ..Default::default()
+        });
+        let trace = tracer.begin().unwrap();
+        let _scope = scope(trace.clone(), ROOT_SPAN);
+        for _ in 0..10 {
+            let _g = span("s");
+        }
+        drop(_scope);
+        tracer.finish(&trace, &[]);
+        let rec = tracer.recorder().recent();
+        // Root + 3 children fit in 4 slots; 7 claims bounced.
+        assert_eq!(rec[0].spans.len(), 4);
+        assert_eq!(rec[0].dropped_spans, 7);
+    }
+}

@@ -1,0 +1,133 @@
+//! The flight recorder: bounded retention of completed request traces.
+//!
+//! One mutex acquisition per **completed request** (never per span): the
+//! recorder keeps a ring of the last `capacity` traces plus a separate
+//! always-retained list of the `slowest_k` by root duration, so a latency
+//! spike stays inspectable long after the ring has wrapped past it.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::span::SpanRecord;
+
+/// One fully-assembled request trace.
+#[derive(Clone, Debug)]
+pub struct FinishedTrace {
+    /// Trace id (monotone per tracer).
+    pub trace_id: u64,
+    /// Root (request) span duration in nanoseconds.
+    pub duration_ns: u64,
+    /// Spans dropped because the per-request arena filled.
+    pub dropped_spans: u64,
+    /// Completed spans, root first, then by start time.
+    pub spans: Vec<SpanRecord>,
+}
+
+struct Inner {
+    ring: VecDeque<Arc<FinishedTrace>>,
+    slowest: Vec<Arc<FinishedTrace>>,
+    total: u64,
+}
+
+/// Fixed-capacity trace retention (ring + slowest-K).
+pub struct FlightRecorder {
+    capacity: usize,
+    slowest_k: usize,
+    inner: Mutex<Inner>,
+}
+
+impl FlightRecorder {
+    /// Recorder holding the last `capacity` traces and the `slowest_k`
+    /// slowest ever seen.
+    pub fn new(capacity: usize, slowest_k: usize) -> Self {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            capacity,
+            slowest_k,
+            inner: Mutex::new(Inner {
+                ring: VecDeque::with_capacity(capacity),
+                slowest: Vec::with_capacity(slowest_k),
+                total: 0,
+            }),
+        }
+    }
+
+    /// Record one finished trace.
+    pub fn record(&self, trace: FinishedTrace) {
+        let trace = Arc::new(trace);
+        let mut g = self.inner.lock().unwrap();
+        g.total += 1;
+        if g.ring.len() == self.capacity {
+            g.ring.pop_front();
+        }
+        g.ring.push_back(trace.clone());
+        if self.slowest_k > 0 {
+            let pos = g
+                .slowest
+                .iter()
+                .position(|t| trace.duration_ns > t.duration_ns)
+                .unwrap_or(g.slowest.len());
+            if pos < self.slowest_k {
+                g.slowest.insert(pos, trace);
+                g.slowest.truncate(self.slowest_k);
+            }
+        }
+    }
+
+    /// The retained recent traces, oldest first.
+    pub fn recent(&self) -> Vec<Arc<FinishedTrace>> {
+        self.inner.lock().unwrap().ring.iter().cloned().collect()
+    }
+
+    /// The slowest traces ever recorded, slowest first.
+    pub fn slowest(&self) -> Vec<Arc<FinishedTrace>> {
+        self.inner.lock().unwrap().slowest.clone()
+    }
+
+    /// Total traces ever recorded (including ones the ring evicted).
+    pub fn total_recorded(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(id: u64, dur: u64) -> FinishedTrace {
+        FinishedTrace {
+            trace_id: id,
+            duration_ns: dur,
+            dropped_spans: 0,
+            spans: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_order() {
+        let r = FlightRecorder::new(3, 0);
+        for i in 0..5 {
+            r.record(t(i, 100));
+        }
+        let ids: Vec<u64> = r.recent().iter().map(|t| t.trace_id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+        assert_eq!(r.total_recorded(), 5);
+        assert!(r.slowest().is_empty());
+    }
+
+    #[test]
+    fn slowest_survive_ring_eviction() {
+        let r = FlightRecorder::new(2, 2);
+        for (i, d) in [(0u64, 50u64), (1, 900), (2, 10), (3, 400), (4, 20)] {
+            r.record(t(i, d));
+        }
+        let ids: Vec<u64> = r.recent().iter().map(|t| t.trace_id).collect();
+        assert_eq!(ids, vec![3, 4]);
+        let slow: Vec<(u64, u64)> = r
+            .slowest()
+            .iter()
+            .map(|t| (t.trace_id, t.duration_ns))
+            .collect();
+        assert_eq!(slow, vec![(1, 900), (3, 400)]);
+    }
+}

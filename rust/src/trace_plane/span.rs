@@ -1,0 +1,205 @@
+//! Span records and the per-request span arena.
+//!
+//! A [`RequestTrace`] owns a fixed-size slot arena allocated once at
+//! request admission. Starting a span reserves a slot with one
+//! `fetch_add`; finishing it writes the completed [`SpanRecord`] into the
+//! slot's `OnceLock`. Worker threads therefore publish spans without ever
+//! taking a lock or allocating — the only synchronization on the hot path
+//! is the cursor increment and the `OnceLock` release store. Spans past
+//! `max_spans` are dropped and counted, never blocking the request.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Parent id meaning "no parent" (the root span).
+pub const NO_PARENT: u32 = 0;
+/// Span id of the implicit per-request root span (always slot 0).
+pub const ROOT_SPAN: u32 = 1;
+/// Attribute capacity per span (fixed so records stay `Copy`-sized).
+pub const MAX_ATTRS: usize = 4;
+
+/// A typed span attribute value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttrValue {
+    /// Unsigned integer (shapes, ranks, tile ids, worker ordinals).
+    U64(u64),
+    /// Float (tolerances, ratios).
+    F64(f64),
+    /// Static string (kernel ids, backend names).
+    Str(&'static str),
+}
+
+/// One key/value span attribute.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Attr {
+    /// Attribute key.
+    pub key: &'static str,
+    /// Attribute value.
+    pub value: AttrValue,
+}
+
+impl Attr {
+    /// Integer attribute.
+    pub fn u64(key: &'static str, v: u64) -> Self {
+        Attr {
+            key,
+            value: AttrValue::U64(v),
+        }
+    }
+
+    /// Float attribute.
+    pub fn f64(key: &'static str, v: f64) -> Self {
+        Attr {
+            key,
+            value: AttrValue::F64(v),
+        }
+    }
+
+    /// Static-string attribute.
+    pub fn str(key: &'static str, v: &'static str) -> Self {
+        Attr {
+            key,
+            value: AttrValue::Str(v),
+        }
+    }
+}
+
+/// A completed span: one timed stage of one request.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    /// Span id (slot index + 1; [`ROOT_SPAN`] for the root).
+    pub span_id: u32,
+    /// Parent span id ([`NO_PARENT`] for the root).
+    pub parent_id: u32,
+    /// Stage name (static: "route", "pack", "tile", ...).
+    pub name: &'static str,
+    /// Start, nanoseconds since the tracer epoch.
+    pub start_ns: u64,
+    /// End, nanoseconds since the tracer epoch.
+    pub end_ns: u64,
+    /// Ordinal of the thread that ran the span (maps to chrome `tid`).
+    pub worker: u32,
+    /// Up to [`MAX_ATTRS`] key/value attributes.
+    pub attrs: [Option<Attr>; MAX_ATTRS],
+}
+
+impl SpanRecord {
+    /// Span duration in nanoseconds.
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    /// Iterate the set attributes.
+    pub fn attrs(&self) -> impl Iterator<Item = &Attr> {
+        self.attrs.iter().flatten()
+    }
+}
+
+/// The span arena for one in-flight request.
+pub struct RequestTrace {
+    trace_id: u64,
+    epoch: Instant,
+    start_ns: u64,
+    cursor: AtomicUsize,
+    slots: Vec<OnceLock<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+impl RequestTrace {
+    /// New arena with `max_spans` slots; slot 0 is reserved for the root
+    /// span written at finish time.
+    pub(crate) fn new(trace_id: u64, epoch: Instant, max_spans: usize) -> Self {
+        let max_spans = max_spans.max(2);
+        let start_ns = epoch.elapsed().as_nanos() as u64;
+        RequestTrace {
+            trace_id,
+            epoch,
+            start_ns,
+            cursor: AtomicUsize::new(1),
+            slots: (0..max_spans).map(|_| OnceLock::new()).collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Trace id.
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
+    /// Admission time, nanoseconds since the tracer epoch.
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
+    }
+
+    /// Current time on this trace's clock.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Map an `Instant` onto this trace's clock.
+    pub fn ns_of(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Reserve a slot: returns `(slot, span_id)`, or `None` (counted) when
+    /// the arena is full.
+    pub(crate) fn claim(&self) -> Option<(usize, u32)> {
+        let slot = self.cursor.fetch_add(1, Ordering::Relaxed);
+        if slot >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        Some((slot, slot as u32 + 1))
+    }
+
+    /// Publish a completed record into its reserved slot.
+    pub(crate) fn store(&self, slot: usize, rec: SpanRecord) {
+        let _ = self.slots[slot].set(rec);
+    }
+
+    /// Record a span whose start/end are already known (e.g. queue wait,
+    /// measured between two `Instant`s rather than via a guard).
+    pub fn record_span(
+        &self,
+        name: &'static str,
+        parent_id: u32,
+        start_ns: u64,
+        end_ns: u64,
+        attrs: &[Attr],
+    ) {
+        if let Some((slot, span_id)) = self.claim() {
+            let mut rec = SpanRecord {
+                span_id,
+                parent_id,
+                name,
+                start_ns,
+                end_ns,
+                worker: crate::metrics::thread_ordinal() as u32,
+                attrs: [None; MAX_ATTRS],
+            };
+            for (dst, a) in rec.attrs.iter_mut().zip(attrs) {
+                *dst = Some(*a);
+            }
+            self.store(slot, rec);
+        }
+    }
+
+    /// Spans dropped because the arena filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Collect completed spans (slot 0 root first when present, then by
+    /// start time). Unfinished slots — a span guard still alive — are
+    /// skipped.
+    pub(crate) fn collect(&self) -> Vec<SpanRecord> {
+        let used = self.cursor.load(Ordering::Acquire).min(self.slots.len());
+        let mut out: Vec<SpanRecord> = self.slots[..used]
+            .iter()
+            .filter_map(|s| s.get().copied())
+            .collect();
+        out.sort_by_key(|r| (r.start_ns, r.span_id));
+        out
+    }
+}

@@ -1,0 +1,326 @@
+//! Telemetry-plane suite (PR 6).
+//!
+//! The tracing + metrics contract: concurrent lock-free recording matches
+//! serial totals; the flight recorder's ring wraps while slowest-K
+//! retention survives eviction; a sharded request's span tree covers
+//! route → exec → pack → per-worker tiles → assemble with every parent
+//! resolving; and with `[trace]` disabled (the default) results stay
+//! bitwise identical while the span sites and metric handles perform
+//! **zero** heap allocations at steady state (counting global-allocator
+//! shim, per-thread counters as in `pack_equivalence.rs`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use lowrank_gemm::config::TraceSettings;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::metrics::MetricsRegistry;
+use lowrank_gemm::trace_plane::{self, export, AttrValue, NO_PARENT};
+
+// ---------------------------------------------------------------------------
+// Counting allocator shim: per-thread allocation counters.
+// ---------------------------------------------------------------------------
+
+std::thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates everything to `System`; the counter update is a plain
+// thread-local store with no allocation of its own (const-initialized TLS).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+fn traced_config(trace: TraceSettings) -> ServiceConfig {
+    ServiceConfig {
+        trace,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lock-free metrics: concurrent recording matches serial totals.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_recording_matches_serial_totals() {
+    let registry = Arc::new(MetricsRegistry::new());
+    let counter = registry.counter("par.counter");
+    let hist = registry.histogram("par.hist");
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 5000;
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let (counter, hist) = (counter.clone(), hist.clone());
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    counter.inc();
+                    hist.observe((t * PER_THREAD + i + 1) as f64);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = registry.snapshot();
+    let n = THREADS * PER_THREAD;
+    assert_eq!(snap.counters["par.counter"], n);
+    let s = snap.histograms["par.hist"];
+    assert_eq!(s.count, n);
+    assert_eq!(s.dropped, 0);
+    assert_eq!(s.max, n as f64);
+    // Samples were 1..=n, so the merged mean is (n+1)/2 — stripe merging
+    // must lose nothing.
+    let expect = (n + 1) as f64 / 2.0;
+    assert!(
+        (s.mean - expect).abs() / expect < 1e-9,
+        "merged mean {} != {expect}",
+        s.mean
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder at the service level: ring wrap + slowest-K retention.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn flight_recorder_wraps_and_keeps_slowest() {
+    let svc = GemmService::start(traced_config(TraceSettings {
+        enabled: true,
+        ring_capacity: 4,
+        slowest_k: 2,
+        ..Default::default()
+    }))
+    .unwrap();
+    let mut rng = Pcg64::seeded(601);
+    // One heavy request first (trace id 1), then enough light ones to
+    // wrap the 4-slot ring past it.
+    let a = Matrix::gaussian(320, 320, &mut rng);
+    let b = Matrix::gaussian(320, 320, &mut rng);
+    svc.gemm_blocking(GemmRequest::new(a, b).with_kernel(KernelKind::DenseF32))
+        .unwrap();
+    for _ in 0..6 {
+        let a = Matrix::gaussian(32, 32, &mut rng);
+        let b = Matrix::gaussian(32, 32, &mut rng);
+        svc.gemm_blocking(GemmRequest::new(a, b).with_kernel(KernelKind::DenseF32))
+            .unwrap();
+    }
+    let rec = svc.tracer().recorder();
+    assert_eq!(rec.total_recorded(), 7);
+    let recent = rec.recent();
+    assert_eq!(recent.len(), 4);
+    assert!(
+        recent.iter().all(|t| t.trace_id >= 4),
+        "ring keeps the last 4"
+    );
+    let slow = rec.slowest();
+    assert_eq!(slow.len(), 2);
+    assert!(slow[0].duration_ns >= slow[1].duration_ns);
+    assert!(
+        slow.iter().any(|t| t.trace_id == 1),
+        "the heavy request must survive ring eviction: {:?}",
+        slow.iter()
+            .map(|t| (t.trace_id, t.duration_ns))
+            .collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Span-tree integrity across worker threads.
+// ---------------------------------------------------------------------------
+
+fn u64_attr(s: &lowrank_gemm::trace_plane::SpanRecord, key: &str) -> Option<u64> {
+    s.attrs().find(|a| a.key == key).map(|a| match a.value {
+        AttrValue::U64(v) => v,
+        other => panic!("attr {key} is not u64: {other:?}"),
+    })
+}
+
+#[test]
+fn sharded_request_span_tree_is_complete() {
+    let svc = GemmService::start(traced_config(TraceSettings {
+        enabled: true,
+        ..Default::default()
+    }))
+    .unwrap();
+    let mut rng = Pcg64::seeded(602);
+    // 512×512 over the default 256×256 grid and 4 shard workers: the
+    // parallel gates pass and the product fans out as exactly 4 tiles.
+    let a = Matrix::gaussian(512, 512, &mut rng);
+    let b = Matrix::gaussian(512, 512, &mut rng);
+    svc.gemm_blocking(GemmRequest::new(a, b).with_kernel(KernelKind::DenseF32))
+        .unwrap();
+
+    let traces = svc.tracer().recorder().recent();
+    assert_eq!(traces.len(), 1);
+    let t = &traces[0];
+    assert_eq!(t.dropped_spans, 0);
+    let spans = &t.spans;
+
+    // Every non-root parent id resolves to a recorded span.
+    for s in spans.iter() {
+        if s.parent_id != NO_PARENT {
+            assert!(
+                spans.iter().any(|p| p.span_id == s.parent_id),
+                "span `{}` ({}) has unresolved parent {}",
+                s.name,
+                s.span_id,
+                s.parent_id
+            );
+        }
+    }
+
+    let find = |name: &str| spans.iter().find(|s| s.name == name);
+    let root = find("request").expect("root span");
+    assert_eq!(root.parent_id, NO_PARENT);
+    let route = find("route").expect("route span");
+    assert_eq!(route.parent_id, root.span_id);
+    find("queue").expect("queue span");
+    let exec = find("exec").expect("exec span");
+    assert_eq!(exec.parent_id, root.span_id);
+
+    let packs: Vec<_> = spans.iter().filter(|s| s.name == "pack").collect();
+    assert!(!packs.is_empty(), "aligned sharded gemm must record a pack");
+    assert!(packs.iter().all(|s| s.parent_id == exec.span_id));
+
+    let tiles: Vec<_> = spans.iter().filter(|s| s.name == "tile").collect();
+    assert_eq!(tiles.len(), 4, "512×512 over 256×256 tiles is 4 tasks");
+    let mut tile_ids: Vec<u64> = Vec::new();
+    for tile in &tiles {
+        assert_eq!(tile.parent_id, exec.span_id, "tiles attach under exec");
+        assert!(
+            tile.start_ns >= exec.start_ns && tile.end_ns <= exec.end_ns,
+            "tile span must nest inside exec in time"
+        );
+        u64_attr(tile, "worker").expect("tile carries its claim worker");
+        tile_ids.push(u64_attr(tile, "tile").expect("tile index attr"));
+    }
+    tile_ids.sort_unstable();
+    assert_eq!(tile_ids, vec![0, 1, 2, 3], "each task traced exactly once");
+
+    let assemble = find("assemble").expect("assemble span");
+    assert_eq!(assemble.parent_id, exec.span_id);
+
+    // The trace round-trips through the chrome exporter.
+    let json = export::chrome_trace_json(&traces);
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.contains("\"name\":\"tile\""));
+    assert!(json.contains("\"name\":\"assemble\""));
+}
+
+#[test]
+fn lowrank_request_records_factor_spans() {
+    let svc = GemmService::start(traced_config(TraceSettings {
+        enabled: true,
+        ..Default::default()
+    }))
+    .unwrap();
+    let mut rng = Pcg64::seeded(603);
+    let a = Matrix::low_rank_noisy(96, 96, 6, 1e-5, &mut rng);
+    let b = Matrix::low_rank_noisy(96, 96, 6, 1e-5, &mut rng);
+    svc.gemm_blocking(GemmRequest::new(a, b).with_kernel(KernelKind::LowRankFp8))
+        .unwrap();
+    let traces = svc.tracer().recorder().recent();
+    let spans = &traces[0].spans;
+    let factors = spans.iter().filter(|s| s.name == "factor").count();
+    assert_eq!(factors, 2, "one factor span per operand");
+    assert!(
+        spans.iter().any(|s| s.name == "decompose"),
+        "cold factorization must record decompose: {:?}",
+        spans.iter().map(|s| s.name).collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Disabled tracing: bitwise-identical results, zero-allocation span sites.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_tracing_is_bitwise_invisible() {
+    let run = |enabled: bool| -> Vec<Matrix> {
+        let svc = GemmService::start(traced_config(TraceSettings {
+            enabled,
+            ..Default::default()
+        }))
+        .unwrap();
+        let mut rng = Pcg64::seeded(604);
+        let mut out = Vec::new();
+        for kind in [
+            KernelKind::DenseF32,
+            KernelKind::DenseFp8,
+            KernelKind::LowRankFp8,
+        ] {
+            let a = Matrix::low_rank_noisy(256, 256, 8, 1e-4, &mut rng);
+            let b = Matrix::low_rank_noisy(256, 256, 8, 1e-4, &mut rng);
+            let resp = svc
+                .gemm_blocking(GemmRequest::new(a, b).with_kernel(kind))
+                .unwrap();
+            out.push(resp.c);
+        }
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+        assert_eq!(a.data(), b.data(), "request {i}: tracing changed bits");
+    }
+}
+
+#[test]
+fn disabled_telemetry_hot_path_is_allocation_free() {
+    let registry = MetricsRegistry::new();
+    let counter = registry.counter("steady.counter");
+    let hist = registry.histogram("steady.hist");
+    // Warmup: intern both names, touch this thread's stripe ordinal, and
+    // exercise one disabled span site.
+    registry.count("steady.counter", 1);
+    registry.observe("steady.hist", 1.0);
+    {
+        let mut sp = trace_plane::span("warmup");
+        sp.attr_u64("i", 0);
+    }
+    let before = thread_allocs();
+    for i in 0..1000u64 {
+        counter.inc();
+        hist.observe(i as f64 + 1.0);
+        // String API steady state: read-lock + hash, no allocation.
+        registry.count("steady.counter", 1);
+        registry.observe("steady.hist", 2.0);
+        // Span sites with no active trace are inert.
+        let mut sp = trace_plane::span("steady");
+        sp.attr_u64("i", i);
+        sp.attr_str("kernel", "dense_f32");
+    }
+    let after = thread_allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "disabled telemetry hot path must not allocate"
+    );
+    assert_eq!(registry.counters()["steady.counter"], 1001 + 1000);
+}
