@@ -67,6 +67,7 @@ fn main() {
             factors_cached: cached,
             factored_output_ok: false,
             decomp_amortization: 1.0,
+            fp8_reencode: false,
         });
         println!(
             "selector @N={sz} ({label}): {} (predicted {:.2} ms, {:.1e} rel err)",

@@ -60,6 +60,7 @@ fn winner_map(d: &DeviceProfile) {
             factors_cached: false,
             factored_output_ok: false,
             decomp_amortization: 1.0,
+            fp8_reencode: false,
         };
         let c = selector.select(&inp);
         let tflops = Roofline::achieved_flops(2.0 * (n as f64).powi(3), c.cost.time_s) / 1e12;

@@ -1,0 +1,158 @@
+//! Accuracy-probe overhead and agreement — the accuracy-plane instrument.
+//!
+//! Three questions, answered with numbers:
+//!
+//! 1. What does probing cost a request? End-to-end `gemm_blocking`
+//!    latency with `[accuracy]` off, sampling 1-in-16 (the default-shaped
+//!    deployment) and sampling every request. Probes ride the shard
+//!    pool behind serving work, so the visible cost is the sampled
+//!    operand clone — at 1/16 it must sit within run-to-run noise.
+//! 2. What does one probe cost in isolation? `probe_rel_error` wall time
+//!    across sizes, against its O((mn + mk + kn)·s) matvec bound.
+//! 3. Does the estimator agree with ground truth? Measured vs probed
+//!    relative error on seeded-spectrum truncations, with the ratio in
+//!    each JSON row for CI to gate on.
+//!
+//! Every measurement prints one JSON record
+//! (`{"bench":"accuracy_probes","case":…}`) for CI's bench-smoke
+//! artifact collection, same shape as `telemetry_overhead`.
+
+use lowrank_gemm::accuracy::probe_rel_error;
+use lowrank_gemm::bench_harness::{bench, config_from_env, Measurement, Table};
+use lowrank_gemm::config::AccuracySettings;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::svd::truncated_svd;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+
+fn json_row(case: &str, n: usize, m: &Measurement) {
+    println!(
+        "{{\"bench\":\"accuracy_probes\",\"case\":\"{case}\",\"n\":{n},\
+         \"mean_s\":{:.6e},\"min_s\":{:.6e},\"max_s\":{:.6e},\"stddev_s\":{:.6e},\
+         \"iters\":{}}}",
+        m.mean_s, m.min_s, m.max_s, m.stddev_s, m.iters
+    );
+}
+
+fn probed_request_latency() {
+    let cfg = config_from_env();
+    let n = 256;
+    let mut rng = Pcg64::seeded(81);
+    let a = Matrix::gaussian(n, n, &mut rng);
+    let b = Matrix::gaussian(n, n, &mut rng);
+
+    let run = |accuracy: AccuracySettings| {
+        let svc = GemmService::start(ServiceConfig {
+            accuracy,
+            ..Default::default()
+        })
+        .unwrap();
+        let m = bench(&cfg, || {
+            svc.gemm_blocking(
+                GemmRequest::new(a.clone(), b.clone()).with_kernel(KernelKind::DenseF32),
+            )
+            .unwrap();
+        });
+        svc.drain();
+        m
+    };
+    let off = run(AccuracySettings::default());
+    let sparse = run(AccuracySettings {
+        enabled: true,
+        sample_every: 16,
+        probes: 8,
+        ..Default::default()
+    });
+    let dense = run(AccuracySettings {
+        enabled: true,
+        sample_every: 1,
+        probes: 8,
+        ..Default::default()
+    });
+
+    let mut table = Table::new(
+        "Request latency vs probe sampling rate [us]",
+        &["N", "unprobed", "1-in-16", "every req"],
+    );
+    table.row(&[
+        n.to_string(),
+        format!("{:8.1}", off.mean_s * 1e6),
+        format!(
+            "{:8.1} ({:+5.2}%)",
+            sparse.mean_s * 1e6,
+            (sparse.mean_s / off.mean_s - 1.0) * 100.0
+        ),
+        format!(
+            "{:8.1} ({:+5.2}%)",
+            dense.mean_s * 1e6,
+            (dense.mean_s / off.mean_s - 1.0) * 100.0
+        ),
+    ]);
+    table.print();
+    println!();
+    json_row("request_unprobed", n, &off);
+    json_row("request_probed_1_16", n, &sparse);
+    json_row("request_probed_1_1", n, &dense);
+}
+
+fn probe_cost_direct() {
+    let cfg = config_from_env();
+    let mut table = Table::new(
+        "probe_rel_error cost, s=8 probe vectors [us]",
+        &["N", "mean", "per probe"],
+    );
+    for n in [128usize, 256, 512] {
+        let mut rng = Pcg64::seeded(82 + n as u64);
+        let a = Matrix::gaussian(n, n, &mut rng);
+        let b = Matrix::gaussian(n, n, &mut rng);
+        let c = a.matmul(&b);
+        let m = bench(&cfg, || {
+            probe_rel_error(&a, &b, &c, 8, 4242).unwrap();
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:8.1}", m.mean_s * 1e6),
+            format!("{:8.2}", m.mean_s * 1e6 / 8.0),
+        ]);
+        json_row("probe_direct", n, &m);
+    }
+    table.print();
+    println!();
+}
+
+fn estimator_agreement() {
+    let mut rng = Pcg64::seeded(83);
+    let sv: Vec<f32> = (0..16).map(|i| 0.6f32.powi(i)).collect();
+    let mut table = Table::new(
+        "Estimator vs measured relative error (rank-r truncations)",
+        &["N", "rank", "measured", "estimated", "ratio"],
+    );
+    for (n, r) in [(128usize, 4usize), (256, 8), (384, 12)] {
+        let a = Matrix::with_spectrum(n, n, &sv, &mut rng);
+        let b = Matrix::gaussian(n, n, &mut rng);
+        let exact = a.matmul(&b);
+        let served = truncated_svd(&a, r).unwrap().reconstruct().matmul(&b);
+        let measured = served.rel_frobenius_distance(&exact) as f64;
+        let estimated = probe_rel_error(&a, &b, &served, 8, (n + r) as u64).unwrap();
+        let ratio = estimated / measured;
+        table.row(&[
+            n.to_string(),
+            r.to_string(),
+            format!("{measured:10.3e}"),
+            format!("{estimated:10.3e}"),
+            format!("{ratio:6.3}"),
+        ]);
+        println!(
+            "{{\"bench\":\"accuracy_probes\",\"case\":\"agreement\",\"n\":{n},\"rank\":{r},\
+             \"measured\":{measured:.6e},\"estimated\":{estimated:.6e},\"ratio\":{ratio:.4}}}"
+        );
+    }
+    table.print();
+    println!();
+}
+
+fn main() {
+    probed_request_latency();
+    probe_cost_direct();
+    estimator_agreement();
+}

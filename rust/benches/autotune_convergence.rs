@@ -43,6 +43,7 @@ fn inputs(n: usize) -> SelectorInputs {
         factors_cached: true,
         factored_output_ok: true,
         decomp_amortization: 1.0,
+        fp8_reencode: false,
     }
 }
 

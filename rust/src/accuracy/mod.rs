@@ -1,0 +1,58 @@
+//! The accuracy observability plane: online error probes, tolerance-SLO
+//! tracking, and a calibrated error model.
+//!
+//! The paper's value proposition is an accuracy claim (~1–2% relative
+//! error at N = 20480, r = 512, §5.4), yet the serving stack otherwise
+//! only ever *predicts* error — Eckart–Young bounds at decomposition time
+//! and the §5.4.4 heuristic in [`crate::lowrank::errors`] — so a
+//! request's `error_tolerance` is enforced on faith. Mixed-precision GEMM
+//! error depends strongly on operand distribution (LRAMM, SGEMM-cube in
+//! PAPERS.md), i.e. static models drift. This plane measures what was
+//! actually served, cheaply, and closes the loop the same way the
+//! autotune plane closes the latency loop:
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────────┐
+//!             │  AutoKernelSelector::predicted_error           │
+//!   request ─▶│   analytic model (§5.4.4 + quantization)       │
+//!             │   × ErrorModel::correction  ◀───────────────┐  │
+//!             └───────────────┬─────────────────────────────┼──┘
+//!                             ▼                             │
+//!               Backend::execute ──▶ response C ≈ A·B       │
+//!                             │ (one in sample_every,       │
+//!                             ▼  off the serving path)      │
+//!               probe_rel_error(A, B, C)  ── measured ────▶ │
+//!                       │                 ErrorModel::record ┘
+//!                       ▼              (EWMA of probed/predicted,
+//!               SloTracker + metrics    per (kernel, size-class,
+//!               (violations per 10k)        rank-class))
+//! ```
+//!
+//! - [`probe_rel_error`] estimates the served relative error with `s`
+//!   random matvec probes — O((m·n + m·k + k·n)·s), quadratic where the
+//!   exact check is cubic — scheduled as background work on the shard
+//!   pool so probes never block serving.
+//! - [`ErrorModel`] holds one EWMA ratio of probed/predicted error per
+//!   [`ErrorKey`] (kernel kind × log2 size-class × log2 rank-class),
+//!   feeding the selector's tolerance gate the same confidence-blended
+//!   way [`crate::autotune::CalibrationTable`] feeds its time estimates.
+//! - [`SloTracker`] turns probe outcomes into an SRE-style rolling error
+//!   budget (violations per 10k probed requests), surfaced through
+//!   `ServiceStats`, the exporters (`lrg_accuracy_*`), trace span
+//!   attributes, and the `accuracy` CLI subcommand.
+//!
+//! Everything is default-off: with `[accuracy]` disabled no probe work is
+//! scheduled and results are bit-identical to a build without the plane.
+//! This is the observability prerequisite for ROADMAP item 3
+//! (precision-recovery kernels priced by *measured* accuracy gain): a
+//! selector cannot price accuracy it never observes.
+
+pub mod model;
+pub mod plane;
+pub mod probe;
+pub mod slo;
+
+pub use model::{ErrorEntry, ErrorKey, ErrorModel};
+pub use plane::{AccuracyPlane, AccuracyStats, ProbeOutcome};
+pub use probe::probe_rel_error;
+pub use slo::{SloSnapshot, SloTracker, SLO_WINDOW};

@@ -1,0 +1,520 @@
+//! The calibrated error model: per-(kernel, size-class, rank-class) EWMA
+//! ratios of probed over predicted relative error.
+//!
+//! Structurally a sibling of [`autotune::CalibrationTable`] — same EWMA +
+//! confidence-blend math, same atomic tmp+rename persistence — but keyed
+//! one dimension finer: low-rank error depends on the served rank as
+//! strongly as on the shape (§5.4.4's `ε ≈ c·sqrt(n/r)`), so cells carry a
+//! log2 rank-class alongside the batcher's log2 size-class. The selector
+//! multiplies its analytic error prediction by
+//! [`ErrorModel::correction`], which is exactly 1.0 until a cell has been
+//! probed — routing on the assumed model until observation says otherwise.
+//!
+//! [`autotune::CalibrationTable`]: crate::autotune::CalibrationTable
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::kernels::KernelKind;
+use crate::runtime::json::{parse_json, Json};
+
+/// Probed/predicted error ratios outside this band are clamped. The band
+/// is deliberately tighter than the autotune table's (1e-6..1e6): the
+/// predicted relative error is itself clamped to [0, 1], so a correction
+/// beyond 1e3 saturates the product anyway, and a probe measuring *zero*
+/// error (exact kernel, rank ≥ true rank) must pull its cell toward the
+/// floor rather than poison the EWMA with a literal 0.
+pub const ERR_RATIO_MIN: f64 = 1e-3;
+/// Upper clamp for probed/predicted error ratios (see [`ERR_RATIO_MIN`]).
+pub const ERR_RATIO_MAX: f64 = 1e3;
+
+/// Cell key: kernel kind × log2 size-class × log2 rank-class.
+///
+/// The size-class matches [`BucketKey::of`] (shapes within 2x share a
+/// cell); the rank-class puts rank 0 (dense kernels, no factorization) in
+/// its own class 0 and buckets positive ranks within 2x, so `r = 16` and
+/// `r = 31` calibrate together but `r = 16` and `r = 512` do not.
+///
+/// [`BucketKey::of`]: crate::coordinator::batcher::BucketKey::of
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ErrorKey {
+    /// Kernel this cell calibrates.
+    pub kernel: KernelKind,
+    /// floor(log2(max dim)) — shapes within 2x share the cell.
+    pub size_class: u32,
+    /// 0 for dense (rank 0); `floor(log2(r)) + 1` otherwise.
+    pub rank_class: u32,
+}
+
+impl ErrorKey {
+    /// Classify a probed request.
+    pub fn of(kernel: KernelKind, m: usize, k: usize, n: usize, rank: usize) -> Self {
+        let dim = m.max(k).max(n).max(1);
+        ErrorKey {
+            kernel,
+            size_class: usize::BITS - 1 - dim.leading_zeros(),
+            rank_class: if rank == 0 {
+                0
+            } else {
+                usize::BITS - rank.leading_zeros()
+            },
+        }
+    }
+}
+
+/// One cell of the model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ErrorEntry {
+    /// EWMA of probed/predicted relative-error ratios.
+    pub ratio: f64,
+    /// How many probes have been folded into `ratio`.
+    pub samples: u64,
+}
+
+/// Concurrent table of measured corrections to the analytic error model.
+///
+/// Shared between the router's selector (reads on every routing decision)
+/// and the accuracy plane's probe jobs (one write per probed request), so
+/// all state sits behind a single mutex — probe completions are rare by
+/// construction (one in `sample_every` requests), far off the hot path.
+#[derive(Debug)]
+pub struct ErrorModel {
+    /// EWMA smoothing factor in (0, 1]: weight of the newest probe.
+    ewma_alpha: f64,
+    /// Prior strength of the analytic model, in probes: a cell with this
+    /// many observations sits halfway between the analytic prediction and
+    /// its probed EWMA (`min_samples` in the `[accuracy]` config).
+    prior_samples: f64,
+    cells: Mutex<HashMap<ErrorKey, ErrorEntry>>,
+    /// Periodic persistence: `(path, every)` flushes after each `every`-th
+    /// recorded probe (see the autotune table for the rationale — an
+    /// abrupt kill loses at most `every - 1` probes).
+    autosave: Option<(String, u64)>,
+    /// Probes recorded since construction (drives the autosave cadence).
+    recorded: AtomicU64,
+    /// Serializes concurrent save calls (tmp+rename writers must not
+    /// interleave on the same tmp file).
+    io_lock: Mutex<()>,
+}
+
+impl ErrorModel {
+    /// New empty model. `ewma_alpha` is clamped into (0, 1];
+    /// `min_samples` is the analytic prior's strength in probes.
+    pub fn new(ewma_alpha: f64, min_samples: u64) -> Self {
+        ErrorModel {
+            ewma_alpha: ewma_alpha.clamp(f64::MIN_POSITIVE, 1.0),
+            prior_samples: min_samples as f64,
+            cells: Mutex::new(HashMap::new()),
+            autosave: None,
+            recorded: AtomicU64::new(0),
+            io_lock: Mutex::new(()),
+        }
+    }
+
+    /// Enable periodic persistence: flush to `path` after every
+    /// `every`-th recorded probe (clamped to ≥ 1). Flush failures are
+    /// swallowed — losing a checkpoint must never fail a probe job.
+    pub fn set_autosave(&mut self, path: &str, every: u64) {
+        self.autosave = Some((path.to_string(), every.max(1)));
+    }
+
+    /// Fold one probed request into the model and return the cell's
+    /// updated correction factor. The predicted error must be finite and
+    /// positive; the probed error must be finite and **non-negative** —
+    /// a probe measuring exactly zero error is a real observation (the
+    /// whole point of admitting 0.0 into the error histograms) and lands
+    /// as a ratio clamped to [`ERR_RATIO_MIN`].
+    pub fn record(
+        &self,
+        kernel: KernelKind,
+        m: usize,
+        k: usize,
+        n: usize,
+        rank: usize,
+        predicted: f64,
+        probed: f64,
+    ) -> Option<f64> {
+        if !predicted.is_finite() || !probed.is_finite() || predicted <= 0.0 || probed < 0.0 {
+            return None;
+        }
+        let ratio = (probed / predicted).clamp(ERR_RATIO_MIN, ERR_RATIO_MAX);
+        let key = ErrorKey::of(kernel, m, k, n, rank);
+        let blended = {
+            let mut cells = self.cells.lock().unwrap();
+            let e = cells.entry(key).or_insert(ErrorEntry { ratio, samples: 0 });
+            if e.samples > 0 {
+                e.ratio = self.ewma_alpha * ratio + (1.0 - self.ewma_alpha) * e.ratio;
+            }
+            e.samples += 1;
+            self.blend(e)
+        };
+        if let Some((path, every)) = &self.autosave {
+            // Cells lock released above; try_lock keeps the cadence
+            // best-effort so a probe job never stalls behind another
+            // flusher (matches the autotune table).
+            if (self.recorded.fetch_add(1, Ordering::Relaxed) + 1) % every == 0 {
+                if let Ok(_io) = self.io_lock.try_lock() {
+                    let _ = self.write_to(path);
+                }
+            }
+        }
+        Some(blended)
+    }
+
+    /// Correction factor for one routing decision: the confidence-weighted
+    /// blend of the analytic prior (1.0) and the cell's probed EWMA.
+    /// Exactly 1.0 when the cell has never been probed, so an empty model
+    /// leaves the selector's arithmetic bit-identical.
+    pub fn correction(&self, kernel: KernelKind, m: usize, k: usize, n: usize, rank: usize) -> f64 {
+        let key = ErrorKey::of(kernel, m, k, n, rank);
+        self.cells
+            .lock()
+            .unwrap()
+            .get(&key)
+            .map(|e| self.blend(e))
+            .unwrap_or(1.0)
+    }
+
+    /// `prior·1.0 + samples·ratio` over `prior + samples`: with
+    /// `samples == prior_samples` the cell trusts probes exactly as much
+    /// as the analytic model.
+    fn blend(&self, e: &ErrorEntry) -> f64 {
+        let n = e.samples as f64;
+        (self.prior_samples + n * e.ratio) / (self.prior_samples + n)
+    }
+
+    /// Number of populated cells.
+    pub fn len(&self) -> usize {
+        self.cells.lock().unwrap().len()
+    }
+
+    /// Has any cell been populated?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point-in-time copy of every cell.
+    pub fn snapshot(&self) -> Vec<(ErrorKey, ErrorEntry)> {
+        self.cells
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (*k, *v))
+            .collect()
+    }
+
+    /// Serialize to the persistence format (deterministic cell order,
+    /// round-trip `Display` for `f64` so save → load is bit-exact).
+    pub fn to_json(&self) -> String {
+        let mut entries = self.snapshot();
+        entries.sort_by_key(|(k, _)| (k.kernel.id(), k.size_class, k.rank_class));
+        let rows: Vec<String> = entries
+            .iter()
+            .map(|(k, e)| {
+                format!(
+                    "{{\"kernel\":\"{}\",\"size_class\":{},\"rank_class\":{},\"ratio\":{},\"samples\":{}}}",
+                    k.kernel.id(),
+                    k.size_class,
+                    k.rank_class,
+                    e.ratio,
+                    e.samples
+                )
+            })
+            .collect();
+        format!("{{\"version\":1,\"entries\":[{}]}}\n", rows.join(","))
+    }
+
+    /// Write the model to `path` atomically (temp file + rename); a crash
+    /// mid-save must never leave a truncated file, because a corrupt one
+    /// deliberately fails the next service start.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let _io = self.io_lock.lock().unwrap();
+        self.write_to(path)
+    }
+
+    /// The tmp+rename write itself; callers hold (or deliberately
+    /// skipped) the io_lock.
+    fn write_to(&self, path: &str) -> Result<()> {
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, self.to_json())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Replace the model's contents from a file written by
+    /// [`save`](ErrorModel::save). Returns the number of cells loaded.
+    /// The smoothing/prior knobs stay as configured — only probes persist.
+    pub fn load(&self, path: &str) -> Result<usize> {
+        let text = std::fs::read_to_string(path)?;
+        self.load_json(&text)
+            .map_err(|e| Error::Config(format!("error model {path}: {e}")))
+    }
+
+    /// [`load`](ErrorModel::load) from already-read JSON text.
+    pub fn load_json(&self, text: &str) -> Result<usize> {
+        let doc = parse_json(text)?;
+        match doc.get("version").and_then(Json::as_usize) {
+            Some(1) => {}
+            v => {
+                return Err(Error::Config(format!(
+                    "unsupported error-model version {v:?}"
+                )))
+            }
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("missing `entries` array".into()))?;
+        let mut cells = HashMap::new();
+        for e in entries {
+            let kid = e
+                .get("kernel")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Config("entry missing `kernel`".into()))?;
+            let kernel = KernelKind::parse(kid)
+                .ok_or_else(|| Error::Config(format!("unknown kernel `{kid}`")))?;
+            let size_class = e
+                .get("size_class")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Config("entry missing `size_class`".into()))?
+                as u32;
+            let rank_class = e
+                .get("rank_class")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Config("entry missing `rank_class`".into()))?
+                as u32;
+            let ratio = e
+                .get("ratio")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Config("entry missing `ratio`".into()))?;
+            if !ratio.is_finite() || ratio <= 0.0 {
+                return Err(Error::Config(format!("degenerate ratio {ratio}")));
+            }
+            let samples = e
+                .get("samples")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Config("entry missing `samples`".into()))?
+                as u64;
+            if samples == 0 {
+                // A zero-sample cell is degenerate: blend() would divide
+                // 0/0 under min_samples = 0, and record() would treat the
+                // cell as unseeded and discard its first probe.
+                return Err(Error::Config("entry with samples = 0".into()));
+            }
+            cells.insert(
+                ErrorKey {
+                    kernel,
+                    size_class,
+                    rank_class,
+                },
+                ErrorEntry {
+                    ratio: ratio.clamp(ERR_RATIO_MIN, ERR_RATIO_MAX),
+                    samples,
+                },
+            );
+        }
+        let n = cells.len();
+        *self.cells.lock().unwrap() = cells;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ErrorModel {
+        ErrorModel::new(0.5, 4)
+    }
+
+    #[test]
+    fn rank_classing() {
+        let k = |r| ErrorKey::of(KernelKind::LowRankFp8, 1024, 1024, 1024, r).rank_class;
+        assert_eq!(k(0), 0, "dense rank 0 owns class 0");
+        assert_eq!(k(1), 1);
+        assert_eq!(k(16), 5);
+        assert_eq!(k(31), 5, "ranks within 2x share a class");
+        assert_eq!(k(32), 6);
+        // Size-classing matches the batcher's (within-2x shapes batch).
+        let a = ErrorKey::of(KernelKind::DenseF32, 1024, 1024, 1024, 0);
+        let b = ErrorKey::of(KernelKind::DenseF32, 1500, 1500, 1500, 0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn first_probe_seeds_the_ewma() {
+        let t = model();
+        t.record(KernelKind::LowRankFp8, 2048, 2048, 2048, 64, 0.01, 0.03);
+        let (_, e) = t.snapshot()[0];
+        assert_eq!(e.ratio, 3.0, "first probe must set the EWMA directly");
+        assert_eq!(e.samples, 1);
+    }
+
+    #[test]
+    fn ewma_update_math() {
+        let t = model();
+        t.record(KernelKind::LowRankFp8, 2048, 2048, 2048, 64, 0.01, 0.02);
+        t.record(KernelKind::LowRankFp8, 2048, 2048, 2048, 64, 0.01, 0.04);
+        let (_, e) = t.snapshot()[0];
+        // alpha=0.5: 0.5·4 + 0.5·2 = 3.
+        assert!((e.ratio - 3.0).abs() < 1e-12, "ratio {}", e.ratio);
+        assert_eq!(e.samples, 2);
+    }
+
+    #[test]
+    fn confidence_blend_walks_prior_to_posterior() {
+        let t = model();
+        // Unprobed: pure analytic prior.
+        assert_eq!(t.correction(KernelKind::LowRankAuto, 512, 512, 512, 32), 1.0);
+        // One probe of ratio 9, prior strength 4: (4 + 1·9)/5 = 2.6.
+        t.record(KernelKind::LowRankAuto, 512, 512, 512, 32, 0.01, 0.09);
+        let c1 = t.correction(KernelKind::LowRankAuto, 512, 512, 512, 32);
+        assert!((c1 - 2.6).abs() < 1e-12, "c1 {c1}");
+        // More consistent probes → closer to the probed ratio.
+        for _ in 0..40 {
+            t.record(KernelKind::LowRankAuto, 512, 512, 512, 32, 0.01, 0.09);
+        }
+        let c2 = t.correction(KernelKind::LowRankAuto, 512, 512, 512, 32);
+        assert!(c2 > 8.0 && c2 < 9.0, "c2 {c2}");
+    }
+
+    #[test]
+    fn cells_split_by_rank_class() {
+        let t = model();
+        t.record(KernelKind::LowRankFp8, 4096, 4096, 4096, 128, 0.01, 0.05);
+        // Same rank class (within 2x) shares the cell...
+        assert!(t.correction(KernelKind::LowRankFp8, 4096, 4096, 4096, 200) > 1.0);
+        // ...a different rank class, size class, or kernel does not.
+        assert_eq!(t.correction(KernelKind::LowRankFp8, 4096, 4096, 4096, 512), 1.0);
+        assert_eq!(t.correction(KernelKind::LowRankFp8, 8192, 8192, 8192, 128), 1.0);
+        assert_eq!(t.correction(KernelKind::LowRankAuto, 4096, 4096, 4096, 128), 1.0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn zero_probed_error_is_admitted_and_clamped() {
+        let t = model();
+        // An exact result (probed error 0.0) is a real observation: it
+        // must pull the cell toward the floor, not be discarded.
+        assert!(t
+            .record(KernelKind::DenseF32, 1024, 1024, 1024, 0, 1e-6, 0.0)
+            .is_some());
+        let (_, e) = t.snapshot()[0];
+        assert_eq!(e.ratio, ERR_RATIO_MIN);
+    }
+
+    #[test]
+    fn degenerate_probes_rejected_and_clamped() {
+        let t = model();
+        assert!(t.record(KernelKind::DenseF32, 64, 64, 64, 0, 0.0, 0.01).is_none());
+        assert!(t.record(KernelKind::DenseF32, 64, 64, 64, 0, 0.01, -0.5).is_none());
+        assert!(t
+            .record(KernelKind::DenseF32, 64, 64, 64, 0, f64::NAN, 0.01)
+            .is_none());
+        assert!(t
+            .record(KernelKind::DenseF32, 64, 64, 64, 0, 0.01, f64::INFINITY)
+            .is_none());
+        assert!(t.is_empty());
+        // An absurd-but-finite ratio lands clamped, not unbounded.
+        t.record(KernelKind::DenseF32, 64, 64, 64, 0, 1e-10, 1e10);
+        let (_, e) = t.snapshot()[0];
+        assert_eq!(e.ratio, ERR_RATIO_MAX);
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let t = model();
+        t.record(KernelKind::LowRankFp8, 8192, 8192, 8192, 512, 0.016, 0.021);
+        t.record(KernelKind::LowRankAuto, 2048, 2048, 2048, 64, 0.01, 0.008);
+        t.record(KernelKind::LowRankAuto, 2048, 2048, 2048, 64, 0.01, 0.012);
+        let json = t.to_json();
+
+        let fresh = ErrorModel::new(0.5, 4);
+        assert_eq!(fresh.load_json(&json).unwrap(), 2);
+        let mut a = t.snapshot();
+        let mut b = fresh.snapshot();
+        a.sort_by_key(|(k, _)| (k.kernel.id(), k.size_class, k.rank_class));
+        b.sort_by_key(|(k, _)| (k.kernel.id(), k.size_class, k.rank_class));
+        assert_eq!(a, b, "round-trip must be bit-exact");
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let path = std::env::temp_dir().join(format!(
+            "lrg-errmodel-{}-{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let t = model();
+        t.record(KernelKind::DenseFp8, 4096, 4096, 4096, 0, 0.02, 0.03);
+        t.save(&path).unwrap();
+        let fresh = ErrorModel::new(0.2, 8);
+        assert_eq!(fresh.load(&path).unwrap(), 1);
+        assert_eq!(fresh.snapshot(), t.snapshot());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn autosave_flushes_every_nth_probe() {
+        let path = std::env::temp_dir().join(format!(
+            "lrg-errmodel-autosave-{}-{:?}.json",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+
+        let mut t = ErrorModel::new(0.5, 4);
+        t.set_autosave(&path, 3);
+        t.record(KernelKind::LowRankFp8, 256, 256, 256, 16, 0.01, 0.02);
+        t.record(KernelKind::LowRankFp8, 256, 256, 256, 16, 0.01, 0.02);
+        assert!(
+            !std::path::Path::new(&path).exists(),
+            "no flush before the cadence"
+        );
+        t.record(KernelKind::LowRankFp8, 256, 256, 256, 16, 0.01, 0.02);
+        assert!(
+            std::path::Path::new(&path).exists(),
+            "3rd probe must flush (abrupt-kill durability)"
+        );
+        let fresh = ErrorModel::new(0.5, 4);
+        assert_eq!(fresh.load(&path).unwrap(), 1);
+        assert_eq!(fresh.snapshot(), t.snapshot());
+
+        // Rejected (degenerate) probes do not advance the cadence.
+        let _ = std::fs::remove_file(&path);
+        for _ in 0..5 {
+            assert!(t.record(KernelKind::DenseF32, 64, 64, 64, 0, 0.0, 0.01).is_none());
+        }
+        assert!(!std::path::Path::new(&path).exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_malformed_documents() {
+        let t = model();
+        assert!(t.load_json("{}").is_err());
+        assert!(t.load_json("{\"version\":2,\"entries\":[]}").is_err());
+        assert!(t
+            .load_json("{\"version\":1,\"entries\":[{\"kernel\":\"nope\",\"size_class\":3,\"rank_class\":1,\"ratio\":1.0,\"samples\":1}]}")
+            .is_err());
+        assert!(
+            t.load_json("{\"version\":1,\"entries\":[{\"kernel\":\"dense_f32\",\"size_class\":3,\"ratio\":1.0,\"samples\":1}]}")
+                .is_err(),
+            "entries without a rank_class are rejected"
+        );
+        assert!(t
+            .load_json("{\"version\":1,\"entries\":[{\"kernel\":\"dense_f32\",\"size_class\":3,\"rank_class\":0,\"ratio\":-1.0,\"samples\":1}]}")
+            .is_err());
+        assert!(t
+            .load_json("{\"version\":1,\"entries\":[{\"kernel\":\"dense_f32\",\"size_class\":3,\"rank_class\":0,\"ratio\":1.0,\"samples\":0}]}")
+            .is_err());
+        // A valid empty document clears the model.
+        t.record(KernelKind::DenseF32, 64, 64, 64, 0, 0.01, 0.02);
+        assert_eq!(t.load_json("{\"version\":1,\"entries\":[]}").unwrap(), 0);
+        assert!(t.is_empty());
+    }
+}

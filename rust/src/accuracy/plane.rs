@@ -1,0 +1,286 @@
+//! The accuracy plane: sampling policy, metric handles, and the glue
+//! between probe results and the error model / SLO tracker.
+//!
+//! One [`AccuracyPlane`] lives on the service (behind an `Arc`). The
+//! dispatch loop asks [`AccuracyPlane::sample`] whether a completed
+//! request should be probed — a single relaxed atomic increment on the
+//! serving path — and, when it should, clones the operands and hands a
+//! probe job to the shard pool. The probe job calls
+//! [`AccuracyPlane::observe`] with the measured error, which fans the
+//! observation out to the error model (EWMA calibration), the SLO
+//! tracker (violation budget), and the metrics registry
+//! (`accuracy.*` counters and per-kernel error histograms).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::accuracy::model::ErrorModel;
+use crate::accuracy::slo::{SloSnapshot, SloTracker};
+use crate::config::AccuracySettings;
+use crate::kernels::KernelKind;
+use crate::metrics::{Counter, HistogramHandle, MetricsRegistry};
+
+/// What one probe observation amounted to (returned to the probe job so
+/// it can attach trace attributes without re-deriving anything).
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeOutcome {
+    /// Measured relative error from the probe estimator.
+    pub measured: f64,
+    /// The analytic prediction the request was routed on.
+    pub predicted: f64,
+    /// Did the measured error exceed the request's tolerance?
+    pub violation: bool,
+    /// The model cell's correction factor after folding this probe in
+    /// (1.0 if the observation was degenerate and rejected).
+    pub correction: f64,
+}
+
+/// Point-in-time accuracy statistics, surfaced through `ServiceStats`
+/// and the `accuracy` CLI subcommand.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccuracyStats {
+    /// Requests probed since start.
+    pub probed: u64,
+    /// Lifetime tolerance violations among probed requests.
+    pub violations: u64,
+    /// Probes currently in the rolling SLO window.
+    pub window: u64,
+    /// Violations among those.
+    pub window_violations: u64,
+    /// The rolling error budget: violations per 10k probed requests.
+    pub violations_per_10k: f64,
+    /// Populated cells in the calibrated error model.
+    pub model_cells: usize,
+}
+
+/// The accuracy observability plane (see the module docs).
+#[derive(Debug)]
+pub struct AccuracyPlane {
+    settings: AccuracySettings,
+    model: Arc<ErrorModel>,
+    slo: SloTracker,
+    /// Completed requests seen by [`sample`](AccuracyPlane::sample) —
+    /// drives the deterministic every-Nth cadence.
+    seen: AtomicU64,
+    probed: Arc<Counter>,
+    violations: Arc<Counter>,
+    probe_failures: Arc<Counter>,
+    probe_us: Arc<HistogramHandle>,
+    /// Per-kernel measured-error histograms, indexed parallel to
+    /// [`KernelKind::ALL`].
+    errors: Vec<Arc<HistogramHandle>>,
+}
+
+impl AccuracyPlane {
+    /// Build the plane: interns its metric handles up front so probe
+    /// jobs never take the registry's interning lock.
+    pub fn new(
+        settings: AccuracySettings,
+        model: Arc<ErrorModel>,
+        registry: &MetricsRegistry,
+    ) -> Self {
+        AccuracyPlane {
+            settings,
+            model,
+            slo: SloTracker::new(),
+            seen: AtomicU64::new(0),
+            probed: registry.counter("accuracy.probed"),
+            violations: registry.counter("accuracy.violation"),
+            probe_failures: registry.counter("accuracy.probe_failed"),
+            probe_us: registry.histogram("accuracy.probe_us"),
+            errors: KernelKind::ALL
+                .iter()
+                .map(|k| registry.histogram(&format!("accuracy.error.{}", k.id())))
+                .collect(),
+        }
+    }
+
+    /// The plane's configuration.
+    pub fn settings(&self) -> &AccuracySettings {
+        &self.settings
+    }
+
+    /// The calibrated error model (shared with the router's selector).
+    pub fn model(&self) -> &Arc<ErrorModel> {
+        &self.model
+    }
+
+    /// Should this completed request be probed? Deterministic every-Nth
+    /// sampling: exactly one in `sample_every` calls returns true,
+    /// starting with the first — a single relaxed `fetch_add` on the
+    /// serving path, no RNG, no allocation.
+    pub fn sample(&self) -> bool {
+        self.seen.fetch_add(1, Ordering::Relaxed) % self.settings.sample_every == 0
+    }
+
+    /// Probe-vector seed for one request: the configured base seed mixed
+    /// with the request id (splitmix-style), so probes are deterministic
+    /// per request yet decorrelated across requests.
+    pub fn probe_seed(&self, request_id: u64) -> u64 {
+        self.settings
+            .seed
+            .wrapping_add(request_id.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    /// Fold one probe measurement into the plane. `measured` is the probe
+    /// estimator's relative error, `predicted` the analytic prediction
+    /// the request was routed on, `tolerance` the request's bound, and
+    /// `elapsed_us` what the probe itself cost (observability of the
+    /// observer).
+    #[allow(clippy::too_many_arguments)]
+    pub fn observe(
+        &self,
+        kernel: KernelKind,
+        m: usize,
+        k: usize,
+        n: usize,
+        rank: usize,
+        predicted: f64,
+        measured: f64,
+        tolerance: f64,
+        elapsed_us: f64,
+    ) -> ProbeOutcome {
+        let violation = measured > tolerance;
+        self.probed.inc();
+        if violation {
+            self.violations.inc();
+        }
+        self.slo.record(violation);
+        self.probe_us.observe(elapsed_us);
+        if let Some(h) = KernelKind::ALL
+            .iter()
+            .position(|kk| *kk == kernel)
+            .and_then(|i| self.errors.get(i))
+        {
+            h.observe(measured);
+        }
+        let correction = self
+            .model
+            .record(kernel, m, k, n, rank, predicted, measured)
+            .unwrap_or(1.0);
+        ProbeOutcome {
+            measured,
+            predicted,
+            violation,
+            correction,
+        }
+    }
+
+    /// A probe job could not produce an estimate (shape mismatch after a
+    /// factored-output response, degenerate probes). Counted, never
+    /// fatal.
+    pub fn probe_failed(&self) {
+        self.probe_failures.inc();
+    }
+
+    /// SLO snapshot (see [`SloTracker::snapshot`]).
+    pub fn slo(&self) -> SloSnapshot {
+        self.slo.snapshot()
+    }
+
+    /// Point-in-time statistics for `ServiceStats` and the CLI.
+    pub fn stats(&self) -> AccuracyStats {
+        let slo = self.slo.snapshot();
+        AccuracyStats {
+            probed: slo.probed,
+            violations: slo.violations,
+            window: slo.window,
+            window_violations: slo.window_violations,
+            violations_per_10k: slo.violations_per_10k(),
+            model_cells: self.model.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(sample_every: u64) -> AccuracyPlane {
+        let settings = AccuracySettings {
+            enabled: true,
+            sample_every,
+            ..Default::default()
+        };
+        AccuracyPlane::new(
+            settings,
+            Arc::new(ErrorModel::new(0.2, 5)),
+            &MetricsRegistry::new(),
+        )
+    }
+
+    #[test]
+    fn deterministic_every_nth_sampling() {
+        let p = plane(4);
+        let picks: Vec<bool> = (0..12).map(|_| p.sample()).collect();
+        assert_eq!(
+            picks,
+            [true, false, false, false, true, false, false, false, true, false, false, false],
+            "exactly one in sample_every, starting with the first"
+        );
+        let p1 = plane(1);
+        assert!((0..5).all(|_| p1.sample()), "sample_every = 1 probes all");
+    }
+
+    #[test]
+    fn probe_seeds_are_decorrelated_but_replayable() {
+        let p = plane(1);
+        assert_eq!(p.probe_seed(7), p.probe_seed(7));
+        assert_ne!(p.probe_seed(7), p.probe_seed(8));
+    }
+
+    #[test]
+    fn observe_fans_out_to_model_slo_and_metrics() {
+        let reg = MetricsRegistry::new();
+        let model = Arc::new(ErrorModel::new(0.5, 4));
+        let p = AccuracyPlane::new(AccuracySettings::default(), model, &reg);
+
+        // In-tolerance probe.
+        let ok = p.observe(KernelKind::LowRankFp8, 512, 512, 512, 64, 0.01, 0.012, 0.05, 3.0);
+        assert!(!ok.violation);
+        assert!((ok.measured - 0.012).abs() < 1e-12);
+        // Out-of-tolerance probe.
+        let bad = p.observe(KernelKind::LowRankFp8, 512, 512, 512, 64, 0.01, 0.09, 0.05, 3.0);
+        assert!(bad.violation);
+        assert!(bad.correction > 1.0, "model must have absorbed the probes");
+
+        let s = p.stats();
+        assert_eq!(s.probed, 2);
+        assert_eq!(s.violations, 1);
+        assert_eq!(s.window, 2);
+        assert_eq!(s.window_violations, 1);
+        assert!((s.violations_per_10k - 5000.0).abs() < 1e-9);
+        assert_eq!(s.model_cells, 1);
+
+        let counters = reg.counters();
+        assert_eq!(counters["accuracy.probed"], 2);
+        assert_eq!(counters["accuracy.violation"], 1);
+        let hists = reg.histogram_summaries();
+        assert_eq!(hists["accuracy.error.lowrank_fp8"].count, 2);
+        assert_eq!(hists["accuracy.probe_us"].count, 2);
+    }
+
+    #[test]
+    fn degenerate_probe_keeps_prior_correction() {
+        let p = plane(1);
+        let o = p.observe(KernelKind::DenseF32, 64, 64, 64, 0, 0.0, 0.01, 0.05, 1.0);
+        assert_eq!(o.correction, 1.0, "rejected observation leaves the prior");
+        assert_eq!(p.stats().model_cells, 0);
+        // It still counts as a probe for SLO purposes: the request WAS
+        // measured, only the model update was impossible.
+        assert_eq!(p.stats().probed, 1);
+    }
+
+    #[test]
+    fn probe_failures_counted() {
+        let reg = MetricsRegistry::new();
+        let p = AccuracyPlane::new(
+            AccuracySettings::default(),
+            Arc::new(ErrorModel::new(0.2, 5)),
+            &reg,
+        );
+        p.probe_failed();
+        assert_eq!(reg.counters()["accuracy.probe_failed"], 1);
+        assert_eq!(p.stats().probed, 0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Stochastic error probes: estimate the relative error of a served
+//! product without ever forming the exact O(m·k·n) reference.
+//!
+//! For a served result `C ≈ A·B`, push `s` random probe vectors `x`
+//! through both sides and compare the images:
+//!
+//! ```text
+//!   est² = Σ_x ‖C·x − A·(B·x)‖²  /  Σ_x ‖A·(B·x)‖²
+//! ```
+//!
+//! Each probe costs one matvec per operand — O((m·n + m·k + k·n)·s) total,
+//! quadratic where the exact check is cubic. For Gaussian probes this is
+//! the classic Hutchinson-style stochastic norm estimate: `E‖M·x‖² =
+//! ‖M‖_F²`, so the estimator converges on the relative **Frobenius**
+//! error, the same quantity [`measured_rel_error`] reports — a handful of
+//! probes lands within a small factor of it with high probability.
+//!
+//! Probe vectors come from a seeded [`Pcg64`], so a probe for a given
+//! request id is deterministic and replayable.
+//!
+//! [`measured_rel_error`]: crate::lowrank::errors::measured_rel_error
+
+use crate::linalg::matrix::Matrix;
+use crate::linalg::rng::Pcg64;
+
+/// Estimate the relative Frobenius error of `c` as an approximation of
+/// `a·b`, using `probes` random probe vectors drawn from a generator
+/// seeded with `seed`.
+///
+/// Returns `None` when the shapes are inconsistent or `probes == 0`;
+/// returns `Some(0.0)` for the degenerate all-zero exact product only
+/// when the served product is also (numerically) zero.
+pub fn probe_rel_error(a: &Matrix, b: &Matrix, c: &Matrix, probes: usize, seed: u64) -> Option<f64> {
+    if probes == 0
+        || a.cols() != b.rows()
+        || c.rows() != a.rows()
+        || c.cols() != b.cols()
+    {
+        return None;
+    }
+    let mut rng = Pcg64::seeded(seed);
+    let mut x = vec![0.0f32; b.cols()];
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for _ in 0..probes {
+        rng.fill_gaussian(&mut x);
+        let bx = b.matvec(&x);
+        let exact = a.matvec(&bx);
+        let served = c.matvec(&x);
+        for (s, e) in served.iter().zip(&exact) {
+            let d = (*s as f64) - (*e as f64);
+            num += d * d;
+            den += (*e as f64) * (*e as f64);
+        }
+    }
+    if den <= 0.0 {
+        // The exact product annihilated every probe: either A·B = 0 (any
+        // nonzero C is infinitely wrong — report 1.0, the zero-matrix
+        // baseline) or the probes were degenerate.
+        return Some(if num <= 0.0 { 0.0 } else { 1.0 });
+    }
+    Some((num / den).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::errors::eckart_young_rel_error;
+    use crate::linalg::svd::truncated_svd;
+
+    #[test]
+    fn exact_product_probes_to_zero() {
+        let mut rng = Pcg64::seeded(7);
+        let a = Matrix::gaussian(24, 16, &mut rng);
+        let b = Matrix::gaussian(16, 20, &mut rng);
+        let c = a.matmul(&b);
+        let e = probe_rel_error(&a, &b, &c, 4, 99).unwrap();
+        // Only f32 matvec-vs-matmul rounding noise remains.
+        assert!(e < 1e-5, "e = {e}");
+    }
+
+    #[test]
+    fn shape_mismatch_and_zero_probes_rejected() {
+        let mut rng = Pcg64::seeded(8);
+        let a = Matrix::gaussian(8, 6, &mut rng);
+        let b = Matrix::gaussian(6, 10, &mut rng);
+        let c = a.matmul(&b);
+        assert!(probe_rel_error(&a, &b, &c, 0, 1).is_none());
+        let wrong = Matrix::zeros(8, 9);
+        assert!(probe_rel_error(&a, &b, &wrong, 4, 1).is_none());
+        let wrong_b = Matrix::zeros(5, 10);
+        assert!(probe_rel_error(&a, &wrong_b, &c, 4, 1).is_none());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut rng = Pcg64::seeded(9);
+        let a = Matrix::gaussian(16, 12, &mut rng);
+        let b = Matrix::gaussian(12, 16, &mut rng);
+        let c = Matrix::zeros(16, 16);
+        let e1 = probe_rel_error(&a, &b, &c, 6, 42).unwrap();
+        let e2 = probe_rel_error(&a, &b, &c, 6, 42).unwrap();
+        let e3 = probe_rel_error(&a, &b, &c, 6, 43).unwrap();
+        assert_eq!(e1, e2, "same seed must replay bit-identically");
+        assert_ne!(e1, e3, "different seed must draw different probes");
+    }
+
+    #[test]
+    fn zero_approximation_of_nonzero_product_is_total_error() {
+        let mut rng = Pcg64::seeded(10);
+        let a = Matrix::gaussian(12, 8, &mut rng);
+        let b = Matrix::gaussian(8, 12, &mut rng);
+        let c = Matrix::zeros(12, 12);
+        let e = probe_rel_error(&a, &b, &c, 8, 5).unwrap();
+        // ‖0 − AB‖/‖AB‖ = 1 exactly; the stochastic estimate of a ratio
+        // with identical numerator and denominator is exact.
+        assert!((e - 1.0).abs() < 1e-6, "e = {e}");
+    }
+
+    #[test]
+    fn zero_exact_product_edge_case() {
+        let a = Matrix::zeros(6, 4);
+        let b = Matrix::zeros(4, 6);
+        let c = Matrix::zeros(6, 6);
+        assert_eq!(probe_rel_error(&a, &b, &c, 4, 1).unwrap(), 0.0);
+        let mut rng = Pcg64::seeded(11);
+        let wrong = Matrix::gaussian(6, 6, &mut rng);
+        assert_eq!(probe_rel_error(&a, &b, &wrong, 4, 1).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn agrees_with_truncation_error_on_known_spectrum() {
+        // B = I so A·B = A, and C = rank-r truncation of A: the true
+        // relative error is the Eckart–Young tail, known in closed form.
+        let mut rng = Pcg64::seeded(12);
+        let sv = [8.0, 5.0, 3.0, 1.5, 0.8, 0.4, 0.2, 0.1];
+        let a = Matrix::with_spectrum(32, 28, &sv, &mut rng);
+        let mut b = Matrix::zeros(28, 28);
+        for i in 0..28 {
+            b.data_mut()[i * 28 + i] = 1.0;
+        }
+        for r in [2usize, 4, 6] {
+            let c = truncated_svd(&a, r).unwrap().reconstruct();
+            let truth = eckart_young_rel_error(&sv, r) as f64;
+            let est = probe_rel_error(&a, &b, &c, 8, 77).unwrap();
+            assert!(
+                est > truth / 2.0 && est < truth * 2.0,
+                "r={r}: est {est} vs truth {truth}"
+            );
+        }
+    }
+}

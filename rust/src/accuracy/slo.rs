@@ -1,0 +1,130 @@
+//! Tolerance-SLO tracking: a rolling error budget over probed requests.
+//!
+//! Every probe outcome lands here as a pass/violation bit. Alongside the
+//! lifetime counters, a bounded window of the most recent outcomes yields
+//! the *current* violation rate, expressed in SRE error-budget units —
+//! **violations per 10k probed requests** — so a drifting workload shows
+//! up in the budget long before the lifetime ratio moves.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Outcomes retained in the rolling window (the budget's denominator is
+/// capped at this, matching the "per 10k probed" unit).
+pub const SLO_WINDOW: usize = 10_000;
+
+/// Point-in-time view of the tracker (see [`SloTracker::snapshot`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloSnapshot {
+    /// Probes recorded since start.
+    pub probed: u64,
+    /// Lifetime tolerance violations.
+    pub violations: u64,
+    /// Outcomes currently in the rolling window (≤ [`SLO_WINDOW`]).
+    pub window: u64,
+    /// Violations among those.
+    pub window_violations: u64,
+}
+
+impl SloSnapshot {
+    /// The rolling error budget: violations per 10k probed requests,
+    /// scaled up from the window when it holds fewer than 10k outcomes.
+    /// 0.0 when nothing has been probed yet.
+    pub fn violations_per_10k(&self) -> f64 {
+        if self.window == 0 {
+            0.0
+        } else {
+            self.window_violations as f64 * 10_000.0 / self.window as f64
+        }
+    }
+}
+
+/// Rolling tolerance-SLO tracker. Lifetime counters are lock-free; the
+/// window sits behind a mutex touched only by probe jobs (one in
+/// `sample_every` requests) and stat readers — never the serving path.
+#[derive(Debug, Default)]
+pub struct SloTracker {
+    probed: AtomicU64,
+    violations: AtomicU64,
+    window: Mutex<VecDeque<bool>>,
+}
+
+impl SloTracker {
+    /// New empty tracker.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one probe outcome.
+    pub fn record(&self, violation: bool) {
+        self.probed.fetch_add(1, Ordering::Relaxed);
+        if violation {
+            self.violations.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut w = self.window.lock().unwrap();
+        if w.len() == SLO_WINDOW {
+            w.pop_front();
+        }
+        w.push_back(violation);
+    }
+
+    /// Point-in-time view.
+    pub fn snapshot(&self) -> SloSnapshot {
+        let w = self.window.lock().unwrap();
+        SloSnapshot {
+            probed: self.probed.load(Ordering::Relaxed),
+            violations: self.violations.load(Ordering::Relaxed),
+            window: w.len() as u64,
+            window_violations: w.iter().filter(|&&v| v).count() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_tracker_has_zero_budget() {
+        let t = SloTracker::new();
+        let s = t.snapshot();
+        assert_eq!(s, SloSnapshot::default());
+        assert_eq!(s.violations_per_10k(), 0.0);
+    }
+
+    #[test]
+    fn budget_math() {
+        let t = SloTracker::new();
+        for i in 0..200 {
+            t.record(i % 50 == 0); // 4 violations in 200
+        }
+        let s = t.snapshot();
+        assert_eq!(s.probed, 200);
+        assert_eq!(s.violations, 4);
+        assert_eq!(s.window, 200);
+        assert_eq!(s.window_violations, 4);
+        // 4/200 → 200 per 10k.
+        assert!((s.violations_per_10k() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_evicts_oldest_outcomes() {
+        let t = SloTracker::new();
+        // Fill the window entirely with violations...
+        for _ in 0..SLO_WINDOW {
+            t.record(true);
+        }
+        // ...then push a full window of passes: the budget must recover
+        // to zero even though the lifetime counter remembers everything.
+        for _ in 0..SLO_WINDOW {
+            t.record(false);
+        }
+        let s = t.snapshot();
+        assert_eq!(s.probed, 2 * SLO_WINDOW as u64);
+        assert_eq!(s.violations, SLO_WINDOW as u64);
+        assert_eq!(s.window, SLO_WINDOW as u64);
+        assert_eq!(s.window_violations, 0);
+        assert_eq!(s.violations_per_10k(), 0.0);
+    }
+}

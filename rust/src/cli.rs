@@ -30,6 +30,8 @@ const VALUE_KEYS: &[&str] = &[
     "cache-budget-mb", "cache-min-dim", "cache-amortize", "amortize",
     "kernel-mc", "kernel-kc", "kernel-nc", "naive-cutover",
     "trace-ring", "trace-slowest", "trace-max-spans", "trace-export",
+    "accuracy-sample", "accuracy-probes", "accuracy-alpha", "accuracy-min-samples",
+    "accuracy-table", "accuracy-seed",
     "last", "chrome-out", "prom-out", "json-out",
 ];
 

@@ -55,6 +55,15 @@
 //! slowest_k = 8                  # ... plus the K slowest ever seen
 //! max_spans = 256                # per-request span arena (overflow drops)
 //! export_path = ""               # chrome-trace JSON written at shutdown ("" = off)
+//!
+//! [accuracy]                     # accuracy plane (crate::accuracy)
+//! enabled = false                # default-off: no probes, results bit-identical
+//! sample_every = 16              # probe one in N completed requests
+//! probes = 8                     # random probe vectors per probed request
+//! ewma_alpha = 0.2               # EWMA weight of the newest probe
+//! min_samples = 5                # analytic error model's prior strength
+//! table_path = ""                # error-model persistence ("" = in-memory only)
+//! seed = 181165805               # probe-vector RNG seed (deterministic replay)
 //! ```
 
 use crate::config::toml::{parse_toml, TomlDoc};
@@ -350,6 +359,73 @@ impl TraceSettings {
     }
 }
 
+/// `[accuracy]` section: the accuracy observability plane
+/// (see [`crate::accuracy`] — online error probes, tolerance-SLO
+/// tracking, and the calibrated error model). Default-off; when off, no
+/// probe work is scheduled and results are bit-identical to a build
+/// without the plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccuracySettings {
+    /// Master switch for online error probing.
+    pub enabled: bool,
+    /// Sampling cadence: probe one in this many completed requests
+    /// (deterministic every-Nth, not random — replayable overhead).
+    pub sample_every: u64,
+    /// Random probe vectors per probed request. The estimator's cost is
+    /// O((m·n + m·k + k·n) · probes); its variance shrinks as 1/probes.
+    pub probes: usize,
+    /// EWMA smoothing factor in (0, 1]: weight of the newest
+    /// probed/predicted error ratio.
+    pub ewma_alpha: f64,
+    /// Prior strength of the analytic error model, in probes: a model
+    /// cell with this many observations is trusted exactly as much as the
+    /// analytic prediction.
+    pub min_samples: u64,
+    /// Error-model persistence path (JSON). Loaded at startup when the
+    /// file exists, saved at shutdown; `None` keeps the model in-memory
+    /// only.
+    pub table_path: Option<String>,
+    /// Base seed for the probe-vector RNG (combined with the request id,
+    /// so every probe is deterministic and replayable).
+    pub seed: u64,
+}
+
+impl Default for AccuracySettings {
+    fn default() -> Self {
+        AccuracySettings {
+            enabled: false,
+            sample_every: 16,
+            probes: 8,
+            ewma_alpha: 0.2,
+            min_samples: 5,
+            table_path: None,
+            seed: 0x0acc_5eed,
+        }
+    }
+}
+
+impl AccuracySettings {
+    /// Range-check the knobs — the single validator for every input path
+    /// (TOML, CLI flags, programmatic [`crate::coordinator::ServiceConfig`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.sample_every == 0 {
+            return Err(Error::Config(
+                "accuracy sample_every must be at least 1".into(),
+            ));
+        }
+        if self.probes == 0 {
+            return Err(Error::Config("accuracy probes must be positive".into()));
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(Error::Config(format!(
+                "accuracy ewma_alpha must be in (0, 1], got {}",
+                self.ewma_alpha
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Whole-app configuration.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -378,6 +454,8 @@ pub struct AppConfig {
     pub cache: CacheSettings,
     /// `[trace]` knobs.
     pub trace: TraceSettings,
+    /// `[accuracy]` knobs.
+    pub accuracy: AccuracySettings,
 }
 
 impl Default for AppConfig {
@@ -395,6 +473,7 @@ impl Default for AppConfig {
             autotune: AutotuneSettings::default(),
             cache: CacheSettings::default(),
             trace: TraceSettings::default(),
+            accuracy: AccuracySettings::default(),
         }
     }
 }
@@ -571,6 +650,36 @@ impl AppConfig {
             if let Some(v) = tr.get("export_path") {
                 let p = req_str(v, "trace.export_path")?;
                 s.export_path = if p.is_empty() { None } else { Some(p) };
+            }
+            s.validate()?;
+        }
+        if let Some(ac) = doc.get("accuracy") {
+            let s = &mut cfg.accuracy;
+            if let Some(v) = ac.get("enabled") {
+                s.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("accuracy.enabled must be bool".into()))?;
+            }
+            if let Some(v) = ac.get("sample_every") {
+                s.sample_every = req_nonzero(v, "accuracy.sample_every")? as u64;
+            }
+            if let Some(v) = ac.get("probes") {
+                s.probes = req_nonzero(v, "accuracy.probes")?;
+            }
+            if let Some(v) = ac.get("ewma_alpha") {
+                s.ewma_alpha = v.as_float().ok_or_else(|| {
+                    Error::Config("accuracy.ewma_alpha must be a number".into())
+                })?;
+            }
+            if let Some(v) = ac.get("min_samples") {
+                s.min_samples = req_usize(v, "accuracy.min_samples")? as u64;
+            }
+            if let Some(v) = ac.get("table_path") {
+                let p = req_str(v, "accuracy.table_path")?;
+                s.table_path = if p.is_empty() { None } else { Some(p) };
+            }
+            if let Some(v) = ac.get("seed") {
+                s.seed = req_usize(v, "accuracy.seed")? as u64;
             }
             s.validate()?;
         }
@@ -878,6 +987,54 @@ export_path = "trace.json"
         // slowest_k = 0 is legal: ring only, no slow-path retention.
         let cfg = AppConfig::from_toml("[trace]\nslowest_k = 0").unwrap();
         assert_eq!(cfg.trace.slowest_k, 0);
+    }
+
+    #[test]
+    fn accuracy_defaults_and_full_section() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.accuracy, AccuracySettings::default());
+        assert!(!cfg.accuracy.enabled, "accuracy plane must default off");
+
+        let cfg = AppConfig::from_toml(
+            r#"
+[accuracy]
+enabled = true
+sample_every = 4
+probes = 16
+ewma_alpha = 0.5
+min_samples = 10
+table_path = "errors.json"
+seed = 99
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.accuracy,
+            AccuracySettings {
+                enabled: true,
+                sample_every: 4,
+                probes: 16,
+                ewma_alpha: 0.5,
+                min_samples: 10,
+                table_path: Some("errors.json".into()),
+                seed: 99,
+            }
+        );
+    }
+
+    #[test]
+    fn accuracy_validation() {
+        // Empty path means "in-memory only", not a file named "".
+        let cfg = AppConfig::from_toml("[accuracy]\ntable_path = \"\"").unwrap();
+        assert_eq!(cfg.accuracy.table_path, None);
+        assert!(AppConfig::from_toml("[accuracy]\nsample_every = 0").is_err());
+        assert!(AppConfig::from_toml("[accuracy]\nprobes = 0").is_err());
+        assert!(AppConfig::from_toml("[accuracy]\newma_alpha = 0.0").is_err());
+        assert!(AppConfig::from_toml("[accuracy]\newma_alpha = 1.5").is_err());
+        assert!(AppConfig::from_toml("[accuracy]\nenabled = 1").is_err());
+        // min_samples = 0 is legal: trust probes immediately.
+        let cfg = AppConfig::from_toml("[accuracy]\nmin_samples = 0").unwrap();
+        assert_eq!(cfg.accuracy.min_samples, 0);
     }
 
     #[test]

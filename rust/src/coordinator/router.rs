@@ -146,6 +146,15 @@ impl Router {
         self
     }
 
+    /// Attach the accuracy plane's calibrated error model
+    /// (builder-style): the selector's tolerance gate then routes on
+    /// probed rather than assumed accuracy. An unprobed model is
+    /// bit-identical to no model at all.
+    pub fn with_error_model(mut self, model: Arc<crate::accuracy::ErrorModel>) -> Self {
+        self.selector = self.selector.with_error_model(model);
+        self
+    }
+
     /// The routing-time rank estimate for an (m, k, n) GEMM.
     ///
     /// Spectrum-dependent strategies (energy / error-bound) cannot know
@@ -265,6 +274,15 @@ impl Router {
             _ => 1.0,
         };
 
+        // FP8 re-encode charge: when the content cache stores factors
+        // FP8-encoded, a fingerprinted request's factors round-trip
+        // through the codec (on the fill and on every hit), an error
+        // source the analytic model used to leave uncharged.
+        let fp8_reencode = match &self.content {
+            Some((_, set)) => set.fp8 && (hints.a.is_some() || hints.b.is_some()),
+            None => false,
+        };
+
         let inp = SelectorInputs {
             m,
             k,
@@ -274,6 +292,7 @@ impl Router {
             factors_cached,
             factored_output_ok: req.factored_output_ok,
             decomp_amortization,
+            fp8_reencode,
         };
 
         let mut explored = false;
@@ -514,6 +533,53 @@ mod tests {
         assert!(plan.hints.a.is_some());
         assert!(plan.hints.b.is_none());
         assert!(plan.amortized, "one admitted operand must engage the credit");
+    }
+
+    #[test]
+    fn fp8_stored_factors_charge_reencode_error() {
+        // An fp8-storing content cache must surcharge the low-rank error
+        // prediction of fingerprinted requests; an f32-storing one (and
+        // the plain router) must not.
+        let request = req(512).with_kernel(KernelKind::LowRankFp8);
+        let (f32_router, _) = content_router(small_settings());
+        let (fp8_router, _) = content_router(CacheSettings {
+            fp8: true,
+            ..small_settings()
+        });
+        let base = f32_router.route(&request).choice.predicted_error;
+        let charged = fp8_router.route(&request).choice.predicted_error;
+        assert!(
+            charged > base,
+            "fp8 storage must surcharge error: {charged} vs {base}"
+        );
+        assert_eq!(
+            router().route(&request).choice.predicted_error.to_bits(),
+            base.to_bits(),
+            "f32-storing cache must stay bit-identical to no cache"
+        );
+        // Below the admission gate nothing is fingerprinted — and nothing
+        // round-trips through FP8 — so no surcharge applies.
+        let small = req(16).with_kernel(KernelKind::LowRankFp8);
+        assert_eq!(
+            fp8_router.route(&small).choice.predicted_error.to_bits(),
+            router().route(&small).choice.predicted_error.to_bits()
+        );
+    }
+
+    #[test]
+    fn error_model_wires_into_routing() {
+        let model = Arc::new(crate::accuracy::ErrorModel::new(0.5, 0));
+        let r = Router::new(RouterConfig::default(), Arc::new(FactorCache::new(1 << 20)))
+            .with_error_model(model.clone());
+        let request = req(96).with_kernel(KernelKind::LowRankFp8);
+        let before = r.route(&request);
+        assert_eq!(before.choice.error_correction, 1.0);
+        let raw = before.choice.predicted_error as f64;
+        let (m, k, n) = request.shape();
+        model.record(KernelKind::LowRankFp8, m, k, n, before.rank, raw, raw * 3.0);
+        let after = r.route(&request);
+        assert!((after.choice.error_correction - 3.0).abs() < 1e-9);
+        assert!(after.choice.predicted_error > before.choice.predicted_error);
     }
 
     #[test]

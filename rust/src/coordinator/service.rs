@@ -23,10 +23,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::accuracy::{probe_rel_error, AccuracyPlane, AccuracyStats, ErrorModel};
 use crate::autotune::CalibrationTable;
 use crate::cache::ContentCache;
 use crate::config::schema::{
-    AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ShardSettings, TraceSettings,
+    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ShardSettings,
+    TraceSettings,
 };
 use crate::coordinator::backend::Backend;
 use crate::coordinator::batcher::{Batcher, BucketKey};
@@ -84,6 +86,10 @@ pub struct ServiceConfig {
     /// Default-off: requests then carry no span state and results are
     /// bit-identical to a build without the plane.
     pub trace: TraceSettings,
+    /// Accuracy observability plane (online error probes, tolerance-SLO
+    /// tracking, calibrated error model). Default-off: no probe work is
+    /// scheduled and results are bit-identical to a build without it.
+    pub accuracy: AccuracySettings,
 }
 
 impl Default for ServiceConfig {
@@ -101,6 +107,7 @@ impl Default for ServiceConfig {
             autotune: AutotuneSettings::default(),
             cache: CacheSettings::default(),
             trace: TraceSettings::default(),
+            accuracy: AccuracySettings::default(),
         }
     }
 }
@@ -134,6 +141,7 @@ impl ServiceConfig {
             autotune: app.autotune.clone(),
             cache: app.cache.clone(),
             trace: app.trace.clone(),
+            accuracy: app.accuracy.clone(),
         })
     }
 }
@@ -214,6 +222,9 @@ pub struct ServiceStats {
     /// Structured registry snapshot (counters + histogram summaries) —
     /// the same data `metrics().render()` prints, machine-readable.
     pub metrics: MetricsSnapshot,
+    /// Accuracy-plane counters (probes, violations, SLO budget, model
+    /// size); `None` when the `[accuracy]` plane is disabled.
+    pub accuracy: Option<AccuracyStats>,
 }
 
 /// The serving coordinator. See module docs for the dataflow.
@@ -239,6 +250,10 @@ pub struct GemmService {
     autotune_path: Option<String>,
     /// Tracing plane: span arenas + flight recorder (inert when off).
     tracer: Arc<Tracer>,
+    /// Accuracy plane when `[accuracy]` is enabled.
+    accuracy: Option<Arc<AccuracyPlane>>,
+    /// Persistence path for the error model (saved on shutdown).
+    accuracy_path: Option<String>,
     /// Interned submit-path counters.
     submitted_h: Arc<Counter>,
     rejected_h: Arc<Counter>,
@@ -338,6 +353,39 @@ impl GemmService {
             None
         };
 
+        // Accuracy plane: online error probes close the *accuracy* loop
+        // the same way autotune closes the latency loop — a sampled
+        // fraction of completed requests is probed in the background, the
+        // probed/predicted ratio feeds an EWMA error model, and the
+        // selector blends that correction into its tolerance gate.
+        // Disabled (the default) nothing is sampled and routing is
+        // bit-identical to the analytic error heuristic.
+        let accuracy = if cfg.accuracy.enabled {
+            // Programmatic ServiceConfig bypasses the TOML/CLI parsers,
+            // so this is the path's validate() call.
+            cfg.accuracy.validate()?;
+            let mut model = ErrorModel::new(cfg.accuracy.ewma_alpha, cfg.accuracy.min_samples);
+            if let Some(path) = &cfg.accuracy.table_path {
+                // Same flush cadence rationale as the autotune table: an
+                // abrupt kill loses at most one window of probes.
+                model.set_autosave(path, cfg.accuracy.min_samples.max(1));
+            }
+            let model = Arc::new(model);
+            if let Some(path) = &cfg.accuracy.table_path {
+                if std::path::Path::new(path).exists() {
+                    let loaded = model.load(path)?;
+                    metrics.count("accuracy.warm_start_entries", loaded as u64);
+                }
+            }
+            Some(Arc::new(AccuracyPlane::new(
+                cfg.accuracy.clone(),
+                model,
+                &metrics,
+            )))
+        } else {
+            None
+        };
+
         let mut router = match &autotune {
             Some(table) => {
                 Router::with_autotune(router_cfg, cache.clone(), table.clone(), &cfg.autotune)
@@ -346,6 +394,9 @@ impl GemmService {
         };
         if let Some(cc) = &content {
             router = router.with_content_cache(cc.clone(), cfg.cache.clone());
+        }
+        if let Some(plane) = &accuracy {
+            router = router.with_error_model(plane.model().clone());
         }
         let router = Arc::new(router);
         let shard = Arc::new(ShardExecutor::with_metrics(
@@ -384,6 +435,7 @@ impl GemmService {
             let completed = completed.clone();
             let inflight = inflight.clone();
             let autotune = autotune.clone();
+            let accuracy = accuracy.clone();
             let max_batch = cfg.max_batch;
             let window = cfg.batch_window;
             std::thread::Builder::new()
@@ -391,7 +443,7 @@ impl GemmService {
                 .spawn(move || {
                     Self::dispatch_loop(
                         rx, pool, backend, handles, tracer, completed, inflight, autotune,
-                        max_batch, window,
+                        accuracy, max_batch, window,
                     )
                 })
                 .map_err(|e| Error::Service(format!("spawning dispatcher: {e}")))?
@@ -411,6 +463,8 @@ impl GemmService {
             autotune,
             autotune_path: cfg.autotune.table_path.clone(),
             tracer,
+            accuracy,
+            accuracy_path: cfg.accuracy.table_path.clone(),
             submitted_h,
             rejected_h,
             inflight,
@@ -438,6 +492,7 @@ impl GemmService {
         completed: Arc<AtomicU64>,
         inflight: Arc<AtomicUsize>,
         autotune: Option<Arc<CalibrationTable>>,
+        accuracy: Option<Arc<AccuracyPlane>>,
         max_batch: usize,
         window: Duration,
     ) {
@@ -450,6 +505,7 @@ impl GemmService {
             let completed = completed.clone();
             let inflight = inflight.clone();
             let autotune = autotune.clone();
+            let accuracy = accuracy.clone();
             pool.execute(move || {
                 let batch_size = batch.len();
                 for p in batch {
@@ -486,9 +542,10 @@ impl GemmService {
                     let result = exec_result.map(|out| {
                             let elapsed = started.elapsed();
                             let exec_us = elapsed.as_micros() as u64;
-                            // Float microseconds: the histogram drops
-                            // non-positive samples, and sub-µs executions
-                            // truncated through as_micros() would read 0.
+                            // Float microseconds: sub-µs executions
+                            // truncated through as_micros() would flatten
+                            // to a weightless 0 (the histogram admits 0
+                            // but it tells the reader nothing).
                             handles.exec_us.observe(elapsed.as_secs_f64() * 1e6);
                             handles.queue_us.observe(queue_wait.as_secs_f64() * 1e6);
                             handles.kernel(p.plan.choice.kind).inc();
@@ -538,8 +595,9 @@ impl GemmService {
                     if result.is_err() {
                         handles.errors.inc();
                     }
-                    // Seal the trace before waking the caller, so a
-                    // blocked gemm() observes its own trace retained.
+                    // Record the queue span before any probe job can race
+                    // to seal the trace (the seal is deferred into the
+                    // probe for probed+traced requests, below).
                     if let Some(t) = &p.trace {
                         t.record_span(
                             "queue",
@@ -548,15 +606,98 @@ impl GemmService {
                             t.ns_of(started),
                             &[Attr::u64("batch_size", batch_size as u64)],
                         );
-                        tracer.finish(
-                            t,
-                            &[
-                                Attr::str("kernel", p.plan.choice.kind.id()),
-                                Attr::u64("m", m as u64),
-                                Attr::u64("k", k as u64),
-                                Attr::u64("n", n as u64),
-                            ],
-                        );
+                    }
+                    // Accuracy plane: hand a sampled fraction of
+                    // successful requests to a background probe riding
+                    // the shard pool's FIFO queue (behind all tile work,
+                    // so probes never delay a serving request). The job
+                    // owns clones of (a, b, c) — the response is already
+                    // on its way to the caller — and, when the request is
+                    // traced, ownership of the trace seal, so the "probe"
+                    // span lands inside the request's own span tree.
+                    let mut probe_seals_trace = false;
+                    if let (Some(plane), Ok(resp)) = (&accuracy, &result) {
+                        if plane.sample() {
+                            let plane = plane.clone();
+                            let a = p.req.a.clone();
+                            let b = p.req.b.clone();
+                            let c = resp.c.clone();
+                            let kind = p.plan.choice.kind;
+                            let rank = p.plan.rank;
+                            // Calibrate against the *raw* analytic error
+                            // prediction (model correction divided back
+                            // out) — recording a corrected value would
+                            // compound the feedback loop, the same
+                            // argument as the autotune table above.
+                            let predicted = p.plan.choice.predicted_error as f64
+                                / p.plan.choice.error_correction;
+                            let tolerance = p.plan.tolerance as f64;
+                            let probes = plane.settings().probes;
+                            let seed = plane.probe_seed(p.id);
+                            let trace = p.trace.clone();
+                            let tracer = tracer.clone();
+                            probe_seals_trace = trace.is_some();
+                            backend.shard().execute_background(move || {
+                                let probe_start = Instant::now();
+                                let est = probe_rel_error(&a, &b, &c, probes, seed);
+                                let probe_end = Instant::now();
+                                let probe_us = probe_end
+                                    .duration_since(probe_start)
+                                    .as_secs_f64()
+                                    * 1e6;
+                                match est {
+                                    Some(measured) => {
+                                        let out = plane.observe(
+                                            kind, m, k, n, rank, predicted, measured,
+                                            tolerance, probe_us,
+                                        );
+                                        if let Some(t) = &trace {
+                                            t.record_span(
+                                                "probe",
+                                                trace_plane::ROOT_SPAN,
+                                                t.ns_of(probe_start),
+                                                t.ns_of(probe_end),
+                                                &[
+                                                    Attr::f64("measured_rel_error", out.measured),
+                                                    Attr::f64("predicted_rel_error", out.predicted),
+                                                    Attr::u64("violation", out.violation as u64),
+                                                    Attr::u64("probes", probes as u64),
+                                                ],
+                                            );
+                                        }
+                                    }
+                                    None => plane.probe_failed(),
+                                }
+                                if let Some(t) = &trace {
+                                    tracer.finish(
+                                        t,
+                                        &[
+                                            Attr::str("kernel", kind.id()),
+                                            Attr::u64("m", m as u64),
+                                            Attr::u64("k", k as u64),
+                                            Attr::u64("n", n as u64),
+                                        ],
+                                    );
+                                }
+                            });
+                        }
+                    }
+                    // Seal the trace before waking the caller, so a
+                    // blocked gemm() observes its own trace retained —
+                    // unless a probe job took ownership of the seal (the
+                    // trace then surfaces when the probe completes).
+                    if let Some(t) = &p.trace {
+                        if !probe_seals_trace {
+                            tracer.finish(
+                                t,
+                                &[
+                                    Attr::str("kernel", p.plan.choice.kind.id()),
+                                    Attr::u64("m", m as u64),
+                                    Attr::u64("k", k as u64),
+                                    Attr::u64("n", n as u64),
+                                ],
+                            );
+                        }
                     }
                     completed.fetch_add(1, Ordering::Relaxed);
                     inflight.fetch_sub(1, Ordering::Relaxed);
@@ -715,6 +856,7 @@ impl GemmService {
                 .map(|c| c.stats())
                 .unwrap_or_default(),
             metrics: self.metrics.snapshot(),
+            accuracy: self.accuracy.as_ref().map(|p| p.stats()),
         }
     }
 
@@ -741,6 +883,24 @@ impl GemmService {
         match (&self.autotune, &self.autotune_path) {
             (Some(table), Some(path)) => {
                 table.save(path)?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+
+    /// The accuracy plane, when `[accuracy]` is enabled.
+    pub fn accuracy(&self) -> Option<&Arc<AccuracyPlane>> {
+        self.accuracy.as_ref()
+    }
+
+    /// Persist the calibrated error model now (also happens automatically
+    /// on shutdown). Returns `false` when the accuracy plane is off or no
+    /// `table_path` is configured.
+    pub fn save_error_model(&self) -> Result<bool> {
+        match (&self.accuracy, &self.accuracy_path) {
+            (Some(plane), Some(path)) => {
+                plane.model().save(path)?;
                 Ok(true)
             }
             _ => Ok(false),
@@ -776,6 +936,7 @@ impl Drop for GemmService {
         // (after the join: no more writers). Best-effort — shutdown must
         // not fail on a read-only filesystem.
         let _ = self.save_calibration();
+        let _ = self.save_error_model();
     }
 }
 
@@ -1018,6 +1179,145 @@ mod tests {
         for required in ["request", "route", "queue", "exec"] {
             assert!(names.contains(&required), "missing span `{required}`");
         }
+    }
+
+    /// Probes run as background shard-pool jobs: poll until they land.
+    fn wait_for(cond: impl Fn() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for probes");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn accuracy_disabled_by_default_and_probes_when_on() {
+        let s = svc();
+        assert!(s.accuracy().is_none(), "accuracy plane must be opt-in");
+        assert!(s.stats().accuracy.is_none());
+        assert!(!s.save_error_model().unwrap());
+
+        let cfg = ServiceConfig {
+            accuracy: AccuracySettings {
+                enabled: true,
+                sample_every: 1,
+                probes: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = GemmService::start(cfg).unwrap();
+        for i in 0..4 {
+            s.gemm_blocking(rand_req(48, 500 + i)).unwrap();
+        }
+        wait_for(|| s.accuracy().unwrap().stats().probed >= 4);
+        let acc = s.stats().accuracy.expect("plane on");
+        assert_eq!(acc.probed, 4, "sample_every=1 probes every request");
+        assert!(acc.model_cells >= 1, "probes must feed the error model");
+        let snap = s.metrics().snapshot();
+        assert_eq!(snap.counters["accuracy.probed"], 4);
+        assert!(snap.histograms["accuracy.probe_us"].count >= 4);
+        // Dense f32 serves these small requests near-exactly: no
+        // violations against the default tolerance.
+        assert_eq!(acc.violations, 0);
+    }
+
+    #[test]
+    fn tolerance_violations_are_counted_and_modeled() {
+        let cfg = ServiceConfig {
+            accuracy: AccuracySettings {
+                enabled: true,
+                sample_every: 1,
+                probes: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = GemmService::start(cfg).unwrap();
+        // Full-rank gaussian operands forced down the low-rank path with
+        // an unmeetable tolerance: the served error is large and the
+        // probe must catch it.
+        let mut rng = Pcg64::seeded(7);
+        let req = GemmRequest::new(
+            Matrix::gaussian(64, 64, &mut rng),
+            Matrix::gaussian(64, 64, &mut rng),
+        )
+        .with_kernel(KernelKind::LowRankFp8)
+        .with_tolerance(1e-6);
+        s.gemm_blocking(req).unwrap();
+        wait_for(|| s.accuracy().unwrap().stats().probed >= 1);
+        let acc = s.stats().accuracy.unwrap();
+        assert_eq!(acc.violations, 1);
+        assert!(acc.violations_per_10k > 0.0);
+        let snap = s.metrics().snapshot();
+        assert_eq!(snap.counters["accuracy.violation"], 1);
+        assert!(snap.histograms["accuracy.error.lowrank_fp8"].count >= 1);
+    }
+
+    #[test]
+    fn probed_traced_request_carries_probe_span() {
+        let cfg = ServiceConfig {
+            trace: TraceSettings {
+                enabled: true,
+                ..Default::default()
+            },
+            accuracy: AccuracySettings {
+                enabled: true,
+                sample_every: 1,
+                probes: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = GemmService::start(cfg).unwrap();
+        s.gemm_blocking(rand_req(40, 643)).unwrap();
+        // The trace seal is deferred into the probe job, so the flight
+        // recorder sees the request only once its probe has run.
+        wait_for(|| !s.tracer().recorder().recent().is_empty());
+        let rec = s.tracer().recorder().recent();
+        assert_eq!(rec.len(), 1);
+        let names: Vec<&str> = rec[0].spans.iter().map(|sp| sp.name).collect();
+        for required in ["request", "route", "queue", "exec", "probe"] {
+            assert!(names.contains(&required), "missing span `{required}`");
+        }
+    }
+
+    #[test]
+    fn error_model_persists_across_restart() {
+        let path = std::env::temp_dir().join(format!(
+            "lrg-svc-errmodel-{}.json",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let acc = |tp: &str| AccuracySettings {
+            enabled: true,
+            sample_every: 1,
+            probes: 2,
+            table_path: Some(tp.to_string()),
+            ..Default::default()
+        };
+        {
+            let s = GemmService::start(ServiceConfig {
+                accuracy: acc(&path_s),
+                ..Default::default()
+            })
+            .unwrap();
+            s.gemm_blocking(rand_req(48, 777)).unwrap();
+            wait_for(|| s.accuracy().unwrap().stats().probed >= 1);
+            assert!(s.save_error_model().unwrap());
+        }
+        let s = GemmService::start(ServiceConfig {
+            accuracy: acc(&path_s),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(
+            !s.accuracy().unwrap().model().is_empty(),
+            "restart must warm-load the persisted error model"
+        );
+        assert!(s.metrics().counters()["accuracy.warm_start_entries"] >= 1);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -195,6 +195,7 @@ mod tests {
             factors_cached: cached,
             factored_output_ok: true,
             decomp_amortization: 1.0,
+            fp8_reencode: false,
         }
     }
 
@@ -313,6 +314,7 @@ mod tests {
                 factors_cached: true,
                 factored_output_ok: false,
                 decomp_amortization: 1.0,
+                fp8_reencode: false,
             },
         );
         assert!(c.time_s > 0.0);

@@ -2,6 +2,7 @@
 
 use std::sync::Arc;
 
+use crate::accuracy::ErrorModel;
 use crate::autotune::CalibrationTable;
 use crate::fp8::{Fp8Format, StorageFormat};
 use crate::gpu_sim::profile::{DeviceProfile, Precision};
@@ -120,6 +121,13 @@ pub struct SelectorInputs {
     /// cost. 1.0 (the default everywhere the cache plane is off) charges
     /// the full cold cost and is bit-identical to the pre-cache model.
     pub decomp_amortization: f64,
+    /// Will this request's factors round-trip through the content cache's
+    /// FP8 storage (`[cache].fp8`)? That path re-encodes cached factors
+    /// through the FP8 codec, an error source the analytic model used to
+    /// leave uncharged; when set, low-rank kernels pay one extra FP8
+    /// quantization term. `false` (the default everywhere the cache plane
+    /// is off or storing f32) is bit-identical to the uncharged model.
+    pub fp8_reencode: bool,
 }
 
 /// The selector's verdict for one request.
@@ -130,13 +138,20 @@ pub struct KernelChoice {
     /// Predicted cost on the device. When a calibration table is bound,
     /// `cost.time_s` already includes the measured correction factor.
     pub cost: CostEstimate,
-    /// Predicted relative error of the chosen kernel.
+    /// Predicted relative error of the chosen kernel. When an error model
+    /// is bound (the accuracy plane), this already includes the probed
+    /// correction factor.
     pub predicted_error: f32,
     /// The autotune correction folded into `cost.time_s` (1.0 when no
     /// calibration table is bound or the cell is unsampled). Dividing it
     /// back out recovers the raw analytic prediction — the baseline the
     /// coordinator records observed/predicted ratios against.
     pub calibration: f64,
+    /// The accuracy-plane correction folded into `predicted_error` (1.0
+    /// when no error model is bound or the cell is unprobed). Dividing it
+    /// back out recovers the raw analytic error prediction — the baseline
+    /// the accuracy plane records probed/predicted ratios against.
+    pub error_correction: f64,
 }
 
 /// Hardware-aware kernel selection (paper Listing 1's `AutoKernelSelector`).
@@ -152,6 +167,12 @@ pub struct AutoKernelSelector {
     /// per-(kernel, size-class) corrections blended over the analytic
     /// model. `None` (the default) keeps the selector purely analytic.
     pub calibration: Option<Arc<CalibrationTable>>,
+    /// Calibrated error model (the accuracy plane): probed
+    /// per-(kernel, size-class, rank-class) corrections blended over the
+    /// analytic error prediction, so the tolerance gate routes on
+    /// observed rather than assumed accuracy. `None` (the default) keeps
+    /// error prediction purely analytic.
+    pub error_model: Option<Arc<ErrorModel>>,
 }
 
 impl AutoKernelSelector {
@@ -161,6 +182,7 @@ impl AutoKernelSelector {
             device,
             shard: None,
             calibration: None,
+            error_model: None,
         }
     }
 
@@ -170,12 +192,19 @@ impl AutoKernelSelector {
             device,
             shard: Some(plan),
             calibration: None,
+            error_model: None,
         }
     }
 
     /// Attach an online calibration table (builder-style).
     pub fn with_calibration(mut self, table: Arc<CalibrationTable>) -> Self {
         self.calibration = Some(table);
+        self
+    }
+
+    /// Attach a calibrated error model (builder-style).
+    pub fn with_error_model(mut self, model: Arc<ErrorModel>) -> Self {
+        self.error_model = Some(model);
         self
     }
 
@@ -195,11 +224,26 @@ impl AutoKernelSelector {
             }
             None => 1.0,
         };
+        let mut predicted_error = self.predicted_error(kind, inp);
+        let error_correction = match &self.error_model {
+            Some(model) => model.correction(kind, inp.m, inp.k, inp.n, inp.rank),
+            None => 1.0,
+        };
+        if error_correction != 1.0 {
+            // Applied only when a probed cell actually moved the factor:
+            // an unprobed model (correction exactly 1.0) must leave the
+            // analytic prediction bit-identical, and the raw prediction
+            // can legitimately sit a hair above 1.0 (RMS of clamped
+            // truncation + quantization terms), which the clamp here
+            // would otherwise disturb.
+            predicted_error = ((predicted_error as f64) * error_correction).clamp(0.0, 1.0) as f32;
+        }
         KernelChoice {
             kind,
             cost,
-            predicted_error: self.predicted_error(kind, inp),
+            predicted_error,
             calibration,
+            error_correction,
         }
     }
 
@@ -215,11 +259,18 @@ impl AutoKernelSelector {
         };
         if kind.is_lowrank() {
             let n = inp.k.max(inp.m).max(inp.n);
-            (quant * quant + {
+            let mut sq = quant * quant + {
                 let e = predicted_rel_error(n, inp.rank.max(1));
                 e * e
-            })
-            .sqrt()
+            };
+            if inp.fp8_reencode {
+                // Factors round-tripping through the content cache's FP8
+                // storage pay one extra quantization on every hit — an
+                // error source the model used to leave uncharged.
+                const REENCODE: f32 = 2e-2;
+                sq += REENCODE * REENCODE;
+            }
+            sq.sqrt()
         } else {
             quant
         }
@@ -280,6 +331,7 @@ mod tests {
             factors_cached: true,
             factored_output_ok: true,
             decomp_amortization: 1.0,
+            fp8_reencode: false,
         }
     }
 
@@ -477,6 +529,92 @@ mod tests {
         assert_eq!(s.estimate(KernelKind::DenseF32, &inp).calibration, 1.0);
         let other = inputs(1024, 64);
         assert_eq!(s.estimate(KernelKind::DenseF16, &other).calibration, 1.0);
+    }
+
+    #[test]
+    fn empty_error_model_is_bit_identical() {
+        // Acceptance gate: accuracy plane bound but unprobed must not
+        // perturb a single bit of the analytic error prediction.
+        let plain = sel();
+        let model = std::sync::Arc::new(ErrorModel::new(0.2, 5));
+        let probed = sel().with_error_model(model);
+        for n in [256, 1024, 4096, 20480] {
+            let inp = inputs(n, (n / 40).max(16));
+            for (a, b) in plain.ranked(&inp).iter().zip(probed.ranked(&inp)) {
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(
+                    a.predicted_error.to_bits(),
+                    b.predicted_error.to_bits(),
+                    "{:?} @ n={n}",
+                    a.kind
+                );
+                assert_eq!(b.error_correction, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn probed_error_skew_flips_the_tolerance_gate() {
+        // The plane's routing claim: a kernel whose *probed* error blows
+        // its predicted error must lose requests it used to win on faith.
+        let model = std::sync::Arc::new(ErrorModel::new(0.5, 0));
+        let s = sel().with_error_model(model.clone());
+        let inp = inputs(20480, 512);
+        let before = s.select(&inp);
+        assert!(before.kind.is_lowrank());
+        let raw = before.predicted_error as f64 / before.error_correction;
+        // Probes observe 5x the predicted error — enough to blow the 5%
+        // tolerance; prior strength 0 trusts the probes immediately.
+        for kind in [KernelKind::LowRankAuto, KernelKind::LowRankFp8] {
+            model.record(kind, 20480, 20480, 20480, 512, raw, raw * 5.0);
+        }
+        let after = s.select(&inp);
+        assert!(
+            !after.kind.is_lowrank(),
+            "calibrated error must force a dense kernel, got {:?}",
+            after.kind
+        );
+        // The repriced low-rank candidates carry the blown prediction.
+        let lr = s
+            .ranked(&inp)
+            .into_iter()
+            .find(|c| c.kind == KernelKind::LowRankAuto)
+            .unwrap();
+        assert!((lr.error_correction - 5.0).abs() < 1e-9);
+        assert!(lr.predicted_error > inp.error_tolerance);
+        // Unprobed cells (other kernels / shapes) stay analytic.
+        assert_eq!(s.estimate(KernelKind::DenseF16, &inp).error_correction, 1.0);
+        let other = inputs(1024, 64);
+        assert_eq!(
+            s.estimate(KernelKind::LowRankAuto, &other).error_correction,
+            1.0
+        );
+    }
+
+    #[test]
+    fn fp8_reencode_charges_lowrank_error_only() {
+        let s = sel();
+        let plain = inputs(8192, 256);
+        let mut reenc = plain;
+        reenc.fp8_reencode = true;
+        for kind in KernelKind::ALL {
+            let a = s.estimate(kind, &plain);
+            let b = s.estimate(kind, &reenc);
+            if kind.is_lowrank() {
+                assert!(
+                    b.predicted_error > a.predicted_error,
+                    "{kind:?} must pay the re-encode term"
+                );
+            } else {
+                assert_eq!(
+                    a.predicted_error.to_bits(),
+                    b.predicted_error.to_bits(),
+                    "{kind:?} has no cached factors to re-encode"
+                );
+            }
+            // The charge is an error term, never a time term.
+            assert_eq!(a.cost.time_s.to_bits(), b.cost.time_s.to_bits());
+        }
     }
 
     #[test]

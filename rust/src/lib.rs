@@ -73,6 +73,14 @@
 //! always on (they're lock-free interned handles — see [`metrics`]), and
 //! with tracing disabled requests carry no span state at all.
 //!
+//! When `[accuracy]` is enabled, one in `sample_every` completed requests
+//! is additionally *probed*: random matvec probes estimate the relative
+//! error actually served (no O(n³) exact product), feeding per-kernel
+//! error histograms, a rolling tolerance-SLO budget, and a calibrated
+//! [`accuracy::ErrorModel`] the selector folds into its tolerance gate
+//! (see the [`accuracy`] module docs). Disabled (the default), no probe
+//! work is scheduled and results are bit-identical.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -90,6 +98,7 @@
 //! println!("rel err = {:.3e}", c.rel_frobenius_distance(&exact));
 //! ```
 
+pub mod accuracy;
 pub mod autotune;
 pub mod bench_harness;
 pub mod cache;
@@ -111,6 +120,7 @@ pub mod trace_plane;
 
 /// Convenience re-exports covering the common public API surface.
 pub mod prelude {
+    pub use crate::accuracy::{AccuracyPlane, ErrorModel, SloTracker};
     pub use crate::autotune::{CalibrationTable, ExplorePolicy};
     pub use crate::cache::{ContentCache, Fingerprint};
     pub use crate::coordinator::{GemmRequest, GemmResponse, GemmService, ServiceConfig};

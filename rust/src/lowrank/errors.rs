@@ -51,12 +51,17 @@ pub fn energy_capture(sv: &[f32], r: usize) -> f32 {
 /// The paper's §5.4.4 heuristic error model, `ε ≈ c · sqrt(n / r)` with the
 /// constant calibrated so that the paper's own operating point
 /// (N = 20480, r = 512 → ~1–2% error) is reproduced (c ≈ 0.0025).
+///
+/// Clamped to [0, 1]: a relative Frobenius error cannot meaningfully
+/// exceed 1 (the zero matrix already achieves exactly 1), and the raw
+/// heuristic blows past it once n/r crosses (1/c)² = 160 000 (e.g. r = 1
+/// at n ≥ 2¹⁸), which would poison downstream tolerance math.
 pub fn predicted_rel_error(n: usize, r: usize) -> f32 {
     const C: f32 = 0.0025;
     if r == 0 {
         return 1.0;
     }
-    C * ((n as f32) / (r as f32)).sqrt()
+    (C * ((n as f32) / (r as f32)).sqrt()).clamp(0.0, 1.0)
 }
 
 /// Measured relative Frobenius error between an approximation and the
@@ -115,6 +120,21 @@ mod tests {
     fn heuristic_monotonicity() {
         assert!(predicted_rel_error(4096, 64) > predicted_rel_error(4096, 256));
         assert!(predicted_rel_error(16384, 128) > predicted_rel_error(4096, 128));
+    }
+
+    #[test]
+    fn heuristic_clamped_to_unit_interval() {
+        // Regression: the unclamped heuristic exceeds 1.0 once n/r passes
+        // (1/c)² = 160 000 — e.g. r = 1 at n ≥ 2¹⁸, where 0.0025·√(n/r)
+        // = 1.28. A relative error above 1 is meaningless (the zero
+        // matrix achieves exactly 1), so the model must saturate there.
+        assert_eq!(predicted_rel_error(1 << 18, 1), 1.0);
+        assert_eq!(predicted_rel_error(1 << 24, 4), 1.0);
+        assert_eq!(predicted_rel_error(0, 5), 0.0);
+        for (n, r) in [(16384, 4), (20480, 512), (1024, 1), (64, 64)] {
+            let e = predicted_rel_error(n, r);
+            assert!((0.0..=1.0).contains(&e), "e({n},{r}) = {e}");
+        }
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //!               rank/error/memory accounting
 //! - `route`     show the AutoKernelSelector's decision table for a size
 //! - `trace`     run a few traced requests and dump span trees / exports
+//! - `accuracy`  run a probed workload and print the accuracy report
+//!               (per-kernel error histograms, SLO budget, error model)
 //! - `info`      device profiles, artifact manifest, build info
 //!
 //! Run `lowrank-gemm help` for flags.
@@ -40,6 +42,7 @@ fn main() -> ExitCode {
         "factorize" => cmd_factorize(&args),
         "route" => cmd_route(&args),
         "trace" => cmd_trace(&args),
+        "accuracy" => cmd_accuracy(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -84,23 +87,39 @@ COMMANDS:
              --cache-prepack also stores Vᵀ pre-packed in panel layout);
              --trace turns on request-scoped span capture ([trace] in TOML:
              --trace-ring N --trace-slowest K --trace-max-spans N
-             --trace-export FILE write the retained traces at exit)
+             --trace-export FILE write the retained traces at exit);
+             --accuracy turns on online error probing ([accuracy] in TOML:
+             --accuracy-sample N probe one in N requests, --accuracy-probes S
+             probe vectors, --accuracy-alpha A --accuracy-min-samples K
+             EWMA knobs, --accuracy-table F persist the error model,
+             --accuracy-seed S)
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
   factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
              offline decomposition; prints error + memory accounting
   route      --n N [--rank R] [--tolerance T] [--device D] [--cached]
-             [--autotune-table F] [--amortize R]
+             [--autotune-table F] [--amortize R] [--accuracy-table F]
+             [--fp8-reencode]
              print the selector's ranked decision table; with a saved
              calibration table, predictions include learned corrections;
              --amortize R prices cold decompositions amortized over R
-             expected reuses (the factor-cache plane's routing view)
+             expected reuses (the factor-cache plane's routing view);
+             --accuracy-table F adds a calibrated-error column from a
+             saved error model; --fp8-reencode charges the factor-cache
+             FP8 re-encode error to the low-rank candidates
   trace      [--requests N] [--size N] [--kernel K] [--last N] [--slowest]
              [--no-xla] [--chrome-out FILE] [--prom-out FILE] [--json-out FILE]
              run a short traced workload and print span trees (route →
              decompose/cache → pack → per-worker tiles → assemble);
              --chrome-out writes chrome://tracing JSON, --prom-out the
              Prometheus text exposition, --json-out the metrics snapshot
+  accuracy   [--requests N] [--size N] [--kernel K] [--tolerance T]
+             [--accuracy-sample N] [--accuracy-probes S] [--no-xla]
+             [--accuracy-table F] [--json-out FILE]
+             run a probed workload and print the accuracy report:
+             per-kernel measured-error histograms, tolerance-SLO budget
+             (violations per 10k probed) and the calibrated error model;
+             --json-out writes the report as JSON
   info       [--artifacts DIR]
              device profiles and the artifact manifest
 
@@ -168,12 +187,26 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
     if let Some(p) = args.get("trace-export") {
         cfg.trace.export_path = Some(p.to_string());
     }
+    // `[accuracy]` overrides: the accuracy observability plane's knobs.
+    if args.has_flag("accuracy") {
+        cfg.accuracy.enabled = true;
+    }
+    cfg.accuracy.sample_every = args.get_parse("accuracy-sample", cfg.accuracy.sample_every)?;
+    cfg.accuracy.probes = args.get_parse("accuracy-probes", cfg.accuracy.probes)?;
+    cfg.accuracy.ewma_alpha = args.get_parse("accuracy-alpha", cfg.accuracy.ewma_alpha)?;
+    cfg.accuracy.min_samples =
+        args.get_parse("accuracy-min-samples", cfg.accuracy.min_samples)?;
+    if let Some(p) = args.get("accuracy-table") {
+        cfg.accuracy.table_path = Some(p.to_string());
+    }
+    cfg.accuracy.seed = args.get_parse("accuracy-seed", cfg.accuracy.seed)?;
     // Same validators the TOML path runs — an out-of-range flag must
     // fail loudly, not be silently clamped downstream.
     cfg.kernel.validate()?;
     cfg.autotune.validate()?;
     cfg.cache.validate()?;
     cfg.trace.validate()?;
+    cfg.accuracy.validate()?;
     Ok(cfg)
 }
 
@@ -435,6 +468,23 @@ fn cmd_route(args: &CliArgs) -> Result<()> {
         .with_calibration(std::sync::Arc::new(table));
     }
 
+    // Calibrated-error view: a saved error model adds a column of
+    // probe-corrected predictions next to the analytic ones, so the
+    // table shows exactly what the tolerance gate will route on.
+    let err_model = match args.get("accuracy-table") {
+        Some(path) => {
+            let app = load_config(args)?;
+            let ac = &app.accuracy;
+            let model = lowrank_gemm::accuracy::ErrorModel::new(ac.ewma_alpha, ac.min_samples);
+            let loaded = model.load(path)?;
+            println!("(applying {loaded} error-model cells from {path})");
+            let model = std::sync::Arc::new(model);
+            selector = selector.with_error_model(model.clone());
+            Some(model)
+        }
+        None => None,
+    };
+
     let inp = SelectorInputs {
         m: n,
         k: n,
@@ -444,26 +494,198 @@ fn cmd_route(args: &CliArgs) -> Result<()> {
         factors_cached: args.has_flag("cached"),
         factored_output_ok: args.has_flag("factored-ok"),
         decomp_amortization: args.get_parse("amortize", 1.0)?,
+        fp8_reencode: args.has_flag("fp8-reencode"),
     };
     println!(
         "decision table for N={n}, r={rank}, tol={tolerance}, cached={}, amortize={}:",
         inp.factors_cached, inp.decomp_amortization
     );
-    println!(
-        "{:<22} {:>12} {:>14} {:>12}",
-        "kernel", "pred time", "pred TFLOPS", "pred err"
-    );
-    for c in selector.ranked(&inp) {
+    if err_model.is_some() {
         println!(
-            "{:<22} {:>10.3} ms {:>14.1} {:>12.2e}",
-            c.kind.paper_name(),
-            c.cost.time_s * 1e3,
-            c.cost.flops / c.cost.time_s / 1e12,
-            c.predicted_error
+            "{:<22} {:>12} {:>14} {:>12} {:>12}",
+            "kernel", "pred time", "pred TFLOPS", "pred err", "cal err"
         );
+    } else {
+        println!(
+            "{:<22} {:>12} {:>14} {:>12}",
+            "kernel", "pred time", "pred TFLOPS", "pred err"
+        );
+    }
+    for c in selector.ranked(&inp) {
+        if err_model.is_some() {
+            // The choice carries the calibrated prediction; dividing the
+            // correction back out recovers the analytic value so both
+            // columns are visible side by side.
+            let raw = c.predicted_error as f64 / c.error_correction;
+            println!(
+                "{:<22} {:>10.3} ms {:>14.1} {:>12.2e} {:>12.2e}",
+                c.kind.paper_name(),
+                c.cost.time_s * 1e3,
+                c.cost.flops / c.cost.time_s / 1e12,
+                raw,
+                c.predicted_error
+            );
+        } else {
+            println!(
+                "{:<22} {:>10.3} ms {:>14.1} {:>12.2e}",
+                c.kind.paper_name(),
+                c.cost.time_s * 1e3,
+                c.cost.flops / c.cost.time_s / 1e12,
+                c.predicted_error
+            );
+        }
     }
     let best = selector.select(&inp);
     println!("selected: {}", best.kind.paper_name());
+    Ok(())
+}
+
+fn cmd_accuracy(args: &CliArgs) -> Result<()> {
+    let mut app = load_config(args)?;
+    app.accuracy.enabled = true;
+    // Probe every request unless the caller asked for a sparser sample —
+    // a short demo workload should produce a populated report.
+    if args.get("accuracy-sample").is_none() {
+        app.accuracy.sample_every = 1;
+    }
+    let requests: usize = args.get_parse("requests", 24)?;
+    let size: usize = args.get_parse("size", 256)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+    let kernel = match args.get("kernel") {
+        Some(k) => Some(KernelKind::parse(k).ok_or_else(|| {
+            lowrank_gemm::error::Error::Config(format!("unknown kernel `{k}`"))
+        })?),
+        None => None,
+    };
+    let tolerance: Option<f32> = match args.get("tolerance") {
+        Some(t) => Some(t.parse().map_err(|_| {
+            lowrank_gemm::error::Error::Config(format!("--tolerance: bad value `{t}`"))
+        })?),
+        None => None,
+    };
+
+    let svc = GemmService::start(ServiceConfig::from_app(&app)?)?;
+    let mut rng = Pcg64::seeded(seed);
+    for _ in 0..requests {
+        let a = Matrix::low_rank_noisy(size, size, (size / 16).max(2), 1e-4, &mut rng);
+        let b = Matrix::low_rank_noisy(size, size, (size / 16).max(2), 1e-4, &mut rng);
+        let mut req = GemmRequest::new(a, b);
+        if let Some(k) = kernel {
+            req = req.with_kernel(k);
+        }
+        if let Some(t) = tolerance {
+            req = req.with_tolerance(t);
+        }
+        svc.gemm_blocking(req)?;
+    }
+
+    // Probes ride the shard pool behind serving work: wait for the
+    // sampled jobs to drain (probed + failed = sampled) before reporting.
+    let plane = svc.accuracy().expect("plane enabled above");
+    let want = (requests as u64).div_ceil(app.accuracy.sample_every);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let settled = plane.stats().probed
+            + svc
+                .metrics()
+                .counters()
+                .get("accuracy.probe_failed")
+                .copied()
+                .unwrap_or(0);
+        if settled >= want || std::time::Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    let stats = svc.stats();
+    let acc = stats.accuracy.expect("plane enabled above");
+    let failures = stats
+        .metrics
+        .counters
+        .get("accuracy.probe_failed")
+        .copied()
+        .unwrap_or(0);
+    println!(
+        "accuracy report: {requests} requests, {} probed ({} probe vectors each), {failures} probe failures",
+        acc.probed, app.accuracy.probes
+    );
+    println!(
+        "SLO: {} violations lifetime; {:.1} per 10k probed over the last {} probes",
+        acc.violations, acc.violations_per_10k, acc.window
+    );
+
+    println!(
+        "\n{:<22} {:>8} {:>12} {:>12} {:>12}",
+        "kernel", "probed", "mean err", "p99 err", "max err"
+    );
+    for kind in KernelKind::ALL {
+        let key = format!("accuracy.error.{}", kind.id());
+        if let Some(h) = stats.metrics.histograms.get(&key) {
+            if h.count > 0 {
+                println!(
+                    "{:<22} {:>8} {:>12.2e} {:>12.2e} {:>12.2e}",
+                    kind.paper_name(),
+                    h.count,
+                    h.mean,
+                    h.p99,
+                    h.max
+                );
+            }
+        }
+    }
+
+    let cells = plane.model().snapshot();
+    println!("\nerror model: {} calibrated cells (probed/predicted EWMA)", cells.len());
+    if !cells.is_empty() {
+        println!(
+            "{:<22} {:>10} {:>10} {:>10} {:>9}",
+            "kernel", "size 2^", "rank cls", "ratio", "samples"
+        );
+        for (k, e) in &cells {
+            println!(
+                "{:<22} {:>10} {:>10} {:>10.3} {:>9}",
+                k.kernel.paper_name(),
+                k.size_class,
+                k.rank_class,
+                e.ratio,
+                e.samples
+            );
+        }
+    }
+
+    if let Some(path) = args.get("json-out") {
+        let mut kernels = String::new();
+        for kind in KernelKind::ALL {
+            let key = format!("accuracy.error.{}", kind.id());
+            if let Some(h) = stats.metrics.histograms.get(&key) {
+                if h.count > 0 {
+                    if !kernels.is_empty() {
+                        kernels.push(',');
+                    }
+                    kernels.push_str(&format!(
+                        "{{\"kernel\":\"{}\",\"probed\":{},\"mean_err\":{:e},\"p99_err\":{:e},\"max_err\":{:e}}}",
+                        kind.id(),
+                        h.count,
+                        h.mean,
+                        h.p99,
+                        h.max
+                    ));
+                }
+            }
+        }
+        let json = format!(
+            "{{\"requests\":{requests},\"probed\":{},\"violations\":{},\"violations_per_10k\":{:e},\"window\":{},\"probe_failures\":{failures},\"model_cells\":{},\"kernels\":[{kernels}]}}\n",
+            acc.probed, acc.violations, acc.violations_per_10k, acc.window, acc.model_cells
+        );
+        std::fs::write(path, json)
+            .map_err(|e| lowrank_gemm::error::Error::Config(format!("{path}: {e}")))?;
+        println!("wrote accuracy report to {path}");
+    }
+    if let Some(path) = &app.accuracy.table_path {
+        svc.save_error_model()?;
+        println!("saved error model to {path}");
+    }
     Ok(())
 }
 

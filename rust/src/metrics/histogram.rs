@@ -51,12 +51,15 @@ impl Histogram {
         MIN_SAMPLE * BUCKET_FACTOR.powi(idx as i32)
     }
 
-    /// Record one sample. Non-finite **and non-positive** samples are
+    /// Record one sample. Non-finite **and negative** samples are
     /// dropped (and counted in [`Histogram::dropped`]): the log buckets
-    /// only represent positive magnitudes, and admitting `v <= 0` used to
-    /// skew `sum`/`mean`/`min` while the bucket index silently clamped to 0.
+    /// only represent non-negative magnitudes, and admitting `v < 0` used
+    /// to skew `sum`/`mean`/`min` while the bucket index silently clamped
+    /// to 0. Exactly 0.0 is admitted — a probed relative error of zero
+    /// (dense/exact kernel, rank ≥ true rank) is a real observation; it
+    /// lands in the smallest bucket and contributes to count/sum/min.
     pub fn record(&mut self, v: f64) {
-        if !v.is_finite() || v <= 0.0 {
+        if !v.is_finite() || v < 0.0 {
             self.dropped += 1;
             return;
         }
@@ -96,7 +99,7 @@ impl Histogram {
         self.count
     }
 
-    /// Samples rejected by [`Histogram::record`] (non-finite or ≤ 0).
+    /// Samples rejected by [`Histogram::record`] (non-finite or < 0).
     pub fn dropped(&self) -> u64 {
         self.dropped
     }
@@ -194,19 +197,21 @@ mod tests {
     }
 
     #[test]
-    fn drops_and_counts_non_positive() {
+    fn drops_negatives_but_admits_zero() {
         let mut h = Histogram::new();
         h.record(-1.0);
         h.record(0.0);
         h.record(2.0);
-        assert_eq!(h.count(), 1);
-        assert_eq!(h.dropped(), 2);
-        // The rejected samples must not skew the moments.
-        assert!((h.mean() - 2.0).abs() < 1e-12);
-        assert_eq!(h.quantile(0.0), 2.0);
+        // Zero is a valid observation (a probed relative error of exactly
+        // 0.0); only the negative sample is rejected.
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.dropped(), 1);
+        assert!((h.mean() - 1.0).abs() < 1e-12);
+        assert_eq!(h.quantile(0.0), 0.0, "zero must become the observed min");
+        assert_eq!(h.quantile(1.0), 2.0);
         let s = h.summary();
-        assert_eq!(s.dropped, 2);
-        assert_eq!(s.count, 1);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.count, 2);
     }
 
     #[test]

@@ -148,10 +148,11 @@ impl HistogramHandle {
     }
 
     /// Record one sample. Same admission rule as [`Histogram::record`]:
-    /// non-finite and non-positive samples are dropped and counted.
+    /// non-finite and negative samples are dropped and counted; exactly
+    /// 0.0 is a valid observation (e.g. a probed relative error of zero).
     pub fn observe(&self, v: f64) {
         let shard = &self.shards[thread_ordinal() % HIST_SHARDS];
-        if !v.is_finite() || v <= 0.0 {
+        if !v.is_finite() || v < 0.0 {
             shard.dropped.fetch_add(1, Ordering::Relaxed);
             return;
         }
@@ -301,7 +302,7 @@ impl MetricsRegistry {
 pub struct HistogramSummary {
     /// Sample count.
     pub count: u64,
-    /// Samples rejected at record time (non-finite or ≤ 0).
+    /// Samples rejected at record time (non-finite or < 0).
     pub dropped: u64,
     /// Arithmetic mean.
     pub mean: f64,
@@ -488,15 +489,16 @@ mod tests {
     }
 
     #[test]
-    fn histogram_handle_drops_non_positive() {
+    fn histogram_handle_drops_negatives_admits_zero() {
         let h = HistogramHandle::new();
         h.observe(-3.0);
         h.observe(f64::NAN);
+        h.observe(0.0);
         h.observe(2.0);
         let s = h.summary();
-        assert_eq!(s.count, 1);
+        assert_eq!(s.count, 2, "zero is a valid observation");
         assert_eq!(s.dropped, 2);
-        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.mean - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -128,6 +128,15 @@ impl ShardExecutor {
         self.pool.pending()
     }
 
+    /// Run an arbitrary job on the shard pool's spare cycles. The pool is
+    /// FIFO, so the job queues *behind* every tile task already submitted
+    /// — effectively low-priority background work (the accuracy plane's
+    /// error probes ride here so they never block a serving request).
+    /// The job must be self-contained: nothing waits on it.
+    pub fn execute_background(&self, job: impl FnOnce() + Send + 'static) {
+        self.pool.execute(job);
+    }
+
     /// Is the tile grid aligned to the kernel blocking, so tiles can read
     /// the shared packed operands (and stay bitwise-equal to the
     /// monolithic kernel)?

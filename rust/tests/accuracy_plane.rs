@@ -1,0 +1,211 @@
+//! Accuracy-plane suite (PR 7).
+//!
+//! The observability contract for online error probes: the stochastic
+//! estimator tracks the true relative error within a factor of two across
+//! sizes, ranks and probe counts (with an exact Eckart–Young anchor on
+//! seeded spectra); probing a served workload never changes its bits; and
+//! with `[accuracy]` disabled (the default) the serving path performs
+//! zero probe work, while the *enabled* plane's steady-state bookkeeping
+//! (sampling decision + probe fold-in) allocates nothing per request
+//! (counting global-allocator shim, as in `telemetry_plane.rs`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use lowrank_gemm::accuracy::{probe_rel_error, AccuracyPlane, ErrorModel, SLO_WINDOW};
+use lowrank_gemm::config::AccuracySettings;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::svd::truncated_svd;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::lowrank::errors::eckart_young_rel_error;
+use lowrank_gemm::metrics::MetricsRegistry;
+
+// ---------------------------------------------------------------------------
+// Counting allocator shim: per-thread allocation counters.
+// ---------------------------------------------------------------------------
+
+std::thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates everything to `System`; the counter update is a plain
+// thread-local store with no allocation of its own (const-initialized TLS).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------------
+// Estimator agreement: Eckart–Young anchor on seeded spectra.
+// ---------------------------------------------------------------------------
+
+/// Geometric spectrum σ_i = decay^i — a tail heavy enough that truncation
+/// error sits in the 1e-2..1e-1 range where factor-of-two bounds bite.
+fn spectrum(k: usize, decay: f32) -> Vec<f32> {
+    (0..k).map(|i| decay.powi(i as i32)).collect()
+}
+
+#[test]
+fn probe_tracks_eckart_young_truncation_exactly() {
+    // Served output = rank-r truncation of A itself (B = I), where the
+    // true relative error is the closed-form Eckart–Young tail of the
+    // seeded spectrum — the probe must land within 2x of it.
+    let mut rng = Pcg64::seeded(71);
+    let sv = spectrum(12, 0.55);
+    for (n, r, probes) in [(24, 3, 4), (48, 4, 8), (96, 6, 16)] {
+        let a = Matrix::with_spectrum(n, n, &sv, &mut rng);
+        let mut b = Matrix::zeros(n, n);
+        for i in 0..n {
+            b.data_mut()[i * n + i] = 1.0;
+        }
+        let c = truncated_svd(&a, r).unwrap().reconstruct();
+        let expect = eckart_young_rel_error(&sv, r) as f64;
+        let est = probe_rel_error(&a, &b, &c, probes, 1000 + n as u64).unwrap();
+        assert!(
+            est > expect / 2.0 && est < expect * 2.0,
+            "n={n} r={r} probes={probes}: probe {est:.3e} vs Eckart–Young {expect:.3e}"
+        );
+    }
+}
+
+#[test]
+fn probe_matches_measured_error_across_shapes_ranks_and_probe_counts() {
+    let mut rng = Pcg64::seeded(72);
+    let sv = spectrum(16, 0.6);
+    for n in [32usize, 64, 96] {
+        for r in [2usize, 5, 9] {
+            for probes in [2usize, 4, 8] {
+                let a = Matrix::with_spectrum(n, n, &sv, &mut rng);
+                let b = Matrix::gaussian(n, n, &mut rng);
+                let exact = a.matmul(&b);
+                let served = truncated_svd(&a, r).unwrap().reconstruct().matmul(&b);
+                let measured = served.rel_frobenius_distance(&exact) as f64;
+                let est =
+                    probe_rel_error(&a, &b, &served, probes, (n * r * probes) as u64).unwrap();
+                assert!(
+                    est > measured / 2.0 && est < measured * 2.0,
+                    "n={n} r={r} probes={probes}: probe {est:.3e} vs measured {measured:.3e}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Probing is passive: identical bits with the plane on or off.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn probed_and_unprobed_serving_is_bitwise_identical() {
+    let run = |enabled: bool| -> Vec<Matrix> {
+        let svc = GemmService::start(ServiceConfig {
+            accuracy: AccuracySettings {
+                enabled,
+                sample_every: 1,
+                probes: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Pcg64::seeded(73);
+        let mut out = Vec::new();
+        for kind in [
+            KernelKind::DenseF32,
+            KernelKind::DenseFp8,
+            KernelKind::LowRankFp8,
+        ] {
+            let a = Matrix::low_rank_noisy(160, 160, 6, 1e-4, &mut rng);
+            let b = Matrix::low_rank_noisy(160, 160, 6, 1e-4, &mut rng);
+            let resp = svc
+                .gemm_blocking(GemmRequest::new(a, b).with_kernel(kind))
+                .unwrap();
+            out.push(resp.c);
+        }
+        out
+    };
+    let off = run(false);
+    let on = run(true);
+    for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+        assert_eq!(a.data(), b.data(), "request {i}: probing changed bits");
+    }
+}
+
+#[test]
+fn disabled_plane_schedules_no_probe_work() {
+    let svc = GemmService::start(ServiceConfig::default()).unwrap();
+    let mut rng = Pcg64::seeded(74);
+    for _ in 0..4 {
+        let a = Matrix::gaussian(48, 48, &mut rng);
+        let b = Matrix::gaussian(48, 48, &mut rng);
+        svc.gemm_blocking(GemmRequest::new(a, b)).unwrap();
+    }
+    assert!(svc.accuracy().is_none());
+    assert!(svc.stats().accuracy.is_none());
+    let counters = svc.metrics().counters();
+    assert!(
+        !counters.keys().any(|k| k.starts_with("accuracy.")),
+        "disabled plane must not even intern accuracy metrics: {counters:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Enabled plane, steady state: the per-request bookkeeping (sampling
+// decision + probe fold-in) is allocation-free once the SLO window and
+// model cell exist.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn probe_bookkeeping_hot_path_is_allocation_free() {
+    let registry = MetricsRegistry::new();
+    let plane = AccuracyPlane::new(
+        AccuracySettings {
+            enabled: true,
+            sample_every: 4,
+            probes: 4,
+            ..Default::default()
+        },
+        Arc::new(ErrorModel::new(0.2, 5)),
+        &registry,
+    );
+    // Warmup: create the model cell and fill the SLO window to capacity,
+    // so steady-state records pop+push without growing the deque.
+    for _ in 0..SLO_WINDOW {
+        plane.observe(KernelKind::LowRankFp8, 512, 512, 512, 16, 1e-2, 2e-2, 0.05, 3.0);
+    }
+    let before = thread_allocs();
+    for i in 0..1000u64 {
+        let _ = plane.sample();
+        let _ = plane.probe_seed(i);
+        plane.observe(KernelKind::LowRankFp8, 512, 512, 512, 16, 1e-2, 2e-2, 0.05, 3.0);
+    }
+    let after = thread_allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state probe bookkeeping must not allocate"
+    );
+    assert_eq!(plane.stats().probed, SLO_WINDOW as u64 + 1000);
+}
