@@ -1,0 +1,211 @@
+//! Scheduler saturation sweep: the unified work-stealing pool under a
+//! lone-fanout workload and a mixed large+small overload burst, steal on
+//! vs off.
+//!
+//! Two scenarios per steal setting, each on a fresh service:
+//!
+//! - `fanout`: one shard-sized GEMM at a time on an otherwise idle pool —
+//!   the latency case stealing exists for (idle siblings pull the
+//!   request's tile helpers off the busy worker's deque).
+//! - `mixed`: waves of 1 large + 15 small requests submitted without
+//!   waiting, against a shallow admission queue — offered load exceeds
+//!   capacity, so the shed counter must move, and the large requests'
+//!   helpers must show steal events while the small ones keep every
+//!   worker busy.
+//!
+//! Prints the usual bench table plus one JSON record per (scenario,
+//! steal) cell so downstream tooling can diff runs:
+//!
+//! ```json
+//! {"bench":"sched_saturation","scenario":"mixed","steal":true,
+//!  "offered":128,"completed":…,"shed":…,"throughput_rps":…,
+//!  "p50_ms":…,"p99_ms":…,"steal_events":…}
+//! ```
+//!
+//! Env knobs: `LRG_BENCH_QUICK=1` shrinks sizes and wave counts.
+
+use std::time::{Duration, Instant};
+
+use lowrank_gemm::bench_harness::Table;
+use lowrank_gemm::config::schema::SchedulerSettings;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, Priority, ServiceConfig};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+
+struct Shape {
+    large_n: usize,
+    small_n: usize,
+    fanout_reqs: usize,
+    mixed_waves: usize,
+}
+
+struct Outcome {
+    offered: u64,
+    completed: u64,
+    shed: u64,
+    elapsed: Duration,
+    p50_ms: f64,
+    p99_ms: f64,
+    steal_events: u64,
+}
+
+fn service(steal: bool, queue_depth: usize) -> GemmService {
+    GemmService::start(ServiceConfig {
+        scheduler: SchedulerSettings {
+            enabled: true,
+            workers: 4,
+            steal,
+            queue_depth,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .expect("service boots")
+}
+
+fn request(n: usize, rng: &mut Pcg64) -> GemmRequest {
+    GemmRequest::new(Matrix::gaussian(n, n, rng), Matrix::gaussian(n, n, rng))
+        .with_kernel(KernelKind::DenseF32)
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * q).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn finish(svc: &GemmService, offered: u64, lat_ms: &mut Vec<f64>, elapsed: Duration) -> Outcome {
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let counters = svc.metrics().counters();
+    Outcome {
+        offered,
+        completed: lat_ms.len() as u64,
+        shed: counters.get("sched.shed").copied().unwrap_or(0),
+        elapsed,
+        p50_ms: percentile(lat_ms, 0.50),
+        p99_ms: percentile(lat_ms, 0.99),
+        steal_events: counters.get("sched.steal").copied().unwrap_or(0),
+    }
+}
+
+/// One shard-sized GEMM at a time: latency of intra-request fan-out.
+fn run_fanout(steal: bool, shape: &Shape) -> Outcome {
+    let svc = service(steal, 0);
+    let mut rng = Pcg64::seeded(911);
+    let mut lat_ms = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..shape.fanout_reqs {
+        let req = request(shape.large_n, &mut rng);
+        let t = Instant::now();
+        svc.gemm_blocking(req).expect("fanout request");
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    finish(&svc, shape.fanout_reqs as u64, &mut lat_ms, t0.elapsed())
+}
+
+/// Overload burst: waves of 1 large + 15 small submitted without waiting
+/// against a depth-8 admission queue, priorities cycling so the watermark
+/// ladder sheds (Background first) once the pool saturates.
+fn run_mixed(steal: bool, shape: &Shape) -> Outcome {
+    let svc = service(steal, 8);
+    let mut rng = Pcg64::seeded(912);
+    let mut lat_ms = Vec::new();
+    let mut offered = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..shape.mixed_waves {
+        let mut wave = Vec::new();
+        let mut push = |req: GemmRequest, wave: &mut Vec<(Instant, _)>| {
+            offered += 1;
+            if let Ok(rx) = svc.submit(req) {
+                wave.push((Instant::now(), rx));
+            }
+        };
+        push(request(shape.large_n, &mut rng), &mut wave);
+        for i in 0..15 {
+            let prio = match i % 3 {
+                0 => Priority::Interactive,
+                1 => Priority::Batch,
+                _ => Priority::Background,
+            };
+            push(request(shape.small_n, &mut rng).with_priority(prio), &mut wave);
+        }
+        for (t, rx) in wave {
+            if rx.recv().map(|r| r.is_ok()).unwrap_or(false) {
+                lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+    }
+    finish(&svc, offered, &mut lat_ms, t0.elapsed())
+}
+
+fn json_row(scenario: &str, steal: bool, o: &Outcome) {
+    println!(
+        "{{\"bench\":\"sched_saturation\",\"scenario\":\"{scenario}\",\"steal\":{steal},\
+         \"offered\":{},\"completed\":{},\"shed\":{},\"throughput_rps\":{:.2},\
+         \"p50_ms\":{:.3},\"p99_ms\":{:.3},\"steal_events\":{}}}",
+        o.offered,
+        o.completed,
+        o.shed,
+        o.completed as f64 / o.elapsed.as_secs_f64().max(1e-9),
+        o.p50_ms,
+        o.p99_ms,
+        o.steal_events
+    );
+}
+
+fn main() {
+    let quick = std::env::var("LRG_BENCH_QUICK").is_ok();
+    let shape = if quick {
+        Shape {
+            large_n: 512,
+            small_n: 96,
+            fanout_reqs: 3,
+            mixed_waves: 3,
+        }
+    } else {
+        Shape {
+            large_n: 768,
+            small_n: 128,
+            fanout_reqs: 6,
+            mixed_waves: 8,
+        }
+    };
+
+    let mut table = Table::new(
+        "Scheduler saturation — fanout latency and mixed overload, steal on vs off",
+        &[
+            "scenario", "steal", "offered", "completed", "shed", "req/s", "p50 ms", "p99 ms",
+            "steals",
+        ],
+    );
+    for steal in [true, false] {
+        for (name, outcome) in [
+            ("fanout", run_fanout(steal, &shape)),
+            ("mixed", run_mixed(steal, &shape)),
+        ] {
+            table.row(&[
+                name.into(),
+                steal.to_string(),
+                outcome.offered.to_string(),
+                outcome.completed.to_string(),
+                outcome.shed.to_string(),
+                format!(
+                    "{:8.2}",
+                    outcome.completed as f64 / outcome.elapsed.as_secs_f64().max(1e-9)
+                ),
+                format!("{:8.3}", outcome.p50_ms),
+                format!("{:8.3}", outcome.p99_ms),
+                outcome.steal_events.to_string(),
+            ]);
+            json_row(name, steal, &outcome);
+        }
+    }
+    table.print();
+    println!(
+        "\n(acceptance: with steal=true the mixed scenario must show ≥ 1 steal event and \
+         a non-zero shed count — offered load exceeds the depth-8 admission queue; \
+         steal=false is the control arm: same pool, no cross-worker stealing, 0 steals)"
+    );
+}

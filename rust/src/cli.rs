@@ -32,6 +32,7 @@ const VALUE_KEYS: &[&str] = &[
     "trace-ring", "trace-slowest", "trace-max-spans", "trace-export",
     "accuracy-sample", "accuracy-probes", "accuracy-alpha", "accuracy-min-samples",
     "accuracy-table", "accuracy-seed",
+    "sched-workers", "sched-queue-depth", "sched-tenant-quota",
     "last", "chrome-out", "prom-out", "json-out",
 ];
 

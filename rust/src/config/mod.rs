@@ -9,7 +9,7 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ServiceSettings,
-    ShardSettings, TraceSettings,
+    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, KernelSettings,
+    SchedulerSettings, ServiceSettings, ShardSettings, TraceSettings,
 };
 pub use toml::{parse_toml, TomlValue};

@@ -64,6 +64,13 @@
 //! min_samples = 5                # analytic error model's prior strength
 //! table_path = ""                # error-model persistence ("" = in-memory only)
 //! seed = 181165805               # probe-vector RNG seed (deterministic replay)
+//!
+//! [scheduler]                    # unified scheduler plane (crate::sched)
+//! enabled = false                # default-off: the legacy two-pool layout
+//! workers = 0                    # steal-pool threads (0 = all cores)
+//! steal = true                   # cross-worker stealing (false = bench control)
+//! queue_depth = 0                # admission depth (0 = inherit [service].queue_depth)
+//! tenant_quota = 0               # per-tenant in-flight cap (0 = unlimited)
 //! ```
 
 use crate::config::toml::{parse_toml, TomlDoc};
@@ -426,6 +433,59 @@ impl AccuracySettings {
     }
 }
 
+/// `[scheduler]` section: the unified work-stealing scheduler and
+/// admission-control plane (see [`crate::sched`]). Default-off; when off,
+/// the service runs the historical two-pool layout (request pool + owned
+/// shard pool, FIFO dequeue, depth-only backpressure) bit-identically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SchedulerSettings {
+    /// Master switch for the unified scheduler.
+    pub enabled: bool,
+    /// Worker threads in the steal pool; 0 = one per available core.
+    /// Replaces *both* `[service].workers` and `[shard].workers` when the
+    /// plane is enabled.
+    pub workers: usize,
+    /// Allow idle workers to steal queued tasks from busy siblings.
+    /// `false` is the benchmark control arm: same pool, no stealing.
+    pub steal: bool,
+    /// Admission queue depth (the Interactive watermark; Batch admits to
+    /// 3/4 of it, Background to 1/2). 0 = inherit `[service].queue_depth`.
+    pub queue_depth: usize,
+    /// Per-tenant in-flight request cap; 0 = unlimited. Only identified
+    /// tenants ([`crate::coordinator::GemmRequest::with_tenant`]) are
+    /// counted.
+    pub tenant_quota: usize,
+}
+
+impl Default for SchedulerSettings {
+    fn default() -> Self {
+        SchedulerSettings {
+            enabled: false,
+            workers: 0,
+            steal: true,
+            queue_depth: 0,
+            tenant_quota: 0,
+        }
+    }
+}
+
+impl SchedulerSettings {
+    /// Range-check the knobs — the single validator for every input path
+    /// (TOML, CLI flags, programmatic [`crate::coordinator::ServiceConfig`]).
+    /// All zero-valued knobs are sentinels (auto / inherit / unlimited),
+    /// so there is little to reject; the cap guards against typo'd worker
+    /// counts spawning thousands of threads.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers > 1024 {
+            return Err(Error::Config(format!(
+                "scheduler workers must be at most 1024 (0 = all cores), got {}",
+                self.workers
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Whole-app configuration.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -456,6 +516,8 @@ pub struct AppConfig {
     pub trace: TraceSettings,
     /// `[accuracy]` knobs.
     pub accuracy: AccuracySettings,
+    /// `[scheduler]` knobs.
+    pub scheduler: SchedulerSettings,
 }
 
 impl Default for AppConfig {
@@ -474,6 +536,7 @@ impl Default for AppConfig {
             cache: CacheSettings::default(),
             trace: TraceSettings::default(),
             accuracy: AccuracySettings::default(),
+            scheduler: SchedulerSettings::default(),
         }
     }
 }
@@ -680,6 +743,29 @@ impl AppConfig {
             }
             if let Some(v) = ac.get("seed") {
                 s.seed = req_usize(v, "accuracy.seed")? as u64;
+            }
+            s.validate()?;
+        }
+        if let Some(sc) = doc.get("scheduler") {
+            let s = &mut cfg.scheduler;
+            if let Some(v) = sc.get("enabled") {
+                s.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("scheduler.enabled must be bool".into()))?;
+            }
+            if let Some(v) = sc.get("workers") {
+                s.workers = req_usize(v, "scheduler.workers")?;
+            }
+            if let Some(v) = sc.get("steal") {
+                s.steal = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("scheduler.steal must be bool".into()))?;
+            }
+            if let Some(v) = sc.get("queue_depth") {
+                s.queue_depth = req_usize(v, "scheduler.queue_depth")?;
+            }
+            if let Some(v) = sc.get("tenant_quota") {
+                s.tenant_quota = req_usize(v, "scheduler.tenant_quota")?;
             }
             s.validate()?;
         }
@@ -1035,6 +1121,46 @@ seed = 99
         // min_samples = 0 is legal: trust probes immediately.
         let cfg = AppConfig::from_toml("[accuracy]\nmin_samples = 0").unwrap();
         assert_eq!(cfg.accuracy.min_samples, 0);
+    }
+
+    #[test]
+    fn scheduler_defaults_and_full_section() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.scheduler, SchedulerSettings::default());
+        assert!(!cfg.scheduler.enabled, "scheduler plane must default off");
+        assert!(cfg.scheduler.steal, "stealing must default on when enabled");
+
+        let text = r#"
+[scheduler]
+enabled = true
+workers = 8
+steal = false
+queue_depth = 64
+tenant_quota = 4
+"#;
+        let cfg = AppConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.scheduler,
+            SchedulerSettings {
+                enabled: true,
+                workers: 8,
+                steal: false,
+                queue_depth: 64,
+                tenant_quota: 4,
+            }
+        );
+    }
+
+    #[test]
+    fn scheduler_validation() {
+        // Zero-valued knobs are sentinels (auto / inherit / unlimited).
+        let cfg = AppConfig::from_toml("[scheduler]\nworkers = 0\nqueue_depth = 0").unwrap();
+        assert_eq!(cfg.scheduler.workers, 0);
+        assert_eq!(cfg.scheduler.queue_depth, 0);
+        assert!(AppConfig::from_toml("[scheduler]\nworkers = 2000").is_err());
+        assert!(AppConfig::from_toml("[scheduler]\nenabled = 1").is_err());
+        assert!(AppConfig::from_toml("[scheduler]\nsteal = \"yes\"").is_err());
+        assert!(AppConfig::from_toml("[scheduler]\nworkers = -1").is_err());
     }
 
     #[test]

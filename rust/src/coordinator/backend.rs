@@ -49,7 +49,9 @@ pub struct Backend {
     lr_cfg: LowRankConfig,
     /// Tile-execution plane: every CPU-substrate product routes through
     /// it, sharding across workers when the plan's gates pass and falling
-    /// back to the single-threaded kernels otherwise.
+    /// back to the single-threaded kernels otherwise. Under `[scheduler]`
+    /// the executor runs its tiles on the coordinator's unified
+    /// work-stealing pool instead of an owned one.
     shard: Arc<ShardExecutor>,
     /// Content-addressed factor cache (the `[cache]` plane) for
     /// anonymous operands; `None` = cold-factorize every anonymous

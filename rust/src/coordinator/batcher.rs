@@ -1,8 +1,9 @@
 //! Size-bucketed dynamic batcher.
 //!
 //! The serving-loop heart of the coordinator: requests accumulate in
-//! per-bucket pens and flush to the worker pool when either the batch is
-//! full (`max_batch`) or the oldest member has waited out the batching
+//! per-bucket pens and flush to the execution pool (the legacy worker
+//! pool, or the unified `[scheduler]` steal pool) when either the batch
+//! is full (`max_batch`) or the oldest member has waited out the batching
 //! window (`batch_window`). Buckets are keyed by (kernel kind, log2 size
 //! class) so one flush hands a worker a set of *similarly shaped, same
 //! kernel* requests — the GEMM analogue of vLLM's continuous batching

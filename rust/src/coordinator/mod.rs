@@ -6,7 +6,8 @@
 //! - [`router`]: AutoKernelSelector-driven routing (kernel, rank, cache),
 //! - [`batcher`]: size-bucketed dynamic batching with a flush window,
 //! - [`backend`]: kernel execution over XLA artifacts or CPU substrate,
-//! - [`service`]: [`GemmService`] — queue, dispatcher, worker pool,
+//! - [`service`]: [`GemmService`] — queue, dispatcher, worker pool (or
+//!   the unified `[scheduler]` steal pool), admission control /
 //!   backpressure, metrics, offline-decomposition API.
 
 pub mod backend;
@@ -17,6 +18,6 @@ pub mod service;
 
 pub use backend::{Backend, ExecOutcome};
 pub use batcher::{Batcher, BucketKey};
-pub use request::{BackendKind, GemmRequest, GemmResponse};
+pub use request::{BackendKind, GemmRequest, GemmResponse, Priority, TenantId};
 pub use router::{RoutePlan, Router, RouterConfig};
 pub use service::{GemmService, ServiceConfig, ServiceStats};

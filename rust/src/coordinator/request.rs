@@ -1,8 +1,50 @@
 //! Request/response types for the GEMM serving API.
 
+use std::time::Duration;
+
 use crate::kernels::KernelKind;
 use crate::linalg::Matrix;
 use crate::lowrank::cache::MatrixId;
+
+/// Stable tenant identity for per-tenant fair dequeue and quotas.
+pub type TenantId = u64;
+
+/// Scheduling priority class. Under `[scheduler]` admission control,
+/// priorities shed lowest-first as the backlog grows (Background gives up
+/// queue room first, Interactive last) and dequeue highest-first. The
+/// legacy two-pool service ignores them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive foreground traffic: dequeued first, admitted up
+    /// to the full queue depth.
+    Interactive,
+    /// The default class — today's behavior for callers that never set a
+    /// priority.
+    #[default]
+    Batch,
+    /// Best-effort traffic: first to shed under overload.
+    Background,
+}
+
+impl Priority {
+    /// Lane index, 0 = most urgent.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    /// Display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+}
 
 /// A single GEMM request: `C = A · B` plus routing hints.
 ///
@@ -30,6 +72,16 @@ pub struct GemmRequest {
     /// Will the caller accept a factored (non-materialized) result?
     /// (The "LowRank Auto" fastest path in the paper's Table 1.)
     pub factored_output_ok: bool,
+    /// Scheduling priority (QoS class). Default [`Priority::Batch`]
+    /// preserves the historical behavior.
+    pub priority: Priority,
+    /// Completion deadline, measured from `submit`. Under `[scheduler]`
+    /// admission control a provably unmeetable deadline is rejected at
+    /// submit time; `None` (the default) never deadline-rejects.
+    pub deadline: Option<Duration>,
+    /// Tenant identity for fair dequeue and per-tenant quotas. `None`
+    /// (the default) is the shared anonymous tenant.
+    pub tenant: Option<TenantId>,
 }
 
 impl GemmRequest {
@@ -43,6 +95,9 @@ impl GemmRequest {
             error_tolerance: None,
             kernel: None,
             factored_output_ok: false,
+            priority: Priority::default(),
+            deadline: None,
+            tenant: None,
         }
     }
 
@@ -62,6 +117,24 @@ impl GemmRequest {
     /// Force a kernel.
     pub fn with_kernel(mut self, kind: KernelKind) -> Self {
         self.kernel = Some(kind);
+        self
+    }
+
+    /// Set the scheduling priority.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set a completion deadline (measured from `submit`).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach a tenant identity.
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = Some(tenant);
         self
     }
 
@@ -116,6 +189,13 @@ pub struct GemmResponse {
     pub exec_us: u64,
     /// How many requests shared this batch.
     pub batch_size: usize,
+    /// Time spent in admission + routing at `submit`, microseconds —
+    /// the scheduling cost the caller paid before the request queued.
+    pub sched_us: u64,
+    /// Tiles of this request that ran inside *stolen* helper jobs on the
+    /// unified scheduler. 0 on the legacy two-pool configuration (and for
+    /// requests too small to shard).
+    pub stolen_tiles: u64,
 }
 
 #[cfg(test)]
@@ -134,6 +214,30 @@ mod tests {
         assert_eq!(r.a_id, Some(7));
         assert_eq!(r.error_tolerance, Some(0.02));
         assert_eq!(r.kernel, Some(KernelKind::DenseF32));
+        // QoS defaults preserve today's behavior.
+        assert_eq!(r.priority, Priority::Batch);
+        assert_eq!(r.deadline, None);
+        assert_eq!(r.tenant, None);
+    }
+
+    #[test]
+    fn qos_builders_roundtrip() {
+        let r = GemmRequest::new(Matrix::zeros(4, 6), Matrix::zeros(6, 8))
+            .with_priority(Priority::Interactive)
+            .with_deadline(Duration::from_millis(5))
+            .with_tenant(42);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(r.tenant, Some(42));
+    }
+
+    #[test]
+    fn priority_lane_order() {
+        assert_eq!(Priority::Interactive.index(), 0);
+        assert_eq!(Priority::Batch.index(), 1);
+        assert_eq!(Priority::Background.index(), 2);
+        assert!(Priority::Interactive < Priority::Batch);
+        assert_eq!(Priority::Background.name(), "background");
     }
 
     #[test]

@@ -3,23 +3,40 @@
 //! Architecture (the vLLM-router shape, DESIGN.md §4):
 //!
 //! ```text
-//!   submit() ──bounded──▶ dispatcher thread ──▶ size-bucketed batcher
-//!      ▲                      │ route()               │ full / expired
-//!      │ backpressure         ▼                       ▼
-//!   callers            Router+FactorCache      worker pool (exec::ThreadPool)
-//!                                                    │ Backend::execute
-//!                                                    ▼
-//!                                     XLA artifacts (PJRT thread)  /  CPU substrate
+//!   submit() ─ admission ─▶ SubmitQueue ──▶ dispatcher ──▶ size-bucketed
+//!      ▲      │ shape/depth   (condvar)       thread          batcher
+//!      │      │ deadline/tenant  ▲                              │ full/expired
+//!      │      ▼ route()          │ push wakes pop               ▼
+//!      │  Router+FactorCache     │                     exec pool ── request jobs
+//!      │                         │                   (ThreadPool, or the unified
+//!   callers ◀── Error::Rejected(RejectReason)         sched::StealPool when
+//!               on backpressure / shed                [scheduler] is enabled —
+//!                                                     shard tiles then become
+//!                                                     stealable leaves)
+//!                                                        │ Backend::execute
+//!                                                        ▼
+//!                                XLA artifacts (PJRT thread)  /  CPU substrate
 //! ```
 //!
 //! Callers get a `Receiver` per request (async completion without tokio);
 //! `gemm_blocking` is the convenience wrapper. Backpressure is a hard
 //! bound on in-flight requests: beyond `queue_depth`, `submit` fails fast
-//! with `Error::Service` rather than buffering unboundedly.
+//! with [`Error::Rejected`] rather than buffering unboundedly.
+//!
+//! With `[scheduler]` enabled the service additionally prices admission:
+//! per-priority depth watermarks shed lowest-priority traffic first,
+//! deadlines that are provably unmeetable under the calibrated backlog
+//! estimate reject at `submit` (never after execution), tenants dequeue
+//! round-robin within a priority and can carry an in-flight quota, and
+//! [`GemmService::drain`] completes in-flight work while refusing new
+//! submits with [`RejectReason::Draining`]. The default configuration
+//! (`[scheduler]` unset) keeps the historical two-pool behavior — same
+//! routing, same result bits, same metric names.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -27,19 +44,20 @@ use crate::accuracy::{probe_rel_error, AccuracyPlane, AccuracyStats, ErrorModel}
 use crate::autotune::CalibrationTable;
 use crate::cache::ContentCache;
 use crate::config::schema::{
-    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, KernelSettings, ShardSettings,
-    TraceSettings,
+    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, KernelSettings,
+    SchedulerSettings, ShardSettings, TraceSettings,
 };
 use crate::coordinator::backend::Backend;
 use crate::coordinator::batcher::{Batcher, BucketKey};
-use crate::coordinator::request::{BackendKind, GemmRequest, GemmResponse};
+use crate::coordinator::request::{BackendKind, GemmRequest, GemmResponse, Priority};
 use crate::coordinator::router::{Router, RouterConfig, RoutePlan};
-use crate::error::{Error, Result};
+use crate::error::{Error, RejectReason, Result};
 use crate::exec::ThreadPool;
 use crate::kernels::KernelKind;
 use crate::linalg::Matrix;
 use crate::lowrank::cache::{CacheStats, MatrixId};
 use crate::lowrank::FactorCache;
+use crate::sched::{self, Pop, QueueMode, StealPool, SubmitQueue, TileStats};
 use crate::shard::factorize_sharded;
 use crate::metrics::{Counter, HistogramHandle, MetricsRegistry, MetricsSnapshot};
 use crate::runtime::{Manifest, XlaExecutor};
@@ -90,6 +108,11 @@ pub struct ServiceConfig {
     /// tracking, calibrated error model). Default-off: no probe work is
     /// scheduled and results are bit-identical to a build without it.
     pub accuracy: AccuracySettings,
+    /// Unified work-stealing scheduler + admission control (`[scheduler]`).
+    /// Default-off: the service then runs the historical two-pool layout
+    /// (request `ThreadPool` + owned shard pool, FIFO dequeue, depth-only
+    /// backpressure) bit-identically.
+    pub scheduler: SchedulerSettings,
 }
 
 impl Default for ServiceConfig {
@@ -108,6 +131,7 @@ impl Default for ServiceConfig {
             cache: CacheSettings::default(),
             trace: TraceSettings::default(),
             accuracy: AccuracySettings::default(),
+            scheduler: SchedulerSettings::default(),
         }
     }
 }
@@ -142,6 +166,7 @@ impl ServiceConfig {
             cache: app.cache.clone(),
             trace: app.trace.clone(),
             accuracy: app.accuracy.clone(),
+            scheduler: app.scheduler.clone(),
         })
     }
 }
@@ -154,6 +179,172 @@ struct Pending {
     enqueued: Instant,
     /// Span arena when the tracing plane is on (`None` otherwise).
     trace: Option<Arc<RequestTrace>>,
+    /// Time spent in admission + routing at `submit`, microseconds.
+    sched_us: u64,
+    /// Cost-model execution estimate charged to the admission backlog
+    /// (0 when admission control is off); refunded on completion.
+    cost_ns: u64,
+}
+
+/// The pool dispatch jobs run on: the legacy per-service [`ThreadPool`],
+/// or the unified [`StealPool`] shared with the shard executor when
+/// `[scheduler]` is enabled.
+enum ExecPool {
+    Owned(ThreadPool),
+    Steal(Arc<StealPool>),
+}
+
+impl ExecPool {
+    fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        match self {
+            ExecPool::Owned(p) => p.execute(job),
+            ExecPool::Steal(p) => p.spawn(job),
+        }
+    }
+
+    fn wait_idle(&self) {
+        match self {
+            ExecPool::Owned(p) => p.wait_idle(),
+            ExecPool::Steal(p) => p.wait_idle(),
+        }
+    }
+}
+
+/// Admission control state (`[scheduler]` only): priority depth
+/// watermarks, the deadline-pricing backlog estimate, per-tenant in-flight
+/// quotas and the drain flag. All checks run at `submit`, before the
+/// request queues — a shed request never consumes dispatcher or pool time.
+struct Admission {
+    /// Full queue depth (the Interactive watermark).
+    depth: usize,
+    /// Workers in the unified pool — divides the backlog estimate, since
+    /// queued work drains in parallel.
+    workers: usize,
+    /// Per-tenant in-flight quota; 0 = unlimited.
+    tenant_quota: usize,
+    /// Sum of cost-model estimates (ns) for admitted, uncompleted
+    /// requests. An estimate, not a measurement: charged from the same
+    /// autotune-calibrated model the router plans with.
+    backlog_ns: AtomicU64,
+    /// In-flight count per identified tenant (anonymous requests are not
+    /// quota-tracked).
+    tenants: Mutex<HashMap<u64, usize>>,
+    /// Set by [`GemmService::drain`]; new submits then reject with
+    /// [`RejectReason::Draining`] while in-flight work completes.
+    draining: AtomicBool,
+    /// `sched.shed` — requests rejected by admission control.
+    shed: Arc<Counter>,
+    /// `sched.queue_depth` — in-flight depth observed at each admit.
+    queue_depth: Arc<HistogramHandle>,
+}
+
+impl Admission {
+    /// Depth watermark for a priority class: Background yields queue room
+    /// first (depth/2), then Batch (3·depth/4), Interactive last (full
+    /// depth) — under overload the service sheds lowest-priority-first.
+    fn watermark(&self, prio: Priority) -> usize {
+        let w = match prio {
+            Priority::Interactive => self.depth,
+            Priority::Batch => self.depth * 3 / 4,
+            Priority::Background => self.depth / 2,
+        };
+        w.max(1)
+    }
+
+    /// Checks that need no routing: drain flag, priority watermark,
+    /// tenant quota. Run before the router prices the request.
+    fn pre_route(
+        &self,
+        req: &GemmRequest,
+        inflight: usize,
+    ) -> std::result::Result<(), RejectReason> {
+        if self.draining.load(Ordering::Acquire) {
+            return Err(RejectReason::Draining);
+        }
+        let depth = self.watermark(req.priority);
+        if inflight >= depth {
+            return Err(RejectReason::QueueFull { inflight, depth });
+        }
+        if self.tenant_quota > 0 {
+            if let Some(t) = req.tenant {
+                let held = self.tenants.lock().unwrap().get(&t).copied().unwrap_or(0);
+                if held >= self.tenant_quota {
+                    return Err(RejectReason::TenantQuotaExceeded {
+                        tenant: t,
+                        inflight: held,
+                        quota: self.tenant_quota,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Deadline pricing, after routing: the request completes no earlier
+    /// than (backlog drained across the pool) + (its own estimated cost).
+    /// If that already meets or exceeds the deadline, reject now rather
+    /// than executing work the caller will discard.
+    fn deadline_check(
+        &self,
+        cost_ns: u64,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<(), RejectReason> {
+        let Some(deadline) = deadline else {
+            return Ok(());
+        };
+        let backlog = self.backlog_ns.load(Ordering::Relaxed);
+        let estimated_ns = backlog / self.workers.max(1) as u64 + cost_ns;
+        let deadline_ns = deadline.as_nanos().min(u64::MAX as u128) as u64;
+        if estimated_ns >= deadline_ns {
+            return Err(RejectReason::DeadlineUnmeetable {
+                estimated_us: estimated_ns / 1_000,
+                deadline_us: deadline_ns / 1_000,
+            });
+        }
+        Ok(())
+    }
+
+    /// Record an admitted request: charge the backlog, count the tenant,
+    /// observe the depth.
+    fn admitted(&self, req: &GemmRequest, cost_ns: u64, inflight: usize) {
+        self.backlog_ns.fetch_add(cost_ns, Ordering::Relaxed);
+        if self.tenant_quota > 0 {
+            if let Some(t) = req.tenant {
+                *self.tenants.lock().unwrap().entry(t).or_insert(0) += 1;
+            }
+        }
+        self.queue_depth.observe((inflight + 1) as f64);
+    }
+
+    /// Refund a completed request's backlog charge and tenant slot.
+    fn complete(&self, tenant: Option<u64>, cost_ns: u64) {
+        // Saturating subtract via CAS: the counter is an estimate and must
+        // never wrap past zero.
+        let mut cur = self.backlog_ns.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(cost_ns);
+            match self.backlog_ns.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        if self.tenant_quota > 0 {
+            if let Some(t) = tenant {
+                let mut map = self.tenants.lock().unwrap();
+                if let Some(n) = map.get_mut(&t) {
+                    *n = n.saturating_sub(1);
+                    if *n == 0 {
+                        map.remove(&t);
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Pre-registered handles for every dispatch-path metric, interned once
@@ -229,7 +420,11 @@ pub struct ServiceStats {
 
 /// The serving coordinator. See module docs for the dataflow.
 pub struct GemmService {
-    tx: Option<Sender<Pending>>,
+    /// Dispatcher inbox — condvar-signalled, so an idle service burns no
+    /// CPU and submits wake the dispatcher immediately (no poll tick).
+    queue: Arc<SubmitQueue<Pending>>,
+    /// Admission control when `[scheduler]` is enabled.
+    admission: Option<Arc<Admission>>,
     dispatcher: Option<JoinHandle<()>>,
     router: Arc<Router>,
     cache: Arc<FactorCache>,
@@ -399,10 +594,42 @@ impl GemmService {
             router = router.with_error_model(plane.model().clone());
         }
         let router = Arc::new(router);
-        let shard = Arc::new(ShardExecutor::with_metrics(
-            ShardPlan::from(&cfg.shard),
-            metrics.clone(),
-        ));
+
+        // Scheduler plane: one work-stealing pool replacing both the
+        // request ThreadPool and the shard executor's owned pool. Request
+        // jobs and their shard tiles become peers on the same deques: a
+        // lone huge GEMM fans its tiles across every core, a flood of
+        // small requests runs one-per-worker, and anything in between
+        // load-balances by stealing. Disabled (the default) the two-pool
+        // layout below is preserved bit-for-bit.
+        let sched_pool = if cfg.scheduler.enabled {
+            // Programmatic ServiceConfig bypasses the TOML/CLI parsers,
+            // so this is the path's validate() call.
+            cfg.scheduler.validate()?;
+            let workers = if cfg.scheduler.workers == 0 {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            } else {
+                cfg.scheduler.workers
+            };
+            Some(Arc::new(StealPool::new(
+                workers,
+                cfg.scheduler.steal,
+                Some(metrics.counter("sched.steal")),
+            )))
+        } else {
+            None
+        };
+        let shard = match &sched_pool {
+            Some(pool) => Arc::new(ShardExecutor::with_shared_pool(
+                ShardPlan::from(&cfg.shard),
+                pool.clone(),
+                metrics.clone(),
+            )),
+            None => Arc::new(ShardExecutor::with_metrics(
+                ShardPlan::from(&cfg.shard),
+                metrics.clone(),
+            )),
+        };
 
         let xla = match &cfg.artifacts_dir {
             Some(dir) => Some(XlaExecutor::start(dir)?),
@@ -423,8 +650,30 @@ impl GemmService {
         }
         let backend = Arc::new(backend);
 
-        let pool = ThreadPool::new(cfg.workers.max(1));
-        let (tx, rx) = channel::<Pending>();
+        let pool = match &sched_pool {
+            Some(p) => ExecPool::Steal(p.clone()),
+            None => ExecPool::Owned(ThreadPool::new(cfg.workers.max(1))),
+        };
+        let queue = Arc::new(SubmitQueue::new(match &sched_pool {
+            Some(_) => QueueMode::Fair,
+            None => QueueMode::Fifo,
+        }));
+        let admission = sched_pool.as_ref().map(|p| {
+            Arc::new(Admission {
+                depth: if cfg.scheduler.queue_depth > 0 {
+                    cfg.scheduler.queue_depth
+                } else {
+                    cfg.queue_depth
+                },
+                workers: p.size(),
+                tenant_quota: cfg.scheduler.tenant_quota,
+                backlog_ns: AtomicU64::new(0),
+                tenants: Mutex::new(HashMap::new()),
+                draining: AtomicBool::new(false),
+                shed: metrics.counter("sched.shed"),
+                queue_depth: metrics.histogram("sched.queue_depth"),
+            })
+        });
         let completed = Arc::new(AtomicU64::new(0));
         let inflight = Arc::new(AtomicUsize::new(0));
 
@@ -436,14 +685,16 @@ impl GemmService {
             let inflight = inflight.clone();
             let autotune = autotune.clone();
             let accuracy = accuracy.clone();
+            let admission = admission.clone();
+            let queue = queue.clone();
             let max_batch = cfg.max_batch;
             let window = cfg.batch_window;
             std::thread::Builder::new()
                 .name("gemm-dispatcher".into())
                 .spawn(move || {
                     Self::dispatch_loop(
-                        rx, pool, backend, handles, tracer, completed, inflight, autotune,
-                        accuracy, max_batch, window,
+                        queue, pool, backend, handles, tracer, completed, inflight, autotune,
+                        accuracy, admission, max_batch, window,
                     )
                 })
                 .map_err(|e| Error::Service(format!("spawning dispatcher: {e}")))?
@@ -452,7 +703,8 @@ impl GemmService {
         let submitted_h = metrics.counter("gemm.submitted");
         let rejected_h = metrics.counter("gemm.rejected");
         Ok(GemmService {
-            tx: Some(tx),
+            queue,
+            admission,
             dispatcher: Some(dispatcher),
             lr_cfg: router.lowrank_config(),
             router,
@@ -484,8 +736,8 @@ impl GemmService {
 
     #[allow(clippy::too_many_arguments)]
     fn dispatch_loop(
-        rx: Receiver<Pending>,
-        pool: ThreadPool,
+        queue: Arc<SubmitQueue<Pending>>,
+        pool: ExecPool,
         backend: Arc<Backend>,
         handles: Arc<ServiceMetrics>,
         tracer: Arc<Tracer>,
@@ -493,6 +745,7 @@ impl GemmService {
         inflight: Arc<AtomicUsize>,
         autotune: Option<Arc<CalibrationTable>>,
         accuracy: Option<Arc<AccuracyPlane>>,
+        admission: Option<Arc<Admission>>,
         max_batch: usize,
         window: Duration,
     ) {
@@ -506,6 +759,7 @@ impl GemmService {
             let inflight = inflight.clone();
             let autotune = autotune.clone();
             let accuracy = accuracy.clone();
+            let admission = admission.clone();
             pool.execute(move || {
                 let batch_size = batch.len();
                 for p in batch {
@@ -516,7 +770,12 @@ impl GemmService {
                     if p.plan.explored {
                         handles.explore_total.inc();
                     }
+                    // Per-request tile accounting: the shard executor
+                    // records each tile (and whether a stolen helper ran
+                    // it) into this request's stats via the sched TLS.
+                    let tile_stats = Arc::new(TileStats::default());
                     let exec_result = {
+                        let _tiles = sched::request_scope(tile_stats.clone());
                         // Scope the trace to this worker thread for the
                         // execute call, so every span opened downstream
                         // (factor/decompose/pack/tile/assemble) attaches
@@ -590,6 +849,8 @@ impl GemmService {
                                 queue_us,
                                 exec_us,
                                 batch_size,
+                                sched_us: p.sched_us,
+                                stolen_tiles: tile_stats.stolen(),
                             }
                         });
                     if result.is_err() {
@@ -699,6 +960,9 @@ impl GemmService {
                             );
                         }
                     }
+                    if let Some(adm) = &admission {
+                        adm.complete(p.req.tenant, p.cost_ns);
+                    }
                     completed.fetch_add(1, Ordering::Relaxed);
                     inflight.fetch_sub(1, Ordering::Relaxed);
                     // Receiver may be gone (caller timed out): fine.
@@ -708,23 +972,20 @@ impl GemmService {
         };
 
         loop {
-            // Sleep until the next batch deadline (or a modest poll tick
-            // when idle), waking early for new arrivals.
-            let timeout = batcher
-                .next_deadline()
-                .map(|d| d.saturating_duration_since(Instant::now()))
-                .unwrap_or(Duration::from_millis(50));
-
-            match rx.recv_timeout(timeout) {
-                Ok(p) => {
+            // Sleep until the next batch deadline; with no batch pending,
+            // block indefinitely — submit's push wakes the queue's
+            // condvar, so an idle service burns no CPU (the old code
+            // polled a fixed 50 ms tick here).
+            match queue.pop_deadline(batcher.next_deadline()) {
+                Pop::Item(p) => {
                     let (m, k, n) = p.req.shape();
                     let key = BucketKey::of(p.plan.choice.kind, m, k, n);
                     if let Some((_, batch)) = batcher.push(key, p, Instant::now()) {
                         dispatch(batch);
                     }
                 }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => break,
+                Pop::Timeout => {}
+                Pop::Closed => break,
             }
             for (_, batch) in batcher.flush_expired(Instant::now()) {
                 dispatch(batch);
@@ -739,9 +1000,14 @@ impl GemmService {
 
     /// Submit a request; returns the completion channel.
     ///
-    /// Fails fast on shape mismatch and on backpressure (in-flight ≥
-    /// queue depth) — the caller decides whether to retry, shed or block.
+    /// Fails fast on shape mismatch and on backpressure — in the legacy
+    /// configuration a single in-flight ≥ queue-depth check, under
+    /// `[scheduler]` the full admission pipeline (drain flag → priority
+    /// watermark → tenant quota → deadline pricing). Every rejection is
+    /// a typed [`Error::Rejected`]; the caller decides whether to retry,
+    /// shed or block.
     pub fn submit(&self, req: GemmRequest) -> Result<Receiver<Result<GemmResponse>>> {
+        let sched_t0 = Instant::now();
         if !req.shape_ok() {
             return Err(Error::ShapeMismatch {
                 op: "submit",
@@ -750,13 +1016,20 @@ impl GemmService {
             });
         }
         let inflight = self.inflight.load(Ordering::Relaxed);
-        if inflight >= self.queue_depth {
-            self.rejected.fetch_add(1, Ordering::Relaxed);
-            self.rejected_h.inc();
-            return Err(Error::Service(format!(
-                "queue full ({inflight} in flight ≥ depth {})",
-                self.queue_depth
-            )));
+        match &self.admission {
+            None => {
+                if inflight >= self.queue_depth {
+                    return Err(self.reject(RejectReason::QueueFull {
+                        inflight,
+                        depth: self.queue_depth,
+                    }));
+                }
+            }
+            Some(adm) => {
+                if let Err(reason) = adm.pre_route(&req, inflight) {
+                    return Err(self.reject(reason));
+                }
+            }
         }
 
         let trace = self.tracer.begin();
@@ -773,8 +1046,21 @@ impl GemmService {
             sp.attr_u64("rank", plan.rank as u64);
             plan
         };
+        // Deadline pricing needs the routed plan's cost estimate, so it
+        // runs after routing — but still at submit, before the request
+        // consumes queue or pool time.
+        let mut cost_ns = 0u64;
+        if let Some(adm) = &self.admission {
+            cost_ns = (plan.choice.cost.time_s.max(0.0) * 1e9) as u64;
+            if let Err(reason) = adm.deadline_check(cost_ns, req.deadline) {
+                return Err(self.reject(reason));
+            }
+            adm.admitted(&req, cost_ns, inflight);
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (respond, result_rx) = channel();
+        let prio = req.priority.index();
+        let tenant = req.tenant;
         let pending = Pending {
             id,
             req,
@@ -782,17 +1068,34 @@ impl GemmService {
             respond,
             enqueued: Instant::now(),
             trace,
+            sched_us: sched_t0.elapsed().as_micros() as u64,
+            cost_ns,
         };
 
         self.inflight.fetch_add(1, Ordering::Relaxed);
         self.submitted.fetch_add(1, Ordering::Relaxed);
         self.submitted_h.inc();
-        self.tx
-            .as_ref()
-            .expect("tx lives until drop")
-            .send(pending)
-            .map_err(|_| Error::Service("dispatcher is gone".into()))?;
+        if let Err(p) = self.queue.push(pending, prio, tenant) {
+            // Queue closed: the dispatcher is shutting down. Undo the
+            // accounting so drain() cannot hang on a request that will
+            // never execute.
+            self.inflight.fetch_sub(1, Ordering::Relaxed);
+            if let Some(adm) = &self.admission {
+                adm.complete(p.req.tenant, p.cost_ns);
+            }
+            return Err(Error::Service("dispatcher is gone".into()));
+        }
         Ok(result_rx)
+    }
+
+    /// Count and type a rejection.
+    fn reject(&self, reason: RejectReason) -> Error {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.rejected_h.inc();
+        if let Some(adm) = &self.admission {
+            adm.shed.inc();
+        }
+        Error::Rejected(reason)
     }
 
     /// Submit and wait for the result.
@@ -835,6 +1138,8 @@ impl GemmService {
             queue_us: 0,
             exec_us: started.elapsed().as_micros() as u64,
             batch_size: 1,
+            sched_us: 0,
+            stolen_tiles: 0,
         })
     }
 
@@ -918,7 +1223,15 @@ impl GemmService {
     }
 
     /// Block until every accepted request has completed.
+    ///
+    /// Under `[scheduler]` this also flips the drain flag first: new
+    /// submits reject with [`RejectReason::Draining`] while in-flight
+    /// work completes, so the wait cannot be starved by fresh arrivals.
+    /// (The flag stays set — draining precedes shutdown.)
     pub fn drain(&self) {
+        if let Some(adm) = &self.admission {
+            adm.draining.store(true, Ordering::Release);
+        }
         while self.inflight.load(Ordering::Relaxed) > 0 {
             std::thread::sleep(Duration::from_micros(200));
         }
@@ -927,8 +1240,8 @@ impl GemmService {
 
 impl Drop for GemmService {
     fn drop(&mut self) {
-        // Closing the channel stops the dispatcher after it drains.
-        self.tx.take();
+        // Closing the inbox stops the dispatcher after it drains.
+        self.queue.close();
         if let Some(j) = self.dispatcher.take() {
             let _ = j.join();
         }

@@ -29,10 +29,74 @@ pub enum Error {
     Xla(String),
     /// Configuration file / CLI parse errors.
     Config(String),
-    /// Service lifecycle errors (shutdown, queue overflow, …).
+    /// Service lifecycle errors (shutdown, internal invariants, …).
     Service(String),
+    /// A request refused at `submit` time by admission control. Carries
+    /// the structured reason so callers can branch on backpressure
+    /// instead of parsing strings.
+    Rejected(RejectReason),
     /// Anything I/O.
     Io(std::io::Error),
+}
+
+/// Why admission control refused a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The in-flight backlog reached the (priority-adjusted) queue depth.
+    QueueFull {
+        /// Requests in flight at rejection time.
+        inflight: usize,
+        /// The depth watermark the request was admitted against.
+        depth: usize,
+    },
+    /// The deadline is provably unmeetable under the current backlog
+    /// estimate from the calibrated cost model.
+    DeadlineUnmeetable {
+        /// Estimated completion time (backlog + this request), µs.
+        estimated_us: u64,
+        /// The request's deadline, µs.
+        deadline_us: u64,
+    },
+    /// The tenant already has its full quota of requests in flight.
+    TenantQuotaExceeded {
+        /// The tenant.
+        tenant: u64,
+        /// The tenant's requests in flight at rejection time.
+        inflight: usize,
+        /// The per-tenant in-flight quota.
+        quota: usize,
+    },
+    /// The service is draining toward shutdown.
+    Draining,
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // Must match the historical `Error::Service` string so
+            // callers matching on Display keep working.
+            RejectReason::QueueFull { inflight, depth } => {
+                write!(f, "queue full ({inflight} in flight ≥ depth {depth})")
+            }
+            RejectReason::DeadlineUnmeetable {
+                estimated_us,
+                deadline_us,
+            } => write!(
+                f,
+                "deadline unmeetable (estimated {estimated_us} µs ≥ deadline \
+                 {deadline_us} µs under current backlog)"
+            ),
+            RejectReason::TenantQuotaExceeded {
+                tenant,
+                inflight,
+                quota,
+            } => write!(
+                f,
+                "tenant {tenant} quota exceeded ({inflight} in flight ≥ quota {quota})"
+            ),
+            RejectReason::Draining => write!(f, "service is draining"),
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -53,6 +117,10 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Service(m) => write!(f, "service error: {m}"),
+            // Same prefix as `Service`, and `RejectReason`'s Display
+            // matches the historical strings — rejections render exactly
+            // as they did when they were stringly typed.
+            Error::Rejected(r) => write!(f, "service error: {r}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -100,6 +168,35 @@ mod tests {
     fn display_invalid_rank() {
         let e = Error::InvalidRank { requested: 99, max: 8 };
         assert!(e.to_string().contains("99"));
+    }
+
+    #[test]
+    fn rejected_display_matches_legacy_queue_full_string() {
+        let e = Error::Rejected(RejectReason::QueueFull {
+            inflight: 2,
+            depth: 2,
+        });
+        assert_eq!(e.to_string(), "service error: queue full (2 in flight ≥ depth 2)");
+    }
+
+    #[test]
+    fn reject_reasons_are_branchable_and_display() {
+        let r = RejectReason::DeadlineUnmeetable {
+            estimated_us: 1500,
+            deadline_us: 100,
+        };
+        assert!(r.to_string().contains("deadline unmeetable"));
+        assert!(r.to_string().contains("1500"));
+        let q = RejectReason::TenantQuotaExceeded {
+            tenant: 7,
+            inflight: 4,
+            quota: 4,
+        };
+        assert!(q.to_string().contains("tenant 7"));
+        assert_eq!(RejectReason::Draining.to_string(), "service is draining");
+        // Callers can branch on the reason without string matching.
+        let e = Error::Rejected(RejectReason::Draining);
+        assert!(matches!(e, Error::Rejected(RejectReason::Draining)));
     }
 
     #[test]

@@ -2,11 +2,14 @@
 //!
 //! The offline vendor set has no tokio, so the worker pools are built on
 //! `std::thread` + `std::sync::mpsc` — FIFO queue, fixed worker count,
-//! graceful shutdown, and queue-depth accounting (`pending()`). Two pools
-//! run in the serving stack: the coordinator's request-level pool
-//! (overlap of queueing and compute) and the shard plane's tile pool
-//! ([`crate::shard`]), which turns multi-core hosts into intra-GEMM
-//! parallel speedup via atomic work-claiming over block-partitioned tasks.
+//! graceful shutdown, and queue-depth accounting (`pending()`). In the
+//! default configuration two pools run in the serving stack: the
+//! coordinator's request-level pool (overlap of queueing and compute) and
+//! the shard plane's tile pool ([`crate::shard`]), which turns multi-core
+//! hosts into intra-GEMM parallel speedup via atomic work-claiming over
+//! block-partitioned tasks. With `[scheduler]` enabled both roles move to
+//! the unified work-stealing [`crate::sched::StealPool`] and this FIFO
+//! pool is not constructed.
 
 pub mod threadpool;
 

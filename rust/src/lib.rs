@@ -36,7 +36,8 @@
 //!                       │   ┌─ ShardPlan {grid, workers,              │
 //!                       │   │             min_parallel_n}             │
 //!                       │   │  tile grid → atomic work-claiming over  │
-//!                       │   │  exec::ThreadPool → per-shard metrics   │
+//!                       │   │  exec::ThreadPool (or the unified       │
+//!                       │   │  sched::StealPool) → per-shard metrics  │
 //!                       │   └─▶ linalg::gemm_panel / fp8 codecs /     │
 //!                       │       shard::rsvd (panel-parallel rSVD) /   │
 //!                       │       lowrank factor chain                  │
@@ -81,6 +82,18 @@
 //! (see the [`accuracy`] module docs). Disabled (the default), no probe
 //! work is scheduled and results are bit-identical.
 //!
+//! When `[scheduler]` is enabled, the request pool and the shard plane's
+//! tile pool collapse onto one work-stealing [`sched::StealPool`] —
+//! request jobs and their shard tiles become peers on per-worker deques,
+//! so a lone huge GEMM fans out across every core while floods of small
+//! requests run one-per-worker — and `submit` gains admission control:
+//! per-priority depth watermarks (shed lowest-priority-first),
+//! deadline-aware load shedding priced by the autotune-calibrated cost
+//! model, per-tenant fair dequeue and in-flight quotas, all rejecting
+//! with a typed [`error::RejectReason`]. Disabled (the default), the
+//! two-pool layout, FIFO dequeue and depth-only backpressure are
+//! preserved bit-identically.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -114,6 +127,7 @@ pub mod linalg;
 pub mod lowrank;
 pub mod metrics;
 pub mod runtime;
+pub mod sched;
 pub mod shard;
 pub mod trace;
 pub mod trace_plane;
@@ -123,8 +137,10 @@ pub mod prelude {
     pub use crate::accuracy::{AccuracyPlane, ErrorModel, SloTracker};
     pub use crate::autotune::{CalibrationTable, ExplorePolicy};
     pub use crate::cache::{ContentCache, Fingerprint};
-    pub use crate::coordinator::{GemmRequest, GemmResponse, GemmService, ServiceConfig};
-    pub use crate::error::{Error, Result};
+    pub use crate::coordinator::{
+        GemmRequest, GemmResponse, GemmService, Priority, ServiceConfig, TenantId,
+    };
+    pub use crate::error::{Error, RejectReason, Result};
     pub use crate::fp8::{Fp8Format, QuantizedTensor};
     pub use crate::gpu_sim::{DeviceProfile, Roofline};
     pub use crate::kernels::{AutoKernelSelector, KernelChoice, KernelKind};

@@ -92,7 +92,12 @@ COMMANDS:
              --accuracy-sample N probe one in N requests, --accuracy-probes S
              probe vectors, --accuracy-alpha A --accuracy-min-samples K
              EWMA knobs, --accuracy-table F persist the error model,
-             --accuracy-seed S)
+             --accuracy-seed S);
+             --sched turns on the unified work-stealing scheduler +
+             admission control ([scheduler] in TOML: --sched-workers W
+             pool threads (0 = all cores), --sched-no-steal disables
+             cross-worker stealing, --sched-queue-depth D admission depth,
+             --sched-tenant-quota Q per-tenant in-flight cap)
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
   factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
@@ -200,6 +205,18 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
         cfg.accuracy.table_path = Some(p.to_string());
     }
     cfg.accuracy.seed = args.get_parse("accuracy-seed", cfg.accuracy.seed)?;
+    // `[scheduler]` overrides: the unified steal-pool / admission plane.
+    if args.has_flag("sched") {
+        cfg.scheduler.enabled = true;
+    }
+    if args.has_flag("sched-no-steal") {
+        cfg.scheduler.steal = false;
+    }
+    cfg.scheduler.workers = args.get_parse("sched-workers", cfg.scheduler.workers)?;
+    cfg.scheduler.queue_depth =
+        args.get_parse("sched-queue-depth", cfg.scheduler.queue_depth)?;
+    cfg.scheduler.tenant_quota =
+        args.get_parse("sched-tenant-quota", cfg.scheduler.tenant_quota)?;
     // Same validators the TOML path runs — an out-of-range flag must
     // fail loudly, not be silently clamped downstream.
     cfg.kernel.validate()?;
@@ -207,6 +224,7 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
     cfg.cache.validate()?;
     cfg.trace.validate()?;
     cfg.accuracy.validate()?;
+    cfg.scheduler.validate()?;
     Ok(cfg)
 }
 

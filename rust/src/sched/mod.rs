@@ -1,0 +1,138 @@
+//! Unified work-stealing scheduler (the `[scheduler]` plane).
+//!
+//! Historically the coordinator ran **two** fixed pools: request-level
+//! workers (`[service].workers` on an [`crate::exec::ThreadPool`]) and the
+//! shard plane's tile pool (`[shard].workers`, owned by
+//! [`crate::shard::ShardExecutor`]). Depending on traffic mix the pair
+//! either oversubscribes the host (both pools busy) or starves it (a lone
+//! huge GEMM keeps one request worker busy while the other request workers
+//! idle and cannot help with its tiles).
+//!
+//! With `[scheduler].enabled = true` both roles collapse onto one
+//! [`StealPool`]: every admitted request becomes a task spawned onto the
+//! pool, and the request's shard tiles become *stealable leaves* — helper
+//! claim-jobs pushed onto the executing worker's local deque, where any
+//! idle sibling can steal them. A lone huge GEMM therefore fans out across
+//! every core, while a flood of small requests runs one-per-worker without
+//! ever paying tile-claim overhead (small requests never shard, exactly as
+//! before). Results are bitwise identical at any worker/steal
+//! configuration because tile outputs are still written to disjoint
+//! MC/NC-aligned regions in a fixed per-tile summation order — *who*
+//! computes a tile cannot change its bits.
+//!
+//! The module also provides [`SubmitQueue`], the condvar-signalled
+//! admission queue used by the dispatcher in **both** modes (it replaces
+//! the historical 50 ms `recv_timeout` poll tick), and [`TileStats`], the
+//! per-request tile/steal accounting surfaced as
+//! [`crate::coordinator::GemmResponse::stolen_tiles`].
+//!
+//! Deadlock freedom on the shared pool: the historical shard executor
+//! *owned* its pool precisely because a request worker blocking on its
+//! tiles inside a shared FIFO pool can deadlock (all workers blocked
+//! waiting on tile jobs that sit queued behind them). The unified design
+//! removes that hazard structurally — the requesting job **participates**
+//! in its own tile-claim loop instead of only waiting: it spawns helper
+//! claim-jobs, then claims tiles itself off the same atomic cursor, so it
+//! only ever blocks on tiles a *running* helper has already claimed.
+//! Progress is guaranteed at any pool size, including 1.
+
+pub mod pool;
+pub mod queue;
+
+pub use pool::{task_was_stolen, StealPool};
+pub use queue::{Pop, QueueMode, SubmitQueue};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Per-request tile accounting: how many tiles ran, and how many of them
+/// ran inside a *stolen* helper job. Installed around a request's
+/// execution via [`request_scope`]; the shard executor's shared-pool path
+/// records into it from every participating worker.
+#[derive(Debug, Default)]
+pub struct TileStats {
+    tiles: AtomicU64,
+    stolen: AtomicU64,
+}
+
+impl TileStats {
+    /// Record one completed tile.
+    pub fn record(&self, stolen: bool) {
+        self.tiles.fetch_add(1, Ordering::Relaxed);
+        if stolen {
+            self.stolen.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Tiles recorded so far.
+    pub fn tiles(&self) -> u64 {
+        self.tiles.load(Ordering::Relaxed)
+    }
+
+    /// Tiles that ran inside a stolen helper job.
+    pub fn stolen(&self) -> u64 {
+        self.stolen.load(Ordering::Relaxed)
+    }
+}
+
+thread_local! {
+    static REQUEST: RefCell<Option<Arc<TileStats>>> = const { RefCell::new(None) };
+}
+
+/// Guard restoring the previous request scope on drop.
+pub struct RequestScope {
+    prev: Option<Arc<TileStats>>,
+}
+
+/// Pin `stats` to the executing thread for the duration of the returned
+/// guard. The shard executor captures [`current_request`] before fanning
+/// tile helpers out, so steal accounting follows the request across
+/// worker threads (mirroring how the trace plane threads its `ActiveCtx`).
+pub fn request_scope(stats: Arc<TileStats>) -> RequestScope {
+    let prev = REQUEST.with(|r| r.replace(Some(stats)));
+    RequestScope { prev }
+}
+
+impl Drop for RequestScope {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        REQUEST.with(|r| *r.borrow_mut() = prev);
+    }
+}
+
+/// The tile accounting pinned to this thread, if any.
+pub fn current_request() -> Option<Arc<TileStats>> {
+    REQUEST.with(|r| r.borrow().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_stats_counts_stolen_separately() {
+        let s = TileStats::default();
+        s.record(false);
+        s.record(true);
+        s.record(false);
+        assert_eq!(s.tiles(), 3);
+        assert_eq!(s.stolen(), 1);
+    }
+
+    #[test]
+    fn request_scope_nests_and_restores() {
+        assert!(current_request().is_none());
+        let outer = Arc::new(TileStats::default());
+        let g1 = request_scope(outer.clone());
+        assert!(Arc::ptr_eq(&current_request().unwrap(), &outer));
+        {
+            let inner = Arc::new(TileStats::default());
+            let _g2 = request_scope(inner.clone());
+            assert!(Arc::ptr_eq(&current_request().unwrap(), &inner));
+        }
+        assert!(Arc::ptr_eq(&current_request().unwrap(), &outer));
+        drop(g1);
+        assert!(current_request().is_none());
+    }
+}

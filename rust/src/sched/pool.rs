@@ -1,0 +1,387 @@
+//! Work-stealing thread pool: per-worker deques + a global injector.
+//!
+//! Topology and discipline:
+//!
+//! - **Injector** — a global FIFO. External threads (the dispatcher, test
+//!   callers) spawn here; workers drain it when their own deque is empty.
+//! - **Per-worker deques** — a worker that spawns from inside a job (the
+//!   shard executor's tile helpers) pushes onto its *own* deque. The owner
+//!   pops LIFO (hot caches); idle siblings steal FIFO (oldest first, the
+//!   classic Chase–Lev discipline, here under plain mutexes — contention
+//!   is a handful of lock ops per *tile*, which is microseconds of work).
+//! - **Steal accounting** — every cross-worker deque pop counts into
+//!   [`StealPool::steals`], the optional `sched.steal` metrics counter,
+//!   and the executing task observes [`task_was_stolen`] = true. With
+//!   `steal = false`, deque tasks wait for their owner (the bench's
+//!   control arm); the injector is always fair game, and shutdown always
+//!   drains everything regardless of the flag.
+//!
+//! Parking: workers block indefinitely on a condvar when the pool is
+//! truly empty (`avail == 0` checked under the gate lock, every push
+//! notifies under the same lock — no lost wakeups, no idle CPU burn), and
+//! back off on a short timed wait when work exists that they cannot take
+//! (steal disabled and the only tasks sit in a sibling's deque).
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::metrics::Counter;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// (pool token, worker ordinal) for pool worker threads.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+    /// Was the currently executing task acquired by stealing?
+    static TASK_STOLEN: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Was the task the calling thread is currently executing stolen from
+/// another worker's deque? `false` on non-pool threads and for tasks
+/// acquired from the own deque or the injector.
+pub fn task_was_stolen() -> bool {
+    TASK_STOLEN.with(|c| c.get())
+}
+
+struct Inner {
+    injector: Mutex<VecDeque<Job>>,
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    /// Gate lock for the parking condvar; pushes notify under it.
+    gate: Mutex<()>,
+    cv: Condvar,
+    /// Tasks pushed but not yet acquired, across injector + deques.
+    avail: AtomicUsize,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    steals: AtomicU64,
+    steal_enabled: bool,
+    shutdown: AtomicBool,
+    steal_counter: Option<Arc<Counter>>,
+}
+
+impl Inner {
+    fn token(self: &Arc<Self>) -> usize {
+        Arc::as_ptr(self) as usize
+    }
+
+    /// Try to acquire one task for worker `ord`: own deque (LIFO) →
+    /// injector (FIFO) → steal a sibling's oldest. Returns the task and
+    /// whether it was stolen.
+    fn acquire(&self, ord: usize) -> Option<(Job, bool)> {
+        if let Some(job) = self.deques[ord].lock().unwrap().pop_back() {
+            self.avail.fetch_sub(1, Ordering::AcqRel);
+            return Some((job, false));
+        }
+        if let Some(job) = self.injector.lock().unwrap().pop_front() {
+            self.avail.fetch_sub(1, Ordering::AcqRel);
+            return Some((job, false));
+        }
+        // Stealing is always permitted during shutdown so the pool drains
+        // even when the owner of a deque has already exited.
+        if self.steal_enabled || self.shutdown.load(Ordering::Acquire) {
+            let n = self.deques.len();
+            for i in 1..n {
+                let victim = (ord + i) % n;
+                if let Some(job) = self.deques[victim].lock().unwrap().pop_front() {
+                    self.avail.fetch_sub(1, Ordering::AcqRel);
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                    if let Some(c) = &self.steal_counter {
+                        c.inc();
+                    }
+                    return Some((job, true));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// The unified work-stealing pool (see the [module docs](self)).
+pub struct StealPool {
+    inner: Arc<Inner>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl StealPool {
+    /// Spawn `size` workers (clamped to ≥ 1). `steal_counter`, when
+    /// given, receives one increment per cross-worker steal (the
+    /// `sched.steal` metric).
+    pub fn new(size: usize, steal: bool, steal_counter: Option<Arc<Counter>>) -> Self {
+        let size = size.max(1);
+        let inner = Arc::new(Inner {
+            injector: Mutex::new(VecDeque::new()),
+            deques: (0..size).map(|_| Mutex::new(VecDeque::new())).collect(),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+            avail: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            steal_enabled: steal,
+            shutdown: AtomicBool::new(false),
+            steal_counter,
+        });
+        let workers = (0..size)
+            .map(|ord| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("lrg-sched-{ord}"))
+                    .spawn(move || worker_loop(inner, ord))
+                    .expect("spawn sched worker")
+            })
+            .collect();
+        StealPool { inner, workers }
+    }
+
+    /// Spawn a task. Called from a worker of *this* pool, the task lands
+    /// on that worker's own deque (LIFO for the owner, stealable FIFO for
+    /// siblings); from any other thread it lands on the global injector.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.inner.submitted.fetch_add(1, Ordering::Relaxed);
+        let job: Job = Box::new(job);
+        match self.current_ordinal() {
+            Some(ord) => self.inner.deques[ord].lock().unwrap().push_back(job),
+            None => self.inner.injector.lock().unwrap().push_back(job),
+        }
+        self.inner.avail.fetch_add(1, Ordering::AcqRel);
+        let _g = self.inner.gate.lock().unwrap();
+        self.inner.cv.notify_one();
+    }
+
+    /// The calling thread's worker ordinal in this pool, if it is one of
+    /// this pool's workers.
+    pub fn current_ordinal(&self) -> Option<usize> {
+        let token = self.inner.token();
+        WORKER
+            .with(|w| w.get())
+            .and_then(|(t, ord)| (t == token).then_some(ord))
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Tasks spawned so far.
+    pub fn submitted(&self) -> u64 {
+        self.inner.submitted.load(Ordering::Relaxed)
+    }
+
+    /// Tasks fully executed so far.
+    pub fn completed(&self) -> u64 {
+        self.inner.completed.load(Ordering::Relaxed)
+    }
+
+    /// Tasks pushed but not yet picked up by any worker (the analogue of
+    /// [`crate::exec::ThreadPool::pending`]).
+    pub fn pending(&self) -> u64 {
+        self.inner.avail.load(Ordering::Acquire) as u64
+    }
+
+    /// Cross-worker steals so far.
+    pub fn steals(&self) -> u64 {
+        self.inner.steals.load(Ordering::Relaxed)
+    }
+
+    /// Block until every spawned task has completed (shutdown/test
+    /// helper; spin + yield is fine at our scale).
+    pub fn wait_idle(&self) {
+        while self.completed() < self.submitted() {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for StealPool {
+    fn drop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.inner.gate.lock().unwrap();
+            self.inner.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>, ord: usize) {
+    WORKER.with(|w| w.set(Some((inner.token(), ord))));
+    loop {
+        if let Some((job, stolen)) = inner.acquire(ord) {
+            TASK_STOLEN.with(|c| c.set(stolen));
+            job();
+            TASK_STOLEN.with(|c| c.set(false));
+            inner.completed.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        let guard = inner.gate.lock().unwrap();
+        if inner.avail.load(Ordering::Acquire) == 0 {
+            if inner.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            // Truly empty: block until a push notifies. Every push
+            // increments `avail` before taking the gate to notify, and we
+            // re-check `avail` under the gate, so the wakeup cannot be
+            // lost.
+            let _unused = inner.cv.wait(guard).unwrap();
+        } else {
+            // Work exists but none of it is acquirable by this worker
+            // right now (steal disabled, tasks in a sibling's deque, or
+            // we lost the race). Bounded backoff instead of a spin.
+            let _unused = inner
+                .cv
+                .wait_timeout(guard, Duration::from_millis(1))
+                .unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = StealPool::new(3, true, None);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..200 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+        assert_eq!(pool.completed(), 200);
+    }
+
+    #[test]
+    fn worker_spawn_lands_on_own_deque_and_gets_stolen() {
+        // One worker spawns local tasks then blocks until every one of
+        // them has completed — it cannot run them itself, so the other
+        // workers *must* steal them. Deterministic steal coverage.
+        let pool = Arc::new(StealPool::new(3, true, None));
+        let (done_tx, done_rx) = mpsc::channel::<bool>();
+        let p = Arc::clone(&pool);
+        pool.spawn(move || {
+            assert!(p.current_ordinal().is_some(), "job runs on a pool worker");
+            let (tx, rx) = mpsc::channel::<bool>();
+            for _ in 0..4 {
+                let tx = tx.clone();
+                p.spawn(move || {
+                    tx.send(task_was_stolen()).unwrap();
+                });
+            }
+            drop(tx);
+            // Block the owner: all 4 local tasks must arrive via steals.
+            let stolen: Vec<bool> = rx.iter().collect();
+            done_tx.send(stolen.iter().all(|&s| s)).unwrap();
+        });
+        assert!(
+            done_rx.recv().unwrap(),
+            "all owner-blocked local tasks must be stolen"
+        );
+        assert!(pool.steals() >= 4);
+    }
+
+    #[test]
+    fn steal_disabled_still_drains_via_owner() {
+        let pool = Arc::new(StealPool::new(2, false, None));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let p = Arc::clone(&pool);
+        let c = Arc::clone(&counter);
+        pool.spawn(move || {
+            for _ in 0..8 {
+                let c = Arc::clone(&c);
+                p.spawn(move || {
+                    assert!(!task_was_stolen());
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+        assert_eq!(pool.steals(), 0, "steal disabled must never steal");
+    }
+
+    #[test]
+    fn steal_counter_handle_receives_steals() {
+        let c = Arc::new(Counter::default());
+        let pool = Arc::new(StealPool::new(2, true, Some(c.clone())));
+        let (tx, rx) = mpsc::channel::<()>();
+        let p = Arc::clone(&pool);
+        pool.spawn(move || {
+            let (htx, hrx) = mpsc::channel::<()>();
+            for _ in 0..2 {
+                let htx = htx.clone();
+                p.spawn(move || htx.send(()).unwrap());
+            }
+            drop(htx);
+            for _ in hrx {}
+            tx.send(()).unwrap();
+        });
+        rx.recv().unwrap();
+        pool.wait_idle();
+        assert_eq!(c.get(), pool.steals());
+        assert!(c.get() >= 2);
+    }
+
+    #[test]
+    fn injector_pickup_is_not_a_steal() {
+        let pool = StealPool::new(2, true, None);
+        let (tx, rx) = mpsc::channel::<bool>();
+        for _ in 0..8 {
+            let tx = tx.clone();
+            pool.spawn(move || tx.send(task_was_stolen()).unwrap());
+        }
+        drop(tx);
+        assert!(rx.iter().all(|s| !s), "injector tasks are dispatched, not stolen");
+        assert_eq!(pool.steals(), 0);
+    }
+
+    #[test]
+    fn current_ordinal_is_pool_scoped() {
+        let a = StealPool::new(1, true, None);
+        let b = StealPool::new(1, true, None);
+        assert!(a.current_ordinal().is_none());
+        let (tx, rx) = mpsc::channel::<(Option<usize>, Option<usize>)>();
+        // A job running on pool `a` is a worker of `a`, not of `b`.
+        let b = Arc::new(b);
+        let b2 = Arc::clone(&b);
+        a.spawn(move || {
+            tx.send((Some(0), b2.current_ordinal())).unwrap();
+        });
+        let (_own, other) = rx.recv().unwrap();
+        assert_eq!(other, None);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_work() {
+        let pool = StealPool::new(2, false, None);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // must complete everything, then join cleanly
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn zero_size_clamped() {
+        let pool = StealPool::new(0, true, None);
+        assert_eq!(pool.size(), 1);
+        let (tx, rx) = mpsc::channel();
+        pool.spawn(move || tx.send(42).unwrap());
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+}

@@ -1,0 +1,283 @@
+//! Condvar-signalled submit queue with optional priority + tenant-fair
+//! dequeue.
+//!
+//! This is the dispatcher's inbox in **both** scheduler modes, replacing
+//! the historical `mpsc::Receiver::recv_timeout` loop and its fixed 50 ms
+//! poll tick: [`SubmitQueue::pop_deadline`] blocks indefinitely when the
+//! batcher has no pending deadline (an idle service burns no CPU) and
+//! wakes exactly when `submit` pushes or the deadline arrives (batch-flush
+//! latency is no longer quantized to a tick).
+//!
+//! - [`QueueMode::Fifo`] — the legacy discipline: strict arrival order,
+//!   priorities and tenants ignored. Byte-identical dequeue order to the
+//!   old channel.
+//! - [`QueueMode::Fair`] — the `[scheduler]` discipline: strict priority
+//!   (Interactive before Batch before Background), and within a priority
+//!   a per-tenant round-robin so a tenant flooding the queue cannot
+//!   starve the others — under a 10:1 skewed flood the minority tenant
+//!   still dequeues every other slot.
+//!
+//! Closing ([`SubmitQueue::close`]) mirrors `mpsc` disconnect semantics:
+//! pops keep draining queued items and only report [`Pop::Closed`] once
+//! the queue is closed *and* empty; pushes after close hand the item back
+//! to the caller.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Number of priority classes (Interactive / Batch / Background).
+pub const PRIORITIES: usize = 3;
+
+/// Dequeue discipline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueMode {
+    /// Strict arrival order (the legacy two-pool service).
+    Fifo,
+    /// Strict priority, tenant round-robin within a priority.
+    Fair,
+}
+
+/// Outcome of [`SubmitQueue::pop_deadline`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Pop<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// The deadline passed with nothing to dequeue.
+    Timeout,
+    /// The queue is closed and fully drained.
+    Closed,
+}
+
+/// One priority lane: tenants with queued items, round-robin order.
+struct Lane<T> {
+    /// Tenants with a non-empty queue, each exactly once, in dequeue
+    /// order. `None` is the anonymous tenant.
+    order: VecDeque<Option<u64>>,
+    queues: HashMap<Option<u64>, VecDeque<T>>,
+}
+
+impl<T> Default for Lane<T> {
+    fn default() -> Self {
+        Lane {
+            order: VecDeque::new(),
+            queues: HashMap::new(),
+        }
+    }
+}
+
+impl<T> Lane<T> {
+    fn push(&mut self, tenant: Option<u64>, item: T) {
+        let q = self.queues.entry(tenant).or_default();
+        if q.is_empty() {
+            self.order.push_back(tenant);
+        }
+        q.push_back(item);
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        let tenant = self.order.pop_front()?;
+        let q = self.queues.get_mut(&tenant).expect("ordered tenant has a queue");
+        let item = q.pop_front().expect("ordered tenant queue non-empty");
+        if q.is_empty() {
+            self.queues.remove(&tenant);
+        } else {
+            self.order.push_back(tenant);
+        }
+        Some(item)
+    }
+}
+
+struct State<T> {
+    lanes: [Lane<T>; PRIORITIES],
+    len: usize,
+    closed: bool,
+}
+
+/// The dispatcher inbox (see the [module docs](self)).
+pub struct SubmitQueue<T> {
+    mode: QueueMode,
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> SubmitQueue<T> {
+    /// New empty queue with the given dequeue discipline.
+    pub fn new(mode: QueueMode) -> Self {
+        SubmitQueue {
+            mode,
+            state: Mutex::new(State {
+                lanes: [Lane::default(), Lane::default(), Lane::default()],
+                len: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item and wake the dispatcher. `prio` indexes the
+    /// priority lane (0 = most urgent, clamped to the lane count);
+    /// `tenant` selects the fair-dequeue ring. Both are ignored in
+    /// [`QueueMode::Fifo`]. Returns the item back if the queue is closed.
+    pub fn push(&self, item: T, prio: usize, tenant: Option<u64>) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(item);
+        }
+        match self.mode {
+            QueueMode::Fifo => st.lanes[0].push(None, item),
+            QueueMode::Fair => st.lanes[prio.min(PRIORITIES - 1)].push(tenant, item),
+        }
+        st.len += 1;
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue the next item, blocking until one arrives, `deadline`
+    /// passes (`None` = wait indefinitely), or the queue closes and
+    /// drains.
+    pub fn pop_deadline(&self, deadline: Option<Instant>) -> Pop<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = Self::take(&mut st) {
+                return Pop::Item(item);
+            }
+            if st.closed {
+                return Pop::Closed;
+            }
+            match deadline {
+                None => st = self.cv.wait(st).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Pop::Timeout;
+                    }
+                    let (guard, _) = self.cv.wait_timeout(st, d - now).unwrap();
+                    st = guard;
+                }
+            }
+        }
+    }
+
+    fn take(st: &mut State<T>) -> Option<T> {
+        for lane in st.lanes.iter_mut() {
+            if let Some(item) = lane.pop() {
+                st.len -= 1;
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Close the queue: queued items keep draining, further pushes are
+    /// refused, and pops report [`Pop::Closed`] once empty.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn drain(q: &SubmitQueue<u32>) -> Vec<u32> {
+        let mut out = Vec::new();
+        let deadline = Instant::now() + Duration::from_millis(10);
+        loop {
+            match q.pop_deadline(Some(deadline)) {
+                Pop::Item(v) => out.push(v),
+                Pop::Timeout | Pop::Closed => return out,
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_mode_ignores_priority_and_tenant() {
+        let q = SubmitQueue::new(QueueMode::Fifo);
+        q.push(1, 2, Some(7)).unwrap();
+        q.push(2, 0, None).unwrap();
+        q.push(3, 1, Some(9)).unwrap();
+        assert_eq!(drain(&q), vec![1, 2, 3], "legacy mode is strict FIFO");
+    }
+
+    #[test]
+    fn fair_mode_pops_priority_order() {
+        let q = SubmitQueue::new(QueueMode::Fair);
+        q.push(30, 2, None).unwrap();
+        q.push(10, 0, None).unwrap();
+        q.push(20, 1, None).unwrap();
+        q.push(11, 0, None).unwrap();
+        assert_eq!(drain(&q), vec![10, 11, 20, 30]);
+    }
+
+    #[test]
+    fn fair_mode_round_robins_tenants_under_skew() {
+        let q = SubmitQueue::new(QueueMode::Fair);
+        // Tenant 1 floods 10 items, tenant 2 submits one afterwards: the
+        // minority tenant dequeues second, not eleventh.
+        for i in 0..10 {
+            q.push(100 + i, 1, Some(1)).unwrap();
+        }
+        q.push(200, 1, Some(2)).unwrap();
+        let order = drain(&q);
+        assert_eq!(order[0], 100);
+        assert_eq!(order[1], 200, "minority tenant must not wait out the flood");
+        assert_eq!(order.len(), 11);
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = Arc::new(SubmitQueue::new(QueueMode::Fifo));
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.pop_deadline(None));
+        std::thread::sleep(Duration::from_millis(5));
+        q.push(42, 0, None).unwrap();
+        assert_eq!(t.join().unwrap(), Pop::Item(42));
+    }
+
+    #[test]
+    fn deadline_pop_times_out() {
+        let q: SubmitQueue<u32> = SubmitQueue::new(QueueMode::Fifo);
+        let t0 = Instant::now();
+        let got = q.pop_deadline(Some(t0 + Duration::from_millis(5)));
+        assert_eq!(got, Pop::Timeout);
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = SubmitQueue::new(QueueMode::Fair);
+        q.push(1, 0, None).unwrap();
+        q.push(2, 1, None).unwrap();
+        q.close();
+        assert_eq!(q.push(3, 0, None), Err(3), "push after close returns the item");
+        assert_eq!(q.pop_deadline(None), Pop::Item(1));
+        assert_eq!(q.pop_deadline(None), Pop::Item(2));
+        assert_eq!(q.pop_deadline(None), Pop::Closed);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_wakes_blocked_pop() {
+        let q = Arc::new(SubmitQueue::<u32>::new(QueueMode::Fifo));
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.pop_deadline(None));
+        std::thread::sleep(Duration::from_millis(5));
+        q.close();
+        assert_eq!(t.join().unwrap(), Pop::Closed);
+    }
+}

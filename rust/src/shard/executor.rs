@@ -32,9 +32,23 @@
 //! kernel takes its blocked path — and the packed, fused and prepacked
 //! variants reproduce those same bits (`rust/tests/pack_equivalence.rs`).
 //!
-//! The pool is *owned* by the executor and separate from the coordinator's
-//! request-level worker pool: a request worker blocks in [`ShardExecutor`]
-//! while its tiles run here, which would deadlock on a shared FIFO pool.
+//! Two pool layouts:
+//!
+//! - **Owned** (the default): a dedicated [`ThreadPool`] separate from the
+//!   coordinator's request-level pool. A request worker blocks in
+//!   [`ShardExecutor`] while its tiles run here, which would deadlock on a
+//!   shared FIFO pool — the historical rationale for the split.
+//! - **Shared** (`[scheduler]`): tiles run on the coordinator's unified
+//!   work-stealing [`StealPool`], as stealable leaves next to request
+//!   jobs. The FIFO deadlock argument is overturned by *caller
+//!   participation*: the requesting job claims tiles off the atomic
+//!   cursor itself (helpers it spawns are an acceleration, not a
+//!   prerequisite), and it only ever waits on tiles a live helper already
+//!   claimed — progress at any pool size, including one. A lone huge GEMM
+//!   fans its tiles across every core; tiles of queued requests
+//!   load-balance by stealing. Results stay bitwise identical to the
+//!   owned layout: the claim discipline decides only *who* computes a
+//!   tile, never what its bits are.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -51,6 +65,7 @@ use crate::linalg::matrix::Matrix;
 use crate::linalg::pack::{self, PackedA, PackedB};
 use crate::lowrank::factor::LowRankFactor;
 use crate::metrics::{Counter, HistogramHandle, MetricsRegistry};
+use crate::sched::{self, task_was_stolen, StealPool};
 use crate::shard::plan::{ShardPlan, Tile};
 use crate::trace_plane;
 
@@ -90,10 +105,19 @@ impl ShardMetrics {
     }
 }
 
-/// Executes GEMM-shaped work over a tile grid on a dedicated worker pool.
+/// The pool tile claim jobs run on: owned (the dedicated two-pool
+/// layout) or shared with the coordinator (the `[scheduler]` layout).
+enum TilePool {
+    Owned(ThreadPool),
+    Shared(Arc<StealPool>),
+}
+
+/// Executes GEMM-shaped work over a tile grid — on a dedicated worker
+/// pool by default, or on the coordinator's unified work-stealing pool
+/// under `[scheduler]` (see the [module docs](self)).
 pub struct ShardExecutor {
     plan: ShardPlan,
-    pool: ThreadPool,
+    pool: TilePool,
     metrics: Option<Arc<ShardMetrics>>,
 }
 
@@ -101,7 +125,7 @@ impl ShardExecutor {
     /// Executor with a fresh pool of `plan.workers` threads, no metrics.
     pub fn new(plan: ShardPlan) -> Self {
         ShardExecutor {
-            pool: ThreadPool::new(plan.workers),
+            pool: TilePool::Owned(ThreadPool::new(plan.workers)),
             metrics: None,
             plan,
         }
@@ -111,8 +135,25 @@ impl ShardExecutor {
     /// (`shard.tile_us` histogram, `shard.*` counters, `pack.*` reuse).
     pub fn with_metrics(plan: ShardPlan, metrics: Arc<MetricsRegistry>) -> Self {
         ShardExecutor {
-            pool: ThreadPool::new(plan.workers),
+            pool: TilePool::Owned(ThreadPool::new(plan.workers)),
             metrics: Some(Arc::new(ShardMetrics::new(&metrics, plan.workers))),
+            plan,
+        }
+    }
+
+    /// Executor running its tiles on the coordinator's unified
+    /// work-stealing pool instead of an owned one. The per-worker tile
+    /// counters get one extra slot (`shard.worker.{size}.tiles`) for the
+    /// caller's own participating claim loop.
+    pub fn with_shared_pool(
+        plan: ShardPlan,
+        pool: Arc<StealPool>,
+        metrics: Arc<MetricsRegistry>,
+    ) -> Self {
+        let slots = pool.size() + 1;
+        ShardExecutor {
+            pool: TilePool::Shared(pool),
+            metrics: Some(Arc::new(ShardMetrics::new(&metrics, slots))),
             plan,
         }
     }
@@ -125,16 +166,24 @@ impl ShardExecutor {
     /// Claim jobs submitted to the pool but not yet started (other GEMMs
     /// in flight ahead of ours).
     pub fn pending_jobs(&self) -> u64 {
-        self.pool.pending()
+        match &self.pool {
+            TilePool::Owned(p) => p.pending(),
+            TilePool::Shared(p) => p.pending(),
+        }
     }
 
-    /// Run an arbitrary job on the shard pool's spare cycles. The pool is
-    /// FIFO, so the job queues *behind* every tile task already submitted
-    /// — effectively low-priority background work (the accuracy plane's
-    /// error probes ride here so they never block a serving request).
-    /// The job must be self-contained: nothing waits on it.
+    /// Run an arbitrary job on the shard pool's spare cycles. The owned
+    /// pool is FIFO, so the job queues *behind* every tile task already
+    /// submitted — effectively low-priority background work (the accuracy
+    /// plane's error probes ride here so they never block a serving
+    /// request). On the shared pool the job lands on the injector, behind
+    /// whatever is already queued there. The job must be self-contained:
+    /// nothing waits on it.
     pub fn execute_background(&self, job: impl FnOnce() + Send + 'static) {
-        self.pool.execute(job);
+        match &self.pool {
+            TilePool::Owned(p) => p.execute(job),
+            TilePool::Shared(p) => p.spawn(job),
+        }
     }
 
     /// Is the tile grid aligned to the kernel blocking, so tiles can read
@@ -551,11 +600,26 @@ impl ShardExecutor {
         self.run_and_assemble(m, n, ntasks, work)
     }
 
-    /// Fan `ntasks` out to `min(workers, ntasks)` claim jobs and collect
-    /// every task's result. Tasks are claimed with an atomic cursor, so
-    /// load-balancing is automatic: a worker stuck on a heavy remainder
-    /// tile simply claims fewer tiles.
+    /// Fan `ntasks` out to claim jobs and collect every task's result.
+    /// Tasks are claimed with an atomic cursor, so load-balancing is
+    /// automatic: a worker stuck on a heavy remainder tile simply claims
+    /// fewer tiles. Owned pool: `min(plan.workers, ntasks)` claim jobs,
+    /// the caller only collects. Shared pool: the caller *participates*
+    /// in the claim loop (see module docs for the deadlock-freedom
+    /// argument).
     fn run_claimed(&self, ntasks: usize, work: WorkFn) -> Result<Vec<(Tile, Vec<f32>)>> {
+        match &self.pool {
+            TilePool::Owned(pool) => self.run_claimed_owned(pool, ntasks, work),
+            TilePool::Shared(pool) => self.run_claimed_shared(pool, ntasks, work),
+        }
+    }
+
+    fn run_claimed_owned(
+        &self,
+        pool: &ThreadPool,
+        ntasks: usize,
+        work: WorkFn,
+    ) -> Result<Vec<(Tile, Vec<f32>)>> {
         let next = Arc::new(AtomicUsize::new(0));
         let (tx, rx) = mpsc::channel::<Result<(Tile, Vec<f32>)>>();
         let nworkers = self.plan.workers.clamp(1, ntasks.max(1));
@@ -569,7 +633,7 @@ impl ShardExecutor {
             let tx = tx.clone();
             let metrics = self.metrics.clone();
             let ctx = ctx.clone();
-            self.pool.execute(move || {
+            pool.execute(move || {
                 let mut claimed = 0u64;
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -606,6 +670,136 @@ impl ShardExecutor {
         for msg in rx {
             out.push(msg?);
         }
+        self.check_complete(ntasks, out)
+    }
+
+    /// The shared-pool claim loop. The caller spawns up to `pool.size()`
+    /// helper claim jobs — onto its own deque when it is itself a pool
+    /// worker (stealable by idle siblings), onto the injector otherwise —
+    /// then claims tiles off the same cursor on its own thread. It stops
+    /// collecting as soon as `ntasks` results are in: a helper job that
+    /// never got picked up finds the cursor exhausted and no-ops, so the
+    /// caller must *not* wait for the channel to close. Every `recv` that
+    /// blocks corresponds to a tile a live helper has already claimed and
+    /// is computing — progress at any pool size, including one.
+    fn run_claimed_shared(
+        &self,
+        pool: &Arc<StealPool>,
+        ntasks: usize,
+        work: WorkFn,
+    ) -> Result<Vec<(Tile, Vec<f32>)>> {
+        let next = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel::<Result<(Tile, Vec<f32>)>>();
+        let helpers = pool.size().min(ntasks.max(1).saturating_sub(1));
+        let ctx = trace_plane::current();
+        // Per-request tile accounting (the response's `stolen_tiles`):
+        // TLS does not cross into pool workers, so capture the Arc here
+        // and move clones into the helpers.
+        let request = sched::current_request();
+        for w in 0..helpers {
+            let work = work.clone();
+            let next = next.clone();
+            let tx = tx.clone();
+            let metrics = self.metrics.clone();
+            let ctx = ctx.clone();
+            let request = request.clone();
+            pool.spawn(move || {
+                // Whether *this helper job* was stolen off its home deque
+                // — constant for every tile it claims.
+                let stolen = task_was_stolen();
+                let mut claimed = 0u64;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= ntasks {
+                        break;
+                    }
+                    let t0 = Instant::now();
+                    let res = match &ctx {
+                        Some(c) => {
+                            let mut sp = trace_plane::span_in(c, "tile");
+                            sp.attr_u64("tile", i as u64);
+                            sp.attr_u64("worker", w as u64);
+                            sp.attr_u64("steal", stolen as u64);
+                            work(i)
+                        }
+                        None => work(i),
+                    };
+                    if let Some(m) = &metrics {
+                        m.tile_us.observe(t0.elapsed().as_secs_f64() * 1e6);
+                    }
+                    if let Some(r) = &request {
+                        r.record(stolen);
+                    }
+                    claimed += 1;
+                    if tx.send(res).is_err() {
+                        break; // caller bailed on an earlier error
+                    }
+                }
+                if claimed > 0 {
+                    if let Some(m) = &metrics {
+                        m.worker_tiles[w].add(claimed);
+                    }
+                }
+            });
+        }
+        drop(tx);
+        // Caller participation: claim tiles on this thread until the
+        // cursor drains. The last worker_tiles slot is the caller's.
+        let caller_slot = self
+            .metrics
+            .as_ref()
+            .map(|m| m.worker_tiles.len() - 1)
+            .unwrap_or(0);
+        let mut out = Vec::with_capacity(ntasks);
+        let mut caller_claimed = 0u64;
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= ntasks {
+                break;
+            }
+            let t0 = Instant::now();
+            let res = match &ctx {
+                Some(c) => {
+                    let mut sp = trace_plane::span_in(c, "tile");
+                    sp.attr_u64("tile", i as u64);
+                    sp.attr_u64("worker", caller_slot as u64);
+                    sp.attr_u64("steal", 0);
+                    work(i)
+                }
+                None => work(i),
+            };
+            if let Some(m) = &self.metrics {
+                m.tile_us.observe(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            if let Some(r) = &request {
+                r.record(false);
+            }
+            caller_claimed += 1;
+            out.push(res?);
+        }
+        if caller_claimed > 0 {
+            if let Some(m) = &self.metrics {
+                m.worker_tiles[caller_slot].add(caller_claimed);
+            }
+        }
+        // Collect the helpers' tiles — counting to `ntasks`, not to
+        // channel close (see the doc comment above).
+        while out.len() < ntasks {
+            match rx.recv() {
+                Ok(msg) => out.push(msg?),
+                Err(_) => break, // a helper died; caught below
+            }
+        }
+        self.check_complete(ntasks, out)
+    }
+
+    /// Shared tail of the claim loops: the lost-tile invariant and the
+    /// task counter.
+    fn check_complete(
+        &self,
+        ntasks: usize,
+        out: Vec<(Tile, Vec<f32>)>,
+    ) -> Result<Vec<(Tile, Vec<f32>)>> {
         if out.len() != ntasks {
             return Err(Error::Service(format!(
                 "shard executor lost tiles: {}/{ntasks} arrived",

@@ -1,0 +1,304 @@
+//! Scheduler-plane integration tests: the unified work-stealing pool +
+//! admission control (`[scheduler]`) against the legacy two-pool service.
+//!
+//! The contract under test: enabling the scheduler changes *when and
+//! where* work runs — never *what* it computes. Results are bitwise
+//! identical at any worker/steal configuration, overload sheds
+//! lowest-priority-first with typed reasons, unmeetable deadlines reject
+//! at submit (never after execution), tenants dequeue fairly, and drain
+//! completes in-flight work while refusing new submits.
+
+use std::time::Duration;
+
+use lowrank_gemm::config::schema::SchedulerSettings;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, Priority, ServiceConfig};
+use lowrank_gemm::error::{Error, RejectReason};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::sched::{Pop, QueueMode, SubmitQueue};
+
+fn sched_cfg(workers: usize, steal: bool) -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        scheduler: SchedulerSettings {
+            enabled: true,
+            workers,
+            steal,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn rand_req(n: usize, seed: u64) -> GemmRequest {
+    let mut rng = Pcg64::seeded(seed);
+    GemmRequest::new(
+        Matrix::gaussian(n, n, &mut rng),
+        Matrix::gaussian(n, n, &mut rng),
+    )
+    .with_kernel(KernelKind::DenseF32)
+}
+
+/// Run the reference workload — one shard-sized GEMM plus two small ones,
+/// submitted concurrently — and return the result matrices in submit order.
+fn run_workload(svc: &GemmService) -> Vec<Matrix> {
+    let rxs: Vec<_> = [(768usize, 1u64), (96, 2), (96, 3)]
+        .iter()
+        .map(|&(n, seed)| svc.submit(rand_req(n, seed)).unwrap())
+        .collect();
+    rxs.into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap().c)
+        .collect()
+}
+
+fn assert_bitwise_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    let same = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(same, "{what}: result bits differ");
+}
+
+#[test]
+fn sched_results_bitwise_identical_to_legacy() {
+    // The acceptance bar: every (workers, steal) configuration of the
+    // unified scheduler reproduces the two-pool seed bit-for-bit — tile
+    // claim order and steal activity must never reach the result bits.
+    let legacy = run_workload(
+        &GemmService::start(ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    for (workers, steal) in [(1, true), (2, true), (4, true), (2, false)] {
+        let got = run_workload(&GemmService::start(sched_cfg(workers, steal)).unwrap());
+        for (i, (l, g)) in legacy.iter().zip(&got).enumerate() {
+            assert_bitwise_eq(l, g, &format!("workers={workers} steal={steal} req {i}"));
+        }
+    }
+}
+
+#[test]
+fn lone_large_gemm_fans_out_via_stealing() {
+    // One big request on an otherwise idle 4-worker pool: its dispatch job
+    // lands on one worker, that worker's shard helpers go onto its own
+    // deque, and the idle siblings can only reach them by stealing — so
+    // the steal counter must move.
+    let svc = GemmService::start(sched_cfg(4, true)).unwrap();
+    let req = rand_req(768, 11);
+    let exact_bits: Vec<u32> = svc
+        .execute_inline(&rand_req(768, 11))
+        .unwrap()
+        .c
+        .data()
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+    let resp = svc.gemm_blocking(req).unwrap();
+    assert!(
+        resp.c
+            .data()
+            .iter()
+            .zip(&exact_bits)
+            .all(|(x, b)| x.to_bits() == *b),
+        "fanned-out result must match inline execution bit-for-bit"
+    );
+    let steals = svc
+        .metrics()
+        .counters()
+        .get("sched.steal")
+        .copied()
+        .unwrap_or(0);
+    assert!(steals >= 1, "idle workers must steal the shard helpers");
+}
+
+#[test]
+fn overload_sheds_lowest_priority_first() {
+    // depth 8 → watermarks: Background 4, Batch 6, Interactive 8. A long
+    // batch window (nothing completes during the test) makes the
+    // admission sequence below fully deterministic.
+    let cfg = ServiceConfig {
+        max_batch: 64,
+        batch_window: Duration::from_secs(2),
+        scheduler: SchedulerSettings {
+            enabled: true,
+            workers: 2,
+            queue_depth: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rxs = Vec::new();
+    let mut submit = |prio: Priority, seed: u64| {
+        svc.submit(rand_req(16, seed).with_priority(prio))
+            .map(|rx| rxs.push(rx))
+    };
+
+    for i in 0..4 {
+        submit(Priority::Background, 100 + i).unwrap();
+    }
+    // In-flight 4 = the Background watermark: Background sheds first…
+    match submit(Priority::Background, 104) {
+        Err(Error::Rejected(RejectReason::QueueFull { inflight, depth })) => {
+            assert_eq!((inflight, depth), (4, 4));
+        }
+        other => panic!("expected Background QueueFull, got {other:?}"),
+    }
+    // …while Batch still admits up to 6…
+    submit(Priority::Batch, 105).unwrap();
+    submit(Priority::Batch, 106).unwrap();
+    assert!(matches!(
+        submit(Priority::Batch, 107),
+        Err(Error::Rejected(RejectReason::QueueFull { depth: 6, .. }))
+    ));
+    // …and Interactive up to the full depth.
+    submit(Priority::Interactive, 108).unwrap();
+    submit(Priority::Interactive, 109).unwrap();
+    assert!(matches!(
+        submit(Priority::Interactive, 110),
+        Err(Error::Rejected(RejectReason::QueueFull { depth: 8, .. }))
+    ));
+
+    let stats = svc.stats();
+    assert_eq!(stats.submitted, 8);
+    assert_eq!(stats.rejected, 3);
+    assert_eq!(
+        stats.metrics.counters.get("sched.shed").copied().unwrap_or(0),
+        3,
+        "every admission rejection must count as a shed"
+    );
+}
+
+#[test]
+fn unmeetable_deadline_rejected_at_submit() {
+    let svc = GemmService::start(sched_cfg(2, true)).unwrap();
+    // 1 ns can never cover the routed cost estimate of a 256-class GEMM:
+    // rejected before any queue or pool time is spent.
+    let err = svc
+        .submit(rand_req(256, 21).with_deadline(Duration::from_nanos(1)))
+        .unwrap_err();
+    match err {
+        Error::Rejected(RejectReason::DeadlineUnmeetable {
+            estimated_us,
+            deadline_us,
+        }) => {
+            assert!(estimated_us >= deadline_us);
+            assert_eq!(deadline_us, 0); // 1 ns truncates to 0 µs
+        }
+        other => panic!("expected DeadlineUnmeetable, got {other:?}"),
+    }
+    assert_eq!(svc.stats().completed, 0, "no work may run for a shed request");
+
+    // A generous deadline admits and completes normally.
+    let resp = svc
+        .gemm_blocking(rand_req(64, 22).with_deadline(Duration::from_secs(60)))
+        .unwrap();
+    assert_eq!(resp.c.shape(), (64, 64));
+    assert_eq!(svc.stats().completed, 1);
+}
+
+#[test]
+fn tenant_quota_enforced_per_tenant() {
+    let cfg = ServiceConfig {
+        max_batch: 64,
+        batch_window: Duration::from_secs(2), // hold in-flight
+        scheduler: SchedulerSettings {
+            enabled: true,
+            workers: 2,
+            tenant_quota: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let svc = GemmService::start(cfg).unwrap();
+    let mut rxs = Vec::new();
+    rxs.push(svc.submit(rand_req(16, 31).with_tenant(7)).unwrap());
+    rxs.push(svc.submit(rand_req(16, 32).with_tenant(7)).unwrap());
+    match svc.submit(rand_req(16, 33).with_tenant(7)) {
+        Err(Error::Rejected(RejectReason::TenantQuotaExceeded {
+            tenant,
+            inflight,
+            quota,
+        })) => assert_eq!((tenant, inflight, quota), (7, 2, 2)),
+        other => panic!("expected TenantQuotaExceeded, got {other:?}"),
+    }
+    // Other tenants — and anonymous traffic — are unaffected.
+    rxs.push(svc.submit(rand_req(16, 34).with_tenant(8)).unwrap());
+    rxs.push(svc.submit(rand_req(16, 35)).unwrap());
+}
+
+#[test]
+fn fair_queue_interleaves_tenants_under_flood() {
+    // A 10:1 flood: tenant 1 enqueues ten requests before tenant 2's two.
+    // Round-robin dequeue within the priority lane must interleave tenant
+    // 2 near the front instead of burying it behind the flood.
+    let q: SubmitQueue<(u64, usize)> = SubmitQueue::new(QueueMode::Fair);
+    for i in 0..10 {
+        q.push((1, i), Priority::Batch.index(), Some(1)).unwrap();
+    }
+    for i in 0..2 {
+        q.push((2, i), Priority::Batch.index(), Some(2)).unwrap();
+    }
+    let mut order = Vec::new();
+    for _ in 0..12 {
+        match q.pop_deadline(None) {
+            Pop::Item((tenant, _)) => order.push(tenant),
+            other => panic!("expected item, got {other:?}"),
+        }
+    }
+    let first_four: Vec<u64> = order.iter().take(4).copied().collect();
+    assert_eq!(
+        first_four,
+        vec![1, 2, 1, 2],
+        "tenant 2 must dequeue round-robin, not behind the flood: {order:?}"
+    );
+}
+
+#[test]
+fn drain_completes_inflight_then_rejects_new() {
+    let svc = GemmService::start(sched_cfg(2, true)).unwrap();
+    let rxs: Vec<_> = (0..4)
+        .map(|i| svc.submit(rand_req(32, 41 + i)).unwrap())
+        .collect();
+    svc.drain();
+    assert!(matches!(
+        svc.submit(rand_req(32, 50)),
+        Err(Error::Rejected(RejectReason::Draining))
+    ));
+    // Everything admitted before the drain completed normally.
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(svc.stats().completed, 4);
+}
+
+#[test]
+fn default_config_registers_no_sched_metrics() {
+    // `[scheduler]` unset must be invisible: same metric names as the
+    // two-pool seed, nothing `sched.*` registered.
+    let svc = GemmService::start(ServiceConfig::default()).unwrap();
+    svc.gemm_blocking(rand_req(32, 61)).unwrap();
+    let snapshot = svc.stats().metrics;
+    assert!(
+        !snapshot.counters.keys().any(|k| k.starts_with("sched.")),
+        "legacy config leaked sched counters: {:?}",
+        snapshot.counters.keys().collect::<Vec<_>>()
+    );
+    assert!(
+        !snapshot.histograms.keys().any(|k| k.starts_with("sched.")),
+        "legacy config leaked sched histograms"
+    );
+    // And rejections still render the historical wording.
+    let err = Error::Rejected(RejectReason::QueueFull {
+        inflight: 2,
+        depth: 2,
+    });
+    assert_eq!(
+        err.to_string(),
+        "service error: queue full (2 in flight ≥ depth 2)"
+    );
+}
