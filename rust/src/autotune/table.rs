@@ -209,10 +209,17 @@ impl CalibrationTable {
     }
 
     /// The tmp+rename write itself; callers hold (or deliberately
-    /// skipped) the io_lock.
+    /// skipped) the io_lock. The temp file is fsynced before the rename:
+    /// without it a crash can journal the rename ahead of the data and
+    /// leave an *atomically installed* empty or truncated table — exactly
+    /// the corruption the tmp+rename dance exists to prevent.
     fn write_to(&self, path: &str) -> Result<()> {
+        use std::io::Write;
         let tmp = format!("{path}.tmp");
-        std::fs::write(&tmp, self.to_json())?;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(self.to_json().as_bytes())?;
+        f.sync_all()?;
+        drop(f);
         std::fs::rename(&tmp, path)?;
         Ok(())
     }

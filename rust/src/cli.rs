@@ -33,6 +33,7 @@ const VALUE_KEYS: &[&str] = &[
     "accuracy-sample", "accuracy-probes", "accuracy-alpha", "accuracy-min-samples",
     "accuracy-table", "accuracy-seed",
     "sched-workers", "sched-queue-depth", "sched-tenant-quota",
+    "fault-inject", "fault-breaker-window", "fault-breaker-threshold", "fault-breaker-cooldown",
     "last", "chrome-out", "prom-out", "json-out",
 ];
 

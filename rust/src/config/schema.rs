@@ -71,6 +71,25 @@
 //! steal = true                   # cross-worker stealing (false = bench control)
 //! queue_depth = 0                # admission depth (0 = inherit [service].queue_depth)
 //! tenant_quota = 0               # per-tenant in-flight cap (0 = unlimited)
+//!
+//! [fault]                        # fault-containment plane (crate::fault)
+//! enabled = false                # default-off: panics propagate as before
+//! strict_boot = false            # true = corrupt tables fail start (old behavior)
+//! breaker_window = 16            # rolling outcome window per kernel
+//! breaker_threshold = 8         # failures in window that trip the breaker
+//! breaker_cooldown = 32          # denials before one half-open probe
+//! retry = true                   # one retry on the fallback kernel
+//!
+//! [fault.inject]                 # deterministic fault injection (chaos)
+//! seed = 0                       # draw seed; same seed ⇒ same faults
+//! panic_tile = 0.0               # P(tile job panics)
+//! stall_tile = 0.0               # P(tile stalls stall_ms first)
+//! stall_ms = 1                   # stall duration
+//! panic_request = 0.0            # P(request-boundary panic)
+//! error_request = 0.0            # P(typed kernel error)
+//! error_kernel = ""              # limit error injection to one kernel id
+//! error_requests_under = 0       # ids below this always error (test knob)
+//! corrupt_decode = 0.0           # P(FP8 decode corrupted)
 //! ```
 
 use crate::config::toml::{parse_toml, TomlDoc};
@@ -486,6 +505,168 @@ impl SchedulerSettings {
     }
 }
 
+/// `[fault.inject]` subsection: the deterministic fault-injection plan
+/// (see [`crate::fault::FaultInjector`]). All probabilities default to
+/// 0.0, so an enabled fault plane with an empty plan injects nothing —
+/// containment without chaos.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultInjectSettings {
+    /// Draw seed: every injection decision is a pure hash of
+    /// (seed, site, ids), so the same seed replays the same faults.
+    pub seed: u64,
+    /// Probability a shard tile job panics (contained at the tile
+    /// boundary; the request resolves as `Error::KernelPanicked`).
+    pub panic_tile: f64,
+    /// Probability a shard tile stalls `stall_ms` before computing.
+    pub stall_tile: f64,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Probability a request's kernel execution panics at the dispatch
+    /// boundary (contained; retried on the fallback kernel).
+    pub panic_request: f64,
+    /// Probability a request fails with a typed kernel error.
+    pub error_request: f64,
+    /// Restrict error injection to one kernel id ("" = any kernel).
+    pub error_kernel: String,
+    /// Deterministic test knob: request ids below this always take the
+    /// injected error (on the matching kernel). 0 = off.
+    pub error_requests_under: u64,
+    /// Probability a GEMM's FP8 decode output is corrupted.
+    pub corrupt_decode: f64,
+}
+
+impl Default for FaultInjectSettings {
+    fn default() -> Self {
+        FaultInjectSettings {
+            seed: 0,
+            panic_tile: 0.0,
+            stall_tile: 0.0,
+            stall_ms: 1,
+            panic_request: 0.0,
+            error_request: 0.0,
+            error_kernel: String::new(),
+            error_requests_under: 0,
+            corrupt_decode: 0.0,
+        }
+    }
+}
+
+impl FaultInjectSettings {
+    /// Apply a compact `key=value,key=value` spec (the `--fault-inject`
+    /// CLI syntax, e.g. `seed=42,panic_tile=0.08,error_request=0.1`)
+    /// over the current values.
+    pub fn apply_spec(&mut self, spec: &str) -> Result<()> {
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                Error::Config(format!("--fault-inject: `{part}` is not key=value"))
+            })?;
+            let (key, val) = (key.trim(), val.trim());
+            let bad = |_| Error::Config(format!("--fault-inject: {key}: bad value `{val}`"));
+            match key {
+                "seed" => self.seed = val.parse().map_err(bad)?,
+                "panic_tile" => self.panic_tile = val.parse().map_err(bad)?,
+                "stall_tile" => self.stall_tile = val.parse().map_err(bad)?,
+                "stall_ms" => self.stall_ms = val.parse().map_err(bad)?,
+                "panic_request" => self.panic_request = val.parse().map_err(bad)?,
+                "error_request" => self.error_request = val.parse().map_err(bad)?,
+                "error_kernel" => self.error_kernel = val.to_string(),
+                "error_requests_under" => {
+                    self.error_requests_under = val.parse().map_err(bad)?
+                }
+                "corrupt_decode" => self.corrupt_decode = val.parse().map_err(bad)?,
+                other => {
+                    return Err(Error::Config(format!(
+                        "--fault-inject: unknown key `{other}`"
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `[fault]` section: the fault-containment & graceful-degradation plane
+/// (see [`crate::fault`]). Default-off; when off, no containment wrapping
+/// or breaker consults happen and routing, results and metric names are
+/// bit-identical to a build without the plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSettings {
+    /// Master switch for containment, breaker routing and injection.
+    pub enabled: bool,
+    /// Old strict behavior: a corrupt persistence table fails start
+    /// instead of being quarantined to `<path>.corrupt-<n>`.
+    pub strict_boot: bool,
+    /// Rolling outcome window per kernel breaker cell.
+    pub breaker_window: usize,
+    /// Failures within the window that trip a cell open.
+    pub breaker_threshold: usize,
+    /// Denials an open cell accumulates before admitting one half-open
+    /// probe (denial-counted, not wall-clock, for deterministic tests).
+    pub breaker_cooldown: usize,
+    /// Retry a failed/panicked request once on its fallback kernel.
+    pub retry: bool,
+    /// `[fault.inject]` plan.
+    pub inject: FaultInjectSettings,
+}
+
+impl Default for FaultSettings {
+    fn default() -> Self {
+        FaultSettings {
+            enabled: false,
+            strict_boot: false,
+            breaker_window: 16,
+            breaker_threshold: 8,
+            breaker_cooldown: 32,
+            retry: true,
+            inject: FaultInjectSettings::default(),
+        }
+    }
+}
+
+impl FaultSettings {
+    /// Range-check the knobs — the single validator for every input path
+    /// (TOML, CLI flags, programmatic [`crate::coordinator::ServiceConfig`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.breaker_window == 0 {
+            return Err(Error::Config("fault breaker_window must be positive".into()));
+        }
+        if self.breaker_threshold == 0 || self.breaker_threshold > self.breaker_window {
+            return Err(Error::Config(format!(
+                "fault breaker_threshold must be in [1, breaker_window={}], got {}",
+                self.breaker_window, self.breaker_threshold
+            )));
+        }
+        if self.breaker_cooldown == 0 {
+            return Err(Error::Config(
+                "fault breaker_cooldown must be positive".into(),
+            ));
+        }
+        let inj = &self.inject;
+        for (name, p) in [
+            ("panic_tile", inj.panic_tile),
+            ("stall_tile", inj.stall_tile),
+            ("panic_request", inj.panic_request),
+            ("error_request", inj.error_request),
+            ("corrupt_decode", inj.corrupt_decode),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "fault.inject {name} must be in [0, 1], got {p}"
+                )));
+            }
+        }
+        if !inj.error_kernel.is_empty()
+            && crate::kernels::KernelKind::parse(&inj.error_kernel).is_none()
+        {
+            return Err(Error::Config(format!(
+                "fault.inject error_kernel: unknown kernel `{}`",
+                inj.error_kernel
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Whole-app configuration.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -518,6 +699,8 @@ pub struct AppConfig {
     pub accuracy: AccuracySettings,
     /// `[scheduler]` knobs.
     pub scheduler: SchedulerSettings,
+    /// `[fault]` knobs.
+    pub fault: FaultSettings,
 }
 
 impl Default for AppConfig {
@@ -537,6 +720,7 @@ impl Default for AppConfig {
             trace: TraceSettings::default(),
             accuracy: AccuracySettings::default(),
             scheduler: SchedulerSettings::default(),
+            fault: FaultSettings::default(),
         }
     }
 }
@@ -769,6 +953,66 @@ impl AppConfig {
             }
             s.validate()?;
         }
+        if let Some(fa) = doc.get("fault") {
+            let s = &mut cfg.fault;
+            if let Some(v) = fa.get("enabled") {
+                s.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("fault.enabled must be bool".into()))?;
+            }
+            if let Some(v) = fa.get("strict_boot") {
+                s.strict_boot = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("fault.strict_boot must be bool".into()))?;
+            }
+            if let Some(v) = fa.get("breaker_window") {
+                s.breaker_window = req_nonzero(v, "fault.breaker_window")?;
+            }
+            if let Some(v) = fa.get("breaker_threshold") {
+                s.breaker_threshold = req_nonzero(v, "fault.breaker_threshold")?;
+            }
+            if let Some(v) = fa.get("breaker_cooldown") {
+                s.breaker_cooldown = req_nonzero(v, "fault.breaker_cooldown")?;
+            }
+            if let Some(v) = fa.get("retry") {
+                s.retry = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("fault.retry must be bool".into()))?;
+            }
+        }
+        if let Some(fi) = doc.get("fault.inject") {
+            let s = &mut cfg.fault.inject;
+            if let Some(v) = fi.get("seed") {
+                s.seed = req_usize(v, "fault.inject.seed")? as u64;
+            }
+            if let Some(v) = fi.get("stall_ms") {
+                s.stall_ms = req_usize(v, "fault.inject.stall_ms")? as u64;
+            }
+            if let Some(v) = fi.get("error_requests_under") {
+                s.error_requests_under = req_usize(v, "fault.inject.error_requests_under")? as u64;
+            }
+            if let Some(v) = fi.get("error_kernel") {
+                s.error_kernel = req_str(v, "fault.inject.error_kernel")?;
+            }
+            if let Some(v) = fi.get("panic_tile") {
+                s.panic_tile = req_f64(v, "fault.inject.panic_tile")?;
+            }
+            if let Some(v) = fi.get("stall_tile") {
+                s.stall_tile = req_f64(v, "fault.inject.stall_tile")?;
+            }
+            if let Some(v) = fi.get("panic_request") {
+                s.panic_request = req_f64(v, "fault.inject.panic_request")?;
+            }
+            if let Some(v) = fi.get("error_request") {
+                s.error_request = req_f64(v, "fault.inject.error_request")?;
+            }
+            if let Some(v) = fi.get("corrupt_decode") {
+                s.corrupt_decode = req_f64(v, "fault.inject.corrupt_decode")?;
+            }
+        }
+        if doc.get("fault").is_some() || doc.get("fault.inject").is_some() {
+            cfg.fault.validate()?;
+        }
         Ok(cfg)
     }
 }
@@ -827,6 +1071,11 @@ fn req_usize(v: &crate::config::toml::TomlValue, key: &str) -> Result<usize> {
         return Err(Error::Config(format!("{key} must be non-negative")));
     }
     Ok(i as usize)
+}
+
+fn req_f64(v: &crate::config::toml::TomlValue, key: &str) -> Result<f64> {
+    v.as_float()
+        .ok_or_else(|| Error::Config(format!("{key} must be a number")))
 }
 
 fn req_nonzero(v: &crate::config::toml::TomlValue, key: &str) -> Result<usize> {
@@ -1161,6 +1410,93 @@ tenant_quota = 4
         assert!(AppConfig::from_toml("[scheduler]\nenabled = 1").is_err());
         assert!(AppConfig::from_toml("[scheduler]\nsteal = \"yes\"").is_err());
         assert!(AppConfig::from_toml("[scheduler]\nworkers = -1").is_err());
+    }
+
+    #[test]
+    fn fault_defaults_and_full_section() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.fault, FaultSettings::default());
+        assert!(!cfg.fault.enabled, "fault plane must default off");
+        assert!(cfg.fault.retry, "fallback retry must default on");
+
+        let cfg = AppConfig::from_toml(
+            r#"
+[fault]
+enabled = true
+strict_boot = true
+breaker_window = 4
+breaker_threshold = 2
+breaker_cooldown = 3
+retry = false
+
+[fault.inject]
+seed = 42
+panic_tile = 0.08
+stall_tile = 0.5
+stall_ms = 2
+panic_request = 0.1
+error_request = 0.25
+error_kernel = "lowrank_fp8"
+error_requests_under = 3
+corrupt_decode = 0.01
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.fault,
+            FaultSettings {
+                enabled: true,
+                strict_boot: true,
+                breaker_window: 4,
+                breaker_threshold: 2,
+                breaker_cooldown: 3,
+                retry: false,
+                inject: FaultInjectSettings {
+                    seed: 42,
+                    panic_tile: 0.08,
+                    stall_tile: 0.5,
+                    stall_ms: 2,
+                    panic_request: 0.1,
+                    error_request: 0.25,
+                    error_kernel: "lowrank_fp8".into(),
+                    error_requests_under: 3,
+                    corrupt_decode: 0.01,
+                },
+            }
+        );
+    }
+
+    #[test]
+    fn fault_validation() {
+        assert!(AppConfig::from_toml("[fault]\nbreaker_window = 0").is_err());
+        assert!(AppConfig::from_toml("[fault]\nbreaker_threshold = 0").is_err());
+        assert!(AppConfig::from_toml("[fault]\nbreaker_cooldown = 0").is_err());
+        assert!(
+            AppConfig::from_toml("[fault]\nbreaker_window = 2\nbreaker_threshold = 3").is_err(),
+            "threshold above window can never trip"
+        );
+        assert!(AppConfig::from_toml("[fault]\nenabled = 1").is_err());
+        assert!(AppConfig::from_toml("[fault.inject]\npanic_tile = 1.5").is_err());
+        assert!(AppConfig::from_toml("[fault.inject]\nerror_request = -0.1").is_err());
+        assert!(AppConfig::from_toml("[fault.inject]\nerror_kernel = \"magic\"").is_err());
+        // Integer probabilities inside range parse via as_float.
+        let cfg = AppConfig::from_toml("[fault.inject]\npanic_tile = 1").unwrap();
+        assert_eq!(cfg.fault.inject.panic_tile, 1.0);
+    }
+
+    #[test]
+    fn fault_inject_spec_parses_and_rejects() {
+        let mut s = FaultInjectSettings::default();
+        s.apply_spec("seed=42,panic_tile=0.08, error_request=0.1,error_kernel=lowrank_fp8")
+            .unwrap();
+        assert_eq!(s.seed, 42);
+        assert_eq!(s.panic_tile, 0.08);
+        assert_eq!(s.error_request, 0.1);
+        assert_eq!(s.error_kernel, "lowrank_fp8");
+        assert_eq!(s.stall_ms, 1, "untouched keys keep their values");
+        assert!(s.apply_spec("nope=1").is_err());
+        assert!(s.apply_spec("panic_tile").is_err());
+        assert!(s.apply_spec("seed=abc").is_err());
     }
 
     #[test]

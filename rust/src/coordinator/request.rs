@@ -2,6 +2,7 @@
 
 use std::time::Duration;
 
+use crate::fault::DegradeReason;
 use crate::kernels::KernelKind;
 use crate::linalg::Matrix;
 use crate::lowrank::cache::MatrixId;
@@ -196,6 +197,12 @@ pub struct GemmResponse {
     /// unified scheduler. 0 on the legacy two-pool configuration (and for
     /// requests too small to shard).
     pub stolen_tiles: u64,
+    /// `Some` when the fault plane served this request on a kernel lower
+    /// on the degradation ladder than the routed one (breaker-open
+    /// reroute, or a retry after the routed kernel failed/panicked).
+    /// `kernel` above is always the kernel that actually produced `c`.
+    /// Always `None` with `[fault]` disabled.
+    pub degraded: Option<DegradeReason>,
 }
 
 #[cfg(test)]

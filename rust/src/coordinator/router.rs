@@ -16,6 +16,7 @@ use std::sync::Arc;
 use crate::autotune::{CalibrationTable, ExplorePolicy};
 use crate::cache::{ContentCache, FactorHints, Fingerprint};
 use crate::config::schema::{AutotuneSettings, CacheSettings};
+use crate::fault::{DegradeReason, FaultPlane};
 use crate::gpu_sim::profile::DeviceProfile;
 use crate::kernels::{AutoKernelSelector, KernelChoice, SelectorInputs};
 use crate::lowrank::cache::FactorCache;
@@ -49,6 +50,11 @@ pub struct RoutePlan {
     /// plane must not fold such requests into its observed/predicted
     /// calibration — the service checks this flag before recording.
     pub amortized: bool,
+    /// `Some` when the fault plane rerouted this plan at route time
+    /// because the preferred kernel's circuit breaker was open. `choice`
+    /// already reflects the fallback kernel. Always `None` with `[fault]`
+    /// disabled.
+    pub degraded: Option<DegradeReason>,
 }
 
 /// Routing configuration (a distilled view of [`crate::config::AppConfig`]).
@@ -95,6 +101,10 @@ pub struct Router {
     /// Content-addressed factor cache (the `[cache]` plane); `None` keeps
     /// routing bit-identical to the id-only world.
     content: Option<(Arc<ContentCache>, CacheSettings)>,
+    /// Fault plane (the `[fault]` plane): routing consults each choice's
+    /// circuit breaker and walks the degradation ladder away from tripped
+    /// kernels. `None` keeps routing bit-identical.
+    fault: Option<Arc<FaultPlane>>,
 }
 
 impl Router {
@@ -106,6 +116,7 @@ impl Router {
             cache,
             explore: None,
             content: None,
+            fault: None,
         }
     }
 
@@ -129,6 +140,7 @@ impl Router {
             cache,
             explore,
             content: None,
+            fault: None,
         }
     }
 
@@ -152,6 +164,15 @@ impl Router {
     /// bit-identical to no model at all.
     pub fn with_error_model(mut self, model: Arc<crate::accuracy::ErrorModel>) -> Self {
         self.selector = self.selector.with_error_model(model);
+        self
+    }
+
+    /// Attach the fault plane (builder-style): routing then consults the
+    /// per-kernel circuit breaker — a choice (selected, explored, or
+    /// forced) whose breaker is open is rerouted down the degradation
+    /// ladder and the plan flagged `degraded`.
+    pub fn with_fault(mut self, fault: Arc<FaultPlane>) -> Self {
+        self.fault = Some(fault);
         self
     }
 
@@ -332,6 +353,24 @@ impl Router {
             },
         };
 
+        // Fault plane: breaker consult, serving path only — `allows`
+        // advances the open-state cooldown and may admit the single
+        // half-open probe, so the introspection path (`route`) must not
+        // consume either. Applies to selected, explored and forced
+        // kernels alike: a tripped kernel family is unhealthy no matter
+        // how the request arrived at it.
+        let mut degraded = None;
+        let choice = match &self.fault {
+            Some(plane) if may_explore => match plane.reroute(choice.kind) {
+                Some((fallback, reason)) => {
+                    degraded = Some(reason);
+                    self.selector.estimate(fallback, &inp)
+                }
+                None => choice,
+            },
+            _ => choice,
+        };
+
         RoutePlan {
             choice,
             rank,
@@ -340,6 +379,7 @@ impl Router {
             explored,
             hints,
             amortized: decomp_amortization > 1.0,
+            degraded,
         }
     }
 
@@ -580,6 +620,38 @@ mod tests {
         let after = r.route(&request);
         assert!((after.choice.error_correction - 3.0).abs() < 1e-9);
         assert!(after.choice.predicted_error > before.choice.predicted_error);
+    }
+
+    #[test]
+    fn open_breaker_reroutes_serving_plans_only() {
+        let plane = FaultPlane::new(
+            &crate::config::FaultSettings {
+                enabled: true,
+                breaker_window: 2,
+                breaker_threshold: 2,
+                breaker_cooldown: 8,
+                ..Default::default()
+            },
+            &crate::metrics::MetricsRegistry::new(),
+        );
+        let r = router().with_fault(plane.clone());
+        let request = req(64).with_kernel(KernelKind::LowRankFp8);
+        assert_eq!(r.route_serving(&request).degraded, None);
+        plane.observe(KernelKind::LowRankFp8, false);
+        plane.observe(KernelKind::LowRankFp8, false); // trips
+        let plan = r.route_serving(&request);
+        assert_eq!(plan.choice.kind, KernelKind::DenseF32);
+        assert_eq!(
+            plan.degraded,
+            Some(DegradeReason::BreakerOpen {
+                from: KernelKind::LowRankFp8
+            })
+        );
+        // Introspection must neither reroute nor consume breaker state
+        // (cooldown denials / the half-open probe slot).
+        let preview = r.route(&request);
+        assert_eq!(preview.choice.kind, KernelKind::LowRankFp8);
+        assert_eq!(preview.degraded, None);
     }
 
     #[test]

@@ -34,6 +34,7 @@
 //! routing, same result bits, same metric names.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -44,9 +45,10 @@ use crate::accuracy::{probe_rel_error, AccuracyPlane, AccuracyStats, ErrorModel}
 use crate::autotune::CalibrationTable;
 use crate::cache::ContentCache;
 use crate::config::schema::{
-    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, KernelSettings,
+    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, FaultSettings, KernelSettings,
     SchedulerSettings, ShardSettings, TraceSettings,
 };
+use crate::fault::{self, DegradeReason, FaultPlane};
 use crate::coordinator::backend::Backend;
 use crate::coordinator::batcher::{Batcher, BucketKey};
 use crate::coordinator::request::{BackendKind, GemmRequest, GemmResponse, Priority};
@@ -63,6 +65,11 @@ use crate::metrics::{Counter, HistogramHandle, MetricsRegistry, MetricsSnapshot}
 use crate::runtime::{Manifest, XlaExecutor};
 use crate::shard::{ShardExecutor, ShardPlan};
 use crate::trace_plane::{self, Attr, RequestTrace, Tracer};
+
+/// Max accuracy probes waiting on the shard pool before further samples
+/// are shed (`accuracy.probe_shed`). Only enforced when the fault plane
+/// is up — without it the backlog is unbounded, as it always was.
+const PROBE_BACKLOG_CAP: usize = 32;
 
 /// Service configuration (distilled from [`AppConfig`]).
 #[derive(Clone, Debug)]
@@ -113,6 +120,13 @@ pub struct ServiceConfig {
     /// (request `ThreadPool` + owned shard pool, FIFO dequeue, depth-only
     /// backpressure) bit-identically.
     pub scheduler: SchedulerSettings,
+    /// Fault-containment & graceful-degradation plane (`[fault]`): panic
+    /// isolation at every job boundary, per-kernel circuit breakers over
+    /// a degradation ladder, degraded boot for corrupt persistence
+    /// tables, deterministic fault injection. Default-off: no guards, no
+    /// breaker, no injection — routing, results and metric names are
+    /// bit-identical to a build without the plane.
+    pub fault: FaultSettings,
 }
 
 impl Default for ServiceConfig {
@@ -132,6 +146,7 @@ impl Default for ServiceConfig {
             trace: TraceSettings::default(),
             accuracy: AccuracySettings::default(),
             scheduler: SchedulerSettings::default(),
+            fault: FaultSettings::default(),
         }
     }
 }
@@ -167,6 +182,7 @@ impl ServiceConfig {
             trace: app.trace.clone(),
             accuracy: app.accuracy.clone(),
             scheduler: app.scheduler.clone(),
+            fault: app.fault.clone(),
         })
     }
 }
@@ -449,6 +465,8 @@ pub struct GemmService {
     accuracy: Option<Arc<AccuracyPlane>>,
     /// Persistence path for the error model (saved on shutdown).
     accuracy_path: Option<String>,
+    /// Fault plane when `[fault]` is enabled.
+    fault: Option<Arc<FaultPlane>>,
     /// Interned submit-path counters.
     submitted_h: Arc<Counter>,
     rejected_h: Arc<Counter>,
@@ -491,6 +509,19 @@ impl GemmService {
         }
         let tracer = Arc::new(Tracer::new(&cfg.trace));
         let handles = Arc::new(ServiceMetrics::new(&metrics));
+        // Fault plane: built before the persistence loads below so the
+        // degraded-boot path can quarantine a corrupt table instead of
+        // failing start(). Disabled (the default) no `fault.*` metric is
+        // interned, no guard wraps any job, and the service is
+        // bit-identical to a build without the plane.
+        let fault = if cfg.fault.enabled {
+            // Programmatic ServiceConfig bypasses the TOML/CLI parsers,
+            // so this is the path's validate() call.
+            cfg.fault.validate()?;
+            Some(FaultPlane::new(&cfg.fault, &metrics))
+        } else {
+            None
+        };
         let mut router_cfg = cfg.router.clone();
         // `cfg.shard` is the single source of truth for the tile plane
         // (see its doc): the router's cost model must describe the plane
@@ -519,8 +550,14 @@ impl GemmService {
             let table = Arc::new(table);
             if let Some(path) = &cfg.autotune.table_path {
                 if std::path::Path::new(path).exists() {
-                    let loaded = table.load(path)?;
-                    metrics.count("autotune.warm_start_entries", loaded as u64);
+                    match table.load(path) {
+                        Ok(loaded) => {
+                            metrics.count("autotune.warm_start_entries", loaded as u64)
+                        }
+                        Err(e) => {
+                            Self::quarantine_or_fail(&fault, path, "autotune calibration table", e)?
+                        }
+                    }
                 }
             }
             Some(table)
@@ -568,8 +605,14 @@ impl GemmService {
             let model = Arc::new(model);
             if let Some(path) = &cfg.accuracy.table_path {
                 if std::path::Path::new(path).exists() {
-                    let loaded = model.load(path)?;
-                    metrics.count("accuracy.warm_start_entries", loaded as u64);
+                    match model.load(path) {
+                        Ok(loaded) => {
+                            metrics.count("accuracy.warm_start_entries", loaded as u64)
+                        }
+                        Err(e) => {
+                            Self::quarantine_or_fail(&fault, path, "accuracy error model", e)?
+                        }
+                    }
                 }
             }
             Some(Arc::new(AccuracyPlane::new(
@@ -593,6 +636,9 @@ impl GemmService {
         if let Some(plane) = &accuracy {
             router = router.with_error_model(plane.model().clone());
         }
+        if let Some(plane) = &fault {
+            router = router.with_fault(plane.clone());
+        }
         let router = Arc::new(router);
 
         // Scheduler plane: one work-stealing pool replacing both the
@@ -611,24 +657,30 @@ impl GemmService {
             } else {
                 cfg.scheduler.workers
             };
-            Some(Arc::new(StealPool::new(
+            Some(Arc::new(StealPool::with_hooks(
                 workers,
                 cfg.scheduler.steal,
                 Some(metrics.counter("sched.steal")),
+                fault.as_ref().map(|p| p.panic_sched_counter()),
             )))
         } else {
             None
         };
-        let shard = match &sched_pool {
-            Some(pool) => Arc::new(ShardExecutor::with_shared_pool(
-                ShardPlan::from(&cfg.shard),
-                pool.clone(),
-                metrics.clone(),
-            )),
-            None => Arc::new(ShardExecutor::with_metrics(
-                ShardPlan::from(&cfg.shard),
-                metrics.clone(),
-            )),
+        let shard = {
+            let ex = match &sched_pool {
+                Some(pool) => ShardExecutor::with_shared_pool(
+                    ShardPlan::from(&cfg.shard),
+                    pool.clone(),
+                    metrics.clone(),
+                ),
+                None => {
+                    ShardExecutor::with_metrics(ShardPlan::from(&cfg.shard), metrics.clone())
+                }
+            };
+            Arc::new(match &fault {
+                Some(plane) => ex.with_fault(plane.clone()),
+                None => ex,
+            })
         };
 
         let xla = match &cfg.artifacts_dir {
@@ -652,7 +704,10 @@ impl GemmService {
 
         let pool = match &sched_pool {
             Some(p) => ExecPool::Steal(p.clone()),
-            None => ExecPool::Owned(ThreadPool::new(cfg.workers.max(1))),
+            None => ExecPool::Owned(ThreadPool::with_panic_hook(
+                cfg.workers.max(1),
+                fault.as_ref().map(|p| p.panic_exec_counter()),
+            )),
         };
         let queue = Arc::new(SubmitQueue::new(match &sched_pool {
             Some(_) => QueueMode::Fair,
@@ -687,6 +742,7 @@ impl GemmService {
             let accuracy = accuracy.clone();
             let admission = admission.clone();
             let queue = queue.clone();
+            let fault = fault.clone();
             let max_batch = cfg.max_batch;
             let window = cfg.batch_window;
             std::thread::Builder::new()
@@ -694,7 +750,7 @@ impl GemmService {
                 .spawn(move || {
                     Self::dispatch_loop(
                         queue, pool, backend, handles, tracer, completed, inflight, autotune,
-                        accuracy, admission, max_batch, window,
+                        accuracy, admission, fault, max_batch, window,
                     )
                 })
                 .map_err(|e| Error::Service(format!("spawning dispatcher: {e}")))?
@@ -717,6 +773,7 @@ impl GemmService {
             tracer,
             accuracy,
             accuracy_path: cfg.accuracy.table_path.clone(),
+            fault,
             submitted_h,
             rejected_h,
             inflight,
@@ -734,6 +791,34 @@ impl GemmService {
         Self::start(ServiceConfig::default())
     }
 
+    /// Degraded boot: a *corrupt* persistence table is quarantined
+    /// (renamed to `<path>.corrupt-<n>`) and the service starts with an
+    /// empty table, unless `[fault] strict_boot` — or a disabled fault
+    /// plane — keeps the historical fail-start behavior. I/O errors
+    /// always fail start: they signal a broken disk, not a broken file,
+    /// and quarantining would destroy the only copy's name for nothing.
+    fn quarantine_or_fail(
+        fault: &Option<Arc<FaultPlane>>,
+        path: &str,
+        what: &str,
+        err: Error,
+    ) -> Result<()> {
+        let plane = match fault {
+            Some(p) if !p.settings().strict_boot => p,
+            _ => return Err(err),
+        };
+        if !matches!(err, Error::Config(_)) {
+            return Err(err);
+        }
+        let quarantined = fault::quarantine(path)?;
+        eprintln!(
+            "warning: corrupt {what} at {path} quarantined to {quarantined} ({err}); \
+             starting with an empty table"
+        );
+        plane.note_quarantined();
+        Ok(())
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn dispatch_loop(
         queue: Arc<SubmitQueue<Pending>>,
@@ -746,6 +831,7 @@ impl GemmService {
         autotune: Option<Arc<CalibrationTable>>,
         accuracy: Option<Arc<AccuracyPlane>>,
         admission: Option<Arc<Admission>>,
+        fault: Option<Arc<FaultPlane>>,
         max_batch: usize,
         window: Duration,
     ) {
@@ -760,6 +846,7 @@ impl GemmService {
             let autotune = autotune.clone();
             let accuracy = accuracy.clone();
             let admission = admission.clone();
+            let fault = fault.clone();
             pool.execute(move || {
                 let batch_size = batch.len();
                 for p in batch {
@@ -774,7 +861,8 @@ impl GemmService {
                     // records each tile (and whether a stolen helper ran
                     // it) into this request's stats via the sched TLS.
                     let tile_stats = Arc::new(TileStats::default());
-                    let exec_result = {
+                    let routed = p.plan.choice.kind;
+                    let (exec_result, served_kind, degraded) = {
                         let _tiles = sched::request_scope(tile_stats.clone());
                         // Scope the trace to this worker thread for the
                         // execute call, so every span opened downstream
@@ -784,20 +872,112 @@ impl GemmService {
                             .trace
                             .as_ref()
                             .map(|t| trace_plane::scope(t.clone(), trace_plane::ROOT_SPAN));
-                        let mut sp = trace_plane::span("exec");
-                        sp.attr_u64("m", m as u64);
-                        sp.attr_u64("k", k as u64);
-                        sp.attr_u64("n", n as u64);
-                        sp.attr_str("kernel", p.plan.choice.kind.id());
-                        backend.execute_hinted(
-                            p.plan.choice.kind,
-                            &p.req.a,
-                            &p.req.b,
-                            p.req.a_id,
-                            p.req.b_id,
-                            p.plan.hints,
-                        )
+                        // One attempt on `kind` under its own "exec" span.
+                        // With the fault plane up, the attempt runs inside
+                        // catch_unwind — a panicking kernel is contained
+                        // here, at the request boundary, and surfaces as a
+                        // typed Error::KernelPanicked instead of killing
+                        // the worker (and hanging the caller). Injection
+                        // (`inject`) fires *inside* the guard so injected
+                        // faults exercise exactly the containment path
+                        // real ones take; the retry attempt never injects.
+                        let run_kernel = |kind: KernelKind, inject: bool| {
+                            let mut sp = trace_plane::span("exec");
+                            sp.attr_u64("m", m as u64);
+                            sp.attr_u64("k", k as u64);
+                            sp.attr_u64("n", n as u64);
+                            sp.attr_str("kernel", kind.id());
+                            match &fault {
+                                None => backend.execute_hinted(
+                                    kind, &p.req.a, &p.req.b, p.req.a_id, p.req.b_id,
+                                    p.plan.hints,
+                                ),
+                                Some(plane) => catch_unwind(AssertUnwindSafe(|| {
+                                    if inject {
+                                        if plane.inject_request_panic(p.id) {
+                                            panic!("injected request fault (request {})", p.id);
+                                        }
+                                        if plane.inject_request_error(p.id, kind) {
+                                            return Err(Error::Service(format!(
+                                                "injected kernel error (request {})",
+                                                p.id
+                                            )));
+                                        }
+                                    }
+                                    backend.execute_hinted(
+                                        kind, &p.req.a, &p.req.b, p.req.a_id, p.req.b_id,
+                                        p.plan.hints,
+                                    )
+                                }))
+                                .unwrap_or_else(|_| {
+                                    plane.note_panic_request();
+                                    Err(Error::KernelPanicked(format!(
+                                        "request {} on {}",
+                                        p.id,
+                                        kind.id()
+                                    )))
+                                }),
+                            }
+                        };
+                        // A breaker-open reroute already happened at route
+                        // time; give it its "degrade" span inside this
+                        // request's tree (`routed` is the fallback then).
+                        if let Some(reason) = p.plan.degraded {
+                            let mut sp = trace_plane::span("degrade");
+                            sp.attr_str("from", reason.from_kind().id());
+                            sp.attr_str("to", routed.id());
+                            sp.attr_str("reason", reason.reason_str());
+                        }
+                        let first = run_kernel(routed, true);
+                        match &fault {
+                            None => (first, routed, None),
+                            Some(plane) => {
+                                plane.observe(routed, first.is_ok());
+                                match first {
+                                    Ok(out) => (Ok(out), routed, p.plan.degraded),
+                                    Err(e) => {
+                                        let fallback = if plane.retry() {
+                                            FaultPlane::fallback_for(routed)
+                                        } else {
+                                            None
+                                        };
+                                        match fallback {
+                                            // Ladder floor (or retry off):
+                                            // the typed error goes to the
+                                            // caller — resolved, not hung.
+                                            None => (Err(e), routed, p.plan.degraded),
+                                            Some(fb) => {
+                                                let reason = match &e {
+                                                    Error::KernelPanicked(_) => {
+                                                        DegradeReason::RetryAfterPanic {
+                                                            from: routed,
+                                                        }
+                                                    }
+                                                    _ => DegradeReason::RetryAfterError {
+                                                        from: routed,
+                                                    },
+                                                };
+                                                {
+                                                    let mut sp = trace_plane::span("degrade");
+                                                    sp.attr_str("from", routed.id());
+                                                    sp.attr_str("to", fb.id());
+                                                    sp.attr_str("reason", reason.reason_str());
+                                                }
+                                                let second = run_kernel(fb, false);
+                                                plane.observe(fb, second.is_ok());
+                                                (second, fb, Some(reason))
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
                     };
+                    if let Some(plane) = &fault {
+                        if degraded.is_some() {
+                            plane.note_degraded();
+                        }
+                    }
                     let result = exec_result.map(|out| {
                             let elapsed = started.elapsed();
                             let exec_us = elapsed.as_micros() as u64;
@@ -807,9 +987,14 @@ impl GemmService {
                             // but it tells the reader nothing).
                             handles.exec_us.observe(elapsed.as_secs_f64() * 1e6);
                             handles.queue_us.observe(queue_wait.as_secs_f64() * 1e6);
-                            handles.kernel(p.plan.choice.kind).inc();
+                            handles.kernel(served_kind).inc();
                             handles.backend(out.backend).inc();
-                            if let Some(table) = &autotune {
+                            // A degraded retry served on a *different*
+                            // kernel than the plan priced: recording its
+                            // observed time against the routed kernel's
+                            // prediction would poison the calibration
+                            // cell, so the sample is dropped.
+                            if let (Some(table), true) = (&autotune, served_kind == routed) {
                                 // Calibrate against the *raw* analytic
                                 // prediction: the choice's time already
                                 // folds in the previous correction, and
@@ -842,7 +1027,7 @@ impl GemmService {
                             GemmResponse {
                                 id: p.id,
                                 c: out.c,
-                                kernel: p.plan.choice.kind,
+                                kernel: served_kind,
                                 backend: out.backend,
                                 rank: out.rank,
                                 predicted_rel_error: p.plan.choice.predicted_error,
@@ -851,6 +1036,7 @@ impl GemmService {
                                 batch_size,
                                 sched_us: p.sched_us,
                                 stolen_tiles: tile_stats.stolen(),
+                                degraded,
                             }
                         });
                     if result.is_err() {
@@ -878,7 +1064,11 @@ impl GemmService {
                     // span lands inside the request's own span tree.
                     let mut probe_seals_trace = false;
                     if let (Some(plane), Ok(resp)) = (&accuracy, &result) {
-                        if plane.sample() {
+                        // A degraded retry served a different kernel than
+                        // the plan priced — its analytic error prediction
+                        // describes the routed kernel, so probing it would
+                        // feed a mismatched sample into the error model.
+                        if served_kind == routed && plane.sample() {
                             let plane = plane.clone();
                             let a = p.req.a.clone();
                             let b = p.req.b.clone();
@@ -897,8 +1087,7 @@ impl GemmService {
                             let seed = plane.probe_seed(p.id);
                             let trace = p.trace.clone();
                             let tracer = tracer.clone();
-                            probe_seals_trace = trace.is_some();
-                            backend.shard().execute_background(move || {
+                            let job = move || {
                                 let probe_start = Instant::now();
                                 let est = probe_rel_error(&a, &b, &c, probes, seed);
                                 let probe_end = Instant::now();
@@ -940,7 +1129,39 @@ impl GemmService {
                                         ],
                                     );
                                 }
-                            });
+                            };
+                            // With the fault plane up, the probe backlog
+                            // is bounded: past PROBE_BACKLOG_CAP pending
+                            // probes the sample is shed (counted) instead
+                            // of queued — a probe pile-up must degrade
+                            // observability, never serving memory. A
+                            // panicking probe is contained at the job
+                            // boundary so it cannot kill a shard worker.
+                            let scheduled = match &fault {
+                                Some(fplane) => {
+                                    let hook = fplane.clone();
+                                    let contained = move || {
+                                        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                            hook.note_panic_probe();
+                                        }
+                                    };
+                                    let ok = backend
+                                        .shard()
+                                        .try_execute_background(PROBE_BACKLOG_CAP, contained);
+                                    if !ok {
+                                        fplane.note_probe_shed();
+                                    }
+                                    ok
+                                }
+                                None => {
+                                    backend.shard().execute_background(job);
+                                    true
+                                }
+                            };
+                            // Only a probe that actually queued owns the
+                            // trace seal; a shed probe hands it back to
+                            // the normal seal path below.
+                            probe_seals_trace = scheduled && p.trace.is_some();
                         }
                     }
                     // Seal the trace before waking the caller, so a
@@ -952,7 +1173,7 @@ impl GemmService {
                             tracer.finish(
                                 t,
                                 &[
-                                    Attr::str("kernel", p.plan.choice.kind.id()),
+                                    Attr::str("kernel", served_kind.id()),
                                     Attr::u64("m", m as u64),
                                     Attr::u64("k", k as u64),
                                     Attr::u64("n", n as u64),
@@ -1140,6 +1361,9 @@ impl GemmService {
             batch_size: 1,
             sched_us: 0,
             stolen_tiles: 0,
+            // Inline execution routes via `route()` (no breaker consult)
+            // and never retries — it is a measurement path.
+            degraded: None,
         })
     }
 
@@ -1197,6 +1421,11 @@ impl GemmService {
     /// The accuracy plane, when `[accuracy]` is enabled.
     pub fn accuracy(&self) -> Option<&Arc<AccuracyPlane>> {
         self.accuracy.as_ref()
+    }
+
+    /// The fault plane, when `[fault]` is enabled.
+    pub fn fault(&self) -> Option<&Arc<FaultPlane>> {
+        self.fault.as_ref()
     }
 
     /// Persist the calibrated error model now (also happens automatically

@@ -35,6 +35,10 @@ pub enum Error {
     /// the structured reason so callers can branch on backpressure
     /// instead of parsing strings.
     Rejected(RejectReason),
+    /// A kernel job panicked and was contained at the job boundary (the
+    /// fault plane's panic isolation): the worker survived, the owning
+    /// request resolves with this instead of hanging its waiter.
+    KernelPanicked(String),
     /// Anything I/O.
     Io(std::io::Error),
 }
@@ -121,6 +125,7 @@ impl fmt::Display for Error {
             // matches the historical strings — rejections render exactly
             // as they did when they were stringly typed.
             Error::Rejected(r) => write!(f, "service error: {r}"),
+            Error::KernelPanicked(m) => write!(f, "kernel panicked (contained): {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -1,9 +1,13 @@
 //! Fixed-size FIFO thread pool with graceful shutdown.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+use crate::fault::flock;
+use crate::metrics::Counter;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -27,6 +31,14 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// Spawn `size` workers (clamped to ≥ 1).
     pub fn new(size: usize) -> Self {
+        Self::with_panic_hook(size, None)
+    }
+
+    /// [`ThreadPool::new`] plus the fault-plane panic hook: with
+    /// `panic_counter` set, a panicking job is contained at the worker
+    /// loop (the worker survives and counts it — `fault.panic.exec`)
+    /// instead of unwinding through and killing the worker thread.
+    pub fn with_panic_hook(size: usize, panic_counter: Option<Arc<Counter>>) -> Self {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
@@ -38,18 +50,31 @@ impl ThreadPool {
             let rx = Arc::clone(&rx);
             let queued = Arc::clone(&queued);
             let completed = Arc::clone(&completed);
+            let hook = panic_counter.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("lrg-worker-{i}"))
                     .spawn(move || loop {
                         let msg = {
-                            let guard = rx.lock().unwrap();
+                            // Poison-tolerant: a sibling that died unwinding
+                            // while holding the receiver lock must not take
+                            // the rest of the pool down with it.
+                            let guard = flock(&rx);
                             guard.recv()
                         };
                         match msg {
                             Ok(Message::Run(job)) => {
                                 queued.fetch_sub(1, Ordering::Relaxed);
-                                job();
+                                match &hook {
+                                    Some(h) => {
+                                        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                            h.inc();
+                                        }
+                                    }
+                                    None => job(),
+                                }
+                                // Unconditional even after a contained panic:
+                                // `wait_idle` would otherwise spin forever.
                                 completed.fetch_add(1, Ordering::Relaxed);
                             }
                             Ok(Message::Shutdown) | Err(_) => break,
@@ -183,6 +208,29 @@ mod tests {
         assert_eq!(pool.pending(), 0);
         assert_eq!(pool.completed(), 4);
         assert_eq!(pool.submitted(), 4, "submitted stays monotonic");
+    }
+
+    #[test]
+    fn panic_hook_contains_job_panics_and_pool_survives() {
+        let panics = Arc::new(Counter::default());
+        let pool = ThreadPool::with_panic_hook(2, Some(panics.clone()));
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 4 == 0 {
+                    panic!("boom {i}");
+                }
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle(); // must not hang: contained panics still complete
+        assert_eq!(counter.load(Ordering::Relaxed), 15);
+        assert_eq!(panics.get(), 5);
+        assert_eq!(pool.completed(), 20);
+        let (tx, rx) = mpsc::channel();
+        pool.execute(move || tx.send(7).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7, "workers alive after panics");
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Per-kernel circuit breaker: rolling failure window, trip / half-open /
+//! probe states.
+//!
+//! One cell per [`KernelKind`]. A cell starts **Closed** (traffic flows;
+//! outcomes fill a rolling window). When the window holds `threshold`
+//! failures the cell **trips to Open**: requests are denied (the router
+//! walks the degradation ladder instead) until `cooldown` denials have
+//! accumulated, at which point the cell moves to **HalfOpen** and admits
+//! exactly one probe request. The probe's outcome decides: success closes
+//! the cell (recovered), failure re-opens it for another cooldown.
+//!
+//! Denial-counted cooldown (rather than wall-clock) keeps the state
+//! machine deterministic for tests and seeded chaos runs: the Nth denied
+//! request is the probe trigger at any request rate.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::fault::flock;
+use crate::kernels::KernelKind;
+
+/// Breaker cell state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Traffic flows; outcomes fill the rolling window.
+    Closed,
+    /// Tripped: deny until `cooldown` denials, then probe.
+    Open,
+    /// One probe request is in flight; its outcome decides.
+    HalfOpen,
+}
+
+/// A state transition worth counting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerTransition {
+    /// Closed/HalfOpen → Open.
+    Tripped,
+    /// HalfOpen → Closed.
+    Recovered,
+}
+
+struct Cell {
+    state: BreakerState,
+    /// Rolling outcome window, `true` = failure. Bounded at `window`.
+    recent: VecDeque<bool>,
+    /// Denials since the cell opened (cooldown progress).
+    denied: usize,
+}
+
+impl Cell {
+    fn new() -> Self {
+        Cell {
+            state: BreakerState::Closed,
+            recent: VecDeque::new(),
+            denied: 0,
+        }
+    }
+}
+
+/// Per-[`KernelKind`] circuit breaker.
+pub struct CircuitBreaker {
+    window: usize,
+    threshold: usize,
+    cooldown: usize,
+    cells: [Mutex<Cell>; KernelKind::ALL.len()],
+}
+
+fn idx(kind: KernelKind) -> usize {
+    KernelKind::ALL
+        .iter()
+        .position(|k| *k == kind)
+        .expect("every kernel kind is in ALL")
+}
+
+impl CircuitBreaker {
+    /// New breaker with all cells closed. `threshold` failures within the
+    /// last `window` outcomes trip a cell; `cooldown` denials later it
+    /// admits one probe.
+    pub fn new(window: usize, threshold: usize, cooldown: usize) -> Self {
+        CircuitBreaker {
+            window: window.max(1),
+            threshold: threshold.max(1),
+            cooldown: cooldown.max(1),
+            cells: std::array::from_fn(|_| Mutex::new(Cell::new())),
+        }
+    }
+
+    /// May a request be served on this kernel right now? Open cells count
+    /// the denial toward their cooldown; the call that completes the
+    /// cooldown moves the cell to HalfOpen and is admitted as the probe.
+    pub fn allows(&self, kind: KernelKind) -> bool {
+        let mut cell = flock(&self.cells[idx(kind)]);
+        match cell.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => false, // a probe is already out
+            BreakerState::Open => {
+                cell.denied += 1;
+                if cell.denied >= self.cooldown {
+                    cell.state = BreakerState::HalfOpen;
+                    cell.denied = 0;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a served request's outcome. Returns the transition it
+    /// caused, if any (the plane counts trips and recoveries).
+    pub fn observe(&self, kind: KernelKind, ok: bool) -> Option<BreakerTransition> {
+        let mut cell = flock(&self.cells[idx(kind)]);
+        match cell.state {
+            BreakerState::Closed => {
+                if cell.recent.len() == self.window {
+                    cell.recent.pop_front();
+                }
+                cell.recent.push_back(!ok);
+                if cell.recent.iter().filter(|f| **f).count() >= self.threshold {
+                    cell.state = BreakerState::Open;
+                    cell.recent.clear();
+                    cell.denied = 0;
+                    Some(BreakerTransition::Tripped)
+                } else {
+                    None
+                }
+            }
+            BreakerState::HalfOpen => {
+                if ok {
+                    cell.state = BreakerState::Closed;
+                    cell.recent.clear();
+                    Some(BreakerTransition::Recovered)
+                } else {
+                    cell.state = BreakerState::Open;
+                    cell.denied = 0;
+                    Some(BreakerTransition::Tripped)
+                }
+            }
+            // A straggler finishing after the trip; its outcome is stale.
+            BreakerState::Open => None,
+        }
+    }
+
+    /// Current state of a cell (observability / tests).
+    pub fn state(&self, kind: KernelKind) -> BreakerState {
+        flock(&self.cells[idx(kind)]).state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const K: KernelKind = KernelKind::LowRankFp8;
+
+    #[test]
+    fn trips_at_threshold_within_window() {
+        let b = CircuitBreaker::new(4, 2, 3);
+        assert!(b.allows(K));
+        assert_eq!(b.observe(K, false), None);
+        assert_eq!(b.observe(K, true), None);
+        assert_eq!(b.observe(K, false), Some(BreakerTransition::Tripped));
+        assert_eq!(b.state(K), BreakerState::Open);
+    }
+
+    #[test]
+    fn window_forgets_old_failures() {
+        let b = CircuitBreaker::new(2, 2, 1);
+        b.observe(K, false);
+        b.observe(K, true); // pushes the failure toward the window edge
+        // One old failure + one new failure would trip on window 2 only
+        // if both were retained; the success in between evicted the first.
+        assert_eq!(b.observe(K, false), None);
+        assert_eq!(b.state(K), BreakerState::Closed);
+    }
+
+    #[test]
+    fn cooldown_denials_admit_one_probe() {
+        let b = CircuitBreaker::new(2, 1, 3);
+        b.observe(K, false); // trips at threshold 1
+        assert_eq!(b.state(K), BreakerState::Open);
+        assert!(!b.allows(K));
+        assert!(!b.allows(K));
+        assert!(b.allows(K), "third denial completes the cooldown");
+        assert_eq!(b.state(K), BreakerState::HalfOpen);
+        assert!(!b.allows(K), "only one probe at a time");
+    }
+
+    #[test]
+    fn probe_success_recovers_probe_failure_reopens() {
+        let b = CircuitBreaker::new(2, 1, 1);
+        b.observe(K, false);
+        assert!(b.allows(K)); // cooldown 1: first denial is the probe
+        assert_eq!(b.observe(K, false), Some(BreakerTransition::Tripped));
+        assert_eq!(b.state(K), BreakerState::Open);
+        assert!(b.allows(K));
+        assert_eq!(b.observe(K, true), Some(BreakerTransition::Recovered));
+        assert_eq!(b.state(K), BreakerState::Closed);
+        assert!(b.allows(K));
+    }
+
+    #[test]
+    fn stale_outcomes_ignored_while_open() {
+        let b = CircuitBreaker::new(2, 1, 10);
+        b.observe(K, false);
+        assert_eq!(b.observe(K, true), None, "straggler while open is stale");
+        assert_eq!(b.state(K), BreakerState::Open);
+    }
+
+    #[test]
+    fn cells_are_independent() {
+        let b = CircuitBreaker::new(2, 1, 1);
+        b.observe(KernelKind::DenseFp8, false);
+        assert_eq!(b.state(KernelKind::DenseFp8), BreakerState::Open);
+        for k in KernelKind::ALL {
+            if k != KernelKind::DenseFp8 {
+                assert_eq!(b.state(k), BreakerState::Closed);
+                assert!(b.allows(k));
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Deterministic fault injection: seeded, site-keyed probability draws.
+//!
+//! Every draw is a pure hash of `(seed, site, a, b)` — no RNG state, no
+//! wall clock — so a given seed fires the same faults at the same sites
+//! on every run, at any worker count, and a test can enumerate exactly
+//! which requests/tiles will fault before submitting them. The injector
+//! only *decides*; the sites that act on the decision (panic, typed
+//! error, decode corruption, stall) are the same job boundaries the
+//! containment code guards, so every injected fault exercises a real
+//! recovery path.
+
+use crate::config::FaultInjectSettings;
+use crate::kernels::KernelKind;
+
+/// Site constants folded into the draw hash so the same (a, b) pair
+/// draws independently per site.
+const SITE_TILE_PANIC: u64 = 0x7111;
+const SITE_TILE_STALL: u64 = 0x57a1;
+const SITE_REQ_PANIC: u64 = 0x9a_1c;
+const SITE_REQ_ERROR: u64 = 0xe770;
+const SITE_DECODE: u64 = 0xdec0;
+
+/// What an injected tile fault does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileFault {
+    /// Panic inside the tile job (exercises `catch_unwind` containment).
+    Panic,
+    /// Sleep this many milliseconds before computing (slow-tile stall).
+    Stall(u64),
+}
+
+/// Seeded, stateless fault decisions (see module docs).
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultInjectSettings,
+    /// `error_kernel` pre-parsed; `None` = any kernel.
+    error_kernel: Option<KernelKind>,
+}
+
+/// splitmix64 finalizer: a full-avalanche 64-bit mix.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultInjector {
+    /// Build from a validated `[fault.inject]` plan.
+    pub fn new(plan: &FaultInjectSettings) -> Self {
+        FaultInjector {
+            error_kernel: KernelKind::parse(&plan.error_kernel),
+            plan: plan.clone(),
+        }
+    }
+
+    /// Uniform draw in [0, 1) keyed by (seed, site, a, b).
+    fn draw(&self, site: u64, a: u64, b: u64) -> f64 {
+        let h = mix(self.plan.seed ^ mix(site ^ mix(a ^ mix(b))));
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    fn fires(&self, p: f64, site: u64, a: u64, b: u64) -> bool {
+        p > 0.0 && self.draw(site, a, b) < p
+    }
+
+    /// Fault (if any) for tile `tile` of the GEMM with plane-assigned
+    /// sequence number `seq`. Panic wins over stall when both fire.
+    pub fn tile_fault(&self, seq: u64, tile: usize) -> Option<TileFault> {
+        if self.fires(self.plan.panic_tile, SITE_TILE_PANIC, seq, tile as u64) {
+            return Some(TileFault::Panic);
+        }
+        if self.fires(self.plan.stall_tile, SITE_TILE_STALL, seq, tile as u64) {
+            return Some(TileFault::Stall(self.plan.stall_ms));
+        }
+        None
+    }
+
+    /// Should request `id`'s kernel execution panic at the request
+    /// boundary (exercises dispatch-level containment + retry)?
+    pub fn request_panic(&self, id: u64) -> bool {
+        self.fires(self.plan.panic_request, SITE_REQ_PANIC, id, 0)
+    }
+
+    /// Should request `id`, served on `kind`, fail with a typed kernel
+    /// error? `error_requests_under` is the deterministic test knob: ids
+    /// below it always fail (on the matching kernel); the probability
+    /// draw covers the rest.
+    pub fn request_error(&self, id: u64, kind: KernelKind) -> bool {
+        if let Some(k) = self.error_kernel {
+            if k != kind {
+                return false;
+            }
+        }
+        if self.plan.error_requests_under > 0 && id < self.plan.error_requests_under {
+            return true;
+        }
+        self.fires(self.plan.error_request, SITE_REQ_ERROR, id, 0)
+    }
+
+    /// Should the FP8 decode of GEMM `seq` be corrupted (bit-flip in the
+    /// decoded output, exercising the accuracy/breaker response to a
+    /// silently-wrong kernel)?
+    pub fn corrupt_decode(&self, seq: u64) -> bool {
+        self.fires(self.plan.corrupt_decode, SITE_DECODE, seq, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(seed: u64) -> FaultInjectSettings {
+        FaultInjectSettings {
+            seed,
+            panic_tile: 0.25,
+            stall_tile: 0.25,
+            stall_ms: 2,
+            panic_request: 0.25,
+            error_request: 0.25,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_site_independent() {
+        let a = FaultInjector::new(&plan(42));
+        let b = FaultInjector::new(&plan(42));
+        let mut fired = 0usize;
+        for seq in 0..64u64 {
+            for tile in 0..16usize {
+                assert_eq!(a.tile_fault(seq, tile), b.tile_fault(seq, tile));
+                fired += a.tile_fault(seq, tile).is_some() as usize;
+            }
+            assert_eq!(a.request_panic(seq), b.request_panic(seq));
+        }
+        // ~44% of 1024 tiles should fault (panic ∪ stall at 0.25 each);
+        // accept a wide band — this guards "all" / "none" hash bugs.
+        assert!((200..=700).contains(&fired), "fired {fired}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = FaultInjector::new(&plan(1));
+        let b = FaultInjector::new(&plan(2));
+        let same = (0..256u64)
+            .filter(|&s| a.tile_fault(s, 0) == b.tile_fault(s, 0))
+            .count();
+        assert!(same < 256, "seeds 1 and 2 produced identical fault plans");
+    }
+
+    #[test]
+    fn zero_probabilities_never_fire() {
+        let inj = FaultInjector::new(&FaultInjectSettings::default());
+        for s in 0..512u64 {
+            assert_eq!(inj.tile_fault(s, s as usize), None);
+            assert!(!inj.request_panic(s));
+            assert!(!inj.request_error(s, KernelKind::DenseF32));
+            assert!(!inj.corrupt_decode(s));
+        }
+    }
+
+    #[test]
+    fn error_requests_under_is_exact_and_kernel_filtered() {
+        let p = FaultInjectSettings {
+            error_kernel: "lowrank_fp8".into(),
+            error_requests_under: 3,
+            ..Default::default()
+        };
+        let inj = FaultInjector::new(&p);
+        for id in 0..3 {
+            assert!(inj.request_error(id, KernelKind::LowRankFp8));
+            assert!(!inj.request_error(id, KernelKind::DenseF32), "filtered");
+        }
+        assert!(!inj.request_error(3, KernelKind::LowRankFp8));
+    }
+
+    #[test]
+    fn stall_carries_configured_ms() {
+        let p = FaultInjectSettings {
+            stall_tile: 1.0,
+            stall_ms: 7,
+            ..Default::default()
+        };
+        let inj = FaultInjector::new(&p);
+        assert_eq!(inj.tile_fault(0, 0), Some(TileFault::Stall(7)));
+    }
+}

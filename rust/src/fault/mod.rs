@@ -1,0 +1,79 @@
+//! Fault-containment & graceful-degradation plane.
+//!
+//! The serving planes before this one all assume the happy path: a
+//! panicking tile job poisons a pool mutex and takes every later request
+//! down with it, a kernel family that starts failing keeps receiving
+//! traffic, and a corrupt persistence table fails the whole boot. This
+//! plane closes those gaps with four pillars, default-off and
+//! bitwise-identical when disabled like every prior plane:
+//!
+//! 1. **Panic isolation** — every job boundary (the [`crate::sched`]
+//!    steal-pool worker loop, [`crate::exec::ThreadPool`] jobs, shard
+//!    tile claim loops, background accuracy probes) runs under
+//!    `catch_unwind`, locks are acquired poison-tolerantly through
+//!    [`flock`], each contained panic increments a `fault.panic.<site>`
+//!    counter, the worker thread survives, and the owning request
+//!    completes as a typed [`crate::error::Error::KernelPanicked`]
+//!    instead of hanging its waiter.
+//! 2. **Degradation ladder + circuit breaker** — a per-`KernelKind`
+//!    [`CircuitBreaker`] (rolling failure window, trip / half-open /
+//!    probe states) consulted by the router, so a failing kernel family
+//!    routes down the ladder (lowrank → dense f32) and a failed request
+//!    gets one retry on its fallback kernel. Degraded responses carry
+//!    [`DegradeReason`] and a `degrade` trace span.
+//! 3. **Degraded boot** — corrupt autotune/accuracy persistence files
+//!    are quarantined to `<path>.corrupt-<n>` ([`quarantine`]) with a
+//!    warning and a `fault.quarantined_table` counter instead of failing
+//!    start; `[fault] strict_boot = true` keeps the old behavior.
+//! 4. **Deterministic fault injection** — a seeded [`FaultInjector`]
+//!    (`[fault.inject]` TOML / `--fault-inject` CLI) fires panics,
+//!    kernel errors, decode corruption and slow-tile stalls at exactly
+//!    the sites the containment code guards, so every recovery path is
+//!    exercised by tests and the CI chaos job rather than trusted on
+//!    faith. Draws are pure hashes of (seed, site, ids): the same seed
+//!    replays the same faults at any worker count.
+//!
+//! Metric inventory (interned only when the plane is enabled):
+//! `fault.panic.{sched,exec,tile,request,probe}`, `fault.degraded`,
+//! `fault.breaker.trip`, `fault.breaker.recover`,
+//! `fault.quarantined_table`, `fault.injected`.
+
+pub mod breaker;
+pub mod inject;
+pub mod plane;
+
+pub use breaker::{BreakerState, BreakerTransition, CircuitBreaker};
+pub use inject::{FaultInjector, TileFault};
+pub use plane::{quarantine, DegradeReason, FaultPlane};
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant lock acquisition: a mutex poisoned by a panicking
+/// holder is still structurally sound (the panic unwound out of the
+/// critical section; our guarded data is counters, deques and condvar
+/// gates whose invariants hold between operations), so serving threads
+/// take the data as-is instead of propagating the poison and cascading
+/// one worker's death into every later lock site.
+pub fn flock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn flock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        *flock(&m) += 1;
+        assert_eq!(*flock(&m), 42);
+    }
+}

@@ -1,0 +1,371 @@
+//! The fault plane proper: breaker + injector + degradation ladder +
+//! interned `fault.*` counters, plus the degraded-boot quarantine helper.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::config::FaultSettings;
+use crate::fault::breaker::{BreakerTransition, CircuitBreaker};
+use crate::fault::inject::{FaultInjector, TileFault};
+use crate::kernels::KernelKind;
+use crate::metrics::{Counter, MetricsRegistry};
+
+/// Why a response was served on a kernel other than the routed one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradeReason {
+    /// The routed kernel's breaker was open at route time.
+    BreakerOpen {
+        /// The kernel the request would have been served on.
+        from: KernelKind,
+    },
+    /// The routed kernel returned an error; this is the fallback retry.
+    RetryAfterError {
+        /// The kernel that failed.
+        from: KernelKind,
+    },
+    /// The routed kernel panicked (contained); this is the fallback retry.
+    RetryAfterPanic {
+        /// The kernel that panicked.
+        from: KernelKind,
+    },
+}
+
+impl DegradeReason {
+    /// The kernel the request degraded away from.
+    pub fn from_kind(self) -> KernelKind {
+        match self {
+            DegradeReason::BreakerOpen { from }
+            | DegradeReason::RetryAfterError { from }
+            | DegradeReason::RetryAfterPanic { from } => from,
+        }
+    }
+
+    /// Stable label for trace spans and logs.
+    pub fn reason_str(self) -> &'static str {
+        match self {
+            DegradeReason::BreakerOpen { .. } => "breaker_open",
+            DegradeReason::RetryAfterError { .. } => "retry_after_error",
+            DegradeReason::RetryAfterPanic { .. } => "retry_after_panic",
+        }
+    }
+}
+
+/// The fault-containment & graceful-degradation plane (see the
+/// [module docs](crate::fault)). Constructed only when `[fault]` is
+/// enabled — the `fault.*` counters below are interned here, so a
+/// disabled plane leaves the metric namespace byte-identical.
+pub struct FaultPlane {
+    settings: FaultSettings,
+    breaker: CircuitBreaker,
+    injector: FaultInjector,
+    /// Per-GEMM sequence number keying tile-site injection draws.
+    gemm_seq: AtomicU64,
+    /// In-flight background probe jobs (satellite: probe-backlog cap).
+    bg_pending: AtomicUsize,
+    panic_sched: Arc<Counter>,
+    panic_exec: Arc<Counter>,
+    panic_tile: Arc<Counter>,
+    panic_request: Arc<Counter>,
+    panic_probe: Arc<Counter>,
+    degraded: Arc<Counter>,
+    breaker_trip: Arc<Counter>,
+    breaker_recover: Arc<Counter>,
+    quarantined: Arc<Counter>,
+    injected: Arc<Counter>,
+    /// Interned here (not in the accuracy plane) because probes can only
+    /// be shed when the fault plane's backlog cap is active — keeping it
+    /// here preserves the accuracy plane's metric namespace when `[fault]`
+    /// is off.
+    probe_shed: Arc<Counter>,
+}
+
+impl FaultPlane {
+    /// Build from validated settings, interning the plane's counters.
+    pub fn new(settings: &FaultSettings, metrics: &MetricsRegistry) -> Arc<Self> {
+        Arc::new(FaultPlane {
+            breaker: CircuitBreaker::new(
+                settings.breaker_window,
+                settings.breaker_threshold,
+                settings.breaker_cooldown,
+            ),
+            injector: FaultInjector::new(&settings.inject),
+            gemm_seq: AtomicU64::new(0),
+            bg_pending: AtomicUsize::new(0),
+            panic_sched: metrics.counter("fault.panic.sched"),
+            panic_exec: metrics.counter("fault.panic.exec"),
+            panic_tile: metrics.counter("fault.panic.tile"),
+            panic_request: metrics.counter("fault.panic.request"),
+            panic_probe: metrics.counter("fault.panic.probe"),
+            degraded: metrics.counter("fault.degraded"),
+            breaker_trip: metrics.counter("fault.breaker.trip"),
+            breaker_recover: metrics.counter("fault.breaker.recover"),
+            quarantined: metrics.counter("fault.quarantined_table"),
+            injected: metrics.counter("fault.injected"),
+            probe_shed: metrics.counter("accuracy.probe_shed"),
+            settings: settings.clone(),
+        })
+    }
+
+    /// The validated settings the plane was built from.
+    pub fn settings(&self) -> &FaultSettings {
+        &self.settings
+    }
+
+    /// Is the one-retry-on-fallback policy enabled?
+    pub fn retry(&self) -> bool {
+        self.settings.retry
+    }
+
+    /// Next step down the degradation ladder. The ladder walks toward
+    /// the most accurate, least exotic kernel: factor-chain kernels fall
+    /// back to dense f32, reduced-precision dense kernels likewise.
+    /// Dense f32 is the floor — it has no fallback and serves even with
+    /// its breaker open (refusing every kernel would just convert
+    /// degradation into an outage).
+    pub fn fallback_for(kind: KernelKind) -> Option<KernelKind> {
+        match kind {
+            KernelKind::LowRankAuto => Some(KernelKind::LowRankFp8),
+            KernelKind::LowRankFp8 => Some(KernelKind::DenseF32),
+            KernelKind::DenseFp8 => Some(KernelKind::DenseF32),
+            KernelKind::DenseF16 => Some(KernelKind::DenseF32),
+            KernelKind::DenseF32 => None,
+        }
+    }
+
+    /// Route-time breaker consult: if `kind`'s breaker denies, walk the
+    /// ladder to the first admitted kernel and report the degrade.
+    /// `None` = serve as routed (including the admitted half-open probe).
+    pub fn reroute(&self, kind: KernelKind) -> Option<(KernelKind, DegradeReason)> {
+        let mut cur = kind;
+        let mut moved = false;
+        while !self.breaker.allows(cur) {
+            match Self::fallback_for(cur) {
+                Some(next) => {
+                    cur = next;
+                    moved = true;
+                }
+                None => break, // the floor serves regardless
+            }
+        }
+        moved.then(|| (cur, DegradeReason::BreakerOpen { from: kind }))
+    }
+
+    /// Feed a served request's outcome to the breaker; counts trips and
+    /// recoveries.
+    pub fn observe(&self, kind: KernelKind, ok: bool) {
+        match self.breaker.observe(kind, ok) {
+            Some(BreakerTransition::Tripped) => self.breaker_trip.inc(),
+            Some(BreakerTransition::Recovered) => self.breaker_recover.inc(),
+            None => {}
+        }
+    }
+
+    /// Breaker state of one kernel (observability / tests).
+    pub fn breaker_state(&self, kind: KernelKind) -> crate::fault::BreakerState {
+        self.breaker.state(kind)
+    }
+
+    /// Sequence number for the next GEMM's tile-injection draws.
+    pub fn next_gemm_seq(&self) -> u64 {
+        self.gemm_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Injected fault (if any) for one tile; counts it.
+    pub fn tile_fault(&self, seq: u64, tile: usize) -> Option<TileFault> {
+        let f = self.injector.tile_fault(seq, tile);
+        if f.is_some() {
+            self.injected.inc();
+        }
+        f
+    }
+
+    /// Should this request's kernel execution panic (injected)? Counts it.
+    pub fn inject_request_panic(&self, id: u64) -> bool {
+        let fire = self.injector.request_panic(id);
+        if fire {
+            self.injected.inc();
+        }
+        fire
+    }
+
+    /// Should this request fail with a typed kernel error (injected)?
+    /// Counts it.
+    pub fn inject_request_error(&self, id: u64, kind: KernelKind) -> bool {
+        let fire = self.injector.request_error(id, kind);
+        if fire {
+            self.injected.inc();
+        }
+        fire
+    }
+
+    /// Should this GEMM's FP8 decode be corrupted (injected)? Counts it.
+    pub fn inject_corrupt_decode(&self, seq: u64) -> bool {
+        let fire = self.injector.corrupt_decode(seq);
+        if fire {
+            self.injected.inc();
+        }
+        fire
+    }
+
+    /// Panic-counter handles for the pools (cloned into worker loops).
+    pub fn panic_sched_counter(&self) -> Arc<Counter> {
+        self.panic_sched.clone()
+    }
+
+    /// See [`FaultPlane::panic_sched_counter`].
+    pub fn panic_exec_counter(&self) -> Arc<Counter> {
+        self.panic_exec.clone()
+    }
+
+    /// A tile job panicked and was contained.
+    pub fn note_panic_tile(&self) {
+        self.panic_tile.inc();
+    }
+
+    /// A request-boundary kernel execution panicked and was contained.
+    pub fn note_panic_request(&self) {
+        self.panic_request.inc();
+    }
+
+    /// A background accuracy probe panicked and was contained.
+    pub fn note_panic_probe(&self) {
+        self.panic_probe.inc();
+    }
+
+    /// A response was served degraded.
+    pub fn note_degraded(&self) {
+        self.degraded.inc();
+    }
+
+    /// A corrupt persistence table was quarantined at boot.
+    pub fn note_quarantined(&self) {
+        self.quarantined.inc();
+    }
+
+    /// An accuracy probe was shed because the backlog cap was reached.
+    pub fn note_probe_shed(&self) {
+        self.probe_shed.inc();
+    }
+
+    /// Try to reserve a background-probe slot; `false` = backlog full
+    /// (caller sheds the probe). Pair with [`FaultPlane::release_probe`].
+    pub fn try_reserve_probe(&self, cap: usize) -> bool {
+        let mut cur = self.bg_pending.load(Ordering::Relaxed);
+        loop {
+            if cur >= cap {
+                return false;
+            }
+            match self.bg_pending.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Release a reserved probe slot (runs even when the probe panics —
+    /// call from a drop guard).
+    pub fn release_probe(&self) {
+        self.bg_pending.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Quarantine a corrupt persistence file: rename it to the first free
+/// `<path>.corrupt-<n>` so the bytes stay inspectable but the next boot
+/// starts clean. Returns the quarantine path.
+pub fn quarantine(path: &str) -> std::io::Result<String> {
+    for n in 1u32.. {
+        let dst = format!("{path}.corrupt-{n}");
+        if !std::path::Path::new(&dst).exists() {
+            std::fs::rename(path, &dst)?;
+            return Ok(dst);
+        }
+    }
+    unreachable!("u32 quarantine slots exhausted")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FaultSettings;
+
+    fn plane() -> Arc<FaultPlane> {
+        let s = FaultSettings {
+            enabled: true,
+            breaker_window: 2,
+            breaker_threshold: 2,
+            breaker_cooldown: 2,
+            ..Default::default()
+        };
+        FaultPlane::new(&s, &MetricsRegistry::new())
+    }
+
+    #[test]
+    fn ladder_terminates_at_dense_f32() {
+        for mut k in KernelKind::ALL {
+            let mut steps = 0;
+            while let Some(next) = FaultPlane::fallback_for(k) {
+                k = next;
+                steps += 1;
+                assert!(steps <= KernelKind::ALL.len(), "ladder must not cycle");
+            }
+            assert_eq!(k, KernelKind::DenseF32, "every ladder ends at the floor");
+        }
+    }
+
+    #[test]
+    fn reroute_walks_ladder_when_tripped() {
+        let p = plane();
+        assert_eq!(p.reroute(KernelKind::LowRankFp8), None);
+        p.observe(KernelKind::LowRankFp8, false);
+        p.observe(KernelKind::LowRankFp8, false); // trips (window 2 / threshold 2)
+        let (to, why) = p.reroute(KernelKind::LowRankFp8).expect("must degrade");
+        assert_eq!(to, KernelKind::DenseF32);
+        assert_eq!(why.from_kind(), KernelKind::LowRankFp8);
+        assert_eq!(why.reason_str(), "breaker_open");
+    }
+
+    #[test]
+    fn floor_serves_even_with_open_breaker() {
+        let p = plane();
+        p.observe(KernelKind::DenseF32, false);
+        p.observe(KernelKind::DenseF32, false);
+        assert_eq!(
+            p.breaker_state(KernelKind::DenseF32),
+            crate::fault::BreakerState::Open
+        );
+        assert_eq!(p.reroute(KernelKind::DenseF32), None, "floor never refuses");
+    }
+
+    #[test]
+    fn probe_slots_are_bounded_and_released() {
+        let p = plane();
+        assert!(p.try_reserve_probe(2));
+        assert!(p.try_reserve_probe(2));
+        assert!(!p.try_reserve_probe(2), "cap reached");
+        p.release_probe();
+        assert!(p.try_reserve_probe(2));
+    }
+
+    #[test]
+    fn quarantine_renames_to_first_free_slot() {
+        let dir = std::env::temp_dir().join(format!("lrg_quarantine_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("table.json");
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, b"corrupt one").unwrap();
+        let q1 = quarantine(&path).unwrap();
+        assert_eq!(q1, format!("{path}.corrupt-1"));
+        std::fs::write(&path, b"corrupt two").unwrap();
+        let q2 = quarantine(&path).unwrap();
+        assert_eq!(q2, format!("{path}.corrupt-2"));
+        assert!(!std::path::Path::new(&path).exists());
+        assert_eq!(std::fs::read(&q1).unwrap(), b"corrupt one");
+        assert_eq!(std::fs::read(&q2).unwrap(), b"corrupt two");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

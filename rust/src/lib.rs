@@ -94,6 +94,20 @@
 //! two-pool layout, FIFO dequeue and depth-only backpressure are
 //! preserved bit-identically.
 //!
+//! When `[fault]` is enabled, the service additionally contains failures
+//! instead of propagating them: every job boundary (worker loops, shard
+//! tiles, background probes) runs under `catch_unwind` with
+//! poison-tolerant locks, so a panicking kernel job costs one request a
+//! typed [`error::Error::KernelPanicked`] instead of the whole process; a
+//! per-kernel [`fault::CircuitBreaker`] routes failing kernel families
+//! down a degradation ladder (lowrank → dense f32, with one retry on the
+//! fallback, surfaced as `GemmResponse::degraded`); corrupt persistence
+//! tables are quarantined at boot instead of failing start; and a seeded
+//! [`fault::FaultInjector`] (`[fault.inject]` / `--fault-inject`)
+//! deterministically exercises every one of those paths. Disabled (the
+//! default), routing, results and metric names are bit-identical to a
+//! build without the plane.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -120,6 +134,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod exec;
+pub mod fault;
 pub mod fp8;
 pub mod gpu_sim;
 pub mod kernels;
@@ -141,6 +156,7 @@ pub mod prelude {
         GemmRequest, GemmResponse, GemmService, Priority, ServiceConfig, TenantId,
     };
     pub use crate::error::{Error, RejectReason, Result};
+    pub use crate::fault::{CircuitBreaker, DegradeReason, FaultPlane};
     pub use crate::fp8::{Fp8Format, QuantizedTensor};
     pub use crate::gpu_sim::{DeviceProfile, Roofline};
     pub use crate::kernels::{AutoKernelSelector, KernelChoice, KernelKind};

@@ -97,7 +97,18 @@ COMMANDS:
              admission control ([scheduler] in TOML: --sched-workers W
              pool threads (0 = all cores), --sched-no-steal disables
              cross-worker stealing, --sched-queue-depth D admission depth,
-             --sched-tenant-quota Q per-tenant in-flight cap)
+             --sched-tenant-quota Q per-tenant in-flight cap);
+             --fault turns on the fault-containment plane ([fault] in
+             TOML: panic isolation + per-kernel circuit breakers over the
+             degradation ladder; --fault-breaker-window N
+             --fault-breaker-threshold K --fault-breaker-cooldown C
+             breaker knobs, --fault-no-retry disables the one-retry
+             fallback, --fault-strict-boot keeps corrupt tables fatal);
+             --fault-inject SPEC arms deterministic fault injection and
+             implies --fault (SPEC e.g.
+             seed=42,panic_tile=0.08,error_request=0.1,error_kernel=lowrank_fp8);
+             --json-out FILE writes the final metrics snapshot + request
+             accounting as JSON (chaos-drill report)
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
   factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
@@ -217,6 +228,28 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
         args.get_parse("sched-queue-depth", cfg.scheduler.queue_depth)?;
     cfg.scheduler.tenant_quota =
         args.get_parse("sched-tenant-quota", cfg.scheduler.tenant_quota)?;
+    // `[fault]` overrides: the fault-containment plane's knobs.
+    if args.has_flag("fault") {
+        cfg.fault.enabled = true;
+    }
+    if args.has_flag("fault-strict-boot") {
+        cfg.fault.strict_boot = true;
+    }
+    if args.has_flag("fault-no-retry") {
+        cfg.fault.retry = false;
+    }
+    cfg.fault.breaker_window =
+        args.get_parse("fault-breaker-window", cfg.fault.breaker_window)?;
+    cfg.fault.breaker_threshold =
+        args.get_parse("fault-breaker-threshold", cfg.fault.breaker_threshold)?;
+    cfg.fault.breaker_cooldown =
+        args.get_parse("fault-breaker-cooldown", cfg.fault.breaker_cooldown)?;
+    if let Some(spec) = args.get("fault-inject") {
+        // An injection plan implies the plane: the guards it exercises
+        // only exist when the plane is up.
+        cfg.fault.enabled = true;
+        cfg.fault.inject.apply_spec(spec)?;
+    }
     // Same validators the TOML path runs — an out-of-range flag must
     // fail loudly, not be silently clamped downstream.
     cfg.kernel.validate()?;
@@ -225,6 +258,7 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
     cfg.trace.validate()?;
     cfg.accuracy.validate()?;
     cfg.scheduler.validate()?;
+    cfg.fault.validate()?;
     Ok(cfg)
 }
 
@@ -257,19 +291,23 @@ fn cmd_serve(args: &CliArgs) -> Result<()> {
         rxs.push(svc.submit(req)?);
     }
     let mut ok = 0usize;
+    let mut failed = 0usize;
     for rx in rxs {
-        if rx.recv().map_err(|_| {
+        match rx.recv().map_err(|_| {
             lowrank_gemm::error::Error::Service("response channel closed".into())
-        })?.is_ok()
-        {
-            ok += 1;
+        })? {
+            Ok(_) => ok += 1,
+            // A typed error (e.g. a contained kernel panic whose fallback
+            // also failed) still *resolves* the request — the chaos drill
+            // below asserts resolved == submitted, not ok == submitted.
+            Err(_) => failed += 1,
         }
     }
     let dt = t0.elapsed();
 
     let stats = svc.stats();
     println!(
-        "done: {ok}/{requests} ok in {:.3}s ({:.1} req/s)",
+        "done: {ok}/{requests} ok ({failed} failed) in {:.3}s ({:.1} req/s)",
         dt.as_secs_f64(),
         requests as f64 / dt.as_secs_f64()
     );
@@ -289,6 +327,16 @@ fn cmd_serve(args: &CliArgs) -> Result<()> {
         );
     }
     println!("{}", svc.metrics().render());
+    if let Some(path) = args.get("json-out") {
+        let json = format!(
+            "{{\"requests\":{requests},\"ok\":{ok},\"failed\":{failed},\"resolved\":{},\"metrics\":{}}}",
+            ok + failed,
+            stats.metrics.to_json().trim_end()
+        );
+        std::fs::write(path, json)
+            .map_err(|e| lowrank_gemm::error::Error::Config(format!("{path}: {e}")))?;
+        println!("wrote serve report to {path}");
+    }
     if svc.tracer().enabled() {
         let recorder = svc.tracer().recorder();
         println!(

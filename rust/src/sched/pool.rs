@@ -24,11 +24,13 @@
 
 use std::cell::Cell;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::fault::flock;
 use crate::metrics::Counter;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -61,6 +63,11 @@ struct Inner {
     steal_enabled: bool,
     shutdown: AtomicBool,
     steal_counter: Option<Arc<Counter>>,
+    /// Fault-plane hook: when set, worker loops run every job under
+    /// `catch_unwind` and count contained panics here (`fault.panic.sched`).
+    /// `None` preserves the historical behavior bit-for-bit: a panicking
+    /// job unwinds through the worker and kills it.
+    panic_counter: Option<Arc<Counter>>,
 }
 
 impl Inner {
@@ -72,11 +79,11 @@ impl Inner {
     /// injector (FIFO) → steal a sibling's oldest. Returns the task and
     /// whether it was stolen.
     fn acquire(&self, ord: usize) -> Option<(Job, bool)> {
-        if let Some(job) = self.deques[ord].lock().unwrap().pop_back() {
+        if let Some(job) = flock(&self.deques[ord]).pop_back() {
             self.avail.fetch_sub(1, Ordering::AcqRel);
             return Some((job, false));
         }
-        if let Some(job) = self.injector.lock().unwrap().pop_front() {
+        if let Some(job) = flock(&self.injector).pop_front() {
             self.avail.fetch_sub(1, Ordering::AcqRel);
             return Some((job, false));
         }
@@ -86,7 +93,7 @@ impl Inner {
             let n = self.deques.len();
             for i in 1..n {
                 let victim = (ord + i) % n;
-                if let Some(job) = self.deques[victim].lock().unwrap().pop_front() {
+                if let Some(job) = flock(&self.deques[victim]).pop_front() {
                     self.avail.fetch_sub(1, Ordering::AcqRel);
                     self.steals.fetch_add(1, Ordering::Relaxed);
                     if let Some(c) = &self.steal_counter {
@@ -111,6 +118,19 @@ impl StealPool {
     /// given, receives one increment per cross-worker steal (the
     /// `sched.steal` metric).
     pub fn new(size: usize, steal: bool, steal_counter: Option<Arc<Counter>>) -> Self {
+        Self::with_hooks(size, steal, steal_counter, None)
+    }
+
+    /// [`StealPool::new`] plus the fault-plane panic hook: with
+    /// `panic_counter` set, a panicking job is contained at the worker
+    /// loop (the worker survives and counts it) instead of unwinding
+    /// through and killing the worker thread.
+    pub fn with_hooks(
+        size: usize,
+        steal: bool,
+        steal_counter: Option<Arc<Counter>>,
+        panic_counter: Option<Arc<Counter>>,
+    ) -> Self {
         let size = size.max(1);
         let inner = Arc::new(Inner {
             injector: Mutex::new(VecDeque::new()),
@@ -124,6 +144,7 @@ impl StealPool {
             steal_enabled: steal,
             shutdown: AtomicBool::new(false),
             steal_counter,
+            panic_counter,
         });
         let workers = (0..size)
             .map(|ord| {
@@ -144,11 +165,11 @@ impl StealPool {
         self.inner.submitted.fetch_add(1, Ordering::Relaxed);
         let job: Job = Box::new(job);
         match self.current_ordinal() {
-            Some(ord) => self.inner.deques[ord].lock().unwrap().push_back(job),
-            None => self.inner.injector.lock().unwrap().push_back(job),
+            Some(ord) => flock(&self.inner.deques[ord]).push_back(job),
+            None => flock(&self.inner.injector).push_back(job),
         }
         self.inner.avail.fetch_add(1, Ordering::AcqRel);
-        let _g = self.inner.gate.lock().unwrap();
+        let _g = flock(&self.inner.gate);
         self.inner.cv.notify_one();
     }
 
@@ -200,7 +221,11 @@ impl Drop for StealPool {
     fn drop(&mut self) {
         self.inner.shutdown.store(true, Ordering::Release);
         {
-            let _g = self.inner.gate.lock().unwrap();
+            // Poison-tolerant: the shutdown drain must complete even when
+            // a worker died unwinding while holding the gate (no panic
+            // hook installed), otherwise Drop itself panics and the
+            // remaining workers leak instead of being joined.
+            let _g = flock(&self.inner.gate);
             self.inner.cv.notify_all();
         }
         for w in self.workers.drain(..) {
@@ -214,12 +239,22 @@ fn worker_loop(inner: Arc<Inner>, ord: usize) {
     loop {
         if let Some((job, stolen)) = inner.acquire(ord) {
             TASK_STOLEN.with(|c| c.set(stolen));
-            job();
+            match &inner.panic_counter {
+                Some(hook) => {
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        hook.inc();
+                    }
+                }
+                None => job(),
+            }
             TASK_STOLEN.with(|c| c.set(false));
+            // Unconditional even after a contained panic: `wait_idle`
+            // compares completed against submitted and would spin forever
+            // on a job that unwound before being counted.
             inner.completed.fetch_add(1, Ordering::Relaxed);
             continue;
         }
-        let guard = inner.gate.lock().unwrap();
+        let guard = flock(&inner.gate);
         if inner.avail.load(Ordering::Acquire) == 0 {
             if inner.shutdown.load(Ordering::Acquire) {
                 return;
@@ -228,7 +263,7 @@ fn worker_loop(inner: Arc<Inner>, ord: usize) {
             // increments `avail` before taking the gate to notify, and we
             // re-check `avail` under the gate, so the wakeup cannot be
             // lost.
-            let _unused = inner.cv.wait(guard).unwrap();
+            let _unused = inner.cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
         } else {
             // Work exists but none of it is acquirable by this worker
             // right now (steal disabled, tasks in a sibling's deque, or
@@ -236,7 +271,7 @@ fn worker_loop(inner: Arc<Inner>, ord: usize) {
             let _unused = inner
                 .cv
                 .wait_timeout(guard, Duration::from_millis(1))
-                .unwrap();
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -374,6 +409,55 @@ mod tests {
         }
         drop(pool); // must complete everything, then join cleanly
         assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn panic_hook_contains_job_panics_and_pool_survives() {
+        let panics = Arc::new(Counter::default());
+        let pool = StealPool::with_hooks(2, true, None, Some(panics.clone()));
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                if i % 5 == 0 {
+                    panic!("boom {i}");
+                }
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        // wait_idle must not hang: contained panics still count as
+        // completed. The workers must all survive to run later jobs.
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+        assert_eq!(panics.get(), 4);
+        assert_eq!(pool.completed(), 20);
+        let (tx, rx) = mpsc::channel();
+        pool.spawn(move || tx.send(7).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7, "workers alive after panics");
+    }
+
+    #[test]
+    fn shutdown_drains_after_uncontained_worker_death() {
+        // No panic hook: a panicking job unwinds through and kills its
+        // worker (historical behavior). The pool must still drain the
+        // remaining queue via the survivors and Drop must join cleanly
+        // even though locks may have been poisoned by the dying worker.
+        let pool = StealPool::new(2, false, None);
+        let (tx, rx) = mpsc::channel::<()>();
+        pool.spawn(move || {
+            let _tx = tx; // dropped on unwind → rx unblocks
+            panic!("worker death");
+        });
+        let _ = rx.recv(); // the panic has started unwinding
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..30 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // the survivor drains the injector, then Drop joins
+        assert_eq!(counter.load(Ordering::Relaxed), 30);
     }
 
     #[test]

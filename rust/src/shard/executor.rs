@@ -50,12 +50,14 @@
 //!   owned layout: the claim discipline decides only *who* computes a
 //!   tile, never what its bits are.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::exec::ThreadPool;
+use crate::fault::{FaultPlane, TileFault};
 use crate::fp8::quantize::QuantizedTensor;
 use crate::fp8::{dequantize, dequantize_into, quantize, quantized_matmul_fused, StorageFormat};
 use crate::linalg::gemm::{
@@ -119,6 +121,11 @@ pub struct ShardExecutor {
     plan: ShardPlan,
     pool: TilePool,
     metrics: Option<Arc<ShardMetrics>>,
+    /// Fault plane: when set, every tile runs under the per-tile panic
+    /// guard (plus injection), probes are backlog-bounded, and an owned
+    /// pool carries the worker-loop panic hook. `None` (the default) is
+    /// the historical behavior bit-for-bit.
+    fault: Option<Arc<FaultPlane>>,
 }
 
 impl ShardExecutor {
@@ -127,6 +134,7 @@ impl ShardExecutor {
         ShardExecutor {
             pool: TilePool::Owned(ThreadPool::new(plan.workers)),
             metrics: None,
+            fault: None,
             plan,
         }
     }
@@ -137,8 +145,24 @@ impl ShardExecutor {
         ShardExecutor {
             pool: TilePool::Owned(ThreadPool::new(plan.workers)),
             metrics: Some(Arc::new(ShardMetrics::new(&metrics, plan.workers))),
+            fault: None,
             plan,
         }
+    }
+
+    /// Attach the fault plane (builder, construction time only). An owned
+    /// pool is rebuilt with the worker-loop panic hook so even a panic
+    /// escaping the per-tile guard cannot kill a tile worker; a shared
+    /// pool already carries the hook from its own construction.
+    pub fn with_fault(mut self, fault: Arc<FaultPlane>) -> Self {
+        if matches!(&self.pool, TilePool::Owned(_)) {
+            self.pool = TilePool::Owned(ThreadPool::with_panic_hook(
+                self.plan.workers,
+                Some(fault.panic_exec_counter()),
+            ));
+        }
+        self.fault = Some(fault);
+        self
     }
 
     /// Executor running its tiles on the coordinator's unified
@@ -154,6 +178,7 @@ impl ShardExecutor {
         ShardExecutor {
             pool: TilePool::Shared(pool),
             metrics: Some(Arc::new(ShardMetrics::new(&metrics, slots))),
+            fault: None,
             plan,
         }
     }
@@ -184,6 +209,36 @@ impl ShardExecutor {
             TilePool::Owned(p) => p.execute(job),
             TilePool::Shared(p) => p.spawn(job),
         }
+    }
+
+    /// [`execute_background`](Self::execute_background) with the fault
+    /// plane's probe-backlog bound: at most `cap` such jobs in flight,
+    /// returns `false` (job dropped, nothing scheduled) when the backlog
+    /// is full — the caller counts the shed. Without a fault plane the
+    /// job is always scheduled (the historical unbounded behavior).
+    pub fn try_execute_background(&self, cap: usize, job: impl FnOnce() + Send + 'static) -> bool {
+        let Some(plane) = &self.fault else {
+            self.execute_background(job);
+            return true;
+        };
+        if !plane.try_reserve_probe(cap) {
+            return false;
+        }
+        // Drop guard: the slot is released even if the job panics (the
+        // probe wrapper upstream contains it, but the slot accounting
+        // must not depend on that).
+        struct Slot(Arc<FaultPlane>);
+        impl Drop for Slot {
+            fn drop(&mut self) {
+                self.0.release_probe();
+            }
+        }
+        let slot = Slot(plane.clone());
+        self.execute_background(move || {
+            let _slot = slot;
+            job();
+        });
+        true
     }
 
     /// Is the tile grid aligned to the kernel blocking, so tiles can read
@@ -293,7 +348,7 @@ impl ShardExecutor {
             let c = self.mm_sharded_packed(m, n, pa.clone(), pb.clone())?;
             self.note_pack_stats(&pa, &pb);
             Self::recycle_packed(pa, pb);
-            return Ok(c);
+            return Ok(self.corrupt_if_injected(c));
         }
         if !self.plan.should_parallelize(m, n, k) {
             // Serial: the single-threaded fused path (falls back to the
@@ -305,14 +360,34 @@ impl ShardExecutor {
                     sm.pack_fused_decode.inc();
                 }
             }
-            return Ok(quantized_matmul_fused(a, b, format));
+            return Ok(self.corrupt_if_injected(quantized_matmul_fused(a, b, format)));
         }
         // Parallel but unaligned grid: the legacy round-trip, sharded over
         // per-tile re-packing (the fused serial kernel would change the
         // unaligned grid's tile-local bits).
         let qa = dequantize(&quantize(a, format));
         let qb = dequantize(&quantize(b, format));
-        self.gemm(&qa, &qb)
+        self.gemm(&qa, &qb).map(|c| self.corrupt_if_injected(c))
+    }
+
+    /// Deterministic decode-corruption injection for the quantized paths:
+    /// when the seeded draw fires, perturb one element of the finished
+    /// product — silent wrong-answer corruption of exactly the kind the
+    /// accuracy plane's probes exist to catch. No fault plane, or a
+    /// non-firing draw, returns `c` untouched.
+    fn corrupt_if_injected(&self, c: Matrix) -> Matrix {
+        let Some(plane) = &self.fault else {
+            return c;
+        };
+        if !plane.inject_corrupt_decode(plane.next_gemm_seq()) {
+            return c;
+        }
+        let (m, n) = c.shape();
+        let mut v = c.into_vec();
+        if let Some(x) = v.first_mut() {
+            *x = *x * 1.25 + 1.0;
+        }
+        Matrix::from_vec(m, n, v).expect("same payload length")
     }
 
     /// `C = Aᵀ · B` with the output row-panel-sharded (the rSVD projection
@@ -608,10 +683,42 @@ impl ShardExecutor {
     /// in the claim loop (see module docs for the deadlock-freedom
     /// argument).
     fn run_claimed(&self, ntasks: usize, work: WorkFn) -> Result<Vec<(Tile, Vec<f32>)>> {
+        let work = match &self.fault {
+            Some(plane) => Self::contained_work(plane.clone(), plane.next_gemm_seq(), work),
+            None => work,
+        };
         match &self.pool {
             TilePool::Owned(pool) => self.run_claimed_owned(pool, ntasks, work),
             TilePool::Shared(pool) => self.run_claimed_shared(pool, ntasks, work),
         }
+    }
+
+    /// Wrap a tile work function in the fault plane's per-tile guard:
+    /// injected faults fire first (inside the guard, so an injected panic
+    /// is contained exactly like a real one), then any panic out of the
+    /// tile kernel is caught and converted into a typed per-tile error.
+    /// The claim worker survives, the error flows through the normal
+    /// result channel, and the owning request resolves with
+    /// [`Error::KernelPanicked`] instead of hanging its collector on a
+    /// tile that will never arrive.
+    fn contained_work(plane: Arc<FaultPlane>, seq: u64, work: WorkFn) -> WorkFn {
+        Arc::new(move |i| {
+            let injected = plane.tile_fault(seq, i);
+            catch_unwind(AssertUnwindSafe(|| {
+                match injected {
+                    Some(TileFault::Panic) => panic!("injected tile fault (seq {seq}, tile {i})"),
+                    Some(TileFault::Stall(ms)) => {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
+                    None => {}
+                }
+                work(i)
+            }))
+            .unwrap_or_else(|_| {
+                plane.note_panic_tile();
+                Err(Error::KernelPanicked(format!("tile {i} of gemm {seq}")))
+            })
+        })
     }
 
     fn run_claimed_owned(

@@ -1,0 +1,343 @@
+//! Fault-plane integration tests: panic containment, the degradation
+//! ladder + circuit breaker, degraded boot, and the disabled-plane
+//! identity contract (`[fault]`).
+//!
+//! The contract under test: with the plane disabled (the default) the
+//! service is bitwise-identical to the seed — same results, same metric
+//! namespace. With the plane up and deterministic injection armed, no
+//! panic escapes a job boundary, every submitted request resolves (ok or
+//! typed error, never a hung waiter), failing kernel families walk the
+//! degradation ladder under breaker control, and a corrupt persistence
+//! table quarantines at boot instead of failing start.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lowrank_gemm::config::schema::{AutotuneSettings, FaultInjectSettings, FaultSettings};
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::error::Error;
+use lowrank_gemm::fault::{BreakerState, DegradeReason, FaultPlane};
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::metrics::MetricsRegistry;
+use lowrank_gemm::shard::{ShardExecutor, ShardPlan};
+
+fn fault_cfg(fault: FaultSettings) -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        fault,
+        ..Default::default()
+    }
+}
+
+fn forced_req(n: usize, seed: u64, kind: KernelKind) -> GemmRequest {
+    let mut rng = Pcg64::seeded(seed);
+    GemmRequest::new(
+        Matrix::gaussian(n, n, &mut rng),
+        Matrix::gaussian(n, n, &mut rng),
+    )
+    .with_kernel(kind)
+}
+
+fn assert_bitwise_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    let same = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(same, "{what}: result bits differ");
+}
+
+fn counter(svc: &GemmService, name: &str) -> u64 {
+    svc.metrics().counters().get(name).copied().unwrap_or(0)
+}
+
+/// The workload both halves of the tile-panic test replay: alternating
+/// shard-sized (tiled, injectable) and small (monolithic, fault-free)
+/// GEMMs, all forced to the dense-f32 ladder floor so a tile panic has
+/// no fallback and must surface as a typed error.
+fn tile_workload() -> Vec<GemmRequest> {
+    (0..12)
+        .map(|i| {
+            let n = if i % 2 == 0 { 768 } else { 96 };
+            forced_req(n, 100 + i as u64, KernelKind::DenseF32)
+        })
+        .collect()
+}
+
+#[test]
+fn injected_tile_panics_are_contained_and_survivors_bitwise_correct() {
+    // Baseline: the same workload on a fault-free default service.
+    let clean = GemmService::start(ServiceConfig {
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let baseline: Vec<Matrix> = tile_workload()
+        .into_iter()
+        .map(|r| clean.gemm_blocking(r).unwrap().c)
+        .collect();
+    drop(clean);
+
+    let svc = GemmService::start(fault_cfg(FaultSettings {
+        enabled: true,
+        inject: FaultInjectSettings {
+            seed: 5,
+            panic_tile: 0.25,
+            ..Default::default()
+        },
+        ..Default::default()
+    }))
+    .unwrap();
+
+    let mut ok = 0usize;
+    let mut panicked = 0usize;
+    for (i, req) in tile_workload().into_iter().enumerate() {
+        // Sequential blocking submits: every request must *resolve* —
+        // gemm_blocking returning at all is the no-hung-waiter assertion.
+        match svc.gemm_blocking(req) {
+            Ok(resp) => {
+                ok += 1;
+                assert_bitwise_eq(&resp.c, &baseline[i], &format!("request {i}"));
+            }
+            Err(Error::KernelPanicked(_)) => panicked += 1,
+            Err(e) => panic!("request {i}: unexpected error kind: {e}"),
+        }
+    }
+    assert_eq!(ok + panicked, 12, "every request resolves");
+    // The small monolithic GEMMs never shard, so they cannot draw a tile
+    // fault: at least those six must have served, bitwise-correct.
+    assert!(ok >= 6, "un-tiled requests must survive (got {ok} ok)");
+    assert!(
+        counter(&svc, "fault.panic.tile") >= 1,
+        "seeded plan must fire at least one tile panic"
+    );
+    assert!(counter(&svc, "fault.injected") >= 1);
+    // One request may lose several tiles, so the tile-panic count is a
+    // lower bound on nothing but itself; it must at least cover the
+    // per-request failures observed above.
+    assert!(counter(&svc, "fault.panic.tile") >= panicked as u64);
+
+    // The pool survived every contained panic: a fresh request serves.
+    let resp = svc
+        .gemm_blocking(forced_req(96, 999, KernelKind::DenseF32))
+        .unwrap();
+    assert_eq!(resp.kernel, KernelKind::DenseF32);
+}
+
+#[test]
+fn breaker_trips_walks_ladder_and_recovers_half_open() {
+    // error_requests_under=3 makes service ids 1 and 2 (ids start at 1)
+    // fail their first attempt on lowrank_fp8 — exactly the two failures
+    // the window-2/threshold-2 breaker needs to trip. cooldown=2 then
+    // makes request 4's route consult the admitted half-open probe.
+    let svc = GemmService::start(fault_cfg(FaultSettings {
+        enabled: true,
+        breaker_window: 2,
+        breaker_threshold: 2,
+        breaker_cooldown: 2,
+        inject: FaultInjectSettings {
+            error_kernel: "lowrank_fp8".into(),
+            error_requests_under: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    }))
+    .unwrap();
+
+    let run = |seed: u64| {
+        svc.gemm_blocking(forced_req(96, seed, KernelKind::LowRankFp8))
+            .unwrap()
+    };
+
+    // Requests 1 and 2: injected kernel error, one retry down the ladder.
+    for seed in [1, 2] {
+        let resp = run(seed);
+        assert_eq!(resp.kernel, KernelKind::DenseF32, "served on the fallback");
+        assert_eq!(
+            resp.degraded,
+            Some(DegradeReason::RetryAfterError {
+                from: KernelKind::LowRankFp8
+            })
+        );
+    }
+    let plane = svc.fault().expect("plane enabled");
+    assert_eq!(plane.breaker_state(KernelKind::LowRankFp8), BreakerState::Open);
+    assert_eq!(counter(&svc, "fault.breaker.trip"), 1);
+
+    // Request 3: breaker-open reroute at route time (first cooldown
+    // denial) — no failed attempt at all, straight to the floor.
+    let resp = run(3);
+    assert_eq!(resp.kernel, KernelKind::DenseF32);
+    assert_eq!(
+        resp.degraded,
+        Some(DegradeReason::BreakerOpen {
+            from: KernelKind::LowRankFp8
+        })
+    );
+
+    // Request 4: the second denial completes the cooldown — this request
+    // IS the half-open probe, serves on lowrank_fp8 (injection is off
+    // past id 3), and its success recovers the breaker.
+    let resp = run(4);
+    assert_eq!(resp.kernel, KernelKind::LowRankFp8, "half-open probe serves");
+    assert_eq!(resp.degraded, None);
+    assert_eq!(
+        plane.breaker_state(KernelKind::LowRankFp8),
+        BreakerState::Closed
+    );
+    assert_eq!(counter(&svc, "fault.breaker.recover"), 1);
+
+    // Request 5: business as usual on the recovered kernel.
+    let resp = run(5);
+    assert_eq!(resp.kernel, KernelKind::LowRankFp8);
+    assert_eq!(resp.degraded, None);
+
+    assert_eq!(counter(&svc, "fault.degraded"), 3, "requests 1, 2 and 3");
+    assert_eq!(counter(&svc, "fault.injected"), 2, "requests 1 and 2");
+}
+
+#[test]
+fn corrupt_table_quarantines_at_boot_unless_strict() {
+    let dir = std::env::temp_dir().join(format!("lrg_fault_boot_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("autotune.json").to_str().unwrap().to_string();
+
+    let cfg_with = |fault: FaultSettings| ServiceConfig {
+        workers: 1,
+        autotune: AutotuneSettings {
+            enabled: true,
+            table_path: Some(path.clone()),
+            ..Default::default()
+        },
+        fault,
+        ..Default::default()
+    };
+
+    // Degraded boot: corrupt bytes quarantine, the service starts empty.
+    std::fs::write(&path, b"{ not json").unwrap();
+    let svc = GemmService::start(cfg_with(FaultSettings {
+        enabled: true,
+        ..Default::default()
+    }))
+    .unwrap();
+    assert_eq!(counter(&svc, "fault.quarantined_table"), 1);
+    assert_eq!(counter(&svc, "autotune.warm_start_entries"), 0);
+    assert!(
+        std::path::Path::new(&format!("{path}.corrupt-1")).exists(),
+        "corrupt bytes stay inspectable"
+    );
+    assert!(
+        !std::path::Path::new(&path).exists(),
+        "next boot starts clean"
+    );
+    // The degraded-boot service still serves.
+    svc.gemm_blocking(forced_req(96, 1, KernelKind::DenseF32))
+        .unwrap();
+    drop(svc);
+
+    // strict_boot keeps the historical fail-start behavior.
+    std::fs::write(&path, b"{ not json").unwrap();
+    let err = GemmService::start(cfg_with(FaultSettings {
+        enabled: true,
+        strict_boot: true,
+        ..Default::default()
+    }));
+    assert!(err.is_err(), "strict boot must fail on a corrupt table");
+
+    // So does a disabled fault plane (the seed behavior).
+    let err = GemmService::start(cfg_with(FaultSettings::default()));
+    assert!(err.is_err(), "disabled plane keeps corrupt tables fatal");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn disabled_plane_is_bitwise_identical_and_interns_no_fault_metrics() {
+    // Identity: an enabled-but-inert plane (no injection, healthy
+    // breakers) must not perturb result bits relative to the default
+    // service — containment wrappers observe jobs, never their math.
+    let reqs = || {
+        vec![
+            forced_req(768, 21, KernelKind::DenseF32),
+            forced_req(96, 22, KernelKind::DenseF32),
+            forced_req(128, 23, KernelKind::LowRankFp8),
+        ]
+    };
+    let base = GemmService::start(ServiceConfig {
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let base_out: Vec<Matrix> = reqs()
+        .into_iter()
+        .map(|r| base.gemm_blocking(r).unwrap().c)
+        .collect();
+
+    let armed = GemmService::start(fault_cfg(FaultSettings {
+        enabled: true,
+        ..Default::default()
+    }))
+    .unwrap();
+    for (i, r) in reqs().into_iter().enumerate() {
+        let resp = armed.gemm_blocking(r).unwrap();
+        assert_eq!(resp.degraded, None, "healthy plane never degrades");
+        assert_bitwise_eq(&resp.c, &base_out[i], &format!("request {i}"));
+    }
+
+    // Namespace: the disabled plane interns nothing — the metric names
+    // the seed exposes are exactly the names this build exposes.
+    for name in base.metrics().counters().keys() {
+        assert!(
+            !name.starts_with("fault."),
+            "disabled plane leaked metric {name}"
+        );
+        assert_ne!(name.as_str(), "accuracy.probe_shed");
+    }
+    // And every response from the disabled plane is undegraded by type.
+    let resp = base
+        .gemm_blocking(forced_req(96, 30, KernelKind::DenseF32))
+        .unwrap();
+    assert_eq!(resp.degraded, None);
+}
+
+#[test]
+fn probe_backlog_cap_sheds_instead_of_queueing() {
+    let settings = FaultSettings {
+        enabled: true,
+        ..Default::default()
+    };
+    let plane = FaultPlane::new(&settings, &MetricsRegistry::new());
+    let ex = ShardExecutor::with_metrics(
+        ShardPlan::from(&lowrank_gemm::config::schema::ShardSettings::default()),
+        Arc::new(MetricsRegistry::new()),
+    )
+    .with_fault(plane.clone());
+
+    // Occupy the single slot with a job that blocks until released.
+    let (started_tx, started_rx) = mpsc::channel();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    assert!(ex.try_execute_background(1, move || {
+        started_tx.send(()).unwrap();
+        release_rx.recv().ok();
+    }));
+    started_rx.recv().unwrap();
+    assert!(
+        !ex.try_execute_background(1, || {}),
+        "cap 1 reached: the probe must shed, not queue"
+    );
+
+    // Releasing the slot re-admits probes (the Drop guard runs when the
+    // job finishes, so poll briefly).
+    release_tx.send(()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if ex.try_execute_background(1, || {}) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "slot never released");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
