@@ -59,6 +59,30 @@ impl Fingerprint {
     pub fn shape(&self) -> (usize, usize) {
         (self.rows as usize, self.cols as usize)
     }
+
+    /// Byte width of the wire encoding ([`Self::to_wire_bytes`]).
+    pub const WIRE_LEN: usize = 24;
+
+    /// Stable wire encoding: `rows` (u32 LE) ‖ `cols` (u32 LE) ‖ `digest`
+    /// (u128 LE), 24 bytes total. Fixed-width little-endian — independent
+    /// of host endianness and struct layout — so fingerprints exchanged
+    /// between cluster nodes compare equal iff the matrices do.
+    pub fn to_wire_bytes(&self) -> [u8; Self::WIRE_LEN] {
+        let mut out = [0u8; Self::WIRE_LEN];
+        out[0..4].copy_from_slice(&self.rows.to_le_bytes());
+        out[4..8].copy_from_slice(&self.cols.to_le_bytes());
+        out[8..24].copy_from_slice(&self.digest.to_le_bytes());
+        out
+    }
+
+    /// Inverse of [`Self::to_wire_bytes`].
+    pub fn from_wire_bytes(b: &[u8; Self::WIRE_LEN]) -> Fingerprint {
+        Fingerprint {
+            rows: u32::from_le_bytes(b[0..4].try_into().expect("4 bytes")),
+            cols: u32::from_le_bytes(b[4..8].try_into().expect("4 bytes")),
+            digest: u128::from_le_bytes(b[8..24].try_into().expect("16 bytes")),
+        }
+    }
 }
 
 /// Routing-time fingerprints for one request's operands, computed once by
@@ -121,6 +145,39 @@ mod tests {
         let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]).unwrap();
         let b = Matrix::from_vec(1, 2, vec![-0.0, 1.0]).unwrap();
         assert_ne!(Fingerprint::of(&a), Fingerprint::of(&b));
+    }
+
+    #[test]
+    fn wire_round_trip_preserves_identity() {
+        let mut rng = Pcg64::seeded(14);
+        for _ in 0..32 {
+            let m = Matrix::gaussian(9, 13, &mut rng);
+            let fp = Fingerprint::of(&m);
+            assert_eq!(Fingerprint::from_wire_bytes(&fp.to_wire_bytes()), fp);
+        }
+    }
+
+    #[test]
+    fn wire_encoding_is_stable_little_endian() {
+        // The encoding is a wire contract between cluster peers: pin the
+        // exact bytes so a layout or endianness regression is caught here
+        // rather than as cross-node cache misses.
+        let fp = Fingerprint {
+            rows: 0x0102_0304,
+            cols: 0x0506_0708,
+            digest: 0x0910_1112_1314_1516_1718_1920_2122_2324,
+        };
+        let w = fp.to_wire_bytes();
+        assert_eq!(&w[0..4], &[0x04, 0x03, 0x02, 0x01]);
+        assert_eq!(&w[4..8], &[0x08, 0x07, 0x06, 0x05]);
+        assert_eq!(
+            &w[8..24],
+            &[
+                0x24, 0x23, 0x22, 0x21, 0x20, 0x19, 0x18, 0x17, 0x16, 0x15, 0x14, 0x13,
+                0x12, 0x11, 0x10, 0x09
+            ]
+        );
+        assert_eq!(Fingerprint::from_wire_bytes(&w), fp);
     }
 
     #[test]

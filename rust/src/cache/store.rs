@@ -200,30 +200,38 @@ impl ContentCache {
     /// With prepacking on, `Vᵀ` is decoded into the kernel panel layout
     /// once here (fill time), and its f32 panels count against the budget.
     pub fn put(&self, fp: Fingerprint, factor: LowRankFactor) -> bool {
-        // Size the entry (factor + f32 panels) *before* doing any packing
-        // work: an oversized factor must be rejected without paying the
-        // r·n decode-and-pack pass it would throw away.
+        // Estimate the entry (factor + r·n·4 f32 panels) *before* doing
+        // any packing work: an oversized factor must be rejected without
+        // paying the decode-and-pack pass it would throw away.
         let (vt_rows, vt_cols) = factor.vt.shape;
-        let packed_bytes = if self.prepack {
+        let est_packed = if self.prepack {
             vt_rows * vt_cols * std::mem::size_of::<f32>()
         } else {
             0
         };
-        let bytes = factor.storage_bytes() + packed_bytes;
-        if bytes > self.budget_bytes {
+        if factor.storage_bytes() + est_packed > self.budget_bytes {
             return false;
         }
         let packed_vt = if self.prepack {
             let p = kernel_params();
             let mut pb = PackedB::pack_quantized(&factor.vt, p.kc, p.nc);
             // The pack buffer is an arena checkout whose capacity may
-            // exceed r·n; a resident entry is charged r·n·4 bytes and
-            // must not pin the slack.
+            // exceed r·n; a resident entry must not pin the slack.
             pb.shrink_to_fit();
             Some(Arc::new(pb))
         } else {
             None
         };
+        // Charge what the entry actually pins — the packed buffer's
+        // post-shrink *capacity*, not the r·n estimate — so the byte
+        // budget stays honest and eviction releases exactly what
+        // insertion charged. The allocator has the last word on shrink,
+        // so re-check the budget against the real footprint.
+        let bytes = factor.storage_bytes()
+            + packed_vt.as_ref().map_or(0, |p| p.resident_bytes());
+        if bytes > self.budget_bytes {
+            return false;
+        }
         let (evicted, resident) = {
             let mut g = self.inner.lock().unwrap();
             g.clock += 1;
@@ -316,6 +324,17 @@ impl ContentCache {
             factor: f,
             packed_vt,
         })
+    }
+
+    /// Up to `cap` resident fingerprints, most-recently-used first — the
+    /// cluster heartbeat's cache-occupancy digest. Does not perturb LRU
+    /// order or hit/miss accounting.
+    pub fn resident_fingerprints(&self, cap: usize) -> Vec<Fingerprint> {
+        let g = self.inner.lock().unwrap();
+        let mut entries: Vec<(&Fingerprint, u64)> =
+            g.map.iter().map(|(fp, e)| (fp, e.last_used)).collect();
+        entries.sort_by(|a, b| b.1.cmp(&a.1));
+        entries.into_iter().take(cap).map(|(fp, _)| *fp).collect()
     }
 
     /// Counter snapshot.
@@ -470,8 +489,10 @@ mod tests {
         let vt = f.vt_dense();
         let unfused = crate::linalg::pack::PackedB::pack(&vt, pb.kc(), pb.nc());
         assert_eq!(pb.panel(0, 0), unfused.panel(0, 0));
-        // Packed panels are charged against the budget.
-        let extra = pb.k() * pb.n() * 4;
+        // Packed panels are charged against the budget at their actual
+        // (post-shrink capacity) footprint, never below the r·n·4 data.
+        let extra = pb.resident_bytes();
+        assert!(extra >= pb.k() * pb.n() * 4);
         assert_eq!(
             c.stats().resident_bytes,
             (f.storage_bytes() + extra) as u64
@@ -489,6 +510,48 @@ mod tests {
         c.put(fp, f.clone());
         assert!(c.get_cached(fp).unwrap().packed_vt.is_none());
         assert_eq!(c.stats().resident_bytes, f.storage_bytes() as u64);
+    }
+
+    #[test]
+    fn prepack_accounting_never_drifts_under_churn() {
+        let (_, probe) = factor_and_fp(20, 32, 4);
+        // Budget for ~3 prepacked entries; 12 inserts force eviction churn.
+        let per = probe.storage_bytes() + 32 * 32 * 4;
+        let c = ContentCache::new(3 * per + per / 2, 1).with_prepack(true);
+        for seed in 0..12u64 {
+            let (fp, f) = factor_and_fp(100 + seed, 32, 4);
+            assert!(c.put(fp, f));
+        }
+        let s = c.stats();
+        assert!(s.evictions > 0, "churn must actually evict");
+        // Drift invariant: after arbitrary insert/evict interleaving the
+        // byte gauge equals the sum of the survivors' true footprints —
+        // evictions released exactly what insertions charged.
+        let survivors = c.resident_fingerprints(usize::MAX);
+        let mut expect = 0u64;
+        for fp in &survivors {
+            let hit = c.get_cached(*fp).expect("resident");
+            expect += (hit.factor.storage_bytes()
+                + hit.packed_vt.map_or(0, |p| p.resident_bytes()))
+                as u64;
+        }
+        assert_eq!(c.stats().resident_bytes, expect);
+    }
+
+    #[test]
+    fn resident_fingerprints_lists_mru_first_without_perturbing() {
+        let c = ContentCache::new(1 << 20, 1);
+        let (fp1, f1) = factor_and_fp(30, 16, 2);
+        let (fp2, f2) = factor_and_fp(31, 16, 2);
+        c.put(fp1, f1);
+        c.put(fp2, f2);
+        c.get(fp1); // fp1 becomes MRU
+        let before = c.stats();
+        let digest = c.resident_fingerprints(8);
+        assert_eq!(digest, vec![fp1, fp2]);
+        assert_eq!(c.resident_fingerprints(1), vec![fp1]);
+        let after = c.stats();
+        assert_eq!((before.hits, before.misses), (after.hits, after.misses));
     }
 
     #[test]

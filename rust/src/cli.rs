@@ -34,6 +34,10 @@ const VALUE_KEYS: &[&str] = &[
     "accuracy-table", "accuracy-seed",
     "sched-workers", "sched-queue-depth", "sched-tenant-quota",
     "fault-inject", "fault-breaker-window", "fault-breaker-threshold", "fault-breaker-cooldown",
+    "listen", "router", "cluster-heartbeat-ms", "cluster-heartbeat-timeout-ms",
+    "cluster-dead-after-ms", "cluster-connect-timeout-ms", "cluster-read-timeout-ms",
+    "cluster-max-attempts", "cluster-backoff-base-ms", "cluster-backoff-cap-ms",
+    "cluster-fill-cap", "cluster-affinity-min-dim", "cluster-seed", "run-ms",
     "last", "chrome-out", "prom-out", "json-out",
 ];
 

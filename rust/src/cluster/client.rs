@@ -1,0 +1,251 @@
+//! Client-side RPC plumbing: per-attempt deadlines, typed error
+//! mapping, and decorrelated-jitter backoff.
+//!
+//! Every attempt is one short-lived connection: connect under
+//! `connect_timeout_ms`, write the request, read the reply under
+//! `read_timeout_ms`. Connection-level failures map to
+//! [`Error::NodeUnavailable`], deadline expiries to [`Error::RpcTimeout`]
+//! — the retry loop in the router treats both as "try the next-best
+//! node", while application-level `ExecErr` replies are **not** retried
+//! (the node executed or definitively rejected; re-sending would
+//! double-execute).
+//!
+//! Backoff between attempts is decorrelated jitter
+//! (`sleep = min(cap, base + rand_below(3·prev − base))`): successive
+//! sleeps random-walk upward from `base` toward `cap`, decorrelating
+//! competing clients after a shared failure instead of marching them in
+//! lockstep.
+
+use std::io::ErrorKind;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::cluster::proto::{self, err_code, Msg};
+use crate::config::ClusterSettings;
+use crate::error::{Error, RejectReason, Result};
+use crate::linalg::matrix::Matrix;
+use crate::linalg::rng::Pcg64;
+
+/// Map an io error from the dial/read path to the typed cluster error.
+fn net_err(addr: &str, stage: &str, e: std::io::Error) -> Error {
+    match e.kind() {
+        ErrorKind::TimedOut | ErrorKind::WouldBlock => {
+            Error::RpcTimeout(format!("{stage} {addr}: {e}"))
+        }
+        _ => Error::NodeUnavailable(format!("{stage} {addr}: {e}")),
+    }
+}
+
+/// Dial `addr` under the configured timeouts. A node at its listen
+/// backlog or gone entirely both surface as [`Error::NodeUnavailable`].
+pub fn connect(addr: &str, cfg: &ClusterSettings) -> Result<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()
+        .map_err(|e| Error::NodeUnavailable(format!("resolve {addr}: {e}")))?
+        .next()
+        .ok_or_else(|| Error::NodeUnavailable(format!("resolve {addr}: no address")))?;
+    let s = TcpStream::connect_timeout(&sa, Duration::from_millis(cfg.connect_timeout_ms))
+        .map_err(|e| net_err(addr, "connect", e))?;
+    s.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms)))?;
+    s.set_write_timeout(Some(Duration::from_millis(cfg.read_timeout_ms)))?;
+    s.set_nodelay(true).ok();
+    Ok(s)
+}
+
+/// One request/reply exchange on a fresh connection.
+pub fn call(addr: &str, cfg: &ClusterSettings, msg: &Msg) -> Result<Msg> {
+    let mut s = connect(addr, cfg)?;
+    write_checked(addr, &mut s, msg)?;
+    read_checked(addr, &mut s)
+}
+
+fn write_checked(addr: &str, s: &mut TcpStream, msg: &Msg) -> Result<()> {
+    proto::write_msg(s, msg).map_err(|e| match e {
+        Error::Io(e) => net_err(addr, "write", e),
+        other => other,
+    })
+}
+
+fn read_checked(addr: &str, s: &mut TcpStream) -> Result<Msg> {
+    proto::read_msg(s).map_err(|e| match e {
+        // A peer that closed mid-frame (crash, injected truncation) is
+        // an unavailable node, not a protocol bug.
+        Error::Io(e) => net_err(addr, "read", e),
+        other => other,
+    })
+}
+
+/// Reconstruct the typed error an `ExecErr` reply carries.
+pub fn decode_exec_err(code: u8, message: String) -> Error {
+    match code {
+        err_code::DRAINING => Error::Rejected(RejectReason::Draining),
+        err_code::PANICKED => Error::KernelPanicked(message),
+        err_code::UNAVAILABLE => Error::NodeUnavailable(message),
+        err_code::TIMEOUT => Error::RpcTimeout(message),
+        _ => Error::Service(message),
+    }
+}
+
+/// The wire code for an error crossing back through the router to its
+/// client (inverse of [`decode_exec_err`], modulo message formatting).
+pub fn encode_exec_err(e: &Error) -> u8 {
+    match e {
+        Error::Rejected(RejectReason::Draining) => err_code::DRAINING,
+        Error::Rejected(_) => err_code::REJECTED,
+        Error::KernelPanicked(_) => err_code::PANICKED,
+        Error::NodeUnavailable(_) => err_code::UNAVAILABLE,
+        Error::RpcTimeout(_) => err_code::TIMEOUT,
+        _ => err_code::OTHER,
+    }
+}
+
+/// Next decorrelated-jitter sleep given the previous one (see module
+/// docs). Deterministic per `rng` stream.
+pub fn backoff_ms(prev_ms: u64, cfg: &ClusterSettings, rng: &mut Pcg64) -> u64 {
+    let base = cfg.backoff_base_ms;
+    let span = (prev_ms.max(base).saturating_mul(3)).saturating_sub(base);
+    let next = base + if span == 0 { 0 } else { rng.below(span) };
+    next.min(cfg.backoff_cap_ms)
+}
+
+/// The result of one executed GEMM RPC.
+pub struct ExecReply {
+    pub kernel: String,
+    pub degraded: bool,
+    pub c: Matrix,
+}
+
+/// Execute one GEMM against a node (single attempt, no retry — the
+/// router owns the retry/failover loop).
+pub fn exec_once(
+    addr: &str,
+    cfg: &ClusterSettings,
+    id: u64,
+    a: &Matrix,
+    b: &Matrix,
+    tolerance: Option<f32>,
+) -> Result<ExecReply> {
+    let reply = call(
+        addr,
+        cfg,
+        &Msg::ExecRequest {
+            id,
+            tolerance,
+            a: a.clone(),
+            b: b.clone(),
+        },
+    )?;
+    match reply {
+        Msg::ExecOk {
+            id: rid,
+            kernel,
+            degraded,
+            c,
+        } => {
+            if rid != id {
+                return Err(Error::Service(format!(
+                    "cluster proto: reply id {rid} for request {id}"
+                )));
+            }
+            Ok(ExecReply {
+                kernel,
+                degraded,
+                c,
+            })
+        }
+        Msg::ExecErr { code, message, .. } => Err(decode_exec_err(code, message)),
+        other => Err(Error::Service(format!(
+            "cluster proto: unexpected reply {other:?}"
+        ))),
+    }
+}
+
+/// May this failure be retried on another node? Only transport-level
+/// failures qualify: the request provably never executed. Typed replies
+/// (`ExecErr`) mean a node made a decision; re-sending risks
+/// double-execution and masks real rejections.
+pub fn retryable(e: &Error) -> bool {
+    matches!(e, Error::NodeUnavailable(_) | Error::RpcTimeout(_))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_walks_within_base_and_cap() {
+        let cfg = ClusterSettings {
+            backoff_base_ms: 10,
+            backoff_cap_ms: 500,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seeded(1);
+        let mut prev = cfg.backoff_base_ms;
+        for _ in 0..64 {
+            let next = backoff_ms(prev, &cfg, &mut rng);
+            assert!(
+                (cfg.backoff_base_ms..=cfg.backoff_cap_ms).contains(&next),
+                "sleep {next} outside [{}, {}]",
+                cfg.backoff_base_ms,
+                cfg.backoff_cap_ms
+            );
+            prev = next;
+        }
+        // Deterministic per seed.
+        let mut r1 = Pcg64::seeded(2);
+        let mut r2 = Pcg64::seeded(2);
+        assert_eq!(backoff_ms(10, &cfg, &mut r1), backoff_ms(10, &cfg, &mut r2));
+    }
+
+    #[test]
+    fn exec_err_codes_map_to_typed_errors() {
+        assert!(matches!(
+            decode_exec_err(err_code::DRAINING, String::new()),
+            Error::Rejected(RejectReason::Draining)
+        ));
+        assert!(matches!(
+            decode_exec_err(err_code::PANICKED, "boom".into()),
+            Error::KernelPanicked(_)
+        ));
+        assert!(matches!(
+            decode_exec_err(err_code::REJECTED, "queue full".into()),
+            Error::Service(_)
+        ));
+        assert!(matches!(
+            decode_exec_err(err_code::OTHER, "x".into()),
+            Error::Service(_)
+        ));
+        // encode ∘ decode is the identity where the decoded error is
+        // distinct (REJECTED decodes to the generic Service error).
+        for code in [
+            err_code::DRAINING,
+            err_code::PANICKED,
+            err_code::UNAVAILABLE,
+            err_code::TIMEOUT,
+        ] {
+            assert_eq!(encode_exec_err(&decode_exec_err(code, "m".into())), code);
+        }
+    }
+
+    #[test]
+    fn only_transport_failures_are_retryable() {
+        assert!(retryable(&Error::NodeUnavailable("x".into())));
+        assert!(retryable(&Error::RpcTimeout("x".into())));
+        assert!(!retryable(&Error::Rejected(RejectReason::Draining)));
+        assert!(!retryable(&Error::KernelPanicked("x".into())));
+        assert!(!retryable(&Error::Service("x".into())));
+    }
+
+    #[test]
+    fn refused_connection_is_node_unavailable() {
+        // Port 1 on localhost: nothing listens there in CI or dev.
+        let cfg = ClusterSettings {
+            connect_timeout_ms: 200,
+            ..Default::default()
+        };
+        match connect("127.0.0.1:1", &cfg) {
+            Err(Error::NodeUnavailable(_)) | Err(Error::RpcTimeout(_)) => {}
+            other => panic!("expected transport error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Multi-node serving tier: node registry, heartbeats, failover, and
+//! distributed factor-cache affinity.
+//!
+//! The single-process [`crate::coordinator::GemmService`] scales out by
+//! composition, not modification: a **router** ([`RouterTier`]) tracks
+//! membership and routes requests, and each **node** ([`NodeAgent`])
+//! wraps an unmodified `GemmService` behind a dependency-free,
+//! length-prefixed binary protocol ([`proto`]) on `std::net::TcpStream`.
+//! Like every plane before it, the tier is default-off: with no
+//! `[cluster]` section, nothing here runs and single-process results
+//! and metric names stay bit-identical.
+//!
+//! The moving parts:
+//!
+//! - **Registry + health** ([`registry`]) — nodes register with their
+//!   capacity, heartbeat load (`queue_depth`, in-flight) and a
+//!   factor-cache occupancy digest; the router walks heartbeat age
+//!   through Alive → Suspect (`heartbeat_timeout_ms`) → Dead
+//!   (`dead_after_ms`), evicting Dead nodes and their affinity entries.
+//! - **Affinity routing** — fingerprinted operands go to the node most
+//!   likely to already hold their factors: observed residency first,
+//!   then load-weighted rendezvous hashing (stable placement, minimal
+//!   re-homing on membership change); anonymous operands go least-loaded.
+//!   When a node dies its fingerprints re-home and the new owners
+//!   cold-fill through the normal rSVD path, bounded per node by
+//!   `fill_cap` concurrent fills.
+//! - **Robustness spine** ([`client`], [`router_tier`]) — typed errors
+//!   ([`crate::error::Error::NodeUnavailable`],
+//!   [`crate::error::Error::RpcTimeout`]), per-attempt connect/read
+//!   deadlines, decorrelated-jitter backoff with failover to the
+//!   next-best node (at most `max_attempts`, transport failures only —
+//!   a node's typed decision is never retried), a per-node circuit
+//!   breaker reusing [`crate::fault::BreakerCell`], and graceful drain:
+//!   a deregistering node finishes its in-flight work while the router
+//!   stops routing to it.
+//! - **Deterministic chaos** — the `[fault.inject]` plan gained seeded
+//!   network faults (connection refused, read stall, truncated frame,
+//!   heartbeat drop), so the whole tier is testable in-process: router
+//!   plus N node agents as threads in one test binary, replaying the
+//!   same faults every run.
+//!
+//! Metric inventory (interned only when the tier runs):
+//! `cluster.node.{register,suspect,dead,deregister}`,
+//! `cluster.heartbeat.recv`, `cluster.route.{affinity,least_loaded}`,
+//! `cluster.rpc.{attempt,ok,error,timeout,retry}`, `cluster.failover`,
+//! `cluster.refill.start`, histograms `cluster.rpc_us`,
+//! `cluster.queue_depth`. Trace spans: `rpc`, `failover`, `refill`.
+
+pub mod client;
+pub mod node;
+pub mod proto;
+pub mod registry;
+pub mod router_tier;
+
+pub use client::{backoff_ms, exec_once, ExecReply};
+pub use node::NodeAgent;
+pub use proto::Msg;
+pub use registry::{Candidate, HealthTransition, NodeHealth, NodeRegistry, NodeView};
+pub use router_tier::{RouterTier, WorkloadReport};

@@ -1,0 +1,328 @@
+//! Node agent: one serving process in the cluster.
+//!
+//! Wraps a full single-process [`GemmService`] with the cluster's wire
+//! surface: a TCP accept loop executing [`Msg::ExecRequest`]s, a
+//! heartbeat thread reporting load and factor-cache occupancy to the
+//! router, and a graceful [`shutdown`](NodeAgent::shutdown) that
+//! deregisters first (router stops routing here), finishes every
+//! in-flight RPC, drains the service, and only then exits — the drain
+//! contract the failover tests pin.
+//!
+//! Server-side fault injection hooks (`[fault.inject]` net knobs) fire
+//! here: a reply can be stalled (`net_stall`, long enough to trip the
+//! client's read deadline) or truncated mid-frame (`net_truncate`, the
+//! connection drops after a partial length header), and heartbeats can
+//! be skipped (`net_heartbeat_drop`, driving the router's Alive →
+//! Suspect → Dead ladder without killing the process). All draws are
+//! seeded and keyed by `(node_id, request id | seq)`, so a chaos run
+//! replays exactly.
+
+use std::io::{ErrorKind, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::cluster::client;
+use crate::cluster::proto::{self, err_code, Msg, MAX_HEARTBEAT_FPS};
+use crate::config::{AppConfig, ClusterSettings};
+use crate::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use crate::error::{Error, RejectReason, Result};
+use crate::fault::FaultInjector;
+use crate::linalg::matrix::Matrix;
+
+struct Shared {
+    svc: GemmService,
+    cfg: ClusterSettings,
+    inject: FaultInjector,
+    node_id: AtomicU64,
+    stop: AtomicBool,
+    /// RPCs currently being executed by connection handlers; the
+    /// graceful shutdown waits for this to reach zero.
+    active_rpcs: AtomicUsize,
+}
+
+/// A running node agent. Dropping it without calling
+/// [`shutdown`](NodeAgent::shutdown) shuts down non-gracefully.
+pub struct NodeAgent {
+    shared: Arc<Shared>,
+    /// The address peers dial (listener-resolved, so `:0` works).
+    addr: String,
+    accept: Option<JoinHandle<()>>,
+    heartbeat: Option<JoinHandle<()>>,
+}
+
+impl NodeAgent {
+    /// Bind the serving socket, register with the router, and spawn the
+    /// accept + heartbeat threads. The embedded [`GemmService`] is built
+    /// from the same `AppConfig` a single-process `serve` would use.
+    pub fn start(app: &AppConfig) -> Result<NodeAgent> {
+        app.cluster.validate()?;
+        let cfg = app.cluster.clone();
+        let svc = GemmService::start(ServiceConfig::from_app(app)?)?;
+        let listener = TcpListener::bind(&cfg.node_addr)?;
+        let addr = listener.local_addr()?.to_string();
+
+        // Register, retrying with backoff — the router may still be
+        // binding its socket when a fleet starts in parallel.
+        let workers = app.service.workers as u32;
+        let budget = (app.cache.budget_mb as u64) << 20;
+        let node_id = register_with_retry(&cfg, &addr, workers, budget)?;
+
+        let shared = Arc::new(Shared {
+            svc,
+            inject: FaultInjector::new(&app.fault.inject),
+            cfg,
+            node_id: AtomicU64::new(node_id),
+            stop: AtomicBool::new(false),
+            active_rpcs: AtomicUsize::new(0),
+        });
+
+        let accept = {
+            let shared = shared.clone();
+            thread::Builder::new()
+                .name("cluster-node-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .map_err(|e| Error::Service(format!("spawn accept loop: {e}")))?
+        };
+        let heartbeat = {
+            let shared = shared.clone();
+            let addr = addr.clone();
+            let w = workers;
+            thread::Builder::new()
+                .name("cluster-node-heartbeat".into())
+                .spawn(move || heartbeat_loop(shared, addr, w, budget))
+                .map_err(|e| Error::Service(format!("spawn heartbeat loop: {e}")))?
+        };
+
+        Ok(NodeAgent {
+            shared,
+            addr,
+            accept: Some(accept),
+            heartbeat: Some(heartbeat),
+        })
+    }
+
+    /// The resolved serving address (useful when bound to port 0).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The router-assigned node id.
+    pub fn node_id(&self) -> u64 {
+        self.shared.node_id.load(Ordering::Relaxed)
+    }
+
+    /// The embedded service (tests inspect its stats and caches).
+    pub fn service(&self) -> &GemmService {
+        &self.shared.svc
+    }
+
+    /// Graceful drain: deregister (router stops routing here), finish
+    /// every in-flight RPC, drain the embedded service, then stop the
+    /// accept and heartbeat threads.
+    pub fn shutdown(&mut self) {
+        let id = self.shared.node_id.load(Ordering::Relaxed);
+        let _ = client::call(
+            &self.shared.cfg.router_addr,
+            &self.shared.cfg,
+            &Msg::Deregister { node_id: id },
+        );
+        // In-flight RPCs keep executing: the router stopped handing out
+        // this address, but work already here must complete.
+        while self.shared.active_rpcs.load(Ordering::Acquire) > 0 {
+            thread::sleep(Duration::from_micros(200));
+        }
+        self.shared.svc.drain();
+        self.shared.stop.store(true, Ordering::Release);
+        // Nudge the accept loop out of its blocking accept.
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.heartbeat.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NodeAgent {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+fn register_with_retry(
+    cfg: &ClusterSettings,
+    addr: &str,
+    workers: u32,
+    cache_budget: u64,
+) -> Result<u64> {
+    let mut rng = crate::linalg::rng::Pcg64::seeded(cfg.seed ^ 0x9e67);
+    let mut sleep_ms = cfg.backoff_base_ms;
+    let mut last = None;
+    for attempt in 0..cfg.max_attempts.max(1) {
+        if attempt > 0 {
+            thread::sleep(Duration::from_millis(sleep_ms));
+            sleep_ms = client::backoff_ms(sleep_ms, cfg, &mut rng);
+        }
+        match client::call(
+            &cfg.router_addr,
+            cfg,
+            &Msg::Register {
+                addr: addr.to_string(),
+                workers,
+                cache_budget,
+            },
+        ) {
+            Ok(Msg::RegisterAck { node_id }) => return Ok(node_id),
+            Ok(other) => {
+                return Err(Error::Service(format!(
+                    "cluster proto: unexpected register reply {other:?}"
+                )))
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| Error::NodeUnavailable("register: no attempts".into())))
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let shared = shared.clone();
+        let _ = thread::Builder::new()
+            .name("cluster-node-conn".into())
+            .spawn(move || handle_conn(stream, shared));
+    }
+}
+
+/// Serve one client connection: a loop of ExecRequest frames. The read
+/// deadline doubles as the idle/shutdown poll tick.
+fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(shared.cfg.read_timeout_ms)));
+    loop {
+        // Wait for the next frame without consuming bytes, so an idle
+        // timeout can never desync mid-frame.
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => return, // peer closed
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::TimedOut | ErrorKind::WouldBlock) => {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        let msg = match proto::read_msg(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return, // deadline mid-frame or malformed: drop conn
+        };
+        match msg {
+            Msg::ExecRequest { id, tolerance, a, b } => {
+                shared.active_rpcs.fetch_add(1, Ordering::AcqRel);
+                let reply = execute(&shared, id, tolerance, a, b);
+                let done = (|| -> std::io::Result<()> {
+                    let node = shared.node_id.load(Ordering::Relaxed);
+                    if let Some(ms) = shared.inject.net_stall(node, id) {
+                        thread::sleep(Duration::from_millis(ms));
+                    }
+                    if shared.inject.net_truncate(node, id) {
+                        // Injected mid-frame connection drop: a partial
+                        // length header, then hang up.
+                        stream.write_all(&[7u8, 0u8])?;
+                        let _ = stream.shutdown(std::net::Shutdown::Both);
+                        return Err(std::io::Error::other("injected truncation"));
+                    }
+                    proto::write_msg(&mut stream, &reply)
+                        .map_err(|e| std::io::Error::other(e.to_string()))
+                })();
+                shared.active_rpcs.fetch_sub(1, Ordering::AcqRel);
+                if done.is_err() {
+                    return;
+                }
+            }
+            // Control traffic belongs to the router; drop the conn.
+            _ => return,
+        }
+    }
+}
+
+fn execute(shared: &Shared, id: u64, tolerance: Option<f32>, a: Matrix, b: Matrix) -> Msg {
+    let mut req = GemmRequest::new(a, b);
+    if let Some(t) = tolerance {
+        req = req.with_tolerance(t);
+    }
+    match shared.svc.gemm_blocking(req) {
+        Ok(resp) => Msg::ExecOk {
+            id,
+            kernel: resp.kernel.id().to_string(),
+            degraded: resp.degraded.is_some(),
+            c: resp.c,
+        },
+        Err(e) => {
+            let (code, message) = match &e {
+                Error::Rejected(RejectReason::Draining) => {
+                    (err_code::DRAINING, e.to_string())
+                }
+                Error::Rejected(_) => (err_code::REJECTED, e.to_string()),
+                Error::KernelPanicked(m) => (err_code::PANICKED, m.clone()),
+                other => (err_code::OTHER, other.to_string()),
+            };
+            Msg::ExecErr { id, code, message }
+        }
+    }
+}
+
+fn heartbeat_loop(shared: Arc<Shared>, addr: String, workers: u32, cache_budget: u64) {
+    let mut seq = 0u64;
+    while !shared.stop.load(Ordering::Acquire) {
+        thread::sleep(Duration::from_millis(shared.cfg.heartbeat_ms));
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        seq += 1;
+        let node = shared.node_id.load(Ordering::Relaxed);
+        if shared.inject.drop_heartbeat(node, seq) {
+            continue;
+        }
+        let backlog = shared.svc.inflight() as u32;
+        let queued = backlog.saturating_sub(workers.max(1));
+        let (resident_bytes, fingerprints) = match shared.svc.content_cache() {
+            Some(c) => (
+                c.stats().resident_bytes,
+                c.resident_fingerprints(MAX_HEARTBEAT_FPS),
+            ),
+            None => (0, Vec::new()),
+        };
+        let hb = Msg::Heartbeat {
+            node_id: node,
+            seq,
+            queue_depth: queued,
+            inflight: backlog,
+            cache_resident_bytes: resident_bytes,
+            fingerprints,
+        };
+        if let Ok(Msg::HeartbeatAck { known: false }) =
+            client::call(&shared.cfg.router_addr, &shared.cfg, &hb)
+        {
+            // The router declared us Dead (e.g. after a long stall);
+            // rejoin so traffic can come back.
+            if let Ok(id) = register_with_retry(&shared.cfg, &addr, workers, cache_budget) {
+                shared.node_id.store(id, Ordering::Relaxed);
+            }
+        }
+    }
+}

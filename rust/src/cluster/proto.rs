@@ -1,0 +1,516 @@
+//! Length-prefixed binary wire protocol for the cluster tier.
+//!
+//! Dependency-free by construction: every message is a hand-rolled
+//! little-endian encoding over `std::net::TcpStream`, framed as a 4-byte
+//! LE payload length followed by the payload (1 tag byte + body). All
+//! integers are fixed-width LE; floats are IEEE-754 bit patterns via
+//! `to_le_bytes`/`from_le_bytes`, so an f32 matrix crosses the wire
+//! bit-exactly — the cluster ≡ single-process equivalence test depends
+//! on that. Strings are u32-length-prefixed UTF-8. [`Fingerprint`]s use
+//! the stable 24-byte [`Fingerprint::to_wire_bytes`] layout.
+//!
+//! The decoder is strict: unknown tags, short bodies, and trailing bytes
+//! are all `Error::Service("cluster proto: ...")`, and the frame reader
+//! rejects lengths above [`MAX_FRAME`] before allocating, so a corrupt
+//! or truncated peer cannot make a node allocate gigabytes or misparse
+//! silently.
+
+use std::io::{Read, Write};
+
+use crate::cache::Fingerprint;
+use crate::error::{Error, Result};
+use crate::linalg::matrix::Matrix;
+
+/// Hard ceiling on a frame payload (tag + body). Two 8k×8k f32 operands
+/// fit with headroom; anything larger is a protocol error, not a malloc.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Heartbeats cap the fingerprint digest they carry: enough for the
+/// router's affinity map, bounded so a huge cache cannot bloat the
+/// heartbeat path.
+pub const MAX_HEARTBEAT_FPS: usize = 256;
+
+/// One protocol message. Tags are stable wire constants — append-only.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Node → router: join the registry. `addr` is the node's serving
+    /// address as clients should dial it.
+    Register {
+        addr: String,
+        workers: u32,
+        cache_budget: u64,
+    },
+    /// Router → node: registration accepted; `node_id` keys heartbeats.
+    RegisterAck { node_id: u64 },
+    /// Node → router: periodic liveness + load + cache-occupancy digest.
+    Heartbeat {
+        node_id: u64,
+        seq: u64,
+        queue_depth: u32,
+        inflight: u32,
+        cache_resident_bytes: u64,
+        fingerprints: Vec<Fingerprint>,
+    },
+    /// Router → node: heartbeat applied (`known = false` means the
+    /// router no longer has this node — it should re-register).
+    HeartbeatAck { known: bool },
+    /// Node → router: graceful drain — stop routing to me; my in-flight
+    /// work finishes on the connections that already carry it.
+    Deregister { node_id: u64 },
+    /// Router → node: deregistration applied.
+    DeregisterAck,
+    /// Client/router → node: execute one GEMM.
+    ExecRequest {
+        id: u64,
+        tolerance: Option<f32>,
+        a: Matrix,
+        b: Matrix,
+    },
+    /// Node → client: result. `kernel` is the [`crate::kernels::KernelKind`]
+    /// id string; `degraded` marks a fallback-served response.
+    ExecOk {
+        id: u64,
+        kernel: String,
+        degraded: bool,
+        c: Matrix,
+    },
+    /// Node → client: typed failure. See [`ErrCode`].
+    ExecErr { id: u64, code: u8, message: String },
+}
+
+/// `ExecErr` code space: the client reconstructs a typed
+/// [`crate::error::Error`] from these.
+pub mod err_code {
+    /// Node is draining — `Error::Rejected(RejectReason::Draining)`.
+    pub const DRAINING: u8 = 1;
+    /// Admission rejection (queue full, deadline, quota) — `Error::Service`.
+    pub const REJECTED: u8 = 2;
+    /// Kernel panicked — `Error::KernelPanicked`.
+    pub const PANICKED: u8 = 3;
+    /// Anything else — `Error::Service`.
+    pub const OTHER: u8 = 4;
+    /// Router exhausted its retry budget — `Error::NodeUnavailable`.
+    pub const UNAVAILABLE: u8 = 5;
+    /// Router attempts all timed out — `Error::RpcTimeout`.
+    pub const TIMEOUT: u8 = 6;
+}
+
+const TAG_REGISTER: u8 = 1;
+const TAG_REGISTER_ACK: u8 = 2;
+const TAG_HEARTBEAT: u8 = 3;
+const TAG_HEARTBEAT_ACK: u8 = 4;
+const TAG_DEREGISTER: u8 = 5;
+const TAG_DEREGISTER_ACK: u8 = 6;
+const TAG_EXEC_REQUEST: u8 = 7;
+const TAG_EXEC_OK: u8 = 8;
+const TAG_EXEC_ERR: u8 = 9;
+
+fn perr(what: &str) -> Error {
+    Error::Service(format!("cluster proto: {what}"))
+}
+
+// ---- encode ------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_matrix(buf: &mut Vec<u8>, m: &Matrix) {
+    put_u32(buf, m.rows() as u32);
+    put_u32(buf, m.cols() as u32);
+    buf.reserve(m.data().len() * 4);
+    for v in m.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ---- decode ------------------------------------------------------------
+
+/// Strict forward-only cursor over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(perr("short body"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| perr("invalid utf-8"))
+    }
+
+    fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .filter(|n| n * 4 <= MAX_FRAME)
+            .ok_or_else(|| perr("matrix too large"))?;
+        let raw = self.take(n * 4)?;
+        let mut data = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(perr("trailing bytes"))
+        }
+    }
+}
+
+impl Msg {
+    /// Encode to a frame payload (tag + body), without the length prefix.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match self {
+            Msg::Register {
+                addr,
+                workers,
+                cache_budget,
+            } => {
+                buf.push(TAG_REGISTER);
+                put_str(&mut buf, addr);
+                put_u32(&mut buf, *workers);
+                put_u64(&mut buf, *cache_budget);
+            }
+            Msg::RegisterAck { node_id } => {
+                buf.push(TAG_REGISTER_ACK);
+                put_u64(&mut buf, *node_id);
+            }
+            Msg::Heartbeat {
+                node_id,
+                seq,
+                queue_depth,
+                inflight,
+                cache_resident_bytes,
+                fingerprints,
+            } => {
+                buf.push(TAG_HEARTBEAT);
+                put_u64(&mut buf, *node_id);
+                put_u64(&mut buf, *seq);
+                put_u32(&mut buf, *queue_depth);
+                put_u32(&mut buf, *inflight);
+                put_u64(&mut buf, *cache_resident_bytes);
+                let fps = &fingerprints[..fingerprints.len().min(MAX_HEARTBEAT_FPS)];
+                put_u32(&mut buf, fps.len() as u32);
+                for fp in fps {
+                    buf.extend_from_slice(&fp.to_wire_bytes());
+                }
+            }
+            Msg::HeartbeatAck { known } => {
+                buf.push(TAG_HEARTBEAT_ACK);
+                buf.push(*known as u8);
+            }
+            Msg::Deregister { node_id } => {
+                buf.push(TAG_DEREGISTER);
+                put_u64(&mut buf, *node_id);
+            }
+            Msg::DeregisterAck => buf.push(TAG_DEREGISTER_ACK),
+            Msg::ExecRequest { id, tolerance, a, b } => {
+                buf.push(TAG_EXEC_REQUEST);
+                put_u64(&mut buf, *id);
+                buf.push(tolerance.is_some() as u8);
+                buf.extend_from_slice(&tolerance.unwrap_or(0.0).to_le_bytes());
+                put_matrix(&mut buf, a);
+                put_matrix(&mut buf, b);
+            }
+            Msg::ExecOk {
+                id,
+                kernel,
+                degraded,
+                c,
+            } => {
+                buf.push(TAG_EXEC_OK);
+                put_u64(&mut buf, *id);
+                put_str(&mut buf, kernel);
+                buf.push(*degraded as u8);
+                put_matrix(&mut buf, c);
+            }
+            Msg::ExecErr { id, code, message } => {
+                buf.push(TAG_EXEC_ERR);
+                put_u64(&mut buf, *id);
+                buf.push(*code);
+                put_str(&mut buf, message);
+            }
+        }
+        buf
+    }
+
+    /// Decode a frame payload. Strict: unknown tag, short body, and
+    /// trailing bytes are all errors.
+    pub fn decode(payload: &[u8]) -> Result<Msg> {
+        let mut c = Cursor {
+            buf: payload,
+            pos: 0,
+        };
+        let msg = match c.u8()? {
+            TAG_REGISTER => Msg::Register {
+                addr: c.str()?,
+                workers: c.u32()?,
+                cache_budget: c.u64()?,
+            },
+            TAG_REGISTER_ACK => Msg::RegisterAck { node_id: c.u64()? },
+            TAG_HEARTBEAT => {
+                let node_id = c.u64()?;
+                let seq = c.u64()?;
+                let queue_depth = c.u32()?;
+                let inflight = c.u32()?;
+                let cache_resident_bytes = c.u64()?;
+                let n = c.u32()? as usize;
+                if n > MAX_HEARTBEAT_FPS {
+                    return Err(perr("heartbeat digest too large"));
+                }
+                let mut fingerprints = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let raw: [u8; Fingerprint::WIRE_LEN] =
+                        c.take(Fingerprint::WIRE_LEN)?.try_into().unwrap();
+                    fingerprints.push(Fingerprint::from_wire_bytes(&raw));
+                }
+                Msg::Heartbeat {
+                    node_id,
+                    seq,
+                    queue_depth,
+                    inflight,
+                    cache_resident_bytes,
+                    fingerprints,
+                }
+            }
+            TAG_HEARTBEAT_ACK => Msg::HeartbeatAck {
+                known: c.u8()? != 0,
+            },
+            TAG_DEREGISTER => Msg::Deregister { node_id: c.u64()? },
+            TAG_DEREGISTER_ACK => Msg::DeregisterAck,
+            TAG_EXEC_REQUEST => {
+                let id = c.u64()?;
+                let has_tol = c.u8()? != 0;
+                let tol = c.f32()?;
+                Msg::ExecRequest {
+                    id,
+                    tolerance: has_tol.then_some(tol),
+                    a: c.matrix()?,
+                    b: c.matrix()?,
+                }
+            }
+            TAG_EXEC_OK => Msg::ExecOk {
+                id: c.u64()?,
+                kernel: c.str()?,
+                degraded: c.u8()? != 0,
+                c: c.matrix()?,
+            },
+            TAG_EXEC_ERR => Msg::ExecErr {
+                id: c.u64()?,
+                code: c.u8()?,
+                message: c.str()?,
+            },
+            t => return Err(perr(&format!("unknown tag {t}"))),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+/// Write one frame: 4-byte LE payload length, then the payload.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let payload = msg.encode();
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. Length-guarded before allocation; a cleanly closed
+/// peer surfaces as `Error::Io(UnexpectedEof)`.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(perr(&format!("bad frame length {len}")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Msg::decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn round_trip(msg: Msg) {
+        let payload = msg.encode();
+        assert_eq!(Msg::decode(&payload).unwrap(), msg);
+    }
+
+    #[test]
+    fn all_messages_round_trip() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Matrix::gaussian(5, 7, &mut rng);
+        let b = Matrix::gaussian(7, 3, &mut rng);
+        let fp = Fingerprint::of(&b);
+        round_trip(Msg::Register {
+            addr: "127.0.0.1:7071".into(),
+            workers: 4,
+            cache_budget: 1 << 26,
+        });
+        round_trip(Msg::RegisterAck { node_id: 9 });
+        round_trip(Msg::Heartbeat {
+            node_id: 9,
+            seq: 17,
+            queue_depth: 3,
+            inflight: 2,
+            cache_resident_bytes: 4096,
+            fingerprints: vec![fp, fp],
+        });
+        round_trip(Msg::HeartbeatAck { known: true });
+        round_trip(Msg::HeartbeatAck { known: false });
+        round_trip(Msg::Deregister { node_id: 9 });
+        round_trip(Msg::DeregisterAck);
+        round_trip(Msg::ExecRequest {
+            id: 42,
+            tolerance: Some(1e-3),
+            a: a.clone(),
+            b: b.clone(),
+        });
+        round_trip(Msg::ExecRequest {
+            id: 43,
+            tolerance: None,
+            a: a.clone(),
+            b: b.clone(),
+        });
+        round_trip(Msg::ExecOk {
+            id: 42,
+            kernel: "lowrank_fp8".into(),
+            degraded: false,
+            c: a.matmul(&b),
+        });
+        round_trip(Msg::ExecErr {
+            id: 42,
+            code: err_code::DRAINING,
+            message: "service is draining".into(),
+        });
+    }
+
+    #[test]
+    fn matrices_cross_the_wire_bit_exactly() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Matrix::gaussian(16, 16, &mut rng);
+        let msg = Msg::ExecRequest {
+            id: 1,
+            tolerance: None,
+            a: a.clone(),
+            b: a.clone(),
+        };
+        match Msg::decode(&msg.encode()).unwrap() {
+            Msg::ExecRequest { a: da, b: db, .. } => {
+                for (x, y) in a.data().iter().zip(da.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+                for (x, y) in a.data().iter().zip(db.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_malformed_frames() {
+        // Unknown tag.
+        assert!(Msg::decode(&[0xfe]).is_err());
+        // Empty payload.
+        assert!(Msg::decode(&[]).is_err());
+        // Short body: RegisterAck wants 8 bytes of node id.
+        assert!(Msg::decode(&[TAG_REGISTER_ACK, 1, 2]).is_err());
+        // Trailing bytes after a valid message.
+        let mut payload = Msg::DeregisterAck.encode();
+        payload.push(0);
+        assert!(Msg::decode(&payload).is_err());
+        // String length overrunning the body.
+        let mut bad = vec![TAG_EXEC_ERR];
+        bad.extend_from_slice(&7u64.to_le_bytes());
+        bad.push(err_code::OTHER);
+        bad.extend_from_slice(&100u32.to_le_bytes()); // claims 100 bytes
+        bad.extend_from_slice(b"short");
+        assert!(Msg::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn framed_stream_round_trips_and_guards_length() {
+        let msg = Msg::RegisterAck { node_id: 3 };
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &msg).unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_msg(&mut r).unwrap(), msg);
+        // Oversized frame length is rejected before allocation.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_msg(&mut &huge[..]).is_err());
+        // Truncated frame surfaces as an io error.
+        let mut cut = wire.clone();
+        cut.truncate(wire.len() - 2);
+        assert!(matches!(
+            read_msg(&mut &cut[..]),
+            Err(crate::error::Error::Io(_))
+        ));
+    }
+
+    #[test]
+    fn heartbeat_digest_is_capped() {
+        let mut rng = Pcg64::seeded(6);
+        let fp = Fingerprint::of(&Matrix::gaussian(4, 4, &mut rng));
+        let msg = Msg::Heartbeat {
+            node_id: 1,
+            seq: 1,
+            queue_depth: 0,
+            inflight: 0,
+            cache_resident_bytes: 0,
+            fingerprints: vec![fp; MAX_HEARTBEAT_FPS + 50],
+        };
+        match Msg::decode(&msg.encode()).unwrap() {
+            Msg::Heartbeat { fingerprints, .. } => {
+                assert_eq!(fingerprints.len(), MAX_HEARTBEAT_FPS);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+}

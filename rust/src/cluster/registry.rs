@@ -1,0 +1,503 @@
+//! Router-side node registry: membership, health, load, and the
+//! distributed factor-cache affinity map.
+//!
+//! Health is heartbeat-driven: a node is **Alive** while heartbeats land
+//! within `heartbeat_timeout_ms`, **Suspect** once they stop (still
+//! routable, but only after every Alive candidate), and **Dead** after
+//! `dead_after_ms` of silence — at which point the registry drops the
+//! node and every affinity entry it held, so its fingerprints re-home to
+//! the surviving nodes on their next request.
+//!
+//! Routing preference for a fingerprinted operand is **weighted
+//! rendezvous hashing**: each node scores `w / -ln(u)` where `u` is a
+//! uniform draw keyed by `(fingerprint, node_id)` and the weight `w` is
+//! the node's worker count discounted by its reported load. The same
+//! fingerprint therefore lands on the same node run after run (cache
+//! affinity), a loaded node sheds new fingerprints smoothly rather than
+//! at a cliff, and when a node dies only its own fingerprints move
+//! (minimal-disruption property of rendezvous hashing). Nodes that
+//! already hold the factors (per heartbeat digest) outrank score order —
+//! observed residency beats predicted placement.
+//!
+//! Cold-fill storms are bounded: routing a fingerprint to a node that
+//! does not hold its factors counts against the node's concurrent-fill
+//! cap (`fill_cap`); capped nodes drop to the back of the candidate list
+//! so a mass re-home after a node death trickles rather than floods.
+
+use std::collections::{BTreeMap, HashSet};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::cache::Fingerprint;
+use crate::config::ClusterSettings;
+use crate::fault::{flock, BreakerCell, BreakerTransition};
+
+/// Per-node breaker shape: `BREAKER_THRESHOLD` failures in the last
+/// `BREAKER_WINDOW` RPCs trip the node; `BREAKER_COOLDOWN` denials later
+/// one probe RPC is admitted.
+const BREAKER_WINDOW: usize = 8;
+const BREAKER_THRESHOLD: usize = 3;
+const BREAKER_COOLDOWN: usize = 4;
+
+/// Node health as seen by the router.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum NodeHealth {
+    /// Heartbeats landing on time.
+    Alive,
+    /// Heartbeats missing past `heartbeat_timeout_ms`; routable last.
+    Suspect,
+    /// Silent past `dead_after_ms`; removed from the registry.
+    Dead,
+}
+
+/// A health transition produced by [`NodeRegistry::tick`], for metrics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HealthTransition {
+    /// Node went Alive → Suspect.
+    Suspect(u64),
+    /// Node went Suspect → Dead and was dropped (affinity evicted).
+    Dead(u64),
+}
+
+struct Node {
+    addr: String,
+    workers: u32,
+    health: NodeHealth,
+    last_heartbeat: Instant,
+    queue_depth: u32,
+    inflight: u32,
+    /// Fingerprints the node reported resident in its last heartbeat.
+    resident: HashSet<Fingerprint>,
+    /// Cold fills currently routed at this node (re-fill storm bound).
+    filling: usize,
+    breaker: BreakerCell,
+}
+
+/// A routing candidate, in preference order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub id: u64,
+    pub addr: String,
+    /// Did the node's last heartbeat report the fingerprint resident?
+    pub resident: bool,
+}
+
+/// Observability snapshot of one registered node.
+#[derive(Clone, Debug)]
+pub struct NodeView {
+    pub id: u64,
+    pub addr: String,
+    pub health: NodeHealth,
+    pub queue_depth: u32,
+    pub inflight: u32,
+    pub resident_fingerprints: usize,
+}
+
+struct Inner {
+    nodes: BTreeMap<u64, Node>,
+    next_id: u64,
+}
+
+/// Thread-safe node registry + affinity map (see module docs).
+pub struct NodeRegistry {
+    cfg: ClusterSettings,
+    inner: Mutex<Inner>,
+}
+
+/// splitmix64 finalizer (same mix as the fault injector's draws).
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Fold a fingerprint's stable wire bytes into one u64 hash key.
+fn fp_key(fp: Fingerprint) -> u64 {
+    let w = fp.to_wire_bytes();
+    let mut k = 0u64;
+    for c in w.chunks(8) {
+        let mut b = [0u8; 8];
+        b[..c.len()].copy_from_slice(c);
+        k = mix(k ^ u64::from_le_bytes(b));
+    }
+    k
+}
+
+impl NodeRegistry {
+    /// Empty registry governed by the given cluster settings.
+    pub fn new(cfg: ClusterSettings) -> Self {
+        NodeRegistry {
+            cfg,
+            inner: Mutex::new(Inner {
+                nodes: BTreeMap::new(),
+                next_id: 1,
+            }),
+        }
+    }
+
+    /// Admit a node; returns its registry id. A node re-registering the
+    /// same serving address replaces its previous entry (restart case) —
+    /// the stale entry's affinity dies with it.
+    pub fn register(&self, addr: &str, workers: u32, now: Instant) -> u64 {
+        let mut g = flock(&self.inner);
+        let stale: Vec<u64> = g
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.addr == addr)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in stale {
+            g.nodes.remove(&id);
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.nodes.insert(
+            id,
+            Node {
+                addr: addr.to_string(),
+                workers: workers.max(1),
+                health: NodeHealth::Alive,
+                last_heartbeat: now,
+                queue_depth: 0,
+                inflight: 0,
+                resident: HashSet::new(),
+                filling: 0,
+                breaker: BreakerCell::new(BREAKER_WINDOW, BREAKER_THRESHOLD, BREAKER_COOLDOWN),
+            },
+        );
+        id
+    }
+
+    /// Apply a heartbeat. Returns `false` for unknown ids (the node was
+    /// declared Dead or never registered — it must re-register).
+    pub fn heartbeat(
+        &self,
+        node_id: u64,
+        queue_depth: u32,
+        inflight: u32,
+        resident: Vec<Fingerprint>,
+        now: Instant,
+    ) -> bool {
+        let mut g = flock(&self.inner);
+        match g.nodes.get_mut(&node_id) {
+            Some(n) => {
+                n.last_heartbeat = now;
+                n.health = NodeHealth::Alive;
+                n.queue_depth = queue_depth;
+                n.inflight = inflight;
+                n.resident = resident.into_iter().collect();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Graceful drain: drop the node from routing immediately. In-flight
+    /// work on connections the node already holds finishes server-side.
+    pub fn deregister(&self, node_id: u64) -> bool {
+        flock(&self.inner).nodes.remove(&node_id).is_some()
+    }
+
+    /// Advance health from heartbeat age: Alive → Suspect past
+    /// `heartbeat_timeout_ms`, Suspect → Dead (dropped, affinity evicted)
+    /// past `dead_after_ms`. Returns the transitions for metrics.
+    pub fn tick(&self, now: Instant) -> Vec<HealthTransition> {
+        let suspect_after = Duration::from_millis(self.cfg.heartbeat_timeout_ms);
+        let dead_after = Duration::from_millis(self.cfg.dead_after_ms);
+        let mut out = Vec::new();
+        let mut g = flock(&self.inner);
+        let mut dead = Vec::new();
+        for (&id, n) in g.nodes.iter_mut() {
+            let age = now.saturating_duration_since(n.last_heartbeat);
+            if age >= dead_after {
+                dead.push(id);
+            } else if age >= suspect_after && n.health == NodeHealth::Alive {
+                n.health = NodeHealth::Suspect;
+                out.push(HealthTransition::Suspect(id));
+            }
+        }
+        for id in dead {
+            g.nodes.remove(&id);
+            out.push(HealthTransition::Dead(id));
+        }
+        out
+    }
+
+    /// Weight for rendezvous scoring: worker capacity discounted by the
+    /// load the node itself reported.
+    fn weight(n: &Node) -> f64 {
+        n.workers as f64 / (1.0 + n.queue_depth as f64 + n.inflight as f64)
+    }
+
+    /// Candidate nodes in routing-preference order.
+    ///
+    /// With a fingerprint: health rank, then observed residency, then
+    /// weighted rendezvous score; non-resident nodes at their fill cap
+    /// drop to the back (bounded re-fill storm). Without one (anonymous
+    /// operands): health rank, then least load per worker.
+    pub fn candidates(&self, fp: Option<Fingerprint>) -> Vec<Candidate> {
+        let g = flock(&self.inner);
+        struct Scored {
+            id: u64,
+            resident: bool,
+            capped: bool,
+            suspect: bool,
+            score: f64,
+        }
+        let mut scored: Vec<Scored> = g
+            .nodes
+            .iter()
+            .map(|(&id, n)| {
+                let resident = fp.map(|f| n.resident.contains(&f)).unwrap_or(false);
+                let score = match fp {
+                    Some(f) => {
+                        let u = ((mix(fp_key(f) ^ mix(id ^ self.cfg.seed)) >> 11) + 1) as f64
+                            / ((1u64 << 53) + 2) as f64;
+                        Self::weight(n) / -u.ln()
+                    }
+                    None => Self::weight(n),
+                };
+                Scored {
+                    id,
+                    resident,
+                    capped: !resident && fp.is_some() && n.filling >= self.cfg.fill_cap,
+                    suspect: n.health != NodeHealth::Alive,
+                    score,
+                }
+            })
+            .collect();
+        // Preference: healthy before suspect, uncapped before capped,
+        // resident before cold, then score descending, id as tie-break.
+        scored.sort_by(|a, b| {
+            (a.suspect, a.capped, !a.resident)
+                .cmp(&(b.suspect, b.capped, !b.resident))
+                .then_with(|| {
+                    b.score
+                        .partial_cmp(&a.score)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .then_with(|| a.id.cmp(&b.id))
+        });
+        scored
+            .into_iter()
+            .map(|s| Candidate {
+                id: s.id,
+                addr: g.nodes[&s.id].addr.clone(),
+                resident: s.resident,
+            })
+            .collect()
+    }
+
+    /// Reserve a cold-fill slot on a node (router is about to route a
+    /// non-resident fingerprint there). Pair with [`end_fill`].
+    ///
+    /// [`end_fill`]: NodeRegistry::end_fill
+    pub fn begin_fill(&self, node_id: u64) {
+        if let Some(n) = flock(&self.inner).nodes.get_mut(&node_id) {
+            n.filling += 1;
+        }
+    }
+
+    /// Release a cold-fill slot.
+    pub fn end_fill(&self, node_id: u64) {
+        if let Some(n) = flock(&self.inner).nodes.get_mut(&node_id) {
+            n.filling = n.filling.saturating_sub(1);
+        }
+    }
+
+    /// Consult the node's circuit breaker before dialing it.
+    pub fn breaker_allows(&self, node_id: u64) -> bool {
+        flock(&self.inner)
+            .nodes
+            .get(&node_id)
+            .map(|n| n.breaker.allows())
+            .unwrap_or(false)
+    }
+
+    /// Record an RPC outcome against the node's breaker.
+    pub fn breaker_observe(&self, node_id: u64, ok: bool) -> Option<BreakerTransition> {
+        flock(&self.inner)
+            .nodes
+            .get(&node_id)
+            .and_then(|n| n.breaker.observe(ok))
+    }
+
+    /// Number of registered (non-Dead) nodes.
+    pub fn len(&self) -> usize {
+        flock(&self.inner).nodes.len()
+    }
+
+    /// True when no nodes are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Observability snapshot, id order.
+    pub fn views(&self) -> Vec<NodeView> {
+        flock(&self.inner)
+            .nodes
+            .iter()
+            .map(|(&id, n)| NodeView {
+                id,
+                addr: n.addr.clone(),
+                health: n.health,
+                queue_depth: n.queue_depth,
+                inflight: n.inflight,
+                resident_fingerprints: n.resident.len(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::linalg::rng::Pcg64;
+
+    fn cfg() -> ClusterSettings {
+        ClusterSettings {
+            heartbeat_timeout_ms: 100,
+            dead_after_ms: 300,
+            fill_cap: 2,
+            ..Default::default()
+        }
+    }
+
+    fn fp(seed: u64) -> Fingerprint {
+        let mut rng = Pcg64::seeded(seed);
+        Fingerprint::of(&Matrix::gaussian(8, 8, &mut rng))
+    }
+
+    #[test]
+    fn register_heartbeat_and_health_transitions() {
+        let r = NodeRegistry::new(cfg());
+        let t0 = Instant::now();
+        let a = r.register("n1:1", 4, t0);
+        let b = r.register("n2:1", 4, t0);
+        assert_eq!(r.len(), 2);
+        // b heartbeats; a goes silent.
+        let t1 = t0 + Duration::from_millis(150);
+        assert!(r.heartbeat(b, 0, 0, vec![], t1));
+        let tr = r.tick(t1);
+        assert_eq!(tr, vec![HealthTransition::Suspect(a)]);
+        // Past dead_after, a is dropped.
+        let t2 = t0 + Duration::from_millis(350);
+        assert!(r.heartbeat(b, 0, 0, vec![], t2));
+        let tr = r.tick(t2);
+        assert_eq!(tr, vec![HealthTransition::Dead(a)]);
+        assert_eq!(r.len(), 1);
+        // Dead node's heartbeat is refused: it must re-register.
+        assert!(!r.heartbeat(a, 0, 0, vec![], t2));
+    }
+
+    #[test]
+    fn re_register_same_addr_replaces_stale_entry() {
+        let r = NodeRegistry::new(cfg());
+        let t0 = Instant::now();
+        let a = r.register("n1:1", 4, t0);
+        let a2 = r.register("n1:1", 4, t0);
+        assert_ne!(a, a2);
+        assert_eq!(r.len(), 1);
+        assert!(!r.heartbeat(a, 0, 0, vec![], t0));
+        assert!(r.heartbeat(a2, 0, 0, vec![], t0));
+    }
+
+    #[test]
+    fn rendezvous_is_stable_and_rehomes_minimally() {
+        let r = NodeRegistry::new(cfg());
+        let t0 = Instant::now();
+        let ids: Vec<u64> = (0..3).map(|i| r.register(&format!("n{i}:1"), 4, t0)).collect();
+        let fps: Vec<Fingerprint> = (0..32).map(fp).collect();
+        let owner: Vec<u64> = fps.iter().map(|&f| r.candidates(Some(f))[0].id).collect();
+        // Stable: same fingerprint, same first choice.
+        for (i, &f) in fps.iter().enumerate() {
+            assert_eq!(r.candidates(Some(f))[0].id, owner[i]);
+        }
+        // All three nodes own some share (hash spreads).
+        for id in &ids {
+            assert!(owner.contains(id), "node {id} owns nothing");
+        }
+        // Kill the busiest owner: only its fingerprints move.
+        let dead = owner[0];
+        r.deregister(dead);
+        for (i, &f) in fps.iter().enumerate() {
+            let now = r.candidates(Some(f))[0].id;
+            if owner[i] == dead {
+                assert_ne!(now, dead);
+            } else {
+                assert_eq!(now, owner[i], "fingerprint moved needlessly");
+            }
+        }
+    }
+
+    #[test]
+    fn residency_outranks_score_and_suspects_go_last() {
+        let r = NodeRegistry::new(cfg());
+        let t0 = Instant::now();
+        let a = r.register("n1:1", 4, t0);
+        let b = r.register("n2:1", 4, t0);
+        let f = fp(9);
+        // b reports the fingerprint resident: it must come first.
+        r.heartbeat(b, 0, 0, vec![f], t0);
+        let c = r.candidates(Some(f));
+        assert_eq!((c[0].id, c[0].resident), (b, true));
+        // b goes Suspect: healthy a now leads even without residency.
+        let t1 = t0 + Duration::from_millis(150);
+        r.heartbeat(a, 0, 0, vec![], t1);
+        r.tick(t1);
+        let c = r.candidates(Some(f));
+        assert_eq!(c[0].id, a);
+        assert_eq!(c[1].id, b);
+    }
+
+    #[test]
+    fn anonymous_routing_prefers_least_loaded() {
+        let r = NodeRegistry::new(cfg());
+        let t0 = Instant::now();
+        let a = r.register("n1:1", 4, t0);
+        let b = r.register("n2:1", 4, t0);
+        r.heartbeat(a, 10, 4, vec![], t0);
+        r.heartbeat(b, 0, 1, vec![], t0);
+        assert_eq!(r.candidates(None)[0].id, b);
+    }
+
+    #[test]
+    fn fill_cap_pushes_capped_nodes_to_the_back() {
+        let r = NodeRegistry::new(cfg()); // fill_cap = 2
+        let t0 = Instant::now();
+        let ids: Vec<u64> = (0..2).map(|i| r.register(&format!("n{i}:1"), 4, t0)).collect();
+        let f = fp(21);
+        let first = r.candidates(Some(f))[0].id;
+        let other = ids.iter().copied().find(|&i| i != first).unwrap();
+        r.begin_fill(first);
+        r.begin_fill(first);
+        // first is at its fill cap and f is not resident there: the
+        // other node now leads, bounding the re-fill storm.
+        assert_eq!(r.candidates(Some(f))[0].id, other);
+        r.end_fill(first);
+        assert_eq!(r.candidates(Some(f))[0].id, first);
+        // Residency exempts a node from the cap ordering.
+        r.begin_fill(first);
+        r.heartbeat(first, 0, 0, vec![f], t0);
+        assert_eq!(r.candidates(Some(f))[0].id, first);
+    }
+
+    #[test]
+    fn per_node_breaker_trips_and_recovers() {
+        let r = NodeRegistry::new(cfg());
+        let a = r.register("n1:1", 4, Instant::now());
+        assert!(r.breaker_allows(a));
+        for _ in 0..BREAKER_THRESHOLD - 1 {
+            assert_eq!(r.breaker_observe(a, false), None);
+        }
+        assert_eq!(
+            r.breaker_observe(a, false),
+            Some(BreakerTransition::Tripped)
+        );
+        assert!(!r.breaker_allows(a));
+        // Unknown nodes are never dialable.
+        assert!(!r.breaker_allows(999));
+    }
+}

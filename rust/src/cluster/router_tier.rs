@@ -1,0 +1,447 @@
+//! The router tier: cluster membership endpoint + failover-aware
+//! request proxy.
+//!
+//! One TCP listener serves both planes of traffic. **Control** frames
+//! (`Register`/`Heartbeat`/`Deregister`) maintain the [`NodeRegistry`];
+//! a background sweeper advances heartbeat-age health (Alive → Suspect
+//! → Dead) on `heartbeat_timeout_ms` / `dead_after_ms`. **Data** frames
+//! (`ExecRequest`) are routed: the B operand is fingerprinted (when
+//! large enough to be cache-worthy, `affinity_min_dim`), the registry
+//! yields candidates in affinity/health/load preference order, and the
+//! robustness spine drives the attempt loop — per-node circuit breaker
+//! consult, per-attempt connect/read deadlines, decorrelated-jitter
+//! backoff, failover to the next-best node, at most `max_attempts`
+//! transport-level retries. Typed node replies (rejections, panics) are
+//! **not** retried: the node made a decision; re-sending would mask it
+//! or double-execute.
+//!
+//! Everything is observable: `cluster.*` counters and histograms in the
+//! shared [`MetricsRegistry`], and `rpc` / `failover` / `refill` spans
+//! in the trace plane when `[trace]` is enabled.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::cache::Fingerprint;
+use crate::cluster::client::{self, ExecReply};
+use crate::cluster::proto::{self, Msg};
+use crate::cluster::registry::{Candidate, HealthTransition, NodeRegistry};
+use crate::config::{AppConfig, ClusterSettings};
+use crate::error::{Error, Result};
+use crate::fault::FaultInjector;
+use crate::linalg::matrix::Matrix;
+use crate::linalg::rng::Pcg64;
+use crate::metrics::MetricsRegistry;
+use crate::trace_plane::{self, Attr, Tracer, ROOT_SPAN};
+
+struct RouterShared {
+    cfg: ClusterSettings,
+    registry: NodeRegistry,
+    metrics: Arc<MetricsRegistry>,
+    tracer: Arc<Tracer>,
+    inject: FaultInjector,
+    stop: AtomicBool,
+    next_id: AtomicU64,
+}
+
+/// A running router tier. See module docs.
+pub struct RouterTier {
+    shared: Arc<RouterShared>,
+    addr: String,
+    accept: Option<JoinHandle<()>>,
+    sweeper: Option<JoinHandle<()>>,
+}
+
+/// Outcome tally of [`RouterTier::run_workload`] (the CI chaos drill):
+/// every submitted request must land in exactly one bucket.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkloadReport {
+    /// Requests submitted.
+    pub requests: u64,
+    /// Resolved successfully (including degraded responses).
+    pub ok: u64,
+    /// Resolved as a typed rejection (admission/drain backpressure).
+    pub rejected: u64,
+    /// Resolved as any other typed error.
+    pub failed: u64,
+}
+
+impl WorkloadReport {
+    /// Requests that resolved one way or another. The chaos drill
+    /// asserts `resolved == requests`: nothing may be lost.
+    pub fn resolved(&self) -> u64 {
+        self.ok + self.rejected + self.failed
+    }
+}
+
+impl RouterTier {
+    /// Bind the router socket and spawn the accept + health-sweeper
+    /// threads.
+    pub fn start(app: &AppConfig) -> Result<RouterTier> {
+        app.cluster.validate()?;
+        let cfg = app.cluster.clone();
+        let listener = TcpListener::bind(&cfg.router_addr)?;
+        let addr = listener.local_addr()?.to_string();
+        let metrics = Arc::new(MetricsRegistry::new());
+        let tracer = Arc::new(Tracer::new(&app.trace));
+        let shared = Arc::new(RouterShared {
+            registry: NodeRegistry::new(cfg.clone()),
+            metrics,
+            tracer,
+            inject: FaultInjector::new(&app.fault.inject),
+            cfg,
+            stop: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+        });
+        let accept = {
+            let shared = shared.clone();
+            thread::Builder::new()
+                .name("cluster-router-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .map_err(|e| Error::Service(format!("spawn router accept: {e}")))?
+        };
+        let sweeper = {
+            let shared = shared.clone();
+            thread::Builder::new()
+                .name("cluster-router-sweeper".into())
+                .spawn(move || sweeper_loop(shared))
+                .map_err(|e| Error::Service(format!("spawn router sweeper: {e}")))?
+        };
+        Ok(RouterTier {
+            shared,
+            addr,
+            accept: Some(accept),
+            sweeper: Some(sweeper),
+        })
+    }
+
+    /// The resolved listen address (useful when bound to port 0).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The registry (tests inspect membership and health).
+    pub fn registry(&self) -> &NodeRegistry {
+        &self.shared.registry
+    }
+
+    /// The router's metrics registry (`cluster.*` inventory).
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.shared.metrics
+    }
+
+    /// Route one GEMM through the cluster (the in-process entry point —
+    /// the TCP data plane and the CI drill both funnel here).
+    pub fn exec(&self, a: &Matrix, b: &Matrix, tolerance: Option<f32>) -> Result<ExecReply> {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        exec_routed(&self.shared, id, a, b, tolerance)
+    }
+
+    /// Drive a synthetic workload through the routing path: `requests`
+    /// square GEMMs of side `size`, the B operand drawn from a pool of
+    /// reused weight matrices so fingerprint affinity engages. The pool
+    /// grows with the request count: rendezvous placement is a hash
+    /// coin-flip per fingerprint, and the CI chaos drill asserts the
+    /// killed node actually owned traffic — with only a handful of
+    /// fingerprints there is a real chance one node owns none of them.
+    /// Used by the `cluster-router --requests N` CI chaos drill.
+    pub fn run_workload(&self, requests: usize, size: usize, seed: u64) -> WorkloadReport {
+        let mut rng = Pcg64::seeded(seed);
+        let distinct = (requests / 12).clamp(4, 32);
+        let pool: Vec<Matrix> =
+            (0..distinct).map(|_| Matrix::gaussian(size, size, &mut rng)).collect();
+        let mut report = WorkloadReport::default();
+        for i in 0..requests {
+            let a = Matrix::gaussian(size, size, &mut rng);
+            let b = &pool[i % pool.len()];
+            report.requests += 1;
+            match self.exec(&a, b, None) {
+                Ok(_) => report.ok += 1,
+                Err(Error::Rejected(_)) => report.rejected += 1,
+                Err(_) => report.failed += 1,
+            }
+        }
+        report
+    }
+
+    /// Stop the sweeper and accept threads. Registered nodes are left
+    /// running — they notice on their next heartbeat.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sweeper.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RouterTier {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+fn sweeper_loop(shared: Arc<RouterShared>) {
+    let tick = Duration::from_millis((shared.cfg.heartbeat_ms / 2).max(10));
+    while !shared.stop.load(Ordering::Acquire) {
+        thread::sleep(tick);
+        for t in shared.registry.tick(Instant::now()) {
+            match t {
+                HealthTransition::Suspect(_) => {
+                    shared.metrics.count("cluster.node.suspect", 1);
+                }
+                HealthTransition::Dead(_) => shared.metrics.count("cluster.node.dead", 1),
+            }
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<RouterShared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let shared = shared.clone();
+        let _ = thread::Builder::new()
+            .name("cluster-router-conn".into())
+            .spawn(move || handle_conn(stream, shared));
+    }
+}
+
+/// Serve one connection: control frames from nodes, data frames from
+/// clients — a connection may carry any mix.
+fn handle_conn(mut stream: TcpStream, shared: Arc<RouterShared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(shared.cfg.read_timeout_ms)));
+    loop {
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                ) =>
+            {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        let msg = match proto::read_msg(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        let reply = match msg {
+            Msg::Register {
+                addr, workers, ..
+            } => {
+                let node_id = shared.registry.register(&addr, workers, Instant::now());
+                shared.metrics.count("cluster.node.register", 1);
+                Msg::RegisterAck { node_id }
+            }
+            Msg::Heartbeat {
+                node_id,
+                queue_depth,
+                inflight,
+                fingerprints,
+                ..
+            } => {
+                let known = shared.registry.heartbeat(
+                    node_id,
+                    queue_depth,
+                    inflight,
+                    fingerprints,
+                    Instant::now(),
+                );
+                shared.metrics.count("cluster.heartbeat.recv", 1);
+                shared
+                    .metrics
+                    .observe("cluster.queue_depth", queue_depth as f64);
+                Msg::HeartbeatAck { known }
+            }
+            Msg::Deregister { node_id } => {
+                if shared.registry.deregister(node_id) {
+                    shared.metrics.count("cluster.node.deregister", 1);
+                }
+                Msg::DeregisterAck
+            }
+            Msg::ExecRequest { id, tolerance, a, b } => {
+                match exec_routed(&shared, id, &a, &b, tolerance) {
+                    Ok(r) => Msg::ExecOk {
+                        id,
+                        kernel: r.kernel,
+                        degraded: r.degraded,
+                        c: r.c,
+                    },
+                    Err(e) => Msg::ExecErr {
+                        id,
+                        code: client::encode_exec_err(&e),
+                        message: e.to_string(),
+                    },
+                }
+            }
+            _ => return, // replies are never requests; drop the conn
+        };
+        if proto::write_msg(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// The routing + robustness spine (see module docs).
+fn exec_routed(
+    shared: &RouterShared,
+    id: u64,
+    a: &Matrix,
+    b: &Matrix,
+    tolerance: Option<f32>,
+) -> Result<ExecReply> {
+    let cfg = &shared.cfg;
+    let fp = (b.rows().min(b.cols()) >= cfg.affinity_min_dim).then(|| Fingerprint::of(b));
+    let trace = shared.tracer.begin();
+    let _scope = trace
+        .as_ref()
+        .map(|t| trace_plane::scope(t.clone(), ROOT_SPAN));
+
+    let mut rng = Pcg64::seeded(cfg.seed ^ id);
+    let mut sleep_ms = cfg.backoff_base_ms;
+    let mut last_node: Option<u64> = None;
+    let mut last_err = Error::NodeUnavailable("no nodes registered".into());
+    let mut attempts = 0u64;
+
+    let outcome = loop {
+        if attempts >= cfg.max_attempts as u64 {
+            break Err(last_err);
+        }
+        // Fresh candidate list each attempt: health and residency may
+        // have changed while we backed off.
+        let cands = shared.registry.candidates(fp);
+        if cands.is_empty() {
+            break Err(Error::NodeUnavailable("no nodes registered".into()));
+        }
+        let Some(cand) = pick(shared, &cands, last_node, attempts) else {
+            break Err(Error::NodeUnavailable(
+                "all nodes circuit-open or exhausted".into(),
+            ));
+        };
+        if attempts > 0 {
+            shared.metrics.count("cluster.rpc.retry", 1);
+            if last_node != Some(cand.id) {
+                shared.metrics.count("cluster.failover", 1);
+                let mut s = trace_plane::span("failover");
+                s.attr_u64("from", last_node.unwrap_or(0));
+                s.attr_u64("to", cand.id);
+            }
+            thread::sleep(Duration::from_millis(sleep_ms));
+            sleep_ms = client::backoff_ms(sleep_ms, cfg, &mut rng);
+        }
+        attempts += 1;
+        last_node = Some(cand.id);
+        let cold_fill = fp.is_some() && !cand.resident;
+        if cold_fill {
+            shared.registry.begin_fill(cand.id);
+            shared.metrics.count("cluster.refill.start", 1);
+            trace_plane::span("refill").attr_u64("node", cand.id);
+        }
+        shared.metrics.count(
+            if fp.is_some() {
+                "cluster.route.affinity"
+            } else {
+                "cluster.route.least_loaded"
+            },
+            1,
+        );
+        shared.metrics.count("cluster.rpc.attempt", 1);
+        let t0 = Instant::now();
+        let result = {
+            let mut s = trace_plane::span("rpc");
+            s.attr_u64("node", cand.id);
+            s.attr_u64("attempt", attempts);
+            if shared.inject.net_refuse(cand.id, attempts - 1) {
+                Err(Error::NodeUnavailable(
+                    "injected connection refused".into(),
+                ))
+            } else {
+                client::exec_once(&cand.addr, cfg, id, a, b, tolerance)
+            }
+        };
+        shared
+            .metrics
+            .observe("cluster.rpc_us", t0.elapsed().as_micros() as f64);
+        if cold_fill {
+            shared.registry.end_fill(cand.id);
+        }
+        match result {
+            Ok(r) => {
+                shared.registry.breaker_observe(cand.id, true);
+                shared.metrics.count("cluster.rpc.ok", 1);
+                break Ok(r);
+            }
+            Err(e) if client::retryable(&e) => {
+                shared.registry.breaker_observe(cand.id, false);
+                shared.metrics.count(
+                    match e {
+                        Error::RpcTimeout(_) => "cluster.rpc.timeout",
+                        _ => "cluster.rpc.error",
+                    },
+                    1,
+                );
+                last_err = e;
+            }
+            Err(e) => {
+                // The node answered with a decision (rejection, panic):
+                // transport is healthy, the outcome is final.
+                shared.registry.breaker_observe(cand.id, true);
+                shared.metrics.count("cluster.rpc.error", 1);
+                break Err(e);
+            }
+        }
+    };
+    if let Some(t) = &trace {
+        shared.tracer.finish(
+            t,
+            &[
+                Attr::u64("attempts", attempts),
+                Attr::str("plane", "cluster"),
+            ],
+        );
+    }
+    outcome
+}
+
+/// First candidate whose breaker admits traffic, preferring a different
+/// node than the one that just failed when any other is willing.
+fn pick<'c>(
+    shared: &RouterShared,
+    cands: &'c [Candidate],
+    last: Option<u64>,
+    attempt: u64,
+) -> Option<&'c Candidate> {
+    let admitted = |c: &&Candidate| shared.registry.breaker_allows(c.id);
+    if attempt > 0 {
+        if let Some(c) = cands
+            .iter()
+            .filter(|c| Some(c.id) != last)
+            .find(admitted)
+        {
+            return Some(c);
+        }
+    }
+    cands.iter().find(admitted)
+}

@@ -9,8 +9,8 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, FaultInjectSettings,
-    FaultSettings, KernelSettings, SchedulerSettings, ServiceSettings, ShardSettings,
-    TraceSettings,
+    AccuracySettings, AppConfig, AutotuneSettings, CacheSettings, ClusterSettings,
+    FaultInjectSettings, FaultSettings, KernelSettings, SchedulerSettings, ServiceSettings,
+    ShardSettings, TraceSettings,
 };
 pub use toml::{parse_toml, TomlValue};

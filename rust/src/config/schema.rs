@@ -90,6 +90,27 @@
 //! error_kernel = ""              # limit error injection to one kernel id
 //! error_requests_under = 0       # ids below this always error (test knob)
 //! corrupt_decode = 0.0           # P(FP8 decode corrupted)
+//! net_refuse = 0.0               # P(cluster connect attempt refused)
+//! net_stall = 0.0                # P(node stalls net_stall_ms before replying)
+//! net_stall_ms = 1               # injected reply stall duration
+//! net_truncate = 0.0             # P(node reply truncated mid-frame)
+//! net_heartbeat_drop = 0.0       # P(a heartbeat is silently dropped)
+//!
+//! [cluster]                      # multi-node serving tier (crate::cluster)
+//! enabled = false                # default-off: single-process, bit-identical
+//! router_addr = "127.0.0.1:7070" # router bind / connect address
+//! node_addr = "127.0.0.1:0"      # node agent's serving address (0 = ephemeral)
+//! heartbeat_ms = 500             # node heartbeat cadence
+//! heartbeat_timeout_ms = 2000    # silence before a node turns Suspect
+//! dead_after_ms = 5000           # silence before Suspect turns Dead
+//! connect_timeout_ms = 250       # per-attempt connect deadline
+//! read_timeout_ms = 2000         # per-attempt read deadline
+//! max_attempts = 3               # RPC attempts across candidate nodes
+//! backoff_base_ms = 10           # decorrelated-jitter backoff base
+//! backoff_cap_ms = 500           # backoff ceiling
+//! fill_cap = 2                   # concurrent cold-fills routed per node
+//! affinity_min_dim = 128         # fingerprint gate on min(rows, cols)
+//! seed = 49413                   # backoff jitter seed
 //! ```
 
 use crate::config::toml::{parse_toml, TomlDoc};
@@ -533,6 +554,20 @@ pub struct FaultInjectSettings {
     pub error_requests_under: u64,
     /// Probability a GEMM's FP8 decode output is corrupted.
     pub corrupt_decode: f64,
+    /// Probability a cluster connect attempt is refused (synthesized
+    /// ConnectionRefused before dialing — exercises retry/failover).
+    pub net_refuse: f64,
+    /// Probability a node stalls `net_stall_ms` before replying (long
+    /// stalls become client read timeouts).
+    pub net_stall: f64,
+    /// Injected reply-stall duration in milliseconds.
+    pub net_stall_ms: u64,
+    /// Probability a node truncates its reply mid-frame and drops the
+    /// connection (exercises the client's short-read handling).
+    pub net_truncate: f64,
+    /// Probability a node silently skips a heartbeat (exercises the
+    /// Alive → Suspect → Dead health transitions).
+    pub net_heartbeat_drop: f64,
 }
 
 impl Default for FaultInjectSettings {
@@ -547,6 +582,11 @@ impl Default for FaultInjectSettings {
             error_kernel: String::new(),
             error_requests_under: 0,
             corrupt_decode: 0.0,
+            net_refuse: 0.0,
+            net_stall: 0.0,
+            net_stall_ms: 1,
+            net_truncate: 0.0,
+            net_heartbeat_drop: 0.0,
         }
     }
 }
@@ -574,6 +614,11 @@ impl FaultInjectSettings {
                     self.error_requests_under = val.parse().map_err(bad)?
                 }
                 "corrupt_decode" => self.corrupt_decode = val.parse().map_err(bad)?,
+                "net_refuse" => self.net_refuse = val.parse().map_err(bad)?,
+                "net_stall" => self.net_stall = val.parse().map_err(bad)?,
+                "net_stall_ms" => self.net_stall_ms = val.parse().map_err(bad)?,
+                "net_truncate" => self.net_truncate = val.parse().map_err(bad)?,
+                "net_heartbeat_drop" => self.net_heartbeat_drop = val.parse().map_err(bad)?,
                 other => {
                     return Err(Error::Config(format!(
                         "--fault-inject: unknown key `{other}`"
@@ -648,6 +693,10 @@ impl FaultSettings {
             ("panic_request", inj.panic_request),
             ("error_request", inj.error_request),
             ("corrupt_decode", inj.corrupt_decode),
+            ("net_refuse", inj.net_refuse),
+            ("net_stall", inj.net_stall),
+            ("net_truncate", inj.net_truncate),
+            ("net_heartbeat_drop", inj.net_heartbeat_drop),
         ] {
             if !(0.0..=1.0).contains(&p) {
                 return Err(Error::Config(format!(
@@ -662,6 +711,127 @@ impl FaultSettings {
                 "fault.inject error_kernel: unknown kernel `{}`",
                 inj.error_kernel
             )));
+        }
+        Ok(())
+    }
+}
+
+/// `[cluster]` section: the multi-node serving tier (see
+/// [`crate::cluster`] — router, node registry, heartbeats, failover and
+/// fingerprint-affinity routing). Default-off; when off, no socket is
+/// opened and single-process behavior, results and metric names are
+/// bit-identical to a build without the tier.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterSettings {
+    /// Master switch for the cluster tier.
+    pub enabled: bool,
+    /// Router address: where `cluster-router` binds and where nodes and
+    /// clients connect.
+    pub router_addr: String,
+    /// Node agent's serving address (bind + advertise). Port 0 binds an
+    /// ephemeral port and advertises the resolved one.
+    pub node_addr: String,
+    /// Heartbeat cadence, milliseconds.
+    pub heartbeat_ms: u64,
+    /// Heartbeat silence before a node transitions Alive → Suspect
+    /// (Suspect nodes are deprioritized but still routable).
+    pub heartbeat_timeout_ms: u64,
+    /// Heartbeat silence before Suspect → Dead (Dead nodes are removed
+    /// and their affinity entries evicted; fingerprints re-home).
+    pub dead_after_ms: u64,
+    /// Per-attempt TCP connect deadline, milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Per-attempt read deadline, milliseconds (covers the node's whole
+    /// GEMM execution, not just socket latency).
+    pub read_timeout_ms: u64,
+    /// Total RPC attempts across candidate nodes before the request
+    /// fails with a typed `NodeUnavailable` / `RpcTimeout`.
+    pub max_attempts: usize,
+    /// Decorrelated-jitter backoff base, milliseconds.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling, milliseconds.
+    pub backoff_cap_ms: u64,
+    /// Per-node concurrent cold-fill cap: at most this many in-flight
+    /// requests whose fingerprint the node does not yet hold are routed
+    /// to it at once (bounds the re-fill storm after a node loss).
+    pub fill_cap: usize,
+    /// Fingerprint gate on `min(rows, cols)`: smaller right-hand
+    /// operands route least-loaded instead of by affinity.
+    pub affinity_min_dim: usize,
+    /// Seed for the backoff jitter (deterministic retry schedules in
+    /// tests and chaos runs).
+    pub seed: u64,
+}
+
+impl Default for ClusterSettings {
+    fn default() -> Self {
+        ClusterSettings {
+            enabled: false,
+            router_addr: "127.0.0.1:7070".into(),
+            node_addr: "127.0.0.1:0".into(),
+            heartbeat_ms: 500,
+            heartbeat_timeout_ms: 2000,
+            dead_after_ms: 5000,
+            connect_timeout_ms: 250,
+            read_timeout_ms: 2000,
+            max_attempts: 3,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 500,
+            fill_cap: 2,
+            affinity_min_dim: 128,
+            seed: 0xc105,
+        }
+    }
+}
+
+impl ClusterSettings {
+    /// Range-check the knobs — the single validator for every input path
+    /// (TOML, CLI flags, programmatic construction).
+    pub fn validate(&self) -> Result<()> {
+        if self.router_addr.is_empty() {
+            return Err(Error::Config("cluster router_addr must be set".into()));
+        }
+        if self.node_addr.is_empty() {
+            return Err(Error::Config("cluster node_addr must be set".into()));
+        }
+        for (name, v) in [
+            ("heartbeat_ms", self.heartbeat_ms),
+            ("connect_timeout_ms", self.connect_timeout_ms),
+            ("read_timeout_ms", self.read_timeout_ms),
+            ("backoff_base_ms", self.backoff_base_ms),
+        ] {
+            if v == 0 {
+                return Err(Error::Config(format!("cluster {name} must be positive")));
+            }
+        }
+        if self.heartbeat_timeout_ms < self.heartbeat_ms {
+            return Err(Error::Config(format!(
+                "cluster heartbeat_timeout_ms must be at least heartbeat_ms={}, got {}",
+                self.heartbeat_ms, self.heartbeat_timeout_ms
+            )));
+        }
+        if self.dead_after_ms < self.heartbeat_timeout_ms {
+            return Err(Error::Config(format!(
+                "cluster dead_after_ms must be at least heartbeat_timeout_ms={}, got {}",
+                self.heartbeat_timeout_ms, self.dead_after_ms
+            )));
+        }
+        if self.max_attempts == 0 {
+            return Err(Error::Config("cluster max_attempts must be at least 1".into()));
+        }
+        if self.backoff_cap_ms < self.backoff_base_ms {
+            return Err(Error::Config(format!(
+                "cluster backoff_cap_ms must be at least backoff_base_ms={}, got {}",
+                self.backoff_base_ms, self.backoff_cap_ms
+            )));
+        }
+        if self.fill_cap == 0 {
+            return Err(Error::Config("cluster fill_cap must be at least 1".into()));
+        }
+        if self.affinity_min_dim == 0 {
+            return Err(Error::Config(
+                "cluster affinity_min_dim must be positive".into(),
+            ));
         }
         Ok(())
     }
@@ -701,6 +871,8 @@ pub struct AppConfig {
     pub scheduler: SchedulerSettings,
     /// `[fault]` knobs.
     pub fault: FaultSettings,
+    /// `[cluster]` knobs.
+    pub cluster: ClusterSettings,
 }
 
 impl Default for AppConfig {
@@ -721,6 +893,7 @@ impl Default for AppConfig {
             accuracy: AccuracySettings::default(),
             scheduler: SchedulerSettings::default(),
             fault: FaultSettings::default(),
+            cluster: ClusterSettings::default(),
         }
     }
 }
@@ -1009,9 +1182,72 @@ impl AppConfig {
             if let Some(v) = fi.get("corrupt_decode") {
                 s.corrupt_decode = req_f64(v, "fault.inject.corrupt_decode")?;
             }
+            if let Some(v) = fi.get("net_refuse") {
+                s.net_refuse = req_f64(v, "fault.inject.net_refuse")?;
+            }
+            if let Some(v) = fi.get("net_stall") {
+                s.net_stall = req_f64(v, "fault.inject.net_stall")?;
+            }
+            if let Some(v) = fi.get("net_stall_ms") {
+                s.net_stall_ms = req_usize(v, "fault.inject.net_stall_ms")? as u64;
+            }
+            if let Some(v) = fi.get("net_truncate") {
+                s.net_truncate = req_f64(v, "fault.inject.net_truncate")?;
+            }
+            if let Some(v) = fi.get("net_heartbeat_drop") {
+                s.net_heartbeat_drop = req_f64(v, "fault.inject.net_heartbeat_drop")?;
+            }
         }
         if doc.get("fault").is_some() || doc.get("fault.inject").is_some() {
             cfg.fault.validate()?;
+        }
+        if let Some(cl) = doc.get("cluster") {
+            let s = &mut cfg.cluster;
+            if let Some(v) = cl.get("enabled") {
+                s.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("cluster.enabled must be bool".into()))?;
+            }
+            if let Some(v) = cl.get("router_addr") {
+                s.router_addr = req_str(v, "cluster.router_addr")?;
+            }
+            if let Some(v) = cl.get("node_addr") {
+                s.node_addr = req_str(v, "cluster.node_addr")?;
+            }
+            if let Some(v) = cl.get("heartbeat_ms") {
+                s.heartbeat_ms = req_nonzero(v, "cluster.heartbeat_ms")? as u64;
+            }
+            if let Some(v) = cl.get("heartbeat_timeout_ms") {
+                s.heartbeat_timeout_ms = req_nonzero(v, "cluster.heartbeat_timeout_ms")? as u64;
+            }
+            if let Some(v) = cl.get("dead_after_ms") {
+                s.dead_after_ms = req_nonzero(v, "cluster.dead_after_ms")? as u64;
+            }
+            if let Some(v) = cl.get("connect_timeout_ms") {
+                s.connect_timeout_ms = req_nonzero(v, "cluster.connect_timeout_ms")? as u64;
+            }
+            if let Some(v) = cl.get("read_timeout_ms") {
+                s.read_timeout_ms = req_nonzero(v, "cluster.read_timeout_ms")? as u64;
+            }
+            if let Some(v) = cl.get("max_attempts") {
+                s.max_attempts = req_nonzero(v, "cluster.max_attempts")?;
+            }
+            if let Some(v) = cl.get("backoff_base_ms") {
+                s.backoff_base_ms = req_nonzero(v, "cluster.backoff_base_ms")? as u64;
+            }
+            if let Some(v) = cl.get("backoff_cap_ms") {
+                s.backoff_cap_ms = req_nonzero(v, "cluster.backoff_cap_ms")? as u64;
+            }
+            if let Some(v) = cl.get("fill_cap") {
+                s.fill_cap = req_nonzero(v, "cluster.fill_cap")?;
+            }
+            if let Some(v) = cl.get("affinity_min_dim") {
+                s.affinity_min_dim = req_nonzero(v, "cluster.affinity_min_dim")?;
+            }
+            if let Some(v) = cl.get("seed") {
+                s.seed = req_usize(v, "cluster.seed")? as u64;
+            }
+            s.validate()?;
         }
         Ok(cfg)
     }
@@ -1439,6 +1675,11 @@ error_request = 0.25
 error_kernel = "lowrank_fp8"
 error_requests_under = 3
 corrupt_decode = 0.01
+net_refuse = 0.1
+net_stall = 0.2
+net_stall_ms = 3
+net_truncate = 0.3
+net_heartbeat_drop = 0.4
 "#,
         )
         .unwrap();
@@ -1461,6 +1702,11 @@ corrupt_decode = 0.01
                     error_kernel: "lowrank_fp8".into(),
                     error_requests_under: 3,
                     corrupt_decode: 0.01,
+                    net_refuse: 0.1,
+                    net_stall: 0.2,
+                    net_stall_ms: 3,
+                    net_truncate: 0.3,
+                    net_heartbeat_drop: 0.4,
                 },
             }
         );
@@ -1497,6 +1743,87 @@ corrupt_decode = 0.01
         assert!(s.apply_spec("nope=1").is_err());
         assert!(s.apply_spec("panic_tile").is_err());
         assert!(s.apply_spec("seed=abc").is_err());
+    }
+
+    #[test]
+    fn cluster_defaults_and_full_section() {
+        let cfg = AppConfig::from_toml("").unwrap();
+        assert_eq!(cfg.cluster, ClusterSettings::default());
+        assert!(!cfg.cluster.enabled, "cluster tier must default off");
+
+        let cfg = AppConfig::from_toml(
+            r#"
+[cluster]
+enabled = true
+router_addr = "10.0.0.1:9000"
+node_addr = "10.0.0.2:9001"
+heartbeat_ms = 100
+heartbeat_timeout_ms = 400
+dead_after_ms = 900
+connect_timeout_ms = 50
+read_timeout_ms = 800
+max_attempts = 5
+backoff_base_ms = 5
+backoff_cap_ms = 100
+fill_cap = 4
+affinity_min_dim = 64
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.cluster,
+            ClusterSettings {
+                enabled: true,
+                router_addr: "10.0.0.1:9000".into(),
+                node_addr: "10.0.0.2:9001".into(),
+                heartbeat_ms: 100,
+                heartbeat_timeout_ms: 400,
+                dead_after_ms: 900,
+                connect_timeout_ms: 50,
+                read_timeout_ms: 800,
+                max_attempts: 5,
+                backoff_base_ms: 5,
+                backoff_cap_ms: 100,
+                fill_cap: 4,
+                affinity_min_dim: 64,
+                seed: 7,
+            }
+        );
+    }
+
+    #[test]
+    fn cluster_validation() {
+        assert!(AppConfig::from_toml("[cluster]\nrouter_addr = \"\"").is_err());
+        assert!(AppConfig::from_toml("[cluster]\nheartbeat_ms = 0").is_err());
+        assert!(AppConfig::from_toml("[cluster]\nmax_attempts = 0").is_err());
+        assert!(AppConfig::from_toml("[cluster]\nfill_cap = 0").is_err());
+        assert!(AppConfig::from_toml("[cluster]\nenabled = 1").is_err());
+        // Health deadlines must be ordered: heartbeat ≤ timeout ≤ dead.
+        assert!(
+            AppConfig::from_toml("[cluster]\nheartbeat_ms = 500\nheartbeat_timeout_ms = 100")
+                .is_err()
+        );
+        assert!(
+            AppConfig::from_toml("[cluster]\nheartbeat_timeout_ms = 2000\ndead_after_ms = 1000")
+                .is_err()
+        );
+        assert!(
+            AppConfig::from_toml("[cluster]\nbackoff_base_ms = 100\nbackoff_cap_ms = 10").is_err()
+        );
+    }
+
+    #[test]
+    fn fault_inject_net_spec_keys_parse() {
+        let mut s = FaultInjectSettings::default();
+        s.apply_spec("net_refuse=0.5,net_stall=0.25,net_stall_ms=7,net_truncate=0.1,net_heartbeat_drop=0.9")
+            .unwrap();
+        assert_eq!(s.net_refuse, 0.5);
+        assert_eq!(s.net_stall, 0.25);
+        assert_eq!(s.net_stall_ms, 7);
+        assert_eq!(s.net_truncate, 0.1);
+        assert_eq!(s.net_heartbeat_drop, 0.9);
+        assert!(AppConfig::from_toml("[fault.inject]\nnet_refuse = 1.5").is_err());
     }
 
     #[test]

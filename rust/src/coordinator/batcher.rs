@@ -110,6 +110,20 @@ impl<T> Batcher<T> {
     pub fn pending(&self) -> usize {
         self.pens.values().map(|p| p.items.len()).sum()
     }
+
+    /// The current batching window.
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Retarget the batching window. Takes effect for every pending and
+    /// future pen deadline (deadlines are computed from `oldest + window`
+    /// on demand, so shrinking the window under load flushes sooner —
+    /// the graceful-degradation lever the dispatcher pulls when the
+    /// submit queue runs deep).
+    pub fn set_window(&mut self, window: Duration) {
+        self.window = window;
+    }
 }
 
 #[cfg(test)]
@@ -177,6 +191,20 @@ mod tests {
         b.push(key(64), 1, t0);
         b.push(key(256), 2, t0 + Duration::from_millis(3));
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn set_window_retargets_pending_deadlines() {
+        let mut b: Batcher<u32> = Batcher::new(10, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(key(64), 1, t0);
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+        b.set_window(Duration::from_millis(2));
+        assert_eq!(b.window(), Duration::from_millis(2));
+        // The pending pen's deadline moved up with the window…
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(2)));
+        // …and it now flushes at the new, shorter age.
+        assert_eq!(b.flush_expired(t0 + Duration::from_millis(2)).len(), 1);
     }
 
     #[test]

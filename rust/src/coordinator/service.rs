@@ -226,6 +226,21 @@ impl ExecPool {
     }
 }
 
+/// Batching window under load: the full window while the in-flight
+/// backlog sits at or below half the admission depth, then shrinking
+/// linearly to zero at full depth — deep queues flush immediately, so
+/// latency degrades gracefully under overload instead of stacking the
+/// batching delay on top of the queueing delay. Continuous at the
+/// half-depth knee (scale there is 1.0).
+fn overload_window(full: Duration, inflight: usize, depth: usize) -> Duration {
+    let depth = depth.max(1);
+    if inflight * 2 <= depth {
+        return full;
+    }
+    let frac = (inflight as f64 / depth as f64).min(1.0);
+    full.mul_f64((1.0 - frac) * 2.0)
+}
+
 /// Admission control state (`[scheduler]` only): priority depth
 /// watermarks, the deadline-pricing backlog estimate, per-tenant in-flight
 /// quotas and the drain flag. All checks run at `submit`, before the
@@ -1193,6 +1208,18 @@ impl GemmService {
         };
 
         loop {
+            // Load-responsive batching (`[scheduler]` only): when the
+            // in-flight backlog runs deep, holding requests for the full
+            // batching window just adds latency on top of queueing — so
+            // the window shrinks linearly past half depth, reaching zero
+            // (flush immediately) at the admission watermark. Legacy
+            // configurations keep the fixed window bit-identically.
+            if let Some(adm) = &admission {
+                let w = overload_window(window, inflight.load(Ordering::Relaxed), adm.depth);
+                if w != batcher.window() {
+                    batcher.set_window(w);
+                }
+            }
             // Sleep until the next batch deadline; with no batch pending,
             // block indefinitely — submit's push wakes the queue's
             // condvar, so an idle service burns no CPU (the old code
@@ -1372,6 +1399,12 @@ impl GemmService {
         self.router.route(req)
     }
 
+    /// Requests admitted but not yet completed (queued + executing) —
+    /// the load signal a cluster node's heartbeat reports.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
     /// Stats snapshot.
     pub fn stats(&self) -> ServiceStats {
         ServiceStats {
@@ -1487,6 +1520,28 @@ mod tests {
     use super::*;
     use crate::kernels::KernelKind;
     use crate::linalg::Pcg64;
+
+    #[test]
+    fn overload_window_shrinks_past_half_depth() {
+        let full = Duration::from_micros(1000);
+        // At or below half depth: the full window, untouched.
+        assert_eq!(overload_window(full, 0, 100), full);
+        assert_eq!(overload_window(full, 50, 100), full);
+        // Past half depth: linear shrink toward zero at full depth.
+        assert_eq!(overload_window(full, 75, 100), full / 2);
+        assert_eq!(overload_window(full, 100, 100), Duration::ZERO);
+        // Over-full backlog clamps at zero rather than going negative.
+        assert_eq!(overload_window(full, 250, 100), Duration::ZERO);
+        // Degenerate depth never divides by zero.
+        assert_eq!(overload_window(full, 5, 0), Duration::ZERO);
+        // Monotone non-increasing in backlog.
+        let mut prev = full;
+        for q in 0..=120 {
+            let w = overload_window(full, q, 100);
+            assert!(w <= prev, "window grew at backlog {q}");
+            prev = w;
+        }
+    }
 
     fn svc() -> GemmService {
         let cfg = ServiceConfig {

@@ -39,6 +39,12 @@ pub enum Error {
     /// fault plane's panic isolation): the worker survived, the owning
     /// request resolves with this instead of hanging its waiter.
     KernelPanicked(String),
+    /// A cluster node could not be reached or refused the connection —
+    /// after the router exhausted its retry budget across candidates.
+    NodeUnavailable(String),
+    /// A cluster RPC timed out (connect or read deadline exceeded) after
+    /// the router exhausted its retry budget.
+    RpcTimeout(String),
     /// Anything I/O.
     Io(std::io::Error),
 }
@@ -126,6 +132,8 @@ impl fmt::Display for Error {
             // as they did when they were stringly typed.
             Error::Rejected(r) => write!(f, "service error: {r}"),
             Error::KernelPanicked(m) => write!(f, "kernel panicked (contained): {m}"),
+            Error::NodeUnavailable(m) => write!(f, "node unavailable: {m}"),
+            Error::RpcTimeout(m) => write!(f, "rpc timeout: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -202,6 +210,16 @@ mod tests {
         // Callers can branch on the reason without string matching.
         let e = Error::Rejected(RejectReason::Draining);
         assert!(matches!(e, Error::Rejected(RejectReason::Draining)));
+    }
+
+    #[test]
+    fn cluster_errors_display_with_distinct_prefixes() {
+        let e = Error::NodeUnavailable("node 3 at 127.0.0.1:7071 (connection refused)".into());
+        assert!(e.to_string().starts_with("node unavailable: "));
+        assert!(e.to_string().contains("7071"));
+        let t = Error::RpcTimeout("read from node 1 exceeded 2000 ms".into());
+        assert!(t.to_string().starts_with("rpc timeout: "));
+        assert!(matches!(t, Error::RpcTimeout(_)));
     }
 
     #[test]

@@ -57,39 +57,34 @@ impl Cell {
     }
 }
 
-/// Per-[`KernelKind`] circuit breaker.
-pub struct CircuitBreaker {
+/// One standalone breaker cell: the Closed/Open/HalfOpen state machine
+/// over a rolling outcome window, keyed by nothing. [`CircuitBreaker`]
+/// arrays these per [`KernelKind`]; the cluster router holds one per
+/// serving node.
+pub struct BreakerCell {
     window: usize,
     threshold: usize,
     cooldown: usize,
-    cells: [Mutex<Cell>; KernelKind::ALL.len()],
+    cell: Mutex<Cell>,
 }
 
-fn idx(kind: KernelKind) -> usize {
-    KernelKind::ALL
-        .iter()
-        .position(|k| *k == kind)
-        .expect("every kernel kind is in ALL")
-}
-
-impl CircuitBreaker {
-    /// New breaker with all cells closed. `threshold` failures within the
-    /// last `window` outcomes trip a cell; `cooldown` denials later it
-    /// admits one probe.
+impl BreakerCell {
+    /// New closed cell: `threshold` failures within the last `window`
+    /// outcomes trip it; `cooldown` denials later it admits one probe.
     pub fn new(window: usize, threshold: usize, cooldown: usize) -> Self {
-        CircuitBreaker {
+        BreakerCell {
             window: window.max(1),
             threshold: threshold.max(1),
             cooldown: cooldown.max(1),
-            cells: std::array::from_fn(|_| Mutex::new(Cell::new())),
+            cell: Mutex::new(Cell::new()),
         }
     }
 
-    /// May a request be served on this kernel right now? Open cells count
-    /// the denial toward their cooldown; the call that completes the
-    /// cooldown moves the cell to HalfOpen and is admitted as the probe.
-    pub fn allows(&self, kind: KernelKind) -> bool {
-        let mut cell = flock(&self.cells[idx(kind)]);
+    /// May a request be served right now? Open cells count the denial
+    /// toward their cooldown; the call that completes the cooldown moves
+    /// the cell to HalfOpen and is admitted as the probe.
+    pub fn allows(&self) -> bool {
+        let mut cell = flock(&self.cell);
         match cell.state {
             BreakerState::Closed => true,
             BreakerState::HalfOpen => false, // a probe is already out
@@ -107,9 +102,9 @@ impl CircuitBreaker {
     }
 
     /// Record a served request's outcome. Returns the transition it
-    /// caused, if any (the plane counts trips and recoveries).
-    pub fn observe(&self, kind: KernelKind, ok: bool) -> Option<BreakerTransition> {
-        let mut cell = flock(&self.cells[idx(kind)]);
+    /// caused, if any (callers count trips and recoveries).
+    pub fn observe(&self, ok: bool) -> Option<BreakerTransition> {
+        let mut cell = flock(&self.cell);
         match cell.state {
             BreakerState::Closed => {
                 if cell.recent.len() == self.window {
@@ -141,9 +136,48 @@ impl CircuitBreaker {
         }
     }
 
+    /// Current state (observability / tests).
+    pub fn state(&self) -> BreakerState {
+        flock(&self.cell).state
+    }
+}
+
+/// Per-[`KernelKind`] circuit breaker: one [`BreakerCell`] per kernel.
+pub struct CircuitBreaker {
+    cells: [BreakerCell; KernelKind::ALL.len()],
+}
+
+fn idx(kind: KernelKind) -> usize {
+    KernelKind::ALL
+        .iter()
+        .position(|k| *k == kind)
+        .expect("every kernel kind is in ALL")
+}
+
+impl CircuitBreaker {
+    /// New breaker with all cells closed. `threshold` failures within the
+    /// last `window` outcomes trip a cell; `cooldown` denials later it
+    /// admits one probe.
+    pub fn new(window: usize, threshold: usize, cooldown: usize) -> Self {
+        CircuitBreaker {
+            cells: std::array::from_fn(|_| BreakerCell::new(window, threshold, cooldown)),
+        }
+    }
+
+    /// May a request be served on this kernel right now? See
+    /// [`BreakerCell::allows`].
+    pub fn allows(&self, kind: KernelKind) -> bool {
+        self.cells[idx(kind)].allows()
+    }
+
+    /// Record a served request's outcome. See [`BreakerCell::observe`].
+    pub fn observe(&self, kind: KernelKind, ok: bool) -> Option<BreakerTransition> {
+        self.cells[idx(kind)].observe(ok)
+    }
+
     /// Current state of a cell (observability / tests).
     pub fn state(&self, kind: KernelKind) -> BreakerState {
-        flock(&self.cells[idx(kind)]).state
+        self.cells[idx(kind)].state()
     }
 }
 
@@ -205,6 +239,22 @@ mod tests {
         b.observe(K, false);
         assert_eq!(b.observe(K, true), None, "straggler while open is stale");
         assert_eq!(b.state(K), BreakerState::Open);
+    }
+
+    #[test]
+    fn standalone_cell_runs_the_same_state_machine() {
+        // The cluster router keys these per node rather than per kernel;
+        // the lifecycle must match the kernel breaker exactly.
+        let c = BreakerCell::new(4, 2, 2);
+        assert!(c.allows());
+        assert_eq!(c.observe(false), None);
+        assert_eq!(c.observe(false), Some(BreakerTransition::Tripped));
+        assert_eq!(c.state(), BreakerState::Open);
+        assert!(!c.allows());
+        assert!(c.allows(), "second denial completes the cooldown");
+        assert_eq!(c.state(), BreakerState::HalfOpen);
+        assert_eq!(c.observe(true), Some(BreakerTransition::Recovered));
+        assert_eq!(c.state(), BreakerState::Closed);
     }
 
     #[test]

@@ -19,6 +19,10 @@ const SITE_TILE_STALL: u64 = 0x57a1;
 const SITE_REQ_PANIC: u64 = 0x9a_1c;
 const SITE_REQ_ERROR: u64 = 0xe770;
 const SITE_DECODE: u64 = 0xdec0;
+const SITE_NET_REFUSE: u64 = 0x4e3f;
+const SITE_NET_STALL: u64 = 0x4e57;
+const SITE_NET_TRUNC: u64 = 0x4e74;
+const SITE_NET_HB_DROP: u64 = 0x4eb8;
 
 /// What an injected tile fault does.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,6 +108,38 @@ impl FaultInjector {
     pub fn corrupt_decode(&self, seq: u64) -> bool {
         self.fires(self.plan.corrupt_decode, SITE_DECODE, seq, 0)
     }
+
+    /// Should attempt `attempt` against cluster node `node` be refused
+    /// at connect time (synthesized ConnectionRefused, exercising the
+    /// retry/backoff/failover path)?
+    pub fn net_refuse(&self, node: u64, attempt: u64) -> bool {
+        self.fires(self.plan.net_refuse, SITE_NET_REFUSE, node, attempt)
+    }
+
+    /// Stall (ms) to inject before node `node` replies to request `id`,
+    /// if any — long enough relative to the client read deadline this
+    /// becomes an [`crate::error::Error::RpcTimeout`].
+    pub fn net_stall(&self, node: u64, id: u64) -> Option<u64> {
+        if self.fires(self.plan.net_stall, SITE_NET_STALL, node, id) {
+            Some(self.plan.net_stall_ms)
+        } else {
+            None
+        }
+    }
+
+    /// Should node `node`'s reply to request `id` be truncated mid-frame
+    /// (the connection drops after a partial header, exercising the
+    /// client's short-read handling)?
+    pub fn net_truncate(&self, node: u64, id: u64) -> bool {
+        self.fires(self.plan.net_truncate, SITE_NET_TRUNC, node, id)
+    }
+
+    /// Should node `node` skip sending heartbeat `seq` (exercising the
+    /// Alive → Suspect → Dead health transitions without killing the
+    /// node)?
+    pub fn drop_heartbeat(&self, node: u64, seq: u64) -> bool {
+        self.fires(self.plan.net_heartbeat_drop, SITE_NET_HB_DROP, node, seq)
+    }
 }
 
 #[cfg(test)]
@@ -157,7 +193,46 @@ mod tests {
             assert!(!inj.request_panic(s));
             assert!(!inj.request_error(s, KernelKind::DenseF32));
             assert!(!inj.corrupt_decode(s));
+            assert!(!inj.net_refuse(s, 0));
+            assert_eq!(inj.net_stall(s, 0), None);
+            assert!(!inj.net_truncate(s, 0));
+            assert!(!inj.drop_heartbeat(s, 0));
         }
+    }
+
+    #[test]
+    fn network_faults_are_deterministic_and_per_site() {
+        let p = FaultInjectSettings {
+            seed: 7,
+            net_refuse: 0.5,
+            net_stall: 0.5,
+            net_stall_ms: 9,
+            net_truncate: 0.5,
+            net_heartbeat_drop: 0.5,
+            ..Default::default()
+        };
+        let a = FaultInjector::new(&p);
+        let b = FaultInjector::new(&p);
+        let mut per_site = [0usize; 4];
+        for node in 0..8u64 {
+            for x in 0..64u64 {
+                assert_eq!(a.net_refuse(node, x), b.net_refuse(node, x));
+                assert_eq!(a.net_stall(node, x), b.net_stall(node, x));
+                assert_eq!(a.net_truncate(node, x), b.net_truncate(node, x));
+                assert_eq!(a.drop_heartbeat(node, x), b.drop_heartbeat(node, x));
+                per_site[0] += a.net_refuse(node, x) as usize;
+                per_site[1] += a.net_stall(node, x).is_some() as usize;
+                per_site[2] += a.net_truncate(node, x) as usize;
+                per_site[3] += a.drop_heartbeat(node, x) as usize;
+            }
+        }
+        // Distinct site constants: each fires near half of 512 draws, and
+        // an injected stall carries the configured duration.
+        for n in per_site {
+            assert!((150..=360).contains(&n), "site fired {n}/512");
+        }
+        let stalled = (0..64u64).find_map(|x| a.net_stall(0, x));
+        assert_eq!(stalled, Some(9));
     }
 
     #[test]

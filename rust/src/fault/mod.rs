@@ -42,7 +42,7 @@ pub mod breaker;
 pub mod inject;
 pub mod plane;
 
-pub use breaker::{BreakerState, BreakerTransition, CircuitBreaker};
+pub use breaker::{BreakerCell, BreakerState, BreakerTransition, CircuitBreaker};
 pub use inject::{FaultInjector, TileFault};
 pub use plane::{quarantine, DegradeReason, FaultPlane};
 

@@ -108,6 +108,19 @@
 //! default), routing, results and metric names are bit-identical to a
 //! build without the plane.
 //!
+//! When `[cluster]` is enabled, the service scales out: a router tier
+//! ([`cluster::RouterTier`]) tracks node membership through heartbeats
+//! (Alive → Suspect → Dead), routes fingerprinted operands to the node
+//! most likely to hold their factors (residency digests + load-weighted
+//! rendezvous hashing, cold-fill storms bounded per node), and drives a
+//! robustness spine — typed [`error::Error::NodeUnavailable`] /
+//! [`error::Error::RpcTimeout`], per-attempt deadlines,
+//! decorrelated-jitter retry/failover, per-node circuit breakers, and
+//! graceful node drain — over a dependency-free length-prefixed binary
+//! protocol on `std::net::TcpStream`. Each node ([`cluster::NodeAgent`])
+//! wraps an unmodified single-process service. Disabled (the default),
+//! nothing listens and behavior is bit-identical to single-process.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -130,6 +143,7 @@ pub mod autotune;
 pub mod bench_harness;
 pub mod cache;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod error;
@@ -152,6 +166,7 @@ pub mod prelude {
     pub use crate::accuracy::{AccuracyPlane, ErrorModel, SloTracker};
     pub use crate::autotune::{CalibrationTable, ExplorePolicy};
     pub use crate::cache::{ContentCache, Fingerprint};
+    pub use crate::cluster::{NodeAgent, RouterTier};
     pub use crate::coordinator::{
         GemmRequest, GemmResponse, GemmService, Priority, ServiceConfig, TenantId,
     };

@@ -308,6 +308,14 @@ impl PackedB {
     pub fn shrink_to_fit(&mut self) {
         self.buf.shrink_to_fit();
     }
+
+    /// Bytes of heap this packing actually pins: the buffer *capacity*
+    /// (which [`shrink_to_fit`](PackedB::shrink_to_fit) trims toward
+    /// `k·n`), not the `k·n` estimate. Byte-budgeted caches must charge
+    /// this — the estimate undercounts whenever arena slack survives.
+    pub fn resident_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<f32>()
+    }
 }
 
 // ---------------------------------------------------------------------------

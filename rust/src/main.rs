@@ -10,13 +10,20 @@
 //! - `trace`     run a few traced requests and dump span trees / exports
 //! - `accuracy`  run a probed workload and print the accuracy report
 //!               (per-kernel error histograms, SLO budget, error model)
+//! - `cluster-router`  run the multi-node routing tier (membership,
+//!               health, failover-aware request proxy); with
+//!               `--requests` it drives the CI chaos-drill workload
+//! - `cluster-node`    run a node agent: local GemmService + register/
+//!               heartbeat against the router, serving routed requests
 //! - `info`      device profiles, artifact manifest, build info
 //!
 //! Run `lowrank-gemm help` for flags.
 
 use std::process::ExitCode;
+use std::time::{Duration, Instant};
 
 use lowrank_gemm::cli::{parse_args, CliArgs};
+use lowrank_gemm::cluster::{NodeAgent, RouterTier};
 use lowrank_gemm::config::AppConfig;
 use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
 use lowrank_gemm::error::Result;
@@ -43,6 +50,8 @@ fn main() -> ExitCode {
         "route" => cmd_route(&args),
         "trace" => cmd_trace(&args),
         "accuracy" => cmd_accuracy(&args),
+        "cluster-router" => cmd_cluster_router(&args),
+        "cluster-node" => cmd_cluster_node(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -108,7 +117,10 @@ COMMANDS:
              implies --fault (SPEC e.g.
              seed=42,panic_tile=0.08,error_request=0.1,error_kernel=lowrank_fp8);
              --json-out FILE writes the final metrics snapshot + request
-             accounting as JSON (chaos-drill report)
+             accounting as JSON (chaos-drill report);
+             SIGINT/SIGTERM drains gracefully: submission stops,
+             in-flight requests finish, autotune/accuracy tables and
+             the flight recorder flush, and the process exits 0
   gemm       --n N [--kernel K] [--rank R] [--tolerance T] [--no-xla]
              run one GEMM end-to-end and report error/latency
   factorize  --n N --rank R [--method svd|rsvd|lanczos] [--storage fp8_e4m3|f16|f32]
@@ -136,6 +148,32 @@ COMMANDS:
              per-kernel measured-error histograms, tolerance-SLO budget
              (violations per 10k probed) and the calibrated error model;
              --json-out writes the report as JSON
+  cluster-router
+             [--router HOST:PORT] [--requests N --size N --seed S]
+             [--run-ms MS] [--json-out FILE] [--config F]
+             run the multi-node routing tier: accepts node Register/
+             Heartbeat/Deregister control frames, routes ExecRequest
+             data frames by factor-cache affinity (weighted rendezvous
+             hashing) with circuit breakers, retry/backoff and failover;
+             with --requests it waits for nodes, drives a synthetic
+             workload through the routing path and exits (the CI chaos
+             drill; --json-out writes the report and the exit code is
+             non-zero if any request was lost); without --requests it
+             serves until SIGINT/SIGTERM or --run-ms;
+             routing knobs: --cluster-heartbeat-ms
+             --cluster-heartbeat-timeout-ms --cluster-dead-after-ms
+             --cluster-connect-timeout-ms --cluster-read-timeout-ms
+             --cluster-max-attempts --cluster-backoff-base-ms
+             --cluster-backoff-cap-ms --cluster-fill-cap
+             --cluster-affinity-min-dim --cluster-seed
+  cluster-node
+             [--listen HOST:PORT] [--router HOST:PORT] [--run-ms MS]
+             [--config F] [service/cache/… flags as for serve]
+             run a node agent: starts the local GemmService, registers
+             with the router, heartbeats load + factor-cache occupancy
+             digests, serves routed ExecRequests; on SIGINT/SIGTERM or
+             after --run-ms it deregisters, finishes in-flight work and
+             exits 0
   info       [--artifacts DIR]
              device profiles and the artifact manifest
 
@@ -250,6 +288,35 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
         cfg.fault.enabled = true;
         cfg.fault.inject.apply_spec(spec)?;
     }
+    // `[cluster]` overrides: the multi-node serving tier's knobs (the
+    // cluster-router / cluster-node subcommands flip `enabled` on
+    // themselves; everything else stays single-process).
+    if let Some(a) = args.get("listen") {
+        cfg.cluster.node_addr = a.to_string();
+    }
+    if let Some(a) = args.get("router") {
+        cfg.cluster.router_addr = a.to_string();
+    }
+    cfg.cluster.heartbeat_ms =
+        args.get_parse("cluster-heartbeat-ms", cfg.cluster.heartbeat_ms)?;
+    cfg.cluster.heartbeat_timeout_ms =
+        args.get_parse("cluster-heartbeat-timeout-ms", cfg.cluster.heartbeat_timeout_ms)?;
+    cfg.cluster.dead_after_ms =
+        args.get_parse("cluster-dead-after-ms", cfg.cluster.dead_after_ms)?;
+    cfg.cluster.connect_timeout_ms =
+        args.get_parse("cluster-connect-timeout-ms", cfg.cluster.connect_timeout_ms)?;
+    cfg.cluster.read_timeout_ms =
+        args.get_parse("cluster-read-timeout-ms", cfg.cluster.read_timeout_ms)?;
+    cfg.cluster.max_attempts =
+        args.get_parse("cluster-max-attempts", cfg.cluster.max_attempts)?;
+    cfg.cluster.backoff_base_ms =
+        args.get_parse("cluster-backoff-base-ms", cfg.cluster.backoff_base_ms)?;
+    cfg.cluster.backoff_cap_ms =
+        args.get_parse("cluster-backoff-cap-ms", cfg.cluster.backoff_cap_ms)?;
+    cfg.cluster.fill_cap = args.get_parse("cluster-fill-cap", cfg.cluster.fill_cap)?;
+    cfg.cluster.affinity_min_dim =
+        args.get_parse("cluster-affinity-min-dim", cfg.cluster.affinity_min_dim)?;
+    cfg.cluster.seed = args.get_parse("cluster-seed", cfg.cluster.seed)?;
     // Same validators the TOML path runs — an out-of-range flag must
     // fail loudly, not be silently clamped downstream.
     cfg.kernel.validate()?;
@@ -259,11 +326,63 @@ fn load_config(args: &CliArgs) -> Result<AppConfig> {
     cfg.accuracy.validate()?;
     cfg.scheduler.validate()?;
     cfg.fault.validate()?;
+    cfg.cluster.validate()?;
     Ok(cfg)
+}
+
+/// Dependency-free SIGINT/SIGTERM latch for graceful drains.
+///
+/// `signal(2)` lives in the libc every Rust binary on unix already links,
+/// so no crate is needed; the handler only flips an atomic, which is
+/// async-signal-safe. Long-running subcommands poll [`sig::triggered`]
+/// and drain instead of dying mid-request.
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(unix)]
+    mod imp {
+        use std::sync::atomic::Ordering;
+
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+
+        extern "C" fn on_signal(_signum: i32) {
+            super::SHUTDOWN.store(true, Ordering::Release);
+        }
+
+        pub fn install() {
+            // SIGINT = 2, SIGTERM = 15 on every unix target we build for.
+            unsafe {
+                signal(2, on_signal);
+                signal(15, on_signal);
+            }
+        }
+    }
+
+    #[cfg(not(unix))]
+    mod imp {
+        // No signals to latch; `triggered()` simply never fires and the
+        // run-to-completion / --run-ms paths still terminate the loops.
+        pub fn install() {}
+    }
+
+    /// Arm the handlers (idempotent; cheap to call per subcommand).
+    pub fn install() {
+        imp::install();
+    }
+
+    /// Has a shutdown signal arrived since [`install`]?
+    pub fn triggered() -> bool {
+        SHUTDOWN.load(Ordering::Acquire)
+    }
 }
 
 fn cmd_serve(args: &CliArgs) -> Result<()> {
     let app = load_config(args)?;
+    sig::install();
     let svc = GemmService::start(ServiceConfig::from_app(&app)?)?;
     let requests: usize = args.get_parse("requests", 64)?;
     let size: usize = args.get_parse("size", 128)?;
@@ -285,11 +404,18 @@ fn cmd_serve(args: &CliArgs) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for i in 0..requests {
+        // Graceful shutdown: a SIGINT/SIGTERM stops *submission*; the
+        // requests already accepted finish and are collected below.
+        if sig::triggered() {
+            println!("shutdown signal: stopping submission after {i} requests, draining …");
+            break;
+        }
         let wi = i % weights.len();
         let x = Matrix::gaussian(size, weights[wi].rows(), &mut rng);
         let req = GemmRequest::new(x, weights[wi].clone()).with_ids(None, Some(wi as u64 + 1));
         rxs.push(svc.submit(req)?);
     }
+    let submitted = rxs.len();
     let mut ok = 0usize;
     let mut failed = 0usize;
     for rx in rxs {
@@ -303,13 +429,19 @@ fn cmd_serve(args: &CliArgs) -> Result<()> {
             Err(_) => failed += 1,
         }
     }
+    if sig::triggered() {
+        // Every response is already in, but probes and batched stragglers
+        // may still be on the pool: drain before flushing tables so the
+        // persisted state reflects everything the run learned.
+        svc.drain();
+    }
     let dt = t0.elapsed();
 
     let stats = svc.stats();
     println!(
-        "done: {ok}/{requests} ok ({failed} failed) in {:.3}s ({:.1} req/s)",
+        "done: {ok}/{submitted} ok ({failed} failed) in {:.3}s ({:.1} req/s)",
         dt.as_secs_f64(),
-        requests as f64 / dt.as_secs_f64()
+        submitted as f64 / dt.as_secs_f64()
     );
     println!(
         "id cache: {} hits / {} misses / {} entries",
@@ -329,7 +461,7 @@ fn cmd_serve(args: &CliArgs) -> Result<()> {
     println!("{}", svc.metrics().render());
     if let Some(path) = args.get("json-out") {
         let json = format!(
-            "{{\"requests\":{requests},\"ok\":{ok},\"failed\":{failed},\"resolved\":{},\"metrics\":{}}}",
+            "{{\"requests\":{submitted},\"ok\":{ok},\"failed\":{failed},\"resolved\":{},\"metrics\":{}}}",
             ok + failed,
             stats.metrics.to_json().trim_end()
         );
@@ -354,6 +486,19 @@ fn cmd_serve(args: &CliArgs) -> Result<()> {
                 .map_err(|e| lowrank_gemm::error::Error::Config(format!("{path}: {e}")))?;
             println!("wrote chrome trace to {path}");
         }
+    }
+    // Flush learned state explicitly. Drop also saves best-effort, but a
+    // graceful drain (signal or normal completion) should persist and
+    // *report* before exiting 0, not rely on destructor ordering.
+    match svc.save_calibration() {
+        Ok(true) => println!("saved autotune calibration table"),
+        Ok(false) => {}
+        Err(e) => eprintln!("warning: autotune table not saved: {e}"),
+    }
+    match svc.save_error_model() {
+        Ok(true) => println!("saved accuracy error model"),
+        Ok(false) => {}
+        Err(e) => eprintln!("warning: accuracy error model not saved: {e}"),
     }
     Ok(())
 }
@@ -752,6 +897,111 @@ fn cmd_accuracy(args: &CliArgs) -> Result<()> {
         svc.save_error_model()?;
         println!("saved error model to {path}");
     }
+    Ok(())
+}
+
+fn cmd_cluster_router(args: &CliArgs) -> Result<()> {
+    let mut app = load_config(args)?;
+    app.cluster.enabled = true;
+    app.cluster.validate()?;
+    sig::install();
+    let mut router = RouterTier::start(&app)?;
+    println!("cluster-router listening on {}", router.addr());
+
+    let requests: usize = args.get_parse("requests", 0)?;
+    let size: usize = args.get_parse("size", 128)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
+    let run_ms: u64 = args.get_parse("run-ms", 0)?;
+
+    if requests == 0 {
+        // Pure serving mode: route until a signal (or --run-ms elapses,
+        // which CI uses to bound the job).
+        let deadline = (run_ms > 0).then(|| Instant::now() + Duration::from_millis(run_ms));
+        while !sig::triggered() && !deadline.is_some_and(|d| Instant::now() >= d) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        println!("cluster-router shutting down …");
+        router.shutdown();
+        return Ok(());
+    }
+
+    // Chaos-drill mode: wait for membership (router and nodes launch
+    // concurrently in CI), replay the workload, report, and fail loudly
+    // if anything was lost.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while router.registry().is_empty() {
+        if sig::triggered() || Instant::now() >= deadline {
+            router.shutdown();
+            return Err(lowrank_gemm::error::Error::Service(
+                "no nodes registered before workload start".into(),
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    println!(
+        "{} node(s) registered; replaying {requests} requests at size {size} …",
+        router.registry().len()
+    );
+    let t0 = Instant::now();
+    let report = router.run_workload(requests, size, seed);
+    let dt = t0.elapsed();
+    println!(
+        "done: {} ok / {} rejected / {} failed of {} submitted ({} resolved) in {:.3}s",
+        report.ok,
+        report.rejected,
+        report.failed,
+        report.requests,
+        report.resolved(),
+        dt.as_secs_f64()
+    );
+    println!("{}", router.metrics().render());
+    if let Some(path) = args.get("json-out") {
+        let json = format!(
+            "{{\"requests\":{},\"ok\":{},\"rejected\":{},\"failed\":{},\"resolved\":{},\"metrics\":{}}}",
+            report.requests,
+            report.ok,
+            report.rejected,
+            report.failed,
+            report.resolved(),
+            router.metrics().snapshot().to_json().trim_end()
+        );
+        std::fs::write(path, json)
+            .map_err(|e| lowrank_gemm::error::Error::Config(format!("{path}: {e}")))?;
+        println!("wrote cluster report to {path}");
+    }
+    router.shutdown();
+    if report.resolved() != report.requests {
+        return Err(lowrank_gemm::error::Error::Service(format!(
+            "lost requests: {} submitted but only {} resolved",
+            report.requests,
+            report.resolved()
+        )));
+    }
+    Ok(())
+}
+
+fn cmd_cluster_node(args: &CliArgs) -> Result<()> {
+    let mut app = load_config(args)?;
+    app.cluster.enabled = true;
+    app.cluster.validate()?;
+    sig::install();
+    let mut node = NodeAgent::start(&app)?;
+    println!(
+        "cluster-node {} serving on {} (router {})",
+        node.node_id(),
+        node.addr(),
+        app.cluster.router_addr
+    );
+
+    let run_ms: u64 = args.get_parse("run-ms", 0)?;
+    let deadline = (run_ms > 0).then(|| Instant::now() + Duration::from_millis(run_ms));
+    while !sig::triggered() && !deadline.is_some_and(|d| Instant::now() >= d) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // Graceful exit: deregister from the router, finish in-flight RPCs,
+    // drain the local service, then stop the accept loop.
+    println!("cluster-node draining …");
+    node.shutdown();
     Ok(())
 }
 

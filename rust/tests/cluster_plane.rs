@@ -1,0 +1,302 @@
+//! Cluster-tier integration tests: an in-process router plus real node
+//! agents on loopback sockets (`[cluster]`).
+//!
+//! The contract under test: heartbeat silence walks a node down the
+//! Alive → Suspect → Dead ladder and traffic fails over without losing
+//! a single request; a fingerprint re-homes when its owner leaves and
+//! cold-fills at most once per new owner; transport faults (refused
+//! connections, both injected and real) retry with backoff to the
+//! next-best node under breaker control; a draining node deregisters
+//! first and completes its in-flight work; and a cluster-routed result
+//! is bitwise-identical to the same request served single-process.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use lowrank_gemm::cache::Fingerprint;
+use lowrank_gemm::cluster::{NodeAgent, RouterTier};
+use lowrank_gemm::config::AppConfig;
+use lowrank_gemm::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use lowrank_gemm::error::Error;
+use lowrank_gemm::kernels::KernelKind;
+use lowrank_gemm::linalg::{Matrix, Pcg64};
+use lowrank_gemm::metrics::MetricsRegistry;
+
+/// Fast-cadence cluster config: ephemeral router port, 40 ms heartbeats,
+/// Suspect at 160 ms silence, Dead at 400 ms.
+fn router_app() -> AppConfig {
+    let mut app = AppConfig::default();
+    app.cluster.enabled = true;
+    app.cluster.router_addr = "127.0.0.1:0".into();
+    app.cluster.node_addr = "127.0.0.1:0".into();
+    app.cluster.heartbeat_ms = 40;
+    app.cluster.heartbeat_timeout_ms = 160;
+    app.cluster.dead_after_ms = 400;
+    app.cluster.read_timeout_ms = 4000;
+    app.cluster.backoff_base_ms = 1;
+    app.cluster.backoff_cap_ms = 8;
+    app.service.workers = 2;
+    app
+}
+
+fn node_app(router_addr: &str) -> AppConfig {
+    let mut app = router_app();
+    app.cluster.router_addr = router_addr.into();
+    app
+}
+
+fn counter(m: &MetricsRegistry, name: &str) -> u64 {
+    m.counters().get(name).copied().unwrap_or(0)
+}
+
+fn square(n: usize, rng: &mut Pcg64) -> Matrix {
+    Matrix::gaussian(n, n, rng)
+}
+
+#[test]
+fn routed_result_is_bitwise_identical_to_single_process() {
+    let router = RouterTier::start(&router_app()).expect("router");
+    let app = node_app(router.addr());
+    let _node = NodeAgent::start(&app).expect("node");
+
+    let mut rng = Pcg64::seeded(11);
+    let a = square(96, &mut rng);
+    let b = square(96, &mut rng);
+    let reply = router.exec(&a, &b, None).expect("routed exec");
+
+    // The same request through a single-process service built from the
+    // same config: identical kernel choice, identical result bits.
+    let svc = GemmService::start(ServiceConfig::from_app(&app).expect("cfg")).expect("svc");
+    let resp = svc
+        .gemm_blocking(GemmRequest::new(a.clone(), b.clone()))
+        .expect("local exec");
+
+    assert_eq!(reply.kernel, resp.kernel.id(), "kernel choice diverged");
+    assert_eq!(
+        (reply.c.rows(), reply.c.cols()),
+        (resp.c.rows(), resp.c.cols()),
+        "shape diverged"
+    );
+    let same = reply
+        .c
+        .data()
+        .iter()
+        .zip(resp.c.data())
+        .all(|(x, y)| x.to_bits() == y.to_bits());
+    assert!(same, "cluster-routed result bits differ from single-process");
+}
+
+#[test]
+fn heartbeat_silence_walks_suspect_to_dead_and_traffic_fails_over() {
+    let router = RouterTier::start(&router_app()).expect("router");
+    let good = NodeAgent::start(&node_app(router.addr())).expect("good node");
+
+    // This node registers, then drops *every* heartbeat (seeded injection
+    // with probability 1): the router hears silence without the process
+    // dying — exactly the partition the health ladder is for.
+    let mut bad_cfg = node_app(router.addr());
+    bad_cfg.fault.inject.seed = 1;
+    bad_cfg.fault.inject.net_heartbeat_drop = 1.0;
+    let bad = NodeAgent::start(&bad_cfg).expect("bad node");
+    assert_eq!(router.registry().len(), 2);
+    let bad_id = bad.node_id();
+
+    // Silence ≥ dead_after_ms removes the node and evicts its affinity.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.registry().len() > 1 && Instant::now() < deadline {
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(router.registry().len(), 1, "silent node should be removed");
+    let views = router.registry().views();
+    assert_eq!(views[0].id, good.node_id());
+    assert!(views.iter().all(|v| v.id != bad_id));
+    assert!(counter(router.metrics(), "cluster.node.suspect") >= 1);
+    assert!(counter(router.metrics(), "cluster.node.dead") >= 1);
+
+    // Zero lost requests through the failover: everything resolves, and
+    // with one healthy node left, everything resolves *ok*.
+    let report = router.run_workload(8, 64, 3);
+    assert_eq!(report.resolved(), report.requests, "requests lost");
+    assert_eq!(report.ok, report.requests, "requests failed after failover");
+    drop(bad);
+}
+
+#[test]
+fn refused_connections_retry_with_backoff_to_next_best_node() {
+    // Keep the phantom Alive for the whole test so the least-loaded
+    // ranking keeps offering it first: long health timeouts.
+    let mut app = router_app();
+    app.cluster.heartbeat_timeout_ms = 10_000;
+    app.cluster.dead_after_ms = 20_000;
+    let router = RouterTier::start(&app).expect("router");
+
+    // A phantom node on a dead port, advertising more capacity than the
+    // real node: anonymous routing prefers it, every dial is refused,
+    // and the attempt loop must back off and fail over.
+    router
+        .registry()
+        .register("127.0.0.1:9", 8, Instant::now());
+    let mut napp = node_app(router.addr());
+    napp.cluster.heartbeat_timeout_ms = 10_000;
+    napp.cluster.dead_after_ms = 20_000;
+    let _node = NodeAgent::start(&napp).expect("node");
+
+    let mut rng = Pcg64::seeded(5);
+    for i in 0..6 {
+        let a = square(48, &mut rng);
+        let b = square(48, &mut rng);
+        let reply = router.exec(&a, &b, None);
+        assert!(reply.is_ok(), "request {i} did not fail over: {reply:?}");
+    }
+    let m = router.metrics();
+    assert!(counter(m, "cluster.rpc.retry") >= 1, "no retries recorded");
+    assert!(counter(m, "cluster.failover") >= 1, "no failover recorded");
+    let transport_failures =
+        counter(m, "cluster.rpc.error") + counter(m, "cluster.rpc.timeout");
+    assert!(
+        transport_failures >= 1,
+        "refused dials should count as transport failures"
+    );
+    assert_eq!(counter(m, "cluster.rpc.ok"), 6);
+    // The phantom's breaker absorbed the failures (it trips after 3 in
+    // its window, so at most a handful of dials ever reached the dead
+    // port across 6 requests).
+    assert!(
+        transport_failures <= 4,
+        "breaker should stop dialing the dead node"
+    );
+}
+
+#[test]
+fn injected_refusals_exhaust_attempts_deterministically() {
+    // Router-side injection refusing every (node, attempt) draw: the
+    // attempt loop must walk all max_attempts with backoff and surface a
+    // typed NodeUnavailable — never a hang, never a lost request.
+    let mut app = router_app();
+    app.fault.inject.seed = 7;
+    app.fault.inject.net_refuse = 1.0;
+    let router = RouterTier::start(&app).expect("router");
+    let _node = NodeAgent::start(&node_app(router.addr())).expect("node");
+
+    let mut rng = Pcg64::seeded(21);
+    let a = square(48, &mut rng);
+    let b = square(48, &mut rng);
+    match router.exec(&a, &b, None) {
+        Err(Error::NodeUnavailable(_)) => {}
+        other => panic!("expected NodeUnavailable after exhausted attempts, got {other:?}"),
+    }
+    let m = router.metrics();
+    assert_eq!(counter(m, "cluster.rpc.attempt"), 3, "default max_attempts");
+    assert_eq!(counter(m, "cluster.rpc.retry"), 2);
+    assert_eq!(counter(m, "cluster.rpc.ok"), 0);
+    assert_eq!(counter(m, "cluster.rpc.error"), 3);
+}
+
+#[test]
+fn rehomed_fingerprint_cold_fills_at_most_once_per_owner() {
+    let mut app = router_app();
+    app.cluster.affinity_min_dim = 32;
+    app.cache.enabled = true;
+    app.cache.min_dim = 32;
+    let router = RouterTier::start(&app).expect("router");
+    let mut napp = app.clone();
+    napp.cluster.router_addr = router.addr().into();
+    let mut node1 = NodeAgent::start(&napp).expect("node1");
+    let node2 = NodeAgent::start(&napp).expect("node2");
+
+    let mut rng = Pcg64::seeded(9);
+    // The reused "weight" operand: low-rank so the factor chain caches it.
+    let b = Matrix::low_rank_noisy(64, 64, 4, 1e-5, &mut rng);
+    let fp = Fingerprint::of(&b);
+    let m = router.metrics();
+
+    // Warms one node's content cache with b's factors (the forced
+    // low-rank kernel is the deterministic put path, independent of the
+    // cost model's natural choice for 64-class shapes), then waits for
+    // its heartbeat digest to land in the router's affinity map.
+    let warm = |node: &NodeAgent, registry: &lowrank_gemm::cluster::NodeRegistry| {
+        let mut r = Pcg64::seeded(77);
+        let x = Matrix::low_rank_noisy(64, 64, 4, 1e-5, &mut r);
+        node.service()
+            .gemm_blocking(
+                GemmRequest::new(x, b.clone()).with_kernel(KernelKind::LowRankFp8),
+            )
+            .expect("warm-up exec");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            let c = registry.candidates(Some(fp));
+            if c[0].id == node.node_id() && c[0].resident {
+                return;
+            }
+            thread::sleep(Duration::from_millis(20));
+        }
+        panic!("heartbeat digest never reported the fingerprint resident");
+    };
+
+    // Designate node1 the owner: once its digest lands, affinity routes
+    // every request for b there and nothing ever cold-fills.
+    warm(&node1, router.registry());
+    for _ in 0..4 {
+        router.exec(&square(64, &mut rng), &b, None).expect("warm exec");
+    }
+    assert_eq!(
+        counter(m, "cluster.refill.start"),
+        0,
+        "warm affinity hits must not fill"
+    );
+    assert!(counter(m, "cluster.route.affinity") >= 4);
+
+    // The owner leaves gracefully: the fingerprint re-homes to the
+    // survivor and cold-fills exactly once there.
+    node1.shutdown();
+    assert_eq!(router.registry().len(), 1);
+    router.exec(&square(64, &mut rng), &b, None).expect("re-homed exec");
+    assert_eq!(
+        counter(m, "cluster.refill.start"),
+        1,
+        "re-homing is one cold fill on the new owner"
+    );
+    // Once the survivor is warm and its digest lands, traffic stays warm.
+    warm(&node2, router.registry());
+    for _ in 0..3 {
+        router.exec(&square(64, &mut rng), &b, None).expect("warm exec 2");
+    }
+    assert_eq!(
+        counter(m, "cluster.refill.start"),
+        1,
+        "the new owner must serve warm after one fill"
+    );
+}
+
+#[test]
+fn drain_deregisters_first_and_completes_in_flight_work() {
+    let router = RouterTier::start(&router_app()).expect("router");
+    let _node1 = NodeAgent::start(&node_app(router.addr())).expect("node1");
+    let mut node2 = NodeAgent::start(&node_app(router.addr())).expect("node2");
+    assert_eq!(router.registry().len(), 2);
+
+    // Requests race the drain from worker threads; every one must
+    // resolve ok — served by the draining node (in-flight work finishes
+    // behind the deregister) or failed over to the survivor.
+    let router_ref = &router;
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..6u64)
+            .map(|i| {
+                s.spawn(move || {
+                    let mut rng = Pcg64::seeded(100 + i);
+                    let a = square(64, &mut rng);
+                    let b = square(64, &mut rng);
+                    router_ref.exec(&a, &b, None)
+                })
+            })
+            .collect();
+        thread::sleep(Duration::from_millis(5));
+        node2.shutdown();
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.join().expect("worker thread");
+            assert!(r.is_ok(), "request {i} lost across the drain: {r:?}");
+        }
+    });
+    assert_eq!(router.registry().len(), 1, "drained node should be deregistered");
+    assert_eq!(counter(router.metrics(), "cluster.node.deregister"), 1);
+}
